@@ -1,0 +1,27 @@
+//! §Perf measurement probe — the fixed microbenchmarks used by the
+//! optimization loop in EXPERIMENTS.md §Perf (median of 7 runs):
+//! stable merge of 2M+2M i64 and stable sort of 1M i64.
+//!
+//! ```bash
+//! cargo run --release --example perfprobe
+//! ```
+
+use traff_merge::core::{parallel_merge, parallel_merge_sort};
+use traff_merge::workload::{raw_keys, sorted_keys, Dist};
+fn med(mut v: Vec<f64>) -> f64 { v.sort_by(|a,b| a.partial_cmp(b).unwrap()); v[v.len()/2] }
+fn main() {
+    let a = sorted_keys(Dist::Uniform, 2_000_000, 3);
+    let b = sorted_keys(Dist::Uniform, 2_000_000, 4);
+    let mut out = vec![0i64; 4_000_000];
+    for (name, p) in [("merge p=1", 1usize), ("merge p=4", 4)] {
+        let mut s = vec![];
+        for _ in 0..7 { let t = std::time::Instant::now(); parallel_merge(&a, &b, &mut out, p); s.push(t.elapsed().as_secs_f64()); }
+        println!("{name}: {:.2} ms", med(s)*1e3);
+    }
+    let base = raw_keys(Dist::Uniform, 1_000_000, 5);
+    for (name, p) in [("sort p=1", 1usize), ("sort p=4", 4), ("sort p=8", 8)] {
+        let mut s = vec![];
+        for _ in 0..7 { let mut v = base.clone(); let t = std::time::Instant::now(); parallel_merge_sort(&mut v, p); s.push(t.elapsed().as_secs_f64()); }
+        println!("{name}: {:.2} ms", med(s)*1e3);
+    }
+}

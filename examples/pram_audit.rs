@@ -1,0 +1,50 @@
+//! Model-level validation demo (E6): run the paper's merge on the
+//! audited EREW PRAM simulator and print the step/conflict evidence
+//! behind the "can be implemented on an EREW PRAM" claim.
+//!
+//! ```bash
+//! cargo run --release --example pram_audit -- [--p P]
+//! ```
+
+use traff_merge::cli::Args;
+use traff_merge::metrics::Table;
+use traff_merge::pram::{pram_merge, Variant};
+use traff_merge::workload::{sorted_keys, Dist};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap_or_default();
+    let p = args.get_usize("p", 8).unwrap_or(8);
+
+    println!("EREW PRAM audit of the simplified merge (p = {p})\n");
+    let mut table = Table::new(vec![
+        "n", "dist", "steps", "broadcast", "searches", "fetch", "merge", "conflicts",
+    ]);
+    for &n in &[1usize << 10, 1 << 12, 1 << 14] {
+        for dist in [Dist::Uniform, Dist::AllEqual, Dist::AdversarialSkew] {
+            let a = sorted_keys(dist, n, 1);
+            let b = sorted_keys(dist, n, 2);
+            let (c, rep) = pram_merge(&a, &b, p, Variant::Erew);
+            let mut expect = [a, b].concat();
+            expect.sort();
+            assert_eq!(c, expect);
+            table.row(vec![
+                n.to_string(),
+                dist.name(),
+                rep.report.steps.to_string(),
+                rep.phase_steps[0].to_string(),
+                (rep.phase_steps[1] + rep.phase_steps[2]).to_string(),
+                rep.phase_steps[3].to_string(),
+                rep.phase_steps[4].to_string(),
+                rep.report.conflicts.len().to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nEvery row: zero conflicts — exclusive reads and writes hold through\n\
+         pipelined searches, offset cross-rank fetches, and disjoint merges.\n\
+         The merge column tracks ~2n/p (Theorem 1); searches track p + log n\n\
+         (the simulator pipelines searches the simple way; Akl–Meijer [1]\n\
+         brings the search phase to O(log n) — see DESIGN.md)."
+    );
+}

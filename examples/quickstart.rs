@@ -1,0 +1,50 @@
+//! Quickstart: the public API in 60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use traff_merge::core::{parallel_merge, parallel_merge_sort, Record};
+use traff_merge::workload::{assert_stable_merge, tag_a, tag_b, B_TAG_BASE};
+
+fn main() {
+    // --- Stable parallel merge -----------------------------------------
+    let a = [1i64, 3, 3, 5, 7];
+    let b = [2i64, 3, 4, 7, 8];
+    let mut c = [0i64; 10];
+    parallel_merge(&a, &b, &mut c, 4);
+    println!("merge  {a:?} + {b:?}\n    -> {c:?}");
+    assert_eq!(c, [1, 2, 3, 3, 3, 4, 5, 7, 7, 8]);
+
+    // --- Stability: equal keys keep A-before-B and input order ---------
+    let ta = tag_a(&a); // records tagged 0..n
+    let tb = tag_b(&b); // records tagged B_TAG_BASE..
+    let mut tc = vec![Record::new(0, 0); 10];
+    parallel_merge(&ta, &tb, &mut tc, 4);
+    assert_stable_merge(&tc, B_TAG_BASE);
+    println!("stable: ties ordered A-first, input order preserved ✓");
+
+    // --- Stable parallel merge sort (§3) --------------------------------
+    let mut v: Vec<i64> = (0..1_000_000).map(|i| (i * 2_654_435_761u64 as i64) % 10_000).collect();
+    let mut expect = v.clone();
+    let t0 = std::time::Instant::now();
+    parallel_merge_sort(&mut v, traff_merge::util::num_cpus());
+    let par = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    expect.sort(); // std stable sort
+    let std_t = t0.elapsed();
+    assert_eq!(v, expect);
+    println!(
+        "sort 1M: parallel {:.1} ms vs std {:.1} ms ({:.2}x)",
+        par.as_secs_f64() * 1e3,
+        std_t.as_secs_f64() * 1e3,
+        std_t.as_secs_f64() / par.as_secs_f64()
+    );
+
+    // --- The partition is inspectable -----------------------------------
+    let part = traff_merge::core::Partition::compute(&a, &b, 3);
+    println!("x̄ = {:?}, ȳ = {:?}", part.xbar, part.ybar);
+    for t in part.tasks() {
+        println!("  task {:?} {:?}: A{:?} ⋈ B{:?} -> C[{}..]", t.side, t.case, t.a, t.b, t.c_off);
+    }
+}

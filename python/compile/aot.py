@@ -1,0 +1,147 @@
+"""AOT: lower the L2 graphs once to HLO *text* artifacts for rust.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README gotchas).
+
+Run via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry in ``ARTIFACTS`` plus
+``manifest.json`` describing shapes/dtypes so the rust runtime can
+marshal literals without re-deriving them, and ``model.hlo.txt`` (the
+default merge artifact) for the Makefile dependency.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def keyed(n):
+    """(keys f32[n], vals i32[n]) arg specs."""
+    return [_spec((n,), F32), _spec((n,), I32)]
+
+
+# name -> (fn, example arg specs, human description)
+ARTIFACTS = {
+    # The coordinator's per-round offload unit: merge two sorted 4096-blocks.
+    "merge_b4096": (
+        lambda ak, av, bk, bv: model.merge_pair(ak, av, bk, bv),
+        keyed(4096) + keyed(4096),
+        "stable merge of two sorted keyed blocks of 4096 (out 8192)",
+    ),
+    # Smaller variant for latency-sensitive tails.
+    "merge_b1024": (
+        lambda ak, av, bk, bv: model.merge_pair(ak, av, bk, bv),
+        keyed(1024) + keyed(1024),
+        "stable merge of two sorted keyed blocks of 1024 (out 2048)",
+    ),
+    # Dynamic batcher unit: 8 independent 1024-pair merges in one call.
+    "merge_batch8_b1024": (
+        lambda ak, av, bk, bv: model.merge_batch(ak, av, bk, bv),
+        [
+            _spec((8, 1024), F32),
+            _spec((8, 1024), I32),
+            _spec((8, 1024), F32),
+            _spec((8, 1024), I32),
+        ],
+        "batched stable merge: 8 pairs of sorted 1024-blocks per call",
+    ),
+    # Paper Steps 1-2: ranks of 256 pivots in a sorted 65536 array.
+    "crossrank_n65536_p256": (
+        lambda arr, piv: model.crossrank_graph(arr, piv),
+        [_spec((65536,), F32), _spec((256,), F32)],
+        "rank_low+rank_high of 256 pivots in sorted f32[65536]",
+    ),
+    # §3 application: full stable sort of one 1024 block (10 unrolled rounds).
+    "sort_n1024": (
+        lambda k, v: model.sort_block(k, v),
+        keyed(1024),
+        "stable merge sort of 1024 keyed records (log2 n rounds)",
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str):
+    fn, specs, _ = ARTIFACTS[name]
+    return jax.jit(fn).lower(*specs)
+
+
+def emit(out_dir: str, names=None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name in names or ARTIFACTS:
+        fn, specs, desc = ARTIFACTS[name]
+        lowered = lower_artifact(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree_util.tree_leaves(
+                jax.eval_shape(fn, *specs)
+            )
+        ]
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "description": desc,
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            "outputs": out_shapes,
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # Makefile stamp: the default model artifact is the 4096 merge.
+    default = os.path.join(out_dir, "merge_b4096.hlo.txt")
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    if os.path.exists(default):
+        with open(default) as src, open(stamp, "w") as dst:
+            dst.write(src.read())
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    out_dir = args.out
+    # Tolerate being handed the Makefile's file path instead of a dir.
+    if out_dir.endswith(".hlo.txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    emit(out_dir, args.only)
+    print(f"wrote artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

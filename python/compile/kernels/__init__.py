@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime).
+
+- ``crossrank``  — batched rank_low/rank_high binary search (paper Steps 1-2)
+- ``rank_merge`` — stable rank-and-gather merge (paper Steps 3-4, TPU form)
+- ``ref``        — pure-jnp oracles both are tested against
+"""
+
+from . import ref  # noqa: F401
+from .crossrank import branchless_searchsorted, crossrank  # noqa: F401
+from .rank_merge import diagonal_split, gather_merge, rank_merge  # noqa: F401

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: batched cross-rank binary search.
+
+The paper's Steps 1–2 run ``p`` binary searches in parallel, one per
+processing element.  On a TPU vector unit the natural adaptation is a
+*batched, branchless* search: one vector lane per pivot, each maintaining
+a ``(lo, hi)`` interval, with ``ceil(log2(N+1))`` synchronous halving
+steps (no data-dependent control flow — every lane executes the same
+instruction sequence, predicated by ``jnp.where``).
+
+Semantics are exactly the paper's (ref.py):
+
+- ``lo`` output: ``rank_low(x, arr)``  (searchsorted side='left')
+- ``hi`` output: ``rank_high(x, arr)`` (searchsorted side='right')
+
+Tiling: the grid runs over tiles of ``block_p`` pivots; the searched
+array stays resident in VMEM across grid steps (its BlockSpec maps every
+grid index to the whole array).  VMEM footprint per step is
+``N*4 + 3*block_p*4`` bytes — see EXPERIMENTS.md §Perf for the roofline
+estimate.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _search_steps(n: int) -> int:
+    """Number of halving steps that guarantee lo==hi for ranks in [0, n]."""
+    return max(1, math.ceil(math.log2(n + 1)))
+
+
+def branchless_searchsorted(arr: jnp.ndarray, xs: jnp.ndarray, side: str) -> jnp.ndarray:
+    """Vectorized, branchless binary search (the kernel's inner loop).
+
+    Pure jnp — usable both inside the Pallas kernel and directly in the
+    L2 graph.  ``side`` follows numpy: 'left' == rank_low, 'right' ==
+    rank_high.
+    """
+    n = arr.shape[0]
+    lo = jnp.zeros(xs.shape, jnp.int32)
+    hi = jnp.full(xs.shape, n, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) >> 1
+        # Safe gather: when lo == hi the lane is done; clamp the index and
+        # predicate the update away.
+        v = jnp.take(arr, jnp.minimum(mid, n - 1), mode="clip")
+        if side == "left":
+            go_right = v < xs
+        else:
+            go_right = v <= xs
+        active = lo < hi
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, _search_steps(n), body, (lo, hi))
+    return lo
+
+
+def _crossrank_kernel(arr_ref, piv_ref, lo_ref, hi_ref):
+    """One grid step: rank a tile of pivots against the whole array."""
+    arr = arr_ref[...]
+    piv = piv_ref[...]
+    lo_ref[...] = branchless_searchsorted(arr, piv, "left")
+    hi_ref[...] = branchless_searchsorted(arr, piv, "right")
+
+
+@partial(jax.jit, static_argnames=("block_p",))
+def crossrank(arr: jnp.ndarray, pivots: jnp.ndarray, *, block_p: int = 128):
+    """Batched ``(rank_low, rank_high)`` of ``pivots`` in sorted ``arr``.
+
+    Returns two int32 arrays of ``pivots.shape``.  ``block_p`` is the
+    pivot-tile width per grid step (must divide the padded pivot count;
+    the wrapper pads internally, so callers may pass any length).
+    """
+    (p,) = pivots.shape
+    padded = ((p + block_p - 1) // block_p) * block_p
+    piv = jnp.pad(pivots, (0, padded - p))
+    grid = padded // block_p
+    lo, hi = pl.pallas_call(
+        _crossrank_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(arr.shape, lambda i: (0,)),       # whole array, resident
+            pl.BlockSpec((block_p,), lambda i: (i,)),      # pivot tile
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+            jax.ShapeDtypeStruct((padded,), jnp.int32),
+        ],
+        interpret=True,
+    )(arr, piv)
+    return lo[:p], hi[:p]

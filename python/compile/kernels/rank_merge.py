@@ -1,0 +1,133 @@
+"""L1 Pallas kernel: stable rank-and-gather merge of two sorted sequences.
+
+The paper assigns each processing element a *stable sequential merge* of
+one O(n/p) subproblem (Steps 3–4).  A sequential two-pointer merge is
+inherently serial, so for the TPU vector unit we use the equivalent
+formulation the paper's own rank analysis licenses (§2): the stable
+output position of ``A[i]`` is ``i + rank_low(A[i], B)`` and of ``B[j]``
+is ``j + rank_high(B[j], A)``.  Inverted, output slot ``k`` is found by a
+branchless binary search over the *merge diagonal*: find the unique split
+``i`` (elements taken from A) such that
+
+    A[i-1] <= B[k-i]      (A wins ties: the low/high-rank asymmetry)
+    B[k-i-1] <  A[i]
+
+which is exactly the "cross ranks do not cross" condition of
+Observation 1 applied at granularity 1.  One vector lane per output slot,
+``ceil(log2(nA+1))`` halving steps, then a pair of gathers — stability is
+inherited from the same rank asymmetry that makes the paper's merge
+stable.
+
+Tiling: the grid runs over output tiles of ``block_out`` slots; both
+inputs stay VMEM-resident (their BlockSpecs map every grid step to the
+whole sequence) because a tile's diagonal span is data-dependent.  VMEM
+per step: ``(nA + nB) * 8 + 3 * block_out * 8`` bytes (keys f32 + vals
+i32).  For the AOT artifact sizes (≤ 16Ki inputs) this is well under the
+16 MiB VMEM budget — see EXPERIMENTS.md §Perf.
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def diagonal_split(a_keys: jnp.ndarray, b_keys: jnp.ndarray, ks: jnp.ndarray) -> jnp.ndarray:
+    """For each output slot ``k`` return ``i`` = #elements taken from A.
+
+    Branchless binary search on the merge path with A-priority on ties
+    (stable).  Pure jnp; used inside the kernel and by the L2 graph.
+    """
+    n_a = a_keys.shape[0]
+    n_b = b_keys.shape[0]
+    lo = jnp.maximum(0, ks - n_b).astype(jnp.int32)
+    hi = jnp.minimum(ks, n_a).astype(jnp.int32)
+    steps = max(1, math.ceil(math.log2(n_a + 1)))
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) >> 1
+        # Candidate split: mid elements from A, ks - mid from B.  Move
+        # right iff A[mid] <= B[ks - mid - 1] (the A element belongs
+        # before that B element in a stable A-first merge, so the split
+        # must take it).  Indices are in range whenever lo < hi; clamp
+        # and predicate for the finished lanes.
+        a_v = jnp.take(a_keys, jnp.minimum(mid, n_a - 1), mode="clip")
+        b_v = jnp.take(b_keys, jnp.clip(ks - mid - 1, 0, n_b - 1), mode="clip")
+        go_right = a_v <= b_v
+        active = lo < hi
+        lo = jnp.where(active & go_right, mid + 1, lo)
+        hi = jnp.where(active & ~go_right, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def gather_merge(a_keys, a_vals, b_keys, b_vals, ks):
+    """Produce output slots ``ks`` of the stable merge (pure jnp)."""
+    n_a = a_keys.shape[0]
+    n_b = b_keys.shape[0]
+    i = diagonal_split(a_keys, b_keys, ks)
+    j = ks.astype(jnp.int32) - i
+    a_k = jnp.take(a_keys, jnp.minimum(i, n_a - 1), mode="clip")
+    b_k = jnp.take(b_keys, jnp.minimum(j, n_b - 1), mode="clip")
+    a_v = jnp.take(a_vals, jnp.minimum(i, n_a - 1), mode="clip")
+    b_v = jnp.take(b_vals, jnp.minimum(j, n_b - 1), mode="clip")
+    # Take from A iff B is exhausted, or A is not exhausted and A[i] wins
+    # the comparison (ties to A — stability).
+    take_a = (j >= n_b) | ((i < n_a) & (a_k <= b_k))
+    return jnp.where(take_a, a_k, b_k), jnp.where(take_a, a_v, b_v)
+
+
+def _merge_kernel(ak_ref, av_ref, bk_ref, bv_ref, ok_ref, ov_ref, *, block_out: int):
+    """One grid step: fill one tile of the merged output."""
+    tile = pl.program_id(0)
+    ks = tile * block_out + jnp.arange(block_out, dtype=jnp.int32)
+    out_k, out_v = gather_merge(
+        ak_ref[...], av_ref[...], bk_ref[...], bv_ref[...], ks
+    )
+    ok_ref[...] = out_k
+    ov_ref[...] = out_v
+
+
+@partial(jax.jit, static_argnames=("block_out",))
+def rank_merge(a_keys, a_vals, b_keys, b_vals, *, block_out: int = 256):
+    """Stable merge of two sorted keyed sequences (Pallas kernel).
+
+    Shapes: ``a_keys/a_vals: (nA,)``, ``b_keys/b_vals: (nB,)`` with
+    ``nA + nB`` divisible by nothing in particular — the wrapper pads the
+    output grid and slices.  Returns ``(keys, vals)`` of ``(nA + nB,)``.
+    """
+    n_a = a_keys.shape[0]
+    n_b = b_keys.shape[0]
+    total = n_a + n_b
+    padded = ((total + block_out - 1) // block_out) * block_out
+    grid = padded // block_out
+    kernel = partial(_merge_kernel, block_out=block_out)
+    out_k, out_v = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_a,), lambda i: (0,)),  # A keys, resident
+            pl.BlockSpec((n_a,), lambda i: (0,)),  # A vals
+            pl.BlockSpec((n_b,), lambda i: (0,)),  # B keys
+            pl.BlockSpec((n_b,), lambda i: (0,)),  # B vals
+        ],
+        out_specs=[
+            pl.BlockSpec((block_out,), lambda i: (i,)),
+            pl.BlockSpec((block_out,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), a_keys.dtype),
+            jax.ShapeDtypeStruct((padded,), a_vals.dtype),
+        ],
+        interpret=True,
+    )(a_keys, a_vals, b_keys, b_vals)
+    return out_k[:total], out_v[:total]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These implement the paper's definitions *directly* with `jnp.searchsorted`
+and the rank identity from Träff §2, and are the correctness reference the
+kernels are tested against (pytest + hypothesis in ``python/tests``).
+
+Definitions (Träff 2012, §2):
+
+- ``rank_low(x, X)``  is the unique ``i`` with ``X[i-1] <  x <= X[i]``
+  == ``jnp.searchsorted(X, x, side='left')``.
+- ``rank_high(x, X)`` is the unique ``j`` with ``X[j-1] <= x <  X[j]``
+  == ``jnp.searchsorted(X, x, side='right')``.
+
+Stable-merge rank identity (the observation the whole paper rests on):
+the position of ``A[i]`` in the stably merged output is
+``i + rank_low(A[i], B)`` and of ``B[j]`` is ``j + rank_high(B[j], A)``.
+These n+m positions are a permutation of ``0..n+m-1`` — asserted by the
+test-suite, and used below to build the oracle merge via scatter.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rank_low(arr: jnp.ndarray, xs: jnp.ndarray) -> jnp.ndarray:
+    """Low rank of each ``xs`` element in sorted ``arr`` (paper §2)."""
+    return jnp.searchsorted(arr, xs, side="left").astype(jnp.int32)
+
+
+def rank_high(arr: jnp.ndarray, xs: jnp.ndarray) -> jnp.ndarray:
+    """High rank of each ``xs`` element in sorted ``arr`` (paper §2)."""
+    return jnp.searchsorted(arr, xs, side="right").astype(jnp.int32)
+
+
+def crossrank(arr: jnp.ndarray, pivots: jnp.ndarray):
+    """Both ranks at once — the oracle for ``kernels.crossrank``."""
+    return rank_low(arr, pivots), rank_high(arr, pivots)
+
+
+def merge_positions(a_keys, b_keys):
+    """The raw rank-identity positions (used by invariant tests)."""
+    n, m = a_keys.shape[0], b_keys.shape[0]
+    pos_a = jnp.arange(n, dtype=jnp.int32) + rank_low(b_keys, a_keys)
+    pos_b = jnp.arange(m, dtype=jnp.int32) + rank_high(a_keys, b_keys)
+    return pos_a, pos_b
+
+
+def stable_merge(a_keys, a_vals, b_keys, b_vals):
+    """Stable merge of two sorted keyed sequences via the rank identity.
+
+    All equal keys from A are placed before equal keys from B, and the
+    within-sequence order is preserved — exactly the paper's notion of
+    stability.  Returns ``(keys, vals)`` of length ``len(a) + len(b)``.
+    """
+    pos_a, pos_b = merge_positions(a_keys, b_keys)
+    n, m = a_keys.shape[0], b_keys.shape[0]
+    out_k = jnp.zeros((n + m,), a_keys.dtype)
+    out_v = jnp.zeros((n + m,), a_vals.dtype)
+    out_k = out_k.at[pos_a].set(a_keys).at[pos_b].set(b_keys)
+    out_v = out_v.at[pos_a].set(a_vals).at[pos_b].set(b_vals)
+    return out_k, out_v
+
+
+def stable_sort(keys, vals):
+    """Stable sort oracle (for the sort artifact): stable argsort."""
+    order = jnp.argsort(keys, stable=True)
+    return keys[order], vals[order]

@@ -1,0 +1,83 @@
+"""L2: whole-array JAX computations composing the L1 kernels.
+
+These are the graphs ``aot.py`` lowers to HLO text for the rust runtime.
+All shapes are static (AOT requirement); the rust coordinator pads inputs
+to the artifact shape with ``+inf`` keys (padding sorts to the tail and is
+sliced off on the rust side — padding from A still precedes padding from
+B, so stability of the *real* prefix is unaffected).
+
+Graphs:
+
+- ``merge_pair``      — stable merge of two sorted keyed blocks (the
+                        coordinator's per-round offload unit).
+- ``crossrank_graph`` — the paper's partition step: ranks of p block
+                        pivots in the opposite sequence.
+- ``sort_block``      — full stable merge sort of one block, built as
+                        ``log2(n)`` unrolled rounds of vmapped pairwise
+                        ``rank_merge`` — exactly the §3 construction with
+                        run length doubling each round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.crossrank import crossrank
+from .kernels.rank_merge import rank_merge
+
+
+def merge_pair(a_keys, a_vals, b_keys, b_vals):
+    """Stable merge of two sorted keyed blocks (fixed shapes)."""
+    k, v = rank_merge(a_keys, a_vals, b_keys, b_vals)
+    return k, v
+
+
+def crossrank_graph(arr, pivots):
+    """(rank_low, rank_high) of each pivot in ``arr`` — paper Steps 1-2."""
+    lo, hi = crossrank(arr, pivots)
+    return lo, hi
+
+
+def _merge_round(keys, vals, run: int):
+    """One §3 merge round: pairwise-merge adjacent sorted runs of ``run``.
+
+    ``keys`` has shape (n,) with n a multiple of 2*run; reshape to pairs
+    and vmap the kernel over them.
+    """
+    n = keys.shape[0]
+    pairs = n // (2 * run)
+    ak = keys.reshape(pairs, 2, run)[:, 0, :]
+    bk = keys.reshape(pairs, 2, run)[:, 1, :]
+    av = vals.reshape(pairs, 2, run)[:, 0, :]
+    bv = vals.reshape(pairs, 2, run)[:, 1, :]
+    mk, mv = jax.vmap(lambda a, av_, b, bv_: rank_merge(a, av_, b, bv_))(ak, av, bk, bv)
+    return mk.reshape(n), mv.reshape(n)
+
+
+def merge_batch(a_keys, a_vals, b_keys, b_vals):
+    """Batched stable merge: vmap of ``merge_pair`` over leading axis.
+
+    Shapes: ``(B, n)`` each — the coordinator's dynamic batcher packs up
+    to B outstanding small merge jobs (padded to n with +inf keys) into
+    ONE executable call, amortizing dispatch overhead (vLLM-style
+    request batching, here for merge jobs).
+    """
+    return jax.vmap(rank_merge)(a_keys, a_vals, b_keys, b_vals)
+
+
+def sort_block(keys, vals):
+    """Stable merge sort of one block (§3), rounds unrolled statically.
+
+    Requires ``len(keys)`` to be a power of two (the AOT artifact shapes
+    are).  Round ``i`` merges runs of length ``2**i`` — the paper's
+    ``ceil(log p)`` rounds with p = n "processing elements" of one
+    element each.
+    """
+    n = keys.shape[0]
+    assert n & (n - 1) == 0, "sort_block requires power-of-two length"
+    run = 1
+    while run < n:
+        keys, vals = _merge_round(keys, vals, run)
+        run *= 2
+    return keys, vals

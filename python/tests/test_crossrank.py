@@ -1,0 +1,141 @@
+"""L1 crossrank kernel vs the paper's rank definitions (ref.py).
+
+Hypothesis sweeps shapes, dtypes, duplicate structure, and out-of-range
+pivots; deterministic tests pin the paper's boundary conventions
+(sentinels A[-1] = -inf, A[n] = +inf are *implicit* — ranks 0 and n).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.crossrank import branchless_searchsorted, crossrank
+
+
+def _np_ranks(arr, xs):
+    return (
+        np.searchsorted(arr, xs, side="left").astype(np.int32),
+        np.searchsorted(arr, xs, side="right").astype(np.int32),
+    )
+
+
+# ---------- deterministic pins ----------------------------------------
+
+
+def test_rank_definitions_figure1_a_into_b():
+    """Figure 1: cross ranks of A's block pivots in B (x̄_i column)."""
+    A = np.array([0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7], np.float32)
+    B = np.array([1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7], np.float32)
+    # Block starts x_i for n=18, p=5: ceil=4, r=3 -> [0, 4, 8, 12, 15]
+    xs = A[[0, 4, 8, 12, 15]]
+    lo, _ = crossrank(jnp.array(B), jnp.array(xs))
+    assert lo.tolist() == [0, 0, 6, 7, 8]  # x̄_0..x̄_4 from the figure
+
+
+def test_rank_definitions_figure1_b_into_a():
+    """Figure 1: cross ranks of B's block pivots in A (ȳ_j column)."""
+    A = np.array([0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7], np.float32)
+    B = np.array([1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7], np.float32)
+    ys = B[[0, 3, 6, 9, 12]]
+    _, hi = crossrank(jnp.array(A), jnp.array(ys))
+    assert hi.tolist() == [5, 8, 9, 16, 18]  # ȳ_0..ȳ_4 from the figure
+
+
+def test_sentinel_ranks():
+    arr = np.array([1.0, 2.0, 3.0], np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array([-10.0, 10.0], np.float32))
+    assert lo.tolist() == [0, 3] and hi.tolist() == [0, 3]
+
+
+def test_all_equal_array():
+    arr = np.full(64, 7.0, np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array([7.0], np.float32))
+    assert lo.tolist() == [0] and hi.tolist() == [64]
+
+
+def test_rank_uniqueness_window():
+    """rank_low i satisfies X[i-1] < x <= X[i]; rank_high j: X[j-1] <= x < X[j]."""
+    rng = np.random.default_rng(3)
+    arr = np.sort(rng.integers(0, 20, 200)).astype(np.float32)
+    xs = rng.integers(-2, 22, 50).astype(np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array(xs))
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    pad = np.concatenate([[-np.inf], arr, [np.inf]])
+    assert np.all(pad[lo] < xs) and np.all(xs <= pad[lo + 1])
+    assert np.all(pad[hi] <= xs) and np.all(xs < pad[hi + 1])
+
+
+# ---------- hypothesis sweeps ------------------------------------------
+
+key_lists = st.lists(st.integers(-100, 100), min_size=1, max_size=300)
+
+
+@settings(max_examples=60, deadline=None)
+@given(arr=key_lists, xs=st.lists(st.integers(-120, 120), min_size=1, max_size=100))
+def test_crossrank_matches_numpy(arr, xs):
+    arr = np.sort(np.asarray(arr, np.float32))
+    xs = np.asarray(xs, np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array(xs))
+    elo, ehi = _np_ranks(arr, xs)
+    np.testing.assert_array_equal(np.asarray(lo), elo)
+    np.testing.assert_array_equal(np.asarray(hi), ehi)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    arr=key_lists,
+    xs=st.lists(st.integers(-120, 120), min_size=1, max_size=64),
+    block=st.sampled_from([1, 2, 8, 33, 128]),
+)
+def test_crossrank_block_size_invariance(arr, xs, block):
+    """Tiling must not change results (padding correctness)."""
+    arr = np.sort(np.asarray(arr, np.float32))
+    xs = np.asarray(xs, np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array(xs), block_p=block)
+    elo, ehi = _np_ranks(arr, xs)
+    np.testing.assert_array_equal(np.asarray(lo), elo)
+    np.testing.assert_array_equal(np.asarray(hi), ehi)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arr=key_lists, xs=key_lists)
+def test_branchless_searchsorted_both_sides(arr, xs):
+    arr = np.sort(np.asarray(arr, np.float32))
+    xs = np.asarray(xs, np.float32)
+    for side in ("left", "right"):
+        got = branchless_searchsorted(jnp.array(arr), jnp.array(xs), side)
+        exp = np.searchsorted(arr, xs, side=side)
+        np.testing.assert_array_equal(np.asarray(got), exp)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    dtype=st.sampled_from([np.float32, np.int32]),
+)
+def test_crossrank_dtypes(data, dtype):
+    arr = np.sort(
+        np.asarray(data.draw(key_lists), dtype)
+    )
+    xs = np.asarray(data.draw(key_lists), dtype)
+    lo, hi = crossrank(jnp.array(arr), jnp.array(xs))
+    elo, ehi = _np_ranks(arr, xs)
+    np.testing.assert_array_equal(np.asarray(lo), elo)
+    np.testing.assert_array_equal(np.asarray(hi), ehi)
+
+
+@settings(max_examples=25, deadline=None)
+@given(arr=key_lists)
+def test_ref_rank_identity_is_permutation(arr):
+    """Paper §2: positions i + rank_low(A[i],B), j + rank_high(B[j],A)
+    form a permutation of 0..n+m-1 for any two sorted sequences."""
+    xs = np.sort(np.asarray(arr, np.float32))
+    half = len(xs) // 2
+    a, b = xs[:half], xs[half:]
+    if len(a) == 0 or len(b) == 0:
+        return
+    pa, pb = ref.merge_positions(jnp.array(a), jnp.array(b))
+    allpos = np.sort(np.concatenate([np.asarray(pa), np.asarray(pb)]))
+    np.testing.assert_array_equal(allpos, np.arange(len(xs)))

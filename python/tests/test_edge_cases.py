@@ -1,0 +1,94 @@
+"""L1 edge cases: boundary shapes, extreme values, vmap composition —
+the configurations most likely to break BlockSpec/padding arithmetic."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.crossrank import crossrank
+from compile.kernels.rank_merge import rank_merge
+
+
+def _oracle(ak, av, bk, bv):
+    k, v = ref.stable_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    return np.asarray(k), np.asarray(v)
+
+
+@pytest.mark.parametrize("n_a,n_b", [(1, 1), (1, 500), (500, 1), (2, 3), (255, 257)])
+def test_merge_boundary_shapes(n_a, n_b):
+    rng = np.random.default_rng(n_a * 1000 + n_b)
+    ak = np.sort(rng.integers(0, 10, n_a)).astype(np.float32)
+    bk = np.sort(rng.integers(0, 10, n_b)).astype(np.float32)
+    av = np.arange(n_a, dtype=np.int32)
+    bv = np.arange(1000, 1000 + n_b, dtype=np.int32)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    ek, ev = _oracle(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(k), ek)
+    np.testing.assert_array_equal(np.asarray(v), ev)
+
+
+def test_merge_extreme_key_values():
+    ak = np.array([-np.finfo(np.float32).max, 0.0, np.finfo(np.float32).max], np.float32)
+    bk = np.array([-1e30, 1e30], np.float32)
+    av = np.array([0, 1, 2], np.int32)
+    bv = np.array([100, 101], np.int32)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    ek, ev = _oracle(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(k), ek)
+    np.testing.assert_array_equal(np.asarray(v), ev)
+
+
+def test_crossrank_single_element_array():
+    lo, hi = crossrank(jnp.array([5.0], jnp.float32), jnp.array([4.0, 5.0, 6.0], jnp.float32))
+    assert lo.tolist() == [0, 0, 1]
+    assert hi.tolist() == [0, 1, 1]
+
+
+def test_crossrank_pivot_count_not_multiple_of_block():
+    rng = np.random.default_rng(0)
+    arr = np.sort(rng.integers(0, 100, 777)).astype(np.float32)
+    piv = rng.integers(0, 100, 129).astype(np.float32)  # 129 = 128 + 1
+    lo, hi = crossrank(jnp.array(arr), jnp.array(piv), block_p=128)
+    np.testing.assert_array_equal(np.asarray(lo), np.searchsorted(arr, piv, side="left"))
+    np.testing.assert_array_equal(np.asarray(hi), np.searchsorted(arr, piv, side="right"))
+
+
+def test_vmap_composition():
+    """vmapped rank_merge (the sort-round construction) stays correct."""
+    rng = np.random.default_rng(4)
+    pairs = 6
+    n = 64
+    ak = np.sort(rng.integers(0, 20, (pairs, n)), axis=1).astype(np.float32)
+    bk = np.sort(rng.integers(0, 20, (pairs, n)), axis=1).astype(np.float32)
+    av = np.tile(np.arange(n, dtype=np.int32), (pairs, 1))
+    bv = av + 1000
+    mk, mv = jax.vmap(lambda a, av_, b, bv_: rank_merge(a, av_, b, bv_))(
+        jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv)
+    )
+    for i in range(pairs):
+        ek, ev = _oracle(ak[i], av[i], bk[i], bv[i])
+        np.testing.assert_array_equal(np.asarray(mk[i]), ek)
+        np.testing.assert_array_equal(np.asarray(mv[i]), ev)
+
+
+def test_jit_and_eager_agree():
+    rng = np.random.default_rng(5)
+    ak = np.sort(rng.integers(0, 50, 200)).astype(np.float32)
+    bk = np.sort(rng.integers(0, 50, 300)).astype(np.float32)
+    av = np.arange(200, dtype=np.int32)
+    bv = np.arange(1000, 1300, dtype=np.int32)
+    jit_fn = jax.jit(lambda a, av_, b, bv_: rank_merge(a, av_, b, bv_))
+    k1, v1 = jit_fn(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    k2, v2 = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_negative_and_duplicate_heavy_crossrank():
+    arr = np.array([-5, -5, -5, 0, 0, 3], np.float32)
+    piv = np.array([-6, -5, -1, 0, 3, 4], np.float32)
+    lo, hi = crossrank(jnp.array(arr), jnp.array(piv))
+    np.testing.assert_array_equal(np.asarray(lo), np.searchsorted(arr, piv, "left"))
+    np.testing.assert_array_equal(np.asarray(hi), np.searchsorted(arr, piv, "right"))

@@ -1,0 +1,73 @@
+"""L2 graphs: shape contracts, sort rounds, and AOT lowering round-trip."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _keyed(rng, n, lo=0, hi=1000, base=0):
+    k = np.sort(rng.integers(lo, hi, n)).astype(np.float32)
+    v = (base + np.arange(n)).astype(np.int32)
+    return k, v
+
+
+def test_merge_pair_shapes():
+    rng = np.random.default_rng(0)
+    ak, av = _keyed(rng, 128)
+    bk, bv = _keyed(rng, 128, base=1000)
+    k, v = model.merge_pair(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert k.shape == (256,) and v.shape == (256,)
+    assert k.dtype == jnp.float32 and v.dtype == jnp.int32
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(0, 8), seed=st.integers(0, 100))
+def test_sort_block_matches_stable_sort(logn, seed):
+    n = 1 << logn
+    rng = np.random.default_rng(seed)
+    k = rng.integers(0, max(2, n // 2), n).astype(np.float32)  # force duplicates
+    v = np.arange(n, dtype=np.int32)
+    sk, sv = model.sort_block(jnp.array(k), jnp.array(v))
+    ek, ev = ref.stable_sort(jnp.array(k), jnp.array(v))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(ek))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(ev))
+
+
+def test_sort_block_rejects_non_power_of_two():
+    with pytest.raises(AssertionError):
+        model.sort_block(jnp.zeros(12, jnp.float32), jnp.zeros(12, jnp.int32))
+
+
+def test_crossrank_graph_matches_ref():
+    rng = np.random.default_rng(7)
+    arr = np.sort(rng.integers(0, 500, 4096)).astype(np.float32)
+    piv = rng.integers(-10, 510, 64).astype(np.float32)
+    lo, hi = model.crossrank_graph(jnp.array(arr), jnp.array(piv))
+    elo, ehi = ref.crossrank(jnp.array(arr), jnp.array(piv))
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(elo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(ehi))
+
+
+def test_merge_round_doubles_runs():
+    """One §3 round on 4 runs of 4 -> 2 runs of 8, each sorted & stable."""
+    rng = np.random.default_rng(5)
+    runs = [np.sort(rng.integers(0, 10, 4)).astype(np.float32) for _ in range(4)]
+    keys = np.concatenate(runs)
+    vals = np.arange(16, dtype=np.int32)
+    k, v = model._merge_round(jnp.array(keys), jnp.array(vals), 4)
+    k, v = np.asarray(k), np.asarray(v)
+    for half in (slice(0, 8), slice(8, 16)):
+        assert np.all(np.diff(k[half]) >= 0)
+    # Stability inside a merged pair: equal keys keep index order when
+    # both sides came from the same original ordering.
+    for half_lo in (0, 8):
+        seg_k, seg_v = k[half_lo : half_lo + 8], v[half_lo : half_lo + 8]
+        for key in np.unique(seg_k):
+            idx = seg_v[seg_k == key]
+            a_side = idx[idx < half_lo + 4]
+            assert np.all(np.diff(a_side) > 0) if len(a_side) > 1 else True

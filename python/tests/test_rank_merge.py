@@ -1,0 +1,168 @@
+"""L1 rank_merge kernel vs the ref.py stable-merge oracle.
+
+Stability is the heart of the paper, so payloads are *always* checked:
+``vals`` encode (source, original index) and any instability shows up as
+a payload mismatch even when keys agree.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rank_merge import diagonal_split, gather_merge, rank_merge
+
+
+def _mk(keys, base):
+    keys = np.sort(np.asarray(keys, np.float32))
+    vals = (base + np.arange(len(keys))).astype(np.int32)
+    return keys, vals
+
+
+def _oracle(ak, av, bk, bv):
+    k, v = ref.stable_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    return np.asarray(k), np.asarray(v)
+
+
+# ---------- deterministic pins ----------------------------------------
+
+
+def test_merge_simple():
+    ak, av = _mk([1, 3, 5], 0)
+    bk, bv = _mk([2, 4, 6], 100)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert np.asarray(k).tolist() == [1, 2, 3, 4, 5, 6]
+    assert np.asarray(v).tolist() == [0, 100, 1, 101, 2, 102]
+
+
+def test_merge_all_ties_a_before_b():
+    """All-equal keys: output must be all of A (in order) then all of B."""
+    ak, av = _mk([7] * 5, 0)
+    bk, bv = _mk([7] * 4, 100)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert np.asarray(v).tolist() == [0, 1, 2, 3, 4, 100, 101, 102, 103]
+
+
+def test_merge_disjoint_ranges():
+    ak, av = _mk([1, 2, 3], 0)
+    bk, bv = _mk([10, 11], 100)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    assert np.asarray(v).tolist() == [0, 1, 2, 100, 101]
+    k, v = rank_merge(jnp.array(bk), jnp.array(bv), jnp.array(ak), jnp.array(av))
+    assert np.asarray(v).tolist() == [0, 1, 2, 100, 101]
+
+
+def test_figure1_merge():
+    """Full merge of the paper's Figure 1 arrays, stability-tagged."""
+    A = np.array([0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7], np.float32)
+    B = np.array([1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7], np.float32)
+    av = np.arange(18, dtype=np.int32)
+    bv = np.arange(100, 115, dtype=np.int32)
+    k, v = rank_merge(jnp.array(A), jnp.array(av), jnp.array(B), jnp.array(bv))
+    ek, ev = _oracle(A, av, B, bv)
+    np.testing.assert_array_equal(np.asarray(k), ek)
+    np.testing.assert_array_equal(np.asarray(v), ev)
+    # Spot-check from the figure: A[0..3] land in C[0..3].
+    assert np.asarray(v)[:4].tolist() == [0, 1, 2, 3]
+
+
+def test_diagonal_split_monotone():
+    rng = np.random.default_rng(1)
+    a = np.sort(rng.integers(0, 40, 97)).astype(np.float32)
+    b = np.sort(rng.integers(0, 40, 53)).astype(np.float32)
+    ks = jnp.arange(150, dtype=jnp.int32)
+    i = np.asarray(diagonal_split(jnp.array(a), jnp.array(b), ks))
+    assert np.all(np.diff(i) >= 0) and np.all(np.diff(i) <= 1)
+    assert i[0] in (0, 1) and i[-1] <= 97
+
+
+# ---------- hypothesis sweeps ------------------------------------------
+
+keys = st.lists(st.integers(-50, 50), min_size=1, max_size=200)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=keys, b=keys)
+def test_merge_matches_oracle(a, b):
+    ak, av = _mk(a, 0)
+    bk, bv = _mk(b, 10_000)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    ek, ev = _oracle(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(k), ek)
+    np.testing.assert_array_equal(np.asarray(v), ev)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=keys, b=keys, block=st.sampled_from([1, 3, 64, 256, 1024]))
+def test_merge_block_size_invariance(a, b, block):
+    """Output tiling must not change the merge (padding correctness)."""
+    ak, av = _mk(a, 0)
+    bk, bv = _mk(b, 10_000)
+    k, v = rank_merge(
+        jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv), block_out=block
+    )
+    ek, ev = _oracle(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(k), ek)
+    np.testing.assert_array_equal(np.asarray(v), ev)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=st.lists(st.sampled_from([1, 1, 1, 2, 2, 3]), min_size=1, max_size=80),
+       b=st.lists(st.sampled_from([1, 1, 2, 2, 2, 3]), min_size=1, max_size=80))
+def test_merge_duplicate_heavy_stability(a, b):
+    """Heavy ties: every equal-key run must be A-block then B-block, each
+    in original order."""
+    ak, av = _mk(a, 0)
+    bk, bv = _mk(b, 10_000)
+    k, v = rank_merge(jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv))
+    k, v = np.asarray(k), np.asarray(v)
+    for key in np.unique(k):
+        seg = v[k == key]
+        a_part = seg[seg < 10_000]
+        b_part = seg[seg >= 10_000]
+        # A before B, both strictly increasing (original order).
+        assert np.all(seg[: len(a_part)] < 10_000)
+        assert np.all(np.diff(a_part) > 0) if len(a_part) > 1 else True
+        assert np.all(np.diff(b_part) > 0) if len(b_part) > 1 else True
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=keys)
+def test_merge_with_inf_padding(a):
+    """The runtime pads blocks with +inf; padded merge prefix must equal
+    the unpadded merge (the rust marshalling contract)."""
+    ak, av = _mk(a, 0)
+    bk, bv = _mk(a[::-1] or [0], 10_000)
+    pad = 32
+    akp = np.concatenate([ak, np.full(pad, np.inf, np.float32)])
+    avp = np.concatenate([av, np.full(pad, -1, np.int32)])
+    bkp = np.concatenate([bk, np.full(pad, np.inf, np.float32)])
+    bvp = np.concatenate([bv, np.full(pad, -1, np.int32)])
+    k, v = rank_merge(jnp.array(akp), jnp.array(avp), jnp.array(bkp), jnp.array(bvp))
+    ek, ev = _oracle(ak, av, bk, bv)
+    total = len(ak) + len(bk)
+    np.testing.assert_array_equal(np.asarray(k)[:total], ek)
+    np.testing.assert_array_equal(np.asarray(v)[:total], ev)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_gather_merge_arbitrary_slots(data):
+    """gather_merge must be correct for any subset of output slots (the
+    kernel's per-tile view)."""
+    a = data.draw(keys)
+    b = data.draw(keys)
+    ak, av = _mk(a, 0)
+    bk, bv = _mk(b, 10_000)
+    total = len(ak) + len(bk)
+    slots = data.draw(
+        st.lists(st.integers(0, total - 1), min_size=1, max_size=50)
+    )
+    ks = jnp.array(np.asarray(slots, np.int32))
+    gk, gv = gather_merge(
+        jnp.array(ak), jnp.array(av), jnp.array(bk), jnp.array(bv), ks
+    )
+    ek, ev = _oracle(ak, av, bk, bv)
+    np.testing.assert_array_equal(np.asarray(gk), ek[slots])
+    np.testing.assert_array_equal(np.asarray(gv), ev[slots])

@@ -1,0 +1,129 @@
+//! Ablation bench — the design choices DESIGN.md calls out, each
+//! toggled in isolation:
+//!
+//!   A1. sequential-partition crossover (p ≤ 64 inline vs always
+//!       threaded searches)
+//!   A2. per-thread task assignment: greedy length-balanced chunks vs
+//!       naive fixed-count chunks
+//!   A3. leaf run width of the sequential merge sort
+//!   A4. the two-sided task construction itself: paper's 2p tasks vs
+//!       merge-path's p tasks (partition-strategy ablation)
+
+use traff_merge::core::merge::{carve_output, partition_parallel, run_tasks_parallel};
+use traff_merge::core::seqmerge::merge_into;
+use traff_merge::core::Partition;
+use traff_merge::harness::{quick_mode, section, Bench};
+use traff_merge::metrics::Table;
+use traff_merge::workload::{sorted_keys, Dist};
+
+fn main() {
+    let n = if quick_mode() { 200_000 } else { 2_000_000 };
+    let a = sorted_keys(Dist::Uniform, n, 50);
+    let b = sorted_keys(Dist::Uniform, n, 51);
+    let mut out = vec![0i64; 2 * n];
+
+    section("A1: partition execution strategy (searches inline vs threaded)");
+    let mut t = Table::new(vec!["p", "inline (crossover)", "forced threads"]);
+    for &p in &[8usize, 64, 256, 1024] {
+        let r_inline =
+            Bench::new("inline").run(|| Partition::compute(&a, &b, p));
+        let r_thread =
+            Bench::new("threads").run(|| partition_parallel(&a, &b, p, 4));
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1} µs", r_inline.median() * 1e6),
+            format!("{:.1} µs", r_thread.median() * 1e6),
+        ]);
+    }
+    t.print();
+    println!("(the p<=64 crossover avoids spawn cost exactly where it hurts)");
+
+    section("A2: task-to-thread assignment policy");
+    let part = Partition::compute(&a, &b, 16);
+    let tasks = part.tasks();
+    let r_greedy = Bench::new("greedy").run(|| {
+        run_tasks_parallel(&a, &b, &mut out, &tasks, 4);
+    });
+    // Naive: fixed two-tasks-per-group regardless of size.
+    let (a_ref, b_ref): (&[i64], &[i64]) = (&a, &b);
+    let r_naive = Bench::new("naive").run(|| {
+        let pairs = carve_output(&tasks, &mut out);
+        let groups: Vec<Vec<_>> = {
+            let mut gs = Vec::new();
+            let mut it = pairs.into_iter().peekable();
+            while it.peek().is_some() {
+                gs.push(it.by_ref().take(2).collect());
+            }
+            gs
+        };
+        std::thread::scope(|s| {
+            for group in groups {
+                s.spawn(move || {
+                    for (task, slice) in group {
+                        merge_into(&a_ref[task.a.clone()], &b_ref[task.b.clone()], slice);
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "greedy length-balanced: {:.2} ms | fixed 2-per-group: {:.2} ms",
+        r_greedy.median() * 1e3,
+        r_naive.median() * 1e3
+    );
+
+    section("A3: leaf run width of the block sort (paper leaves this free)");
+    let raw = traff_merge::workload::raw_keys(Dist::Uniform, n / 2, 52);
+    let mut t = Table::new(vec!["leaf width", "sort time"]);
+    for &width in &[16usize, 32, 64, 128] {
+        let r = Bench::new(format!("w{width}")).run(|| {
+            let mut v = raw.clone();
+            // Bottom-up with explicit width: insertion-sort leaves then
+            // merge rounds (mirrors seqmerge::merge_sort's structure).
+            let mut lo = 0;
+            while lo < v.len() {
+                let hi = (lo + width).min(v.len());
+                traff_merge::core::seqmerge::insertion_sort(&mut v[lo..hi]);
+                lo = hi;
+            }
+            let mut scratch = v.clone();
+            let mut w = width;
+            let mut in_data = true;
+            let nn = v.len();
+            while w < nn {
+                {
+                    let (src, dst): (&[i64], &mut [i64]) =
+                        if in_data { (&v, &mut scratch) } else { (&scratch, &mut v) };
+                    let mut lo = 0;
+                    while lo < nn {
+                        let mid = (lo + w).min(nn);
+                        let hi = (lo + 2 * w).min(nn);
+                        merge_into(&src[lo..mid], &src[mid..hi], &mut dst[lo..hi]);
+                        lo = hi;
+                    }
+                }
+                in_data = !in_data;
+                w *= 2;
+            }
+            if !in_data {
+                v.copy_from_slice(&scratch);
+            }
+            v
+        });
+        t.row(vec![width.to_string(), format!("{:.1} ms", r.median() * 1e3)]);
+    }
+    t.print();
+
+    section("A4: partition strategy — 2p two-sided tasks (paper) vs p diagonal cuts");
+    let r_traff =
+        Bench::new("traff").run(|| traff_merge::core::parallel_merge(&a, &b, &mut out, 8));
+    let r_mp = Bench::new("mp")
+        .run(|| traff_merge::baseline::merge_path_merge(&a, &b, &mut out, 8));
+    println!(
+        "paper partition: {:.2} ms | merge-path partition: {:.2} ms\n\
+         (same merging work; the paper buys one-sync locality, merge-path\n\
+         buys perfect balance — measured balance in E9)",
+        r_traff.median() * 1e3,
+        r_mp.median() * 1e3
+    );
+}

@@ -1,0 +1,48 @@
+//! E12 — §3 extension: k-way merging built from the two-way primitive
+//! (merge tree, ceil(log2 k) rounds) vs the classical sequential loser
+//! tree and the naive pairwise fold.
+
+use traff_merge::core::multiway::{loser_tree_merge, parallel_kway_merge};
+use traff_merge::harness::{quick_mode, section, Bench};
+use traff_merge::metrics::{melems_per_sec, Table};
+use traff_merge::util::Rng;
+
+fn main() {
+    let total = if quick_mode() { 200_000 } else { 2_000_000 };
+
+    section(&format!("E12: k-way merge of {total} total records vs k"));
+    let mut t = Table::new(vec![
+        "k", "merge tree (p=8)", "loser tree", "pairwise fold", "tree Melem/s",
+    ]);
+    for &k in &[2usize, 4, 8, 16, 64, 256] {
+        let per = total / k;
+        let mut rng = Rng::new(k as u64);
+        let runs: Vec<Vec<i64>> = (0..k)
+            .map(|_| {
+                let mut v: Vec<i64> = (0..per).map(|_| rng.range(0, 1 << 40)).collect();
+                v.sort();
+                v
+            })
+            .collect();
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let r_tree = Bench::new("tree").samples(5).run(|| parallel_kway_merge(&refs, 8));
+        let r_loser = Bench::new("loser").samples(5).run(|| loser_tree_merge(&refs));
+        let r_fold = Bench::new("fold").samples(if k > 64 { 2 } else { 5 }).run(|| {
+            let mut acc: Vec<i64> = Vec::new();
+            for r in &refs {
+                acc = traff_merge::baseline::seq_merge(&acc, r);
+            }
+            acc
+        });
+        t.row(vec![
+            k.to_string(),
+            format!("{:.1} ms", r_tree.median() * 1e3),
+            format!("{:.1} ms", r_loser.median() * 1e3),
+            format!("{:.1} ms", r_fold.median() * 1e3),
+            format!("{:.1}", melems_per_sec(total, r_tree.median())),
+        ]);
+    }
+    t.print();
+    println!("(tree does log2(k) passes of n; loser tree one pass with log2(k)\n\
+              compares per element; fold degrades as k·n — the shape to check)");
+}

@@ -1,0 +1,98 @@
+//! E3 — Theorem 1: merge cost scales as O(n/p + log n).
+//!
+//! Two views:
+//!   1. Model level (exact): PRAM step counts over an (n, p) grid —
+//!      the clean validation of the bound, independent of host cores.
+//!   2. Wall clock: merge time vs n and vs p on OS threads. NOTE: this
+//!      testbed exposes a single CPU; wall-clock p-scaling shows
+//!      overhead, not speedup — the model-level table carries the
+//!      claim (see EXPERIMENTS.md §Testbed).
+
+use traff_merge::harness::{quick_mode, section, Bench};
+use traff_merge::metrics::{melems_per_sec, Table};
+use traff_merge::pram::{pram_merge, Variant};
+use traff_merge::util::log2_ceil;
+use traff_merge::workload::{sorted_keys, Dist};
+
+fn main() {
+    section("E3a: PRAM steps vs (n, p) — the O(n/p + log n) shape");
+    let mut t = Table::new(vec!["n", "p", "steps", "2n/p", "steps/(2n/p)", "log2 n"]);
+    let ns: &[usize] = if quick_mode() { &[1 << 12] } else { &[1 << 12, 1 << 14, 1 << 16] };
+    for &n in ns {
+        for &p in &[1usize, 2, 4, 8, 16, 32] {
+            let a = sorted_keys(Dist::Uniform, n, 1);
+            let b = sorted_keys(Dist::Uniform, n, 2);
+            let (_, rep) = pram_merge(&a, &b, p, Variant::Erew);
+            assert!(rep.report.conflict_free());
+            let per = rep.report.steps as f64 / (2.0 * n as f64 / p as f64);
+            t.row(vec![
+                n.to_string(),
+                p.to_string(),
+                rep.report.steps.to_string(),
+                (2 * n / p).to_string(),
+                format!("{per:.3}"),
+                log2_ceil(n).to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "(steps/(2n/p) must approach a constant as n/p grows — the merge\n\
+         phase dominates at ~1 step/element; small n/p rows expose the\n\
+         +log n and +p pipeline terms.)"
+    );
+
+    section("E3b: wall-clock merge vs n (p = 4)");
+    let mut t = Table::new(vec!["n", "traff p=4", "seq merge", "Melem/s (traff)"]);
+    let sizes: &[usize] =
+        if quick_mode() { &[100_000] } else { &[100_000, 1_000_000, 4_000_000] };
+    for &n in sizes {
+        let a = sorted_keys(Dist::Uniform, n, 3);
+        let b = sorted_keys(Dist::Uniform, n, 4);
+        let mut out = vec![0i64; 2 * n];
+        let r_par = Bench::new(format!("merge n={n} p=4"))
+            .run(|| traff_merge::core::parallel_merge(&a, &b, &mut out, 4));
+        let r_seq = Bench::new(format!("seq n={n}"))
+            .run(|| traff_merge::core::seqmerge::merge_into(&a, &b, &mut out));
+        t.row(vec![
+            n.to_string(),
+            format!("{:.3} ms", r_par.median() * 1e3),
+            format!("{:.3} ms", r_seq.median() * 1e3),
+            format!("{:.1}", melems_per_sec(2 * n, r_par.median())),
+        ]);
+    }
+    t.print();
+
+    section("E3c: wall-clock merge vs p (single-core testbed: expect flat/overhead)");
+    let n = if quick_mode() { 100_000 } else { 1_000_000 };
+    let a = sorted_keys(Dist::Uniform, n, 5);
+    let b = sorted_keys(Dist::Uniform, n, 6);
+    let mut out = vec![0i64; 2 * n];
+    let mut t = Table::new(vec!["p", "median", "Melem/s"]);
+    for &p in &[1usize, 2, 4, 8, 16] {
+        let r = Bench::new(format!("merge p={p}"))
+            .run(|| traff_merge::core::parallel_merge(&a, &b, &mut out, p));
+        t.row(vec![
+            p.to_string(),
+            format!("{:.3} ms", r.median() * 1e3),
+            format!("{:.1}", melems_per_sec(2 * n, r.median())),
+        ]);
+    }
+    t.print();
+
+    section("E3d: partition cost alone is O(p log n) — negligible");
+    let full = Bench::new("full merge")
+        .run(|| traff_merge::core::parallel_merge(&a, &b, &mut out, 8))
+        .median();
+    let mut t = Table::new(vec!["p", "partition", "fraction of full merge"]);
+    for &p in &[8usize, 64, 512] {
+        let r = Bench::new(format!("partition p={p}"))
+            .run(|| traff_merge::core::Partition::compute(&a, &b, p));
+        t.row(vec![
+            p.to_string(),
+            format!("{:.1} µs", r.median() * 1e6),
+            format!("{:.4}", r.median() / full),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,202 @@
+//! Baseline: the classical distinguished-element parallel merge
+//! (Shiloach–Vishkin [14] / Hagerup–Rüb [9] style) — the algorithm
+//! family Träff's note *simplifies*.
+//!
+//! Scheme:
+//! 1. Pick `p` distinguished elements from each input (block starts).
+//! 2. Binary-search each distinguished element in the other sequence
+//!    (as in the simplified algorithm).
+//! 3. **The step Träff removes**: merge the `2p` (position, origin)
+//!    splitter pairs into one ordered splitter list, to pair up the
+//!    subsequence fragments between consecutive splitters.
+//! 4. Merge the up-to-`2p+1` fragment pairs in parallel.
+//!
+//! The extra phase costs an `O(p)` merge plus a second synchronization,
+//! and the naive variant is **not stable**: splitters from B can split
+//! a run of equal A elements (we preserve this historical behaviour and
+//! *measure* it — E5's stability column). The output is still a correct
+//! (unstable) merge.
+
+use crate::core::ranks::{rank_high, rank_low};
+use crate::core::seqmerge::merge_into;
+use crate::util::div_ceil;
+
+/// One splitter: a cut position in both sequences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Cut {
+    a: usize,
+    b: usize,
+}
+
+/// Phase counters reported by the instrumented run (E5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistinguishedStats {
+    pub searches: usize,
+    pub splitter_merge_ops: usize,
+    pub sync_points: usize,
+}
+
+/// Classic distinguished-element parallel merge. Correct but unstable;
+/// two synchronization points.
+pub fn distinguished_merge<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+) -> DistinguishedStats {
+    assert_eq!(out.len(), a.len() + b.len());
+    let mut stats = DistinguishedStats::default();
+    if a.is_empty() || b.is_empty() || p <= 1 {
+        merge_into(a, b, out);
+        return stats;
+    }
+    let n = a.len();
+    let m = b.len();
+
+    // Step 1+2: distinguished elements = block starts; cross ranks via
+    // binary search (parallelizable; counted, executed inline — the
+    // search cost is identical to the simplified algorithm's).
+    let ablock = div_ceil(n, p);
+    let bblock = div_ceil(m, p);
+    // Historical fidelity: the classical scheme ranks both splitter
+    // sets with one symmetric convention — equal opposite-side elements
+    // land *before* the splitter (B-priority path) — while each PE's
+    // local sequential merge ties the other way. The result is a
+    // correct but UNSTABLE merge (equal keys ordered inconsistently at
+    // fragment boundaries), which is precisely the deficiency Träff's
+    // asymmetric rank_low/rank_high convention eliminates.
+    let mut cuts: Vec<Cut> = Vec::with_capacity(2 * p + 2);
+    for i in (0..n).step_by(ablock) {
+        // A-splitter at a=i: where does A[i] fall in B?
+        cuts.push(Cut { a: i, b: rank_high(&a[i], b) });
+        stats.searches += 1;
+    }
+    for j in (0..m).step_by(bblock) {
+        cuts.push(Cut { a: rank_low(&b[j], a), b: j });
+        stats.searches += 1;
+    }
+    stats.sync_points += 1; // barrier after the searches
+
+    // Step 3 — THE EXTRA PHASE: merge the splitter lists into one
+    // ordered cut sequence. (Historically a parallel merge of 2p
+    // elements; p is small so we count its ops and run it inline.)
+    cuts.push(Cut { a: 0, b: 0 });
+    cuts.push(Cut { a: n, b: m });
+    cuts.sort_by_key(|c| (c.a + c.b, c.a)); // ordered by output position
+    cuts.dedup();
+    stats.splitter_merge_ops += cuts.len() * crate::util::log2_ceil(cuts.len()) as usize;
+    stats.sync_points += 1; // barrier after the splitter merge
+
+    // Step 4: fragment pairs between consecutive cuts, merged in
+    // parallel. Consecutive cuts delimit disjoint (A-range, B-range)
+    // fragments whose outputs are contiguous in C.
+    let mut frags: Vec<(std::ops::Range<usize>, std::ops::Range<usize>, usize)> = Vec::new();
+    for w in cuts.windows(2) {
+        let (c0, c1) = (w[0], w[1]);
+        debug_assert!(c0.a <= c1.a && c0.b <= c1.b, "cuts must be monotone: {c0:?} {c1:?}");
+        if c1.a + c1.b > c0.a + c0.b {
+            frags.push((c0.a..c1.a, c0.b..c1.b, c0.a + c0.b));
+        }
+    }
+    let threads = p;
+    let mut pairs: Vec<(&(std::ops::Range<usize>, std::ops::Range<usize>, usize), &mut [T])> =
+        Vec::with_capacity(frags.len());
+    let mut rest = out;
+    let mut cursor = 0usize;
+    for f in &frags {
+        debug_assert_eq!(f.2, cursor);
+        let len = (f.0.end - f.0.start) + (f.1.end - f.1.start);
+        let (head, tail) = rest.split_at_mut(len);
+        rest = tail;
+        cursor += len;
+        pairs.push((f, head));
+    }
+    let per = div_ceil(pairs.len().max(1), threads);
+    std::thread::scope(|s| {
+        let mut iter = pairs.into_iter().peekable();
+        while iter.peek().is_some() {
+            let group: Vec<_> = iter.by_ref().take(per).collect();
+            s.spawn(move || {
+                for (f, slice) in group {
+                    merge_into(&a[f.0.clone()], &b[f.1.clone()], slice);
+                }
+            });
+        }
+    });
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+
+    #[test]
+    fn output_is_sorted_permutation() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let n = rng.index(300) + 1;
+            let m = rng.index(300) + 1;
+            let p = 1 + rng.index(10);
+            let mut a: Vec<i64> = (0..n).map(|_| rng.range(0, 50)).collect();
+            let mut b: Vec<i64> = (0..m).map(|_| rng.range(0, 50)).collect();
+            a.sort();
+            b.sort();
+            let mut out = vec![0i64; n + m];
+            distinguished_merge(&a, &b, &mut out, p);
+            let mut expect = [a, b].concat();
+            expect.sort();
+            assert_eq!(out, expect, "n={n} m={m} p={p}");
+        }
+    }
+
+    #[test]
+    fn has_two_sync_points() {
+        let a: Vec<i64> = (0..100).collect();
+        let b: Vec<i64> = (0..100).map(|i| i + 50).collect();
+        let mut out = vec![0i64; 200];
+        let stats = distinguished_merge(&a, &b, &mut out, 4);
+        assert_eq!(stats.sync_points, 2);
+        assert!(stats.splitter_merge_ops > 0, "the extra phase must do work");
+        assert_eq!(stats.searches, 8);
+    }
+
+    #[test]
+    fn instability_exists_on_duplicate_heavy_input() {
+        // Demonstrate (not just tolerate) the baseline's instability:
+        // find some duplicate-heavy input where tag order breaks, while
+        // keys remain correctly sorted. This is the E5 contrast.
+        let mut rng = Rng::new(6);
+        let mut found_instability = false;
+        for _ in 0..200 {
+            let n = 64 + rng.index(64);
+            let m = 64 + rng.index(64);
+            let p = 2 + rng.index(8);
+            let a: Vec<Record> = {
+                let mut ks: Vec<i64> = (0..n).map(|_| rng.range(0, 4)).collect();
+                ks.sort();
+                ks.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect()
+            };
+            let b: Vec<Record> = {
+                let mut ks: Vec<i64> = (0..m).map(|_| rng.range(0, 4)).collect();
+                ks.sort();
+                ks.iter()
+                    .enumerate()
+                    .map(|(i, &k)| Record::new(k, 1_000_000 + i as u64))
+                    .collect()
+            };
+            let mut out = vec![Record::new(0, 0); n + m];
+            distinguished_merge(&a, &b, &mut out, p);
+            assert!(out.windows(2).all(|w| w[0].key <= w[1].key), "keys must sort");
+            if crate::workload::stability::check_stable_merge(&out, 1_000_000).is_err() {
+                found_instability = true;
+                break;
+            }
+        }
+        assert!(
+            found_instability,
+            "expected the classical baseline to exhibit instability on some input"
+        );
+    }
+}

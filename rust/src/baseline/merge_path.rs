@@ -1,0 +1,162 @@
+//! Baseline: the equal-split / "merge path" family ([2, 5, 6, 15, 16]
+//! in the paper's intro — Akl–Santoro multiselection descendants).
+//!
+//! Instead of block starts + cross ranks, the output is cut into `p`
+//! *exactly equal* segments and, for each cut `k·(n+m)/p`, a binary
+//! search over the merge-path diagonal finds the unique (i, j) split.
+//! Perfect balance (the simplified algorithm only guarantees 2x), at
+//! the cost of a slightly more delicate search. With the A-priority
+//! diagonal condition the result is stable — this is also the
+//! formulation our L1 Pallas kernel uses per tile, so the rust and
+//! kernel implementations cross-validate each other.
+//!
+//! The paper notes its observation "is not relevant to this class" —
+//! we implement it as the comparison point (E5/E9 balance columns).
+
+use crate::core::seqmerge::merge_into;
+
+/// Find the A-priority stable split (i, k-i) of output diagonal `k`:
+/// the unique `i` maximal with `A[i-1] <= B[k-i]` (ties take A first).
+#[inline]
+pub fn diagonal_split<T: Ord>(a: &[T], b: &[T], k: usize) -> usize {
+    let n = a.len();
+    let m = b.len();
+    debug_assert!(k <= n + m);
+    let mut lo = k.saturating_sub(m);
+    let mut hi = k.min(n);
+    while lo < hi {
+        let mid = (lo + hi) >> 1;
+        // Take one more from A iff A[mid] <= B[k - mid - 1]: A[mid]
+        // belongs before that B element in the A-priority merge.
+        if a[mid] <= b[k - mid - 1] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Stable parallel merge via p equal output segments (merge path).
+pub fn merge_path_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [T], p: usize) {
+    assert_eq!(out.len(), a.len() + b.len());
+    assert!(p > 0);
+    let total = a.len() + b.len();
+    if total == 0 {
+        return;
+    }
+    if p == 1 {
+        merge_into(a, b, out);
+        return;
+    }
+    // Cut positions 0 = k_0 < k_1 < ... < k_p = total, equal +-1.
+    let cuts: Vec<usize> = (0..=p)
+        .map(|t| (t * total) / p)
+        .collect();
+    let splits: Vec<usize> = cuts.iter().map(|&k| diagonal_split(a, b, k)).collect();
+    // Carve output into the p segments and merge in parallel.
+    let mut segs = Vec::with_capacity(p);
+    let mut rest = out;
+    for t in 0..p {
+        let len = cuts[t + 1] - cuts[t];
+        let (head, tail) = rest.split_at_mut(len);
+        rest = tail;
+        if len > 0 {
+            let (i0, i1) = (splits[t], splits[t + 1]);
+            let (j0, j1) = (cuts[t] - i0, cuts[t + 1] - i1);
+            segs.push((i0..i1, j0..j1, head));
+        }
+    }
+    std::thread::scope(|s| {
+        for (ar, br, slice) in segs {
+            s.spawn(move || {
+                merge_into(&a[ar.clone()], &b[br.clone()], slice);
+            });
+        }
+    });
+}
+
+/// Segment sizes are *perfectly* equal (±1) by construction — exposed
+/// for the E9 balance bench.
+pub fn merge_path_segment_sizes(total: usize, p: usize) -> Vec<usize> {
+    (0..p).map(|t| ((t + 1) * total) / p - (t * total) / p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+
+    #[test]
+    fn diagonal_split_window() {
+        let a = [1i64, 3, 5, 7];
+        let b = [2i64, 4, 6, 8];
+        for k in 0..=8 {
+            let i = diagonal_split(&a, &b, k);
+            let j = k - i;
+            // Valid A-priority split: a[i-1] <= b[j] and b[j-1] < a[i].
+            if i > 0 && j < b.len() {
+                assert!(a[i - 1] <= b[j], "k={k}");
+            }
+            if j > 0 && i < a.len() {
+                assert!(b[j - 1] < a[i], "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn merges_correctly() {
+        let mut rng = Rng::new(21);
+        for _ in 0..150 {
+            let n = rng.index(400);
+            let m = rng.index(400);
+            let p = 1 + rng.index(12);
+            let mut a: Vec<i64> = (0..n).map(|_| rng.range(0, 40)).collect();
+            let mut b: Vec<i64> = (0..m).map(|_| rng.range(0, 40)).collect();
+            a.sort();
+            b.sort();
+            let mut out = vec![0i64; n + m];
+            merge_path_merge(&a, &b, &mut out, p);
+            let mut expect = [a, b].concat();
+            expect.sort();
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn merge_path_is_stable() {
+        let mut rng = Rng::new(22);
+        for _ in 0..60 {
+            let n = 1 + rng.index(150);
+            let m = 1 + rng.index(150);
+            let p = 1 + rng.index(8);
+            let mut ka: Vec<i64> = (0..n).map(|_| rng.range(0, 5)).collect();
+            let mut kb: Vec<i64> = (0..m).map(|_| rng.range(0, 5)).collect();
+            ka.sort();
+            kb.sort();
+            let a: Vec<Record> =
+                ka.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect();
+            let b: Vec<Record> = kb
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| Record::new(k, 1_000_000 + i as u64))
+                .collect();
+            let mut out = vec![Record::new(0, 0); n + m];
+            merge_path_merge(&a, &b, &mut out, p);
+            crate::workload::stability::assert_stable_merge(&out, 1_000_000);
+        }
+    }
+
+    #[test]
+    fn segments_perfectly_balanced() {
+        for total in [0usize, 1, 7, 100, 101, 1000] {
+            for p in [1usize, 2, 3, 7, 16] {
+                let sizes = merge_path_segment_sizes(total, p);
+                let mx = sizes.iter().max().copied().unwrap_or(0);
+                let mn = sizes.iter().min().copied().unwrap_or(0);
+                assert!(mx - mn <= 1, "total={total} p={p} sizes={sizes:?}");
+            }
+        }
+    }
+}

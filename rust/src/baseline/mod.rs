@@ -1,0 +1,10 @@
+//! Comparison algorithms (E5/E9): the family the paper simplifies, the
+//! equal-split family it contrasts with, and sequential lower bounds.
+
+pub mod distinguished;
+pub mod merge_path;
+pub mod sequential;
+
+pub use distinguished::{distinguished_merge, DistinguishedStats};
+pub use merge_path::merge_path_merge;
+pub use sequential::{seq_merge, seq_merge_into, seq_sort, std_stable_sort};

@@ -1,0 +1,71 @@
+//! Sequential baselines: the lower bound every parallel variant is
+//! measured against (E3/E5/E7).
+
+use crate::core::seqmerge::{merge_into, merge_sort};
+
+/// Stable sequential two-way merge into a fresh Vec.
+pub fn seq_merge<T: Copy + Ord>(a: &[T], b: &[T]) -> Vec<T> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut ai = 0;
+    let mut bi = 0;
+    while ai < a.len() && bi < b.len() {
+        if a[ai] <= b[bi] {
+            out.push(a[ai]);
+            ai += 1;
+        } else {
+            out.push(b[bi]);
+            bi += 1;
+        }
+    }
+    out.extend_from_slice(&a[ai..]);
+    out.extend_from_slice(&b[bi..]);
+    out
+}
+
+/// Stable sequential merge into a caller buffer (no allocation).
+pub fn seq_merge_into<T: Copy + Ord>(a: &[T], b: &[T], out: &mut [T]) {
+    merge_into(a, b, out)
+}
+
+/// Our own stable sequential merge sort (scratch-buffer bottom-up).
+pub fn seq_sort<T: Copy + Ord>(data: &mut [T]) {
+    if data.len() <= 1 {
+        return;
+    }
+    let mut scratch = data.to_vec();
+    merge_sort(data, &mut scratch);
+}
+
+/// `std` stable sort, for calibration.
+pub fn std_stable_sort<T: Copy + Ord>(data: &mut [T]) {
+    data.sort();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+
+    #[test]
+    fn seq_merge_correct_and_stable() {
+        let a = [Record::new(1, 0), Record::new(2, 1), Record::new(2, 2)];
+        let b = [Record::new(2, 100), Record::new(3, 101)];
+        let out = seq_merge(&a, &b);
+        let tags: Vec<u64> = out.iter().map(|r| r.tag).collect();
+        assert_eq!(tags, vec![0, 1, 2, 100, 101]);
+    }
+
+    #[test]
+    fn seq_sort_matches_std() {
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let n = rng.index(500);
+            let mut v: Vec<i64> = (0..n).map(|_| rng.range(-100, 100)).collect();
+            let mut w = v.clone();
+            seq_sort(&mut v);
+            w.sort();
+            assert_eq!(v, w);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! BSP model simulator (S12) and the merge algorithms on it — the §3
+//! remark: eliminating the distinguished-element merge "can save at
+//! least one expensive round of communication" (E8).
+
+pub mod machine;
+pub mod merge_bsp;
+
+pub use machine::{BspCost, BspMachine, BspParams};
+pub use merge_bsp::{bsp_merge_baseline, bsp_merge_simplified, BspMergeReport};

@@ -1,0 +1,123 @@
+//! Hand-rolled CLI argument parsing (the offline registry has no
+//! `clap`). GNU-ish: `repro <subcommand> --flag value --switch`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator (first item = subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let cmd = it.next().unwrap_or_default();
+        let mut opts = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty flag '--'".into());
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    opts.insert(key.to_string(), "true".to_string()); // boolean switch
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { cmd, opts, positional })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.opts.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Reject unknown options (catches typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k} for '{}' (known: {})",
+                    self.cmd,
+                    known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("merge --n 1000 --p 8 --dist zipf");
+        assert_eq!(a.cmd, "merge");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1000);
+        assert_eq!(a.get("dist"), Some("zipf"));
+    }
+
+    #[test]
+    fn equals_form_and_switches() {
+        let a = parse("sort --n=500 --verify");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 500);
+        assert!(a.get_flag("verify"));
+        assert!(!a.get_flag("quiet"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("demo input.txt other");
+        assert_eq!(a.positional, vec!["input.txt", "other"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("merge --bogus 1");
+        assert!(a.expect_known(&["n", "p"]).is_err());
+        assert!(a.expect_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn bad_integer_reported() {
+        let a = parse("merge --n abc");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Persistent worker pool for job-level parallelism.
+//!
+//! The core algorithms use `std::thread::scope` fork/join (their data
+//! is borrowed); the *service* layer runs whole jobs — which own their
+//! data — on this persistent pool, so concurrent client jobs don't pay
+//! thread spawn costs and can overlap.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Cmd {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool with a shared queue.
+pub struct WorkerPool {
+    tx: Sender<Cmd>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> WorkerPool {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Cmd>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("traff-worker-{i}"))
+                    .spawn(move || loop {
+                        let cmd = { rx.lock().unwrap().recv() };
+                        match cmd {
+                            Ok(Cmd::Run(job)) => job(),
+                            Ok(Cmd::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { tx, handles, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job; returns a receiver for its result.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> Receiver<R> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Cmd::Run(Box::new(move || {
+                let _ = rtx.send(job());
+            })))
+            .expect("pool alive");
+        rrx
+    }
+
+    /// Submit and wait.
+    pub fn run<R: Send + 'static>(&self, job: impl FnOnce() -> R + Send + 'static) -> R {
+        self.submit(job).recv().expect("job completed")
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_on_workers() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let rxs: Vec<_> = (0..100)
+            .map(|i| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    i * 2
+                })
+            })
+            .collect();
+        let sum: usize = rxs.into_iter().map(|rx| rx.recv().unwrap()).sum();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(sum, (0..100).map(|i| i * 2).sum());
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = WorkerPool::new(2);
+        pool.run(|| ());
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn jobs_overlap_across_workers() {
+        use std::time::{Duration, Instant};
+        let pool = WorkerPool::new(4);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| pool.submit(|| std::thread::sleep(Duration::from_millis(50))))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // 4 x 50ms in parallel must take well under 200ms.
+        assert!(t0.elapsed() < Duration::from_millis(180));
+    }
+}

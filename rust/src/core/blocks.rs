@@ -1,0 +1,157 @@
+//! Block partition arithmetic (paper §2).
+//!
+//! A length-`n` array is divided among `p` processing elements into
+//! consecutive, contiguous blocks differing in size by at most one: the
+//! first `r = n mod p` blocks get `ceil(n/p)` elements, the rest
+//! `floor(n/p)`. Start index of block `i`:
+//!
+//! ```text
+//! x_i = i*ceil(n/p)            for i <  r
+//! x_i = i*floor(n/p) + n mod p for i >= r      (x_p = n)
+//! ```
+//!
+//! (The paper's displayed formula has a typo — `i⌈n/p⌉ + n mod p` — the
+//! derivation `r*ceil + (i-r)*floor = i*floor + r` gives the form used
+//! here; it agrees with the worked Figure 1 values.)
+//!
+//! Both "start of block i" and "block containing index k" are O(1),
+//! which is what lets each processing element classify its merge case
+//! locally (paper: "all constant time operations").
+
+use crate::util::div_ceil;
+
+/// Immutable description of a p-way block partition of `len` elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocks {
+    pub len: usize,
+    pub p: usize,
+    /// `ceil(len/p)`
+    pub big: usize,
+    /// `floor(len/p)`
+    pub small: usize,
+    /// `len mod p` — number of big blocks.
+    pub r: usize,
+}
+
+impl Blocks {
+    pub fn new(len: usize, p: usize) -> Self {
+        assert!(p > 0, "p must be positive");
+        Blocks { len, p, big: div_ceil(len, p), small: len / p, r: len % p }
+    }
+
+    /// Start index `x_i` of block `i`, for `0 <= i <= p` (`x_p = len`).
+    #[inline]
+    pub fn start(&self, i: usize) -> usize {
+        debug_assert!(i <= self.p);
+        if i < self.r {
+            i * (self.small + 1)
+        } else {
+            i * self.small + self.r
+        }
+    }
+
+    /// Length of block `i`.
+    #[inline]
+    pub fn block_len(&self, i: usize) -> usize {
+        self.start(i + 1) - self.start(i)
+    }
+
+    /// The block containing element index `k` (`0 <= k < len`), O(1).
+    ///
+    /// Paper §2: `k` belongs to block `i` iff either `k < r*ceil` and
+    /// `floor(k/ceil) = i`, or `k >= r*ceil` and
+    /// `floor((k - r*ceil)/floor) + r = i`.
+    #[inline]
+    pub fn block_of(&self, k: usize) -> usize {
+        debug_assert!(k < self.len, "index {k} out of range {}", self.len);
+        let big = self.small + 1;
+        let boundary = self.r * big;
+        if k < boundary {
+            k / big
+        } else {
+            debug_assert!(self.small > 0);
+            (k - boundary) / self.small + self.r
+        }
+    }
+
+    /// All `p + 1` start indices (the `x_0..x_p` array of the paper).
+    pub fn starts(&self) -> Vec<usize> {
+        (0..=self.p).map(|i| self.start(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_a_blocks() {
+        // n = 18, p = 5: starts [0, 4, 8, 12, 15, 18] (r = 3 big blocks of 4).
+        let b = Blocks::new(18, 5);
+        assert_eq!(b.starts(), vec![0, 4, 8, 12, 15, 18]);
+    }
+
+    #[test]
+    fn figure1_b_blocks() {
+        // m = 15, p = 5: starts [0, 3, 6, 9, 12, 15] (all blocks of 3).
+        let b = Blocks::new(15, 5);
+        assert_eq!(b.starts(), vec![0, 3, 6, 9, 12, 15]);
+    }
+
+    #[test]
+    fn starts_monotone_and_cover() {
+        for len in 0..60 {
+            for p in 1..20 {
+                let b = Blocks::new(len, p);
+                let s = b.starts();
+                assert_eq!(s[0], 0);
+                assert_eq!(s[p], len);
+                for w in s.windows(2) {
+                    assert!(w[0] <= w[1]);
+                    assert!(w[1] - w[0] <= div_ceil(len, p).max(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        for len in 1..100 {
+            for p in 1..=len {
+                let b = Blocks::new(len, p);
+                let sizes: Vec<usize> = (0..p).map(|i| b.block_len(i)).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                assert!(mx - mn <= 1, "len={len} p={p} sizes={sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_of_inverts_start() {
+        for len in 1..80 {
+            for p in 1..25 {
+                let b = Blocks::new(len, p);
+                for k in 0..len {
+                    let i = b.block_of(k);
+                    assert!(b.start(i) <= k && k < b.start(i + 1), "len={len} p={p} k={k} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_blocks_than_elements() {
+        // n < p: the tail blocks are empty; starts saturate at len.
+        let b = Blocks::new(3, 7);
+        assert_eq!(b.starts(), vec![0, 1, 2, 3, 3, 3, 3, 3]);
+        assert_eq!(b.block_of(2), 2);
+    }
+
+    #[test]
+    fn single_block() {
+        let b = Blocks::new(10, 1);
+        assert_eq!(b.starts(), vec![0, 10]);
+        assert_eq!(b.block_of(9), 0);
+    }
+}

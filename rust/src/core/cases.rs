@@ -1,0 +1,458 @@
+//! The five-case subproblem classifier (paper §2, Steps 3–4, Figure 2).
+//!
+//! After the two parallel binary-search steps have produced the cross
+//! ranks `x̄_i = rank_low(A[x_i], B)` and `ȳ_j = rank_high(B[y_j], A)`,
+//! each of the `2p` processing elements determines its disjoint merge
+//! subproblem **locally in O(1)** from two adjacent cross ranks — this
+//! locality is exactly the simplification over [9, 14], which needed a
+//! separate parallel merge of the distinguished elements.
+//!
+//! A-side (Step 3), PE assigned to block start `x_i`, with `j` the block
+//! of B containing `x̄_i`:
+//!
+//! - (a) `x̄_i = x̄_{i+1}`                              → copy `A[x_i..x_{i+1})`
+//! - (b) both in block j, `x̄_i ≠ y_j`                 → merge `A[x_i..x_{i+1})` with `B[x̄_i..x̄_{i+1})`
+//! - (c) different blocks, `x̄_i ≠ y_j`, `x̄_{i+1} ≠ y_{j+1}` → merge `A[x_i..ȳ_{j+1})` with `B[x̄_i..y_{j+1})`
+//! - (d) different blocks, `x̄_i ≠ y_j`, `x̄_{i+1} = y_{j+1}` → merge `A[x_i..x_{i+1})` with `B[x̄_i..y_{j+1})`
+//! - (e) `x̄_i = y_j`, `x̄_i ≠ x̄_{i+1}`                → copy `A[x_i..ȳ_j)`
+//!
+//! all writing to `C[x_i + x̄_i ..)`. The B-side (Step 4) is the same
+//! *mutatis mutandis* (swap A↔B, x↔y, rank_low↔rank_high); output goes
+//! to `C[y_j + ȳ_j ..)`. Tie-breaking asymmetry is preserved: in every
+//! produced task, ties are won by the A side, which is what makes the
+//! overall merge stable.
+//!
+//! This module is pure index arithmetic — no data movement — so it can
+//! be property-tested exhaustively (tasks disjoint, tile C, sizes ≤
+//! 2⌈n/p⌉ + O(1)) independent of element types.
+
+use super::blocks::Blocks;
+use super::ranks::{rank_high, rank_low};
+
+/// Which of the paper's five cases produced a task (diagnostics, E2/E9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Case {
+    /// (a)/(a′): copy — the opposite sequence contributes nothing here.
+    CopyA,
+    /// (b)/(b′): both cross ranks inside one opposite block.
+    SameBlock,
+    /// (c)/(c′): cross ranks straddle an opposite block boundary.
+    CrossBlock,
+    /// (d)/(d′): the right cross rank lands exactly on a block start.
+    CrossBlockAligned,
+    /// (e)/(e′): the left cross rank lands exactly on a block start.
+    StartAligned,
+}
+
+/// Which input sequence the task's *initiating* block came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// Step 3: PE assigned to an A block start.
+    A,
+    /// Step 4: PE assigned to a B block start.
+    B,
+}
+
+/// One disjoint merge subproblem: stable-merge `A[a.clone()]` with
+/// `B[b.clone()]` into `C[c_off .. c_off + a.len() + b.len())`,
+/// ties won by A.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergeTask {
+    pub a: std::ops::Range<usize>,
+    pub b: std::ops::Range<usize>,
+    pub c_off: usize,
+    pub case: Case,
+    pub side: Side,
+}
+
+impl MergeTask {
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.a.end - self.a.start) + (self.b.end - self.b.start)
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The partition state computed by the two binary-search steps:
+/// block starts and cross ranks for both sequences. `p + 1` entries
+/// each, with the sentinels `x̄_p = m`, `ȳ_p = n` (paper Steps 1–2).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub pa: Blocks,
+    pub pb: Blocks,
+    /// `x_i` for `0..=p`.
+    pub x: Vec<usize>,
+    /// `y_j` for `0..=p`.
+    pub y: Vec<usize>,
+    /// `x̄_i = rank_low(A[x_i], B)`, `x̄_p = m`.
+    pub xbar: Vec<usize>,
+    /// `ȳ_j = rank_high(B[y_j], A)`, `ȳ_p = n`.
+    pub ybar: Vec<usize>,
+}
+
+impl Partition {
+    /// Steps 1–2: the `2p` binary searches (sequential driver; the
+    /// parallel drivers in `merge.rs`/`pram` distribute the same calls).
+    pub fn compute<T: Ord>(a: &[T], b: &[T], p: usize) -> Self {
+        let pa = Blocks::new(a.len(), p);
+        let pb = Blocks::new(b.len(), p);
+        let x = pa.starts();
+        let y = pb.starts();
+        let xbar = Self::xbar_of(a, b, &x);
+        let ybar = Self::ybar_of(a, b, &y);
+        Partition { pa, pb, x, y, xbar, ybar }
+    }
+
+    /// `x̄` from precomputed block starts (one entry per start; the
+    /// last is the sentinel `m`). Each entry is one independent binary
+    /// search — the unit the parallel drivers distribute.
+    pub fn xbar_of<T: Ord>(a: &[T], b: &[T], x: &[usize]) -> Vec<usize> {
+        x.iter()
+            .map(|&xi| if xi < a.len() { rank_low(&a[xi], b) } else { b.len() })
+            .collect()
+    }
+
+    pub fn ybar_of<T: Ord>(a: &[T], b: &[T], y: &[usize]) -> Vec<usize> {
+        y.iter()
+            .map(|&yj| if yj < b.len() { rank_high(&b[yj], a) } else { a.len() })
+            .collect()
+    }
+
+    /// Steps 3–4: classify every block start into its merge task.
+    /// Pure O(p) index arithmetic; returns the `<= 2p` non-empty tasks.
+    pub fn tasks(&self) -> Vec<MergeTask> {
+        let p = self.pa.p;
+        let mut out = Vec::with_capacity(2 * p);
+        for i in 0..p {
+            if let Some(t) = self.a_side_task(i) {
+                if !t.is_empty() {
+                    out.push(t);
+                }
+            }
+            if let Some(t) = self.b_side_task(i) {
+                if !t.is_empty() {
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Step 3 for one PE: the task initiated by A block `i`.
+    pub fn a_side_task(&self, i: usize) -> Option<MergeTask> {
+        let (x, y, xbar, ybar) = (&self.x, &self.y, &self.xbar, &self.ybar);
+        let xi = x[i];
+        let xi1 = x[i + 1];
+        if xi == xi1 {
+            return None; // empty A block (n < p tail) — no PE work
+        }
+        let (xb, xb1) = (xbar[i], xbar[i + 1]);
+        let c_off = xi + xb;
+        // (a): no B elements strictly between — plain copy of the block.
+        if xb == xb1 {
+            return Some(MergeTask {
+                a: xi..xi1,
+                b: xb..xb,
+                c_off,
+                case: Case::CopyA,
+                side: Side::A,
+            });
+        }
+        // x̄_i < x̄_{i+1} <= m, so x̄_i < m: block j of B is defined.
+        let j = self.pb.block_of(xb);
+        let yj = y[j];
+        if xb == yj {
+            // (e): our cross rank sits exactly on B block start y_j; the
+            // Step-4 PE for y_j merges from there — we only copy the A
+            // prefix that precedes B[y_j], i.e. A[x_i .. ȳ_j).
+            return Some(MergeTask {
+                a: xi..ybar[j],
+                b: xb..xb,
+                c_off,
+                case: Case::StartAligned,
+                side: Side::A,
+            });
+        }
+        let yj1 = y[j + 1];
+        if xb1 < yj1 {
+            // (b): both cross ranks inside block j — merge the full A
+            // block with the B slice between the cross ranks.
+            Some(MergeTask {
+                a: xi..xi1,
+                b: xb..xb1,
+                c_off,
+                case: Case::SameBlock,
+                side: Side::A,
+            })
+        } else if xb1 == yj1 {
+            // (d): right cross rank aligned with the next block start —
+            // the A block still falls entirely before B[y_{j+1}]
+            // (ȳ_{j+1} > x_{i+1} by Observation 1), so merge all of it.
+            Some(MergeTask {
+                a: xi..xi1,
+                b: xb..yj1,
+                c_off,
+                case: Case::CrossBlockAligned,
+                side: Side::A,
+            })
+        } else {
+            // (c): cross ranks straddle y_{j+1} strictly — hand over at
+            // the block boundary: A up to ȳ_{j+1} (which is <= x_{i+1}
+            // since x̄_{i+1} > y_{j+1}), B up to y_{j+1}. The Step-4 PE
+            // assigned to y_{j+1} continues from there.
+            Some(MergeTask {
+                a: xi..self.ybar[j + 1],
+                b: xb..yj1,
+                c_off,
+                case: Case::CrossBlock,
+                side: Side::A,
+            })
+        }
+    }
+
+    /// Step 4 for one PE: the task initiated by B block `j`
+    /// (mutatis mutandis, with the rank roles swapped: B's cross ranks
+    /// are high ranks, and the A-boundary handovers use x̄).
+    pub fn b_side_task(&self, j: usize) -> Option<MergeTask> {
+        let (x, y, xbar, ybar) = (&self.x, &self.y, &self.xbar, &self.ybar);
+        let yj = y[j];
+        let yj1 = y[j + 1];
+        if yj == yj1 {
+            return None;
+        }
+        let (yb, yb1) = (ybar[j], ybar[j + 1]);
+        let c_off = yj + yb;
+        if yb == yb1 {
+            // (a′): copy the B block.
+            return Some(MergeTask {
+                a: yb..yb,
+                b: yj..yj1,
+                c_off,
+                case: Case::CopyA,
+                side: Side::B,
+            });
+        }
+        let i = self.pa.block_of(yb);
+        let xi = x[i];
+        if yb == xi {
+            // (e′): copy B[y_j .. x̄_i) — the B prefix strictly preceding
+            // A[x_i]; the Step-3 PE for x_i merges from there.
+            return Some(MergeTask {
+                a: yb..yb,
+                b: yj..xbar[i],
+                c_off,
+                case: Case::StartAligned,
+                side: Side::B,
+            });
+        }
+        let xi1 = x[i + 1];
+        if yb1 < xi1 {
+            // (b′)
+            Some(MergeTask {
+                a: yb..yb1,
+                b: yj..yj1,
+                c_off,
+                case: Case::SameBlock,
+                side: Side::B,
+            })
+        } else if yb1 == xi1 {
+            // (d′)
+            Some(MergeTask {
+                a: yb..xi1,
+                b: yj..yj1,
+                c_off,
+                case: Case::CrossBlockAligned,
+                side: Side::B,
+            })
+        } else {
+            // (c′): hand over at A block boundary x_{i+1}.
+            Some(MergeTask {
+                a: yb..xi1,
+                b: yj..self.xbar[i + 1],
+                c_off,
+                case: Case::CrossBlock,
+                side: Side::B,
+            })
+        }
+    }
+
+    /// Validate that the produced tasks exactly tile `C` and respect the
+    /// per-task size bound. Used by debug assertions and the E2/E9 tests.
+    pub fn validate_tasks(&self, tasks: &[MergeTask]) -> Result<(), String> {
+        let n = self.pa.len;
+        let m = self.pb.len;
+        let mut sorted: Vec<&MergeTask> = tasks.iter().collect();
+        sorted.sort_by_key(|t| t.c_off);
+        let mut cursor = 0usize;
+        let mut a_cursor = 0usize;
+        let mut b_cursor = 0usize;
+        for t in &sorted {
+            if t.c_off != cursor {
+                return Err(format!(
+                    "gap/overlap at C[{cursor}]: next task starts at {} ({t:?})",
+                    t.c_off
+                ));
+            }
+            if t.a.start != a_cursor && !t.a.is_empty() {
+                return Err(format!("A not consumed in order at {a_cursor}: {t:?}"));
+            }
+            if t.b.start != b_cursor && !t.b.is_empty() {
+                return Err(format!("B not consumed in order at {b_cursor}: {t:?}"));
+            }
+            a_cursor = t.a.end.max(a_cursor);
+            b_cursor = t.b.end.max(b_cursor);
+            cursor += t.len();
+        }
+        if cursor != n + m {
+            return Err(format!("tasks cover {cursor} of {} output slots", n + m));
+        }
+        if a_cursor != n || b_cursor != m {
+            return Err(format!("inputs not fully consumed: A {a_cursor}/{n}, B {b_cursor}/{m}"));
+        }
+        // Theorem 1 balance bound: every task has O(n/p) elements —
+        // concretely at most 2*max(ceil(n/p), ceil(m/p)).
+        let cap = 2 * self.pa.big.max(self.pb.big);
+        for t in &sorted {
+            if t.len() > cap.max(2) {
+                return Err(format!("task exceeds 2*ceil(n/p) = {cap}: {t:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig1() -> (Vec<i64>, Vec<i64>) {
+        (
+            vec![0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7],
+            vec![1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7],
+        )
+    }
+
+    #[test]
+    fn figure1_partition_state() {
+        let (a, b) = fig1();
+        let part = Partition::compute(&a, &b, 5);
+        assert_eq!(part.x, vec![0, 4, 8, 12, 15, 18]);
+        assert_eq!(part.y, vec![0, 3, 6, 9, 12, 15]);
+        assert_eq!(part.xbar, vec![0, 0, 6, 7, 8, 15]);
+        assert_eq!(part.ybar, vec![5, 8, 9, 16, 18, 18]);
+    }
+
+    /// The ten subproblems listed verbatim in the Figure 1 caption.
+    #[test]
+    fn figure1_tasks_match_caption() {
+        let (a, b) = fig1();
+        let part = Partition::compute(&a, &b, 5);
+        let tasks = part.tasks();
+        part.validate_tasks(&tasks).unwrap();
+
+        let find = |c_off: usize| -> &MergeTask {
+            tasks.iter().find(|t| t.c_off == c_off).expect("missing task")
+        };
+        // Step 3 (A-side): A[0..3] -> C[0..3]
+        let t = find(0);
+        assert_eq!((t.a.clone(), t.b.clone()), (0..4, 0..0));
+        assert_eq!(t.case, Case::CopyA); // x̄_0 = x̄_1 = 0: case (a)
+        // A[4] -> C[4]
+        let t = find(4);
+        assert_eq!((t.a.clone(), t.b.clone()), (4..5, 0..0));
+        // A[8] -> C[14]
+        let t = find(14);
+        assert_eq!((t.a.clone(), t.b.clone()), (8..9, 6..6));
+        // A[12..14] + B[7] -> C[19..22]
+        let t = find(19);
+        assert_eq!((t.a.clone(), t.b.clone()), (12..15, 7..8));
+        // A[15] + B[8] -> C[23..24]
+        let t = find(23);
+        assert_eq!((t.a.clone(), t.b.clone()), (15..16, 8..9));
+        // Step 4 (B-side): B[0..2] + A[5..7] -> C[5..10]
+        let t = find(5);
+        assert_eq!((t.a.clone(), t.b.clone()), (5..8, 0..3));
+        assert_eq!(t.side, Side::B);
+        // B[3..5] -> C[11..13]
+        let t = find(11);
+        assert_eq!((t.a.clone(), t.b.clone()), (8..8, 3..6));
+        // B[6] + A[9..11] -> C[15..18]
+        let t = find(15);
+        assert_eq!((t.a.clone(), t.b.clone()), (9..12, 6..7));
+        // B[9..11] + A[16,17] -> C[25..29]
+        let t = find(25);
+        assert_eq!((t.a.clone(), t.b.clone()), (16..18, 9..12));
+        // B[12..14] -> C[30..32]
+        let t = find(30);
+        assert_eq!((t.a.clone(), t.b.clone()), (18..18, 12..15));
+        assert_eq!(tasks.len(), 10);
+    }
+
+    #[test]
+    fn figure1_case_census() {
+        // Caption: x_0 is (a)... actually x_0 illustrates (e)-like copy per
+        // the caption's mapping: x_0 (a), x_1 and x_2 (e), x_3 (b), x_4 (c);
+        // ȳ_0 and ȳ_3 illustrate (d). Our classifier distinguishes the
+        // same five shapes; assert all five appear in this one example.
+        let (a, b) = fig1();
+        let part = Partition::compute(&a, &b, 5);
+        let tasks = part.tasks();
+        use std::collections::HashSet;
+        let seen: HashSet<Case> = tasks.iter().map(|t| t.case).collect();
+        assert!(seen.len() >= 4, "figure 1 exercises most cases: {seen:?}");
+    }
+
+    #[test]
+    fn exhaustive_small_inputs() {
+        // Every (n, m, p) with duplicate-rich values: tasks must tile C.
+        for n in 0..=12usize {
+            for m in 0..=12usize {
+                for p in 1..=6usize {
+                    let a: Vec<i64> = (0..n).map(|i| (i as i64 * 3) / 4).collect();
+                    let b: Vec<i64> = (0..m).map(|i| (i as i64 * 2) / 3).collect();
+                    let part = Partition::compute(&a, &b, p);
+                    let tasks = part.tasks();
+                    part.validate_tasks(&tasks)
+                        .unwrap_or_else(|e| panic!("n={n} m={m} p={p}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let part = Partition::compute::<i64>(&[], &[], 4);
+        assert!(part.tasks().is_empty());
+        let part = Partition::compute(&[1, 2, 3], &[], 4);
+        let tasks = part.tasks();
+        part.validate_tasks(&tasks).unwrap();
+        assert_eq!(tasks.iter().map(|t| t.len()).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn all_equal_keys_tasks_tile() {
+        let a = vec![7i64; 23];
+        let b = vec![7i64; 17];
+        for p in 1..=8 {
+            let part = Partition::compute(&a, &b, p);
+            let tasks = part.tasks();
+            part.validate_tasks(&tasks).unwrap_or_else(|e| panic!("p={p}: {e}"));
+        }
+    }
+
+    #[test]
+    fn adversarial_all_b_inside_one_a_gap() {
+        // Every B element falls between two adjacent A elements.
+        let a: Vec<i64> = (0..40).map(|i| i * 1000).collect();
+        let b: Vec<i64> = (0..37).map(|i| 5000 + i).collect();
+        for p in 1..=9 {
+            let part = Partition::compute(&a, &b, p);
+            let tasks = part.tasks();
+            part.validate_tasks(&tasks).unwrap_or_else(|e| panic!("p={p}: {e}"));
+        }
+    }
+}

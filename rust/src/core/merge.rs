@@ -1,0 +1,344 @@
+//! The paper's contribution: simplified, stable parallel merge
+//! (Theorem 1) — `O(n/p + log n)` operations on `p` processing
+//! elements, constant extra space, a single synchronization point.
+//!
+//! Phases (paper Steps 1–4):
+//! 1. **Search phase** (parallel): the `2(p+1)` cross ranks, each an
+//!    independent `O(log)` binary search.
+//! 2. *the* synchronization point.
+//! 3. **Merge phase** (parallel): each PE classifies its case locally
+//!    (O(1), `cases.rs`) and runs a stable sequential merge/copy into
+//!    its disjoint `C` range.
+//!
+//! The disjointness of output ranges (Observation 1 / `validate_tasks`)
+//! is what lets the merge phase write `C` from `p` threads without any
+//! locking: we materialize the disjointness for the borrow checker by
+//! carving `out` with `split_at_mut` along task boundaries.
+
+use super::cases::{MergeTask, Partition};
+use super::seqmerge::merge_into;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+
+/// Execute the 2(p+1) binary searches of Steps 1–2, distributing them
+/// over `threads` OS threads. Returns the completed [`Partition`].
+///
+/// For small `p` the searches are cheaper than thread spawn; the driver
+/// inlines them sequentially below a crossover (measured in §Perf).
+pub fn partition_parallel<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    p: usize,
+    threads: usize,
+) -> Partition {
+    // Sequential crossover: 2(p+1) searches of <= log2(n)+log2(m) total
+    // comparisons are cheaper than a thread spawn below ~64 searches.
+    if threads <= 1 || p <= 64 {
+        return Partition::compute(a, b, p);
+    }
+    let pa = super::blocks::Blocks::new(a.len(), p);
+    let pb = super::blocks::Blocks::new(b.len(), p);
+    let x = pa.starts();
+    let y = pb.starts();
+    let mut xbar = vec![0usize; p + 1];
+    let mut ybar = vec![0usize; p + 1];
+    let next = AtomicUsize::new(0);
+    let chunk = crate::util::div_ceil(p + 1, threads * 4).max(8);
+    // Carve the output arrays into fixed chunks; a shared atomic
+    // cursor hands chunks to threads (cheap dynamic load balance).
+    let mut slots: Vec<(usize, &mut [usize], &mut [usize])> = Vec::new();
+    {
+        let mut xb_rest: &mut [usize] = &mut xbar;
+        let mut yb_rest: &mut [usize] = &mut ybar;
+        let mut off = 0usize;
+        while off <= p {
+            let take = chunk.min(p + 1 - off);
+            let (xh, xt) = xb_rest.split_at_mut(take);
+            let (yh, yt) = yb_rest.split_at_mut(take);
+            xb_rest = xt;
+            yb_rest = yt;
+            slots.push((off, xh, yh));
+            off += take;
+        }
+    }
+    let slots = std::sync::Mutex::new(slots.into_iter().map(Some).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let next = &next;
+            let slots = &slots;
+            let x = &x;
+            let y = &y;
+            handles.push(s.spawn(move || loop {
+                let idx = next.fetch_add(1, AtomicOrdering::Relaxed);
+                let slot = {
+                    let mut guard = slots.lock().unwrap();
+                    if idx >= guard.len() {
+                        return;
+                    }
+                    guard[idx].take()
+                };
+                let Some((off, xh, yh)) = slot else { return };
+                for (k, slot) in xh.iter_mut().enumerate() {
+                    let xi = x[off + k];
+                    *slot = if xi < a.len() {
+                        super::ranks::rank_low(&a[xi], b)
+                    } else {
+                        b.len()
+                    };
+                }
+                for (k, slot) in yh.iter_mut().enumerate() {
+                    let yj = y[off + k];
+                    *slot = if yj < b.len() {
+                        super::ranks::rank_high(&b[yj], a)
+                    } else {
+                        a.len()
+                    };
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    drop(slots);
+    Partition { pa, pb, x, y, xbar, ybar }
+}
+
+/// Carve `out` into the per-task disjoint output slices.
+///
+/// Tasks must tile `out` exactly (guaranteed by the classifier,
+/// re-checked here in debug builds). Tasks are returned sorted by
+/// output offset, paired with their `&mut` slice.
+pub fn carve_output<'t, 'o, T>(
+    tasks: &'t [MergeTask],
+    out: &'o mut [T],
+) -> Vec<(&'t MergeTask, &'o mut [T])> {
+    let mut order: Vec<&MergeTask> = tasks.iter().collect();
+    order.sort_by_key(|t| t.c_off);
+    let mut pairs = Vec::with_capacity(order.len());
+    let mut rest = out;
+    let mut cursor = 0usize;
+    for t in order {
+        debug_assert_eq!(t.c_off, cursor, "tasks must tile the output");
+        let (slice, tail) = rest.split_at_mut(t.len());
+        rest = tail;
+        cursor += t.len();
+        pairs.push((t, slice));
+    }
+    debug_assert!(rest.is_empty(), "tasks must cover the whole output");
+    pairs
+}
+
+/// Execute a set of merge tasks sequentially (used by tests, the PRAM
+/// driver, and as the `threads == 1` fast path).
+pub fn run_tasks_seq<T: Copy + Ord>(a: &[T], b: &[T], out: &mut [T], tasks: &[MergeTask]) {
+    for (t, slice) in carve_output(tasks, out) {
+        merge_into(&a[t.a.clone()], &b[t.b.clone()], slice);
+    }
+}
+
+/// Execute merge tasks across `threads` OS threads. Each thread takes a
+/// contiguous group of tasks (every task is already `O(n/p)`, so simple
+/// round-chunking is within 2x of optimal — the paper's own balance
+/// bound).
+pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    tasks: &[MergeTask],
+    threads: usize,
+) {
+    if threads <= 1 || tasks.len() <= 1 {
+        run_tasks_seq(a, b, out, tasks);
+        return;
+    }
+    let pairs = carve_output(tasks, out);
+    let groups = chunk_tasks(pairs, threads);
+    std::thread::scope(|s| {
+        for group in groups {
+            s.spawn(move || {
+                for (t, slice) in group {
+                    merge_into(&a[t.a.clone()], &b[t.b.clone()], slice);
+                }
+            });
+        }
+    });
+}
+
+/// Split task/slice pairs into at most `k` contiguous groups with
+/// near-equal total element counts (linear greedy walk).
+pub fn chunk_tasks<'t, 'o, T>(
+    pairs: Vec<(&'t MergeTask, &'o mut [T])>,
+    k: usize,
+) -> Vec<Vec<(&'t MergeTask, &'o mut [T])>> {
+    let total: usize = pairs.iter().map(|(t, _)| t.len()).sum();
+    let target = crate::util::div_ceil(total.max(1), k);
+    let mut groups = Vec::with_capacity(k);
+    let mut cur = Vec::new();
+    let mut acc = 0usize;
+    for (t, s) in pairs {
+        let l = t.len();
+        if acc + l > target && !cur.is_empty() && groups.len() + 1 < k {
+            groups.push(std::mem::take(&mut cur));
+            acc = 0;
+        }
+        acc += l;
+        cur.push((t, s));
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    groups
+}
+
+/// **The headline API**: stable parallel merge of sorted `a` and `b`
+/// into `out`, using `p` logical processing elements executed on
+/// `p.min(available)` OS threads. Implements the paper end to end.
+///
+/// Stability: for equal elements, everything from `a` precedes
+/// everything from `b`, and each input's internal order is preserved.
+///
+/// # Panics
+/// If `out.len() != a.len() + b.len()` or `p == 0`.
+pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [T], p: usize) {
+    assert_eq!(out.len(), a.len() + b.len(), "output length mismatch");
+    assert!(p > 0, "p must be positive");
+    // The paper assumes m <= n WLOG; the classifier is written for
+    // arbitrary n, m, so no swap is needed — but degenerate inputs
+    // short-circuit.
+    if a.is_empty() {
+        out.copy_from_slice(b);
+        return;
+    }
+    if b.is_empty() {
+        out.copy_from_slice(a);
+        return;
+    }
+    if p == 1 {
+        merge_into(a, b, out);
+        return;
+    }
+    let part = partition_parallel(a, b, p, p);
+    let tasks = part.tasks();
+    debug_assert!(part.validate_tasks(&tasks).is_ok());
+    run_tasks_parallel(a, b, out, &tasks, p);
+}
+
+/// Like [`parallel_merge`] but returns the partition + per-case task
+/// census for diagnostics (used by the balance bench, E9).
+pub fn parallel_merge_instrumented<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+) -> (Partition, Vec<MergeTask>) {
+    assert_eq!(out.len(), a.len() + b.len());
+    let part = partition_parallel(a, b, p, p);
+    let tasks = part.tasks();
+    run_tasks_parallel(a, b, out, &tasks, p);
+    (part, tasks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+
+    fn check_merge(a: &[i64], b: &[i64], p: usize) {
+        let mut out = vec![0i64; a.len() + b.len()];
+        parallel_merge(a, b, &mut out, p);
+        let mut expect = [a, b].concat();
+        expect.sort();
+        assert_eq!(out, expect, "a={a:?} b={b:?} p={p}");
+    }
+
+    #[test]
+    fn figure1_end_to_end() {
+        let a = vec![0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7];
+        let b = vec![1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        check_merge(&a, &b, 5);
+    }
+
+    #[test]
+    fn random_sweep() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let n = rng.index(300);
+            let m = rng.index(300);
+            let p = 1 + rng.index(16);
+            let mut a: Vec<i64> = (0..n).map(|_| rng.range(0, 60)).collect();
+            let mut b: Vec<i64> = (0..m).map(|_| rng.range(0, 60)).collect();
+            a.sort();
+            b.sort();
+            check_merge(&a, &b, p);
+        }
+    }
+
+    #[test]
+    fn stability_tags_in_order() {
+        let mut rng = Rng::new(5);
+        for _ in 0..60 {
+            let n = rng.index(200) + 1;
+            let m = rng.index(200) + 1;
+            let p = 1 + rng.index(12);
+            let mut ka: Vec<i64> = (0..n).map(|_| rng.range(0, 8)).collect();
+            let mut kb: Vec<i64> = (0..m).map(|_| rng.range(0, 8)).collect();
+            ka.sort();
+            kb.sort();
+            let a: Vec<Record> =
+                ka.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect();
+            let b: Vec<Record> = kb
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| Record::new(k, 1_000_000 + i as u64))
+                .collect();
+            let mut out = vec![Record::new(0, 0); n + m];
+            parallel_merge(&a, &b, &mut out, p);
+            crate::workload::stability::assert_stable_merge(&out, 1_000_000);
+        }
+    }
+
+    #[test]
+    fn p_exceeds_lengths() {
+        check_merge(&[1, 5, 9], &[2, 3], 16);
+        check_merge(&[4], &[4], 8);
+    }
+
+    #[test]
+    fn identical_arrays() {
+        let a: Vec<i64> = (0..100).map(|i| i / 3).collect();
+        check_merge(&a.clone(), &a, 7);
+    }
+
+    #[test]
+    fn one_sided() {
+        check_merge(&[1, 2, 3], &[], 4);
+        check_merge(&[], &[1, 2, 3], 4);
+    }
+
+    #[test]
+    fn large_p_equals_cpus() {
+        let mut rng = Rng::new(77);
+        let mut a: Vec<i64> = (0..50_000).map(|_| rng.range(0, 10_000)).collect();
+        let mut b: Vec<i64> = (0..30_000).map(|_| rng.range(0, 10_000)).collect();
+        a.sort();
+        b.sort();
+        check_merge(&a, &b, crate::util::num_cpus());
+    }
+
+    #[test]
+    fn partition_parallel_matches_sequential() {
+        let mut rng = Rng::new(31);
+        let mut a: Vec<i64> = (0..5000).map(|_| rng.range(0, 500)).collect();
+        let mut b: Vec<i64> = (0..4000).map(|_| rng.range(0, 500)).collect();
+        a.sort();
+        b.sort();
+        for p in [1, 2, 65, 128, 301] {
+            let par = partition_parallel(&a, &b, p, 8);
+            let seq = Partition::compute(&a, &b, p);
+            assert_eq!(par.xbar, seq.xbar, "p={p}");
+            assert_eq!(par.ybar, seq.ybar, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! The paper's algorithm, layered exactly as §2 presents it:
+//!
+//! - [`ranks`]    — `rank_low` / `rank_high` binary searches (defs)
+//! - [`blocks`]   — the p-way block partition arithmetic
+//! - [`cases`]    — the five-case O(1) subproblem classifier (Fig. 2)
+//! - [`seqmerge`] — stable sequential merge/copy kernels (per task)
+//! - [`merge`]    — **Theorem 1**: the simplified stable parallel merge
+//! - [`sort`]     — §3: stable parallel merge sort
+//! - [`multiway`] — §3 extension: k-way merging
+//! - [`record`]   — keyed records for stability observation
+
+pub mod blocks;
+pub mod cases;
+pub mod merge;
+pub mod multiway;
+pub mod ranks;
+pub mod record;
+pub mod seqmerge;
+pub mod sort;
+
+pub use blocks::Blocks;
+pub use cases::{Case, MergeTask, Partition, Side};
+pub use merge::{parallel_merge, parallel_merge_instrumented};
+pub use record::{F32Key, Record};
+pub use sort::parallel_merge_sort;

@@ -1,0 +1,219 @@
+//! Multiway merging (paper §3 remarks, extension).
+//!
+//! The paper's merge sort repeatedly applies two-way merges in a tree;
+//! this module packages that as a reusable k-way merge:
+//!
+//! - [`parallel_kway_merge`] — `ceil(log2 k)` levels of the simplified
+//!   parallel two-way merge (each level is one §3 round over all pairs).
+//! - [`loser_tree_merge`] — the classical sequential k-way loser tree,
+//!   used as the comparison baseline (one pass, k-way comparisons).
+//!
+//! Both are stable across runs: ties favour the earlier run.
+
+use super::sort::merge_round;
+
+/// Stable k-way merge of `runs` (each individually sorted) using the
+/// paper's two-way parallel merge per tree level, `p` threads total.
+pub fn parallel_kway_merge<T: Copy + Ord + Send + Sync>(runs: &[&[T]], p: usize) -> Vec<T> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut src: Vec<T> = Vec::with_capacity(total);
+    let mut bounds = vec![0usize];
+    for r in runs {
+        src.extend_from_slice(r);
+        bounds.push(src.len());
+    }
+    if runs.len() <= 1 {
+        return src;
+    }
+    let mut dst = src.clone();
+    let mut runs_b = bounds;
+    while runs_b.len() > 2 {
+        runs_b = merge_round(&src, &mut dst, &runs_b, p);
+        std::mem::swap(&mut src, &mut dst);
+    }
+    src
+}
+
+/// Sequential k-way merge via a loser tree (tournament tree) — the
+/// classical one-pass baseline. Stable: ties resolve to the lower run
+/// index.
+pub fn loser_tree_merge<T: Copy + Ord>(runs: &[&[T]]) -> Vec<T> {
+    let k = runs.len();
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    if k == 0 {
+        return out;
+    }
+    if k == 1 {
+        out.extend_from_slice(runs[0]);
+        return out;
+    }
+    // Heads of each run; None = exhausted.
+    let mut pos = vec![0usize; k];
+    // Simple binary-heap-free tournament: k is typically small, so a
+    // linear scan with (key, run) lexicographic min is both simple and
+    // cache-friendly; the loser-tree structure matters at k >> 8, where
+    // we switch to the tree.
+    if k <= 8 {
+        loop {
+            let mut best: Option<(usize, &T)> = None;
+            for (r, &i) in pos.iter().enumerate() {
+                if i < runs[r].len() {
+                    let v = &runs[r][i];
+                    best = match best {
+                        None => Some((r, v)),
+                        Some((_br, bv)) if v < bv => Some((r, v)),
+                        other => other,
+                    };
+                }
+            }
+            match best {
+                None => break,
+                Some((r, _)) => {
+                    out.push(runs[r][pos[r]]);
+                    pos[r] += 1;
+                }
+            }
+        }
+        return out;
+    }
+    // Loser tree proper for large k: internal nodes store the LOSER of
+    // the sub-tournament; the overall winner bubbles to the root.
+    let size = k.next_power_of_two();
+    // `tree[1..size]` internal nodes hold run indices; usize::MAX = empty.
+    let mut tree = vec![usize::MAX; size];
+    let key_of = |r: usize, pos: &[usize]| -> Option<&T> { runs[r].get(pos[r]) };
+    // `beats(a, b)`: run a's head should be output before run b's head.
+    let beats = |a: usize, b: usize, pos: &[usize]| -> bool {
+        match (key_of(a, pos), key_of(b, pos)) {
+            (None, _) => false,
+            (_, None) => true,
+            (Some(x), Some(y)) => x < y || (x == y && a < b),
+        }
+    };
+    // Build: play leaves upward.
+    let mut winner_at = vec![usize::MAX; 2 * size];
+    for leaf in 0..size {
+        winner_at[size + leaf] = if leaf < k { leaf } else { usize::MAX };
+    }
+    for node in (1..size).rev() {
+        let (l, r) = (winner_at[2 * node], winner_at[2 * node + 1]);
+        let (win, lose) = match (l, r) {
+            (usize::MAX, x) => (x, usize::MAX),
+            (x, usize::MAX) => (x, usize::MAX),
+            (a, b) => {
+                if beats(a, b, &pos) {
+                    (a, b)
+                } else {
+                    (b, a)
+                }
+            }
+        };
+        winner_at[node] = win;
+        tree[node] = lose;
+    }
+    let mut winner = winner_at[1];
+    while winner != usize::MAX && pos[winner] < runs[winner].len() {
+        out.push(runs[winner][pos[winner]]);
+        pos[winner] += 1;
+        // Replay from the winner's leaf to the root.
+        let mut node = (size + winner) / 2;
+        let mut cur = winner;
+        while node >= 1 {
+            let challenger = tree[node];
+            if challenger != usize::MAX && !beats(cur, challenger, &pos) {
+                tree[node] = cur;
+                cur = challenger;
+            }
+            if node == 1 {
+                break;
+            }
+            node /= 2;
+        }
+        winner = cur;
+        if key_of(winner, &pos).is_none() {
+            // Winner exhausted: replay fully to find the next best.
+            let mut best = usize::MAX;
+            for r in 0..k {
+                if pos[r] < runs[r].len() && (best == usize::MAX || beats(r, best, &pos)) {
+                    best = r;
+                }
+            }
+            winner = best;
+            if winner == usize::MAX {
+                break;
+            }
+            // Rebuild the tree lazily (exhaustion happens k times total).
+            for leaf in 0..size {
+                winner_at[size + leaf] =
+                    if leaf < k && pos[leaf] < runs[leaf].len() { leaf } else { usize::MAX };
+            }
+            for node in (1..size).rev() {
+                let (l, r) = (winner_at[2 * node], winner_at[2 * node + 1]);
+                let (win, lose) = match (l, r) {
+                    (usize::MAX, x) => (x, usize::MAX),
+                    (x, usize::MAX) => (x, usize::MAX),
+                    (a, b) => {
+                        if beats(a, b, &pos) {
+                            (a, b)
+                        } else {
+                            (b, a)
+                        }
+                    }
+                };
+                winner_at[node] = win;
+                tree[node] = lose;
+            }
+            winner = winner_at[1];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn runs_of(rng: &mut Rng, k: usize, max_len: usize) -> Vec<Vec<i64>> {
+        (0..k)
+            .map(|_| {
+                let n = rng.index(max_len);
+                let mut v: Vec<i64> = (0..n).map(|_| rng.range(0, 100)).collect();
+                v.sort();
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kway_matches_flat_sort() {
+        let mut rng = Rng::new(3);
+        for &k in &[0usize, 1, 2, 3, 5, 9, 17] {
+            let runs = runs_of(&mut rng, k, 200);
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut expect: Vec<i64> = runs.concat();
+            expect.sort();
+            assert_eq!(parallel_kway_merge(&refs, 4), expect, "parallel k={k}");
+            assert_eq!(loser_tree_merge(&refs), expect, "loser tree k={k}");
+        }
+    }
+
+    #[test]
+    fn loser_tree_large_k() {
+        let mut rng = Rng::new(8);
+        let runs = runs_of(&mut rng, 40, 100);
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let mut expect: Vec<i64> = runs.concat();
+        expect.sort();
+        assert_eq!(loser_tree_merge(&refs), expect);
+    }
+
+    #[test]
+    fn kway_with_empty_runs() {
+        let runs: Vec<Vec<i64>> = vec![vec![], vec![1, 3], vec![], vec![2], vec![]];
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(parallel_kway_merge(&refs, 3), vec![1, 2, 3]);
+        assert_eq!(loser_tree_merge(&refs), vec![1, 2, 3]);
+    }
+}

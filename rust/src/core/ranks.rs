@@ -1,0 +1,197 @@
+//! The paper's rank primitives (§2).
+//!
+//! For an element `x` and a sorted array `X` (non-decreasing, duplicates
+//! allowed), with implicit sentinels `X[-1] = -inf`, `X[len] = +inf`:
+//!
+//! - [`rank_low`]:  the unique `i` with `X[i-1] <  x <= X[i]`
+//! - [`rank_high`]: the unique `j` with `X[j-1] <= x <  X[j]`
+//!
+//! `rank_low(A[i], B)` is the number of B elements that must precede
+//! `A[i]` in a stable merge where equal A elements come first;
+//! `rank_high(B[j], A)` is the number of A elements that must precede
+//! `B[j]`. This asymmetry is what makes the whole algorithm stable for
+//! free (paper §2) — every use in this crate goes through these two
+//! functions so the convention cannot drift.
+
+use std::cmp::Ordering;
+
+/// `rank_low(x, xs)`: the unique `i` with `xs[i-1] < x <= xs[i]`.
+///
+/// Equivalent to the index of the first element `>= x` (lower bound).
+/// `O(log len)` comparisons, branch-predictable halving loop.
+#[inline]
+pub fn rank_low<T: Ord>(x: &T, xs: &[T]) -> usize {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    while lo < hi {
+        let mid = (lo + hi) >> 1;
+        // SAFETY-free: mid < hi <= len.
+        if xs[mid] < *x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// `rank_high(x, xs)`: the unique `j` with `xs[j-1] <= x < xs[j]`.
+///
+/// Equivalent to the index of the first element `> x` (upper bound).
+#[inline]
+pub fn rank_high<T: Ord>(x: &T, xs: &[T]) -> usize {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    while lo < hi {
+        let mid = (lo + hi) >> 1;
+        if xs[mid] <= *x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Comparator-general variants (used by the keyed-record paths where
+/// ordering is by key only).
+#[inline]
+pub fn rank_low_by<T, F: FnMut(&T, &T) -> Ordering>(x: &T, xs: &[T], mut cmp: F) -> usize {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    while lo < hi {
+        let mid = (lo + hi) >> 1;
+        if cmp(&xs[mid], x) == Ordering::Less {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[inline]
+pub fn rank_high_by<T, F: FnMut(&T, &T) -> Ordering>(x: &T, xs: &[T], mut cmp: F) -> usize {
+    let mut lo = 0usize;
+    let mut hi = xs.len();
+    while lo < hi {
+        let mid = (lo + hi) >> 1;
+        if cmp(&xs[mid], x) != Ordering::Greater {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Count of comparisons an element's rank costs — used by the PRAM step
+/// accounting (each comparison is one PRAM step for the searching PE).
+#[inline]
+pub fn search_steps(len: usize) -> usize {
+    // The halving loop runs exactly ceil(log2(len + 1)) iterations in the
+    // worst case (rank range is [0, len], len+1 possible answers).
+    crate::util::log2_ceil(len + 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_low_window_invariant() {
+        // X[i-1] < x <= X[i] with sentinels.
+        let xs = [1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        for x in -1..9 {
+            let i = rank_low(&x, &xs);
+            if i > 0 {
+                assert!(xs[i - 1] < x, "x={x} i={i}");
+            }
+            if i < xs.len() {
+                assert!(x <= xs[i], "x={x} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_high_window_invariant() {
+        let xs = [1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        for x in -1..9 {
+            let j = rank_high(&x, &xs);
+            if j > 0 {
+                assert!(xs[j - 1] <= x, "x={x} j={j}");
+            }
+            if j < xs.len() {
+                assert!(x < xs[j], "x={x} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn figure1_cross_ranks_a_into_b() {
+        // x̄_i = rank_low(A[x_i], B) for x_i in [0, 4, 8, 12, 15].
+        let a = [0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7];
+        let b = [1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        let xbar: Vec<usize> = [0usize, 4, 8, 12, 15]
+            .iter()
+            .map(|&xi| rank_low(&a[xi], &b))
+            .collect();
+        assert_eq!(xbar, vec![0, 0, 6, 7, 8]);
+    }
+
+    #[test]
+    fn figure1_cross_ranks_b_into_a() {
+        // ȳ_j = rank_high(B[y_j], A) for y_j in [0, 3, 6, 9, 12].
+        let a = [0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7];
+        let b = [1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        let ybar: Vec<usize> = [0usize, 3, 6, 9, 12]
+            .iter()
+            .map(|&yj| rank_high(&b[yj], &a))
+            .collect();
+        assert_eq!(ybar, vec![5, 8, 9, 16, 18]);
+    }
+
+    #[test]
+    fn empty_array_ranks() {
+        let xs: [i64; 0] = [];
+        assert_eq!(rank_low(&5, &xs), 0);
+        assert_eq!(rank_high(&5, &xs), 0);
+    }
+
+    #[test]
+    fn all_equal_splits_low_high() {
+        let xs = [7i64; 64];
+        assert_eq!(rank_low(&7, &xs), 0);
+        assert_eq!(rank_high(&7, &xs), 64);
+        assert_eq!(rank_low(&6, &xs), 0);
+        assert_eq!(rank_high(&8, &xs), 64);
+    }
+
+    #[test]
+    fn matches_std_partition_point() {
+        let mut xs: Vec<i64> = (0..500).map(|i| (i * 7919) % 97).collect();
+        xs.sort();
+        for x in -5..105 {
+            assert_eq!(rank_low(&x, &xs), xs.partition_point(|e| *e < x));
+            assert_eq!(rank_high(&x, &xs), xs.partition_point(|e| *e <= x));
+        }
+    }
+
+    #[test]
+    fn by_variants_match() {
+        let mut xs: Vec<i64> = (0..200).map(|i| (i * 31) % 23).collect();
+        xs.sort();
+        for x in -2..26 {
+            assert_eq!(rank_low(&x, &xs), rank_low_by(&x, &xs, |a, b| a.cmp(b)));
+            assert_eq!(rank_high(&x, &xs), rank_high_by(&x, &xs, |a, b| a.cmp(b)));
+        }
+    }
+
+    #[test]
+    fn search_steps_bounds() {
+        assert_eq!(search_steps(0), 0);
+        assert_eq!(search_steps(1), 1);
+        assert_eq!(search_steps(15), 4);
+        assert_eq!(search_steps(16), 5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Keyed records for stability verification and the XLA interchange.
+//!
+//! [`Record`] orders by `key` only; `tag` is an opaque payload used to
+//! *observe* stability (a stable algorithm must keep equal-key tags in
+//! their original relative order, with all A tags before B tags).
+//!
+//! [`F32Key`] is a total-order wrapper over the f32 keys used by the AOT
+//! artifacts (the runtime path marshals f32/i32 literals).
+
+use std::cmp::Ordering;
+
+/// A sortable record: ordered by `key`, carrying a stability `tag`.
+#[derive(Clone, Copy, Debug)]
+pub struct Record {
+    pub key: i64,
+    pub tag: u64,
+}
+
+impl Record {
+    #[inline]
+    pub fn new(key: i64, tag: u64) -> Self {
+        Record { key, tag }
+    }
+}
+
+impl PartialEq for Record {
+    #[inline]
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+
+impl Eq for Record {}
+
+impl PartialOrd for Record {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Record {
+    /// Orders by key ONLY — equal keys are `Equal` regardless of tag,
+    /// which is exactly what lets tags detect (in)stability.
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key.cmp(&other.key)
+    }
+}
+
+/// Total order for f32 (no NaNs expected in workloads; NaN sorts last).
+#[derive(Clone, Copy, Debug)]
+pub struct F32Key(pub f32);
+
+impl PartialEq for F32Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for F32Key {}
+
+impl PartialOrd for F32Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F32Key {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_orders_by_key_only() {
+        assert_eq!(Record::new(3, 0), Record::new(3, 99));
+        assert!(Record::new(2, 9) < Record::new(3, 0));
+    }
+
+    #[test]
+    fn f32key_total_order() {
+        assert!(F32Key(1.0) < F32Key(2.0));
+        assert!(F32Key(f32::NEG_INFINITY) < F32Key(-1e30));
+        assert!(F32Key(f32::INFINITY) > F32Key(1e30));
+        assert!(F32Key(f32::NAN) > F32Key(f32::INFINITY));
+        assert_eq!(F32Key(0.5), F32Key(0.5));
+    }
+}

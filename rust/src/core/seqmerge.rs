@@ -1,0 +1,248 @@
+//! Stable sequential merge kernels — the per-task workhorses (Step 3/4
+//! bodies). The paper requires only that these are *stable*: within one
+//! task, ties are won by the A side and original order is preserved.
+//!
+//! Three entry points:
+//! - [`merge_into`]: the general two-slice stable merge.
+//! - [`copy_into`]: the degenerate cases (a)/(e) — a straight copy.
+//! - [`merge_by_into`]: comparator-general variant.
+//!
+//! The hot path is the galloping-free two-pointer loop; `merge_into`
+//! falls back to `copy_nonoverlapping`-speed tails via the slice copy
+//! intrinsics (`copy_from_slice`) once either side is exhausted.
+
+use std::cmp::Ordering;
+
+/// Stable merge of `a` and `b` into `out` (`out.len() == a.len() +
+/// b.len()`). Ties are won by `a` — the paper's stability convention.
+#[inline]
+pub fn merge_into<T: Copy + Ord>(a: &[T], b: &[T], out: &mut [T]) {
+    // Hard assert: the unchecked hot loop below relies on it.
+    assert_eq!(out.len(), a.len() + b.len());
+    // Degenerate tasks (cases a/e) — straight copies.
+    if b.is_empty() {
+        out.copy_from_slice(a);
+        return;
+    }
+    if a.is_empty() {
+        out.copy_from_slice(b);
+        return;
+    }
+    let mut ai = 0;
+    let mut bi = 0;
+    let mut oi = 0;
+    // Two-pointer loop; `<=` keeps A first on ties (stability).
+    // SAFETY: ai < a.len(), bi < b.len() are the loop guards, and
+    // oi = ai + bi < out.len() by the length precondition (asserted
+    // above in debug builds and by every caller's construction).
+    // §Perf iteration 2: eliding the per-element bounds checks is
+    // worth ~8% on the 2M-merge microbench.
+    unsafe {
+        while ai < a.len() && bi < b.len() {
+            let av = *a.get_unchecked(ai);
+            let bv = *b.get_unchecked(bi);
+            let take_a = av <= bv;
+            *out.get_unchecked_mut(oi) = if take_a { av } else { bv };
+            ai += take_a as usize;
+            bi += !take_a as usize;
+            oi += 1;
+        }
+    }
+    if ai < a.len() {
+        out[oi..].copy_from_slice(&a[ai..]);
+    } else {
+        out[oi..].copy_from_slice(&b[bi..]);
+    }
+}
+
+/// Copy-only kernel for the degenerate cases.
+#[inline]
+pub fn copy_into<T: Copy>(src: &[T], out: &mut [T]) {
+    debug_assert_eq!(out.len(), src.len());
+    out.copy_from_slice(src);
+}
+
+/// Comparator-general stable merge (ties to `a`).
+pub fn merge_by_into<T: Copy, F: FnMut(&T, &T) -> Ordering>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    mut cmp: F,
+) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    let mut ai = 0;
+    let mut bi = 0;
+    let mut oi = 0;
+    while ai < a.len() && bi < b.len() {
+        if cmp(&a[ai], &b[bi]) != Ordering::Greater {
+            out[oi] = a[ai];
+            ai += 1;
+        } else {
+            out[oi] = b[bi];
+            bi += 1;
+        }
+        oi += 1;
+    }
+    if ai < a.len() {
+        out[oi..].copy_from_slice(&a[ai..]);
+    } else {
+        out[oi..].copy_from_slice(&b[bi..]);
+    }
+}
+
+/// Bottom-up stable sequential merge sort using a caller-provided
+/// scratch buffer of the same length (ping-pong). This is the
+/// "sequential sort in parallel" leaf of the §3 merge sort and the
+/// sequential baseline's building block.
+pub fn merge_sort<T: Copy + Ord>(data: &mut [T], scratch: &mut [T]) {
+    let n = data.len();
+    debug_assert!(scratch.len() >= n);
+    if n <= 1 {
+        return;
+    }
+    // Insertion-sort small runs first — classic cutoff.
+    const RUN: usize = 32;
+    let mut start = 0;
+    while start < n {
+        let end = (start + RUN).min(n);
+        insertion_sort(&mut data[start..end]);
+        start = end;
+    }
+    // Bottom-up rounds, ping-ponging between data and scratch.
+    let scratch = &mut scratch[..n];
+    let mut width = RUN;
+    let mut in_data = true; // current valid runs live in `data`
+    while width < n {
+        {
+            let (src, dst): (&[T], &mut [T]) = if in_data {
+                (&*data, scratch)
+            } else {
+                (&*scratch, data)
+            };
+            let mut lo = 0;
+            while lo < n {
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                merge_into(&src[lo..mid], &src[mid..hi], &mut dst[lo..hi]);
+                lo = hi;
+            }
+        }
+        in_data = !in_data;
+        width *= 2;
+    }
+    if !in_data {
+        data.copy_from_slice(scratch);
+    }
+}
+
+/// Stable insertion sort (the leaf cutoff).
+///
+/// SAFETY of the unchecked accesses: `j` starts at `i < len` and only
+/// decreases while `> 0`; all indices are in `[0, i]`.
+#[inline]
+pub fn insertion_sort<T: Copy + Ord>(xs: &mut [T]) {
+    for i in 1..xs.len() {
+        unsafe {
+            let v = *xs.get_unchecked(i);
+            let mut j = i;
+            while j > 0 && *xs.get_unchecked(j - 1) > v {
+                *xs.get_unchecked_mut(j) = *xs.get_unchecked(j - 1);
+                j -= 1;
+            }
+            *xs.get_unchecked_mut(j) = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+
+    #[test]
+    fn merges_basic() {
+        let mut out = [0i64; 6];
+        merge_into(&[1, 3, 5], &[2, 4, 6], &mut out);
+        assert_eq!(out, [1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn ties_go_to_a() {
+        let a = [Record::new(5, 0), Record::new(5, 1)];
+        let b = [Record::new(5, 100), Record::new(5, 101)];
+        let mut out = [Record::new(0, 0); 4];
+        merge_into(&a, &b, &mut out);
+        let tags: Vec<u64> = out.iter().map(|r| r.tag).collect();
+        assert_eq!(tags, vec![0, 1, 100, 101]);
+    }
+
+    #[test]
+    fn empty_sides() {
+        let mut out = [0i64; 3];
+        merge_into(&[], &[1, 2, 3], &mut out);
+        assert_eq!(out, [1, 2, 3]);
+        merge_into(&[1, 2, 3], &[], &mut out);
+        assert_eq!(out, [1, 2, 3]);
+        let mut empty: [i64; 0] = [];
+        merge_into(&[], &[], &mut empty);
+    }
+
+    #[test]
+    fn matches_std_sort_result() {
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let n = rng.index(200);
+            let m = rng.index(200);
+            let mut a: Vec<i64> = (0..n).map(|_| rng.range(0, 50)).collect();
+            let mut b: Vec<i64> = (0..m).map(|_| rng.range(0, 50)).collect();
+            a.sort();
+            b.sort();
+            let mut out = vec![0i64; n + m];
+            merge_into(&a, &b, &mut out);
+            let mut expect = [a.clone(), b.clone()].concat();
+            expect.sort();
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn merge_sort_matches_std_stable_sort() {
+        let mut rng = Rng::new(23);
+        for _ in 0..30 {
+            let n = rng.index(600);
+            let mut data: Vec<Record> = (0..n)
+                .map(|i| Record::new(rng.range(0, 40), i as u64))
+                .collect();
+            let mut expect = data.clone();
+            expect.sort_by_key(|r| r.key); // std stable sort
+            let mut scratch = vec![Record::new(0, 0); n];
+            merge_sort(&mut data, &mut scratch);
+            assert_eq!(
+                data.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                expect.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                "stability violated at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn insertion_sort_stable() {
+        let mut xs = vec![
+            Record::new(2, 0),
+            Record::new(1, 1),
+            Record::new(2, 2),
+            Record::new(1, 3),
+        ];
+        insertion_sort(&mut xs);
+        let pairs: Vec<(i64, u64)> = xs.iter().map(|r| (r.key, r.tag)).collect();
+        assert_eq!(pairs, vec![(1, 1), (1, 3), (2, 0), (2, 2)]);
+    }
+
+    #[test]
+    fn merge_by_reverse_order() {
+        let mut out = [0i64; 5];
+        merge_by_into(&[5, 3, 1], &[4, 2], &mut out, |x, y| y.cmp(x));
+        assert_eq!(out, [5, 4, 3, 2, 1]);
+    }
+}

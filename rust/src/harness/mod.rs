@@ -1,0 +1,119 @@
+//! Bench harness (S18) — a criterion substitute for the offline
+//! registry: warmup, fixed-or-adaptive sampling, robust statistics,
+//! markdown output.
+//!
+//! Every `[[bench]]` binary (`harness = false`) builds its paper table
+//! with this. A quick mode (`BENCH_QUICK=1`) trims samples so `cargo
+//! bench` stays minutes, not hours, on CI-class machines.
+
+use crate::metrics::{fmt_duration, Stats};
+use std::time::Instant;
+
+/// Configuration for one measured case.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub min_iters_per_sample: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        let quick = quick_mode();
+        Bench {
+            name: name.into(),
+            warmup_iters: if quick { 1 } else { 3 },
+            samples: if quick { 5 } else { 15 },
+            min_iters_per_sample: 1,
+        }
+    }
+
+    pub fn samples(mut self, n: usize) -> Bench {
+        self.samples = n;
+        self
+    }
+
+    pub fn warmup(mut self, n: usize) -> Bench {
+        self.warmup_iters = n;
+        self
+    }
+
+    /// Measure `f`, returning per-call seconds statistics.
+    ///
+    /// `f` should perform ONE logical operation; the harness loops it
+    /// enough times per sample to exceed timer resolution.
+    pub fn run<R>(&self, mut f: impl FnMut() -> R) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        // Calibrate iterations per sample: target >= 2 ms per sample.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let one = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((2e-3 / one).ceil() as usize)
+            .clamp(self.min_iters_per_sample, 1_000_000);
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        BenchResult { name: self.name.clone(), iters, stats: Stats::from_samples(&samples) }
+    }
+}
+
+/// Result of one bench case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        self.stats.median
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: median {} (±{:.1}%, {} samples × {} iters)",
+            self.name,
+            fmt_duration(self.stats.median),
+            self.stats.rel_stddev() * 100.0,
+            self.stats.n,
+            self.iters
+        )
+    }
+}
+
+/// `BENCH_QUICK=1` trims sampling for smoke runs.
+pub fn quick_mode() -> bool {
+    std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard bench header so outputs are self-describing.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop").samples(3).warmup(1).run(|| 1 + 1);
+        assert!(r.stats.median >= 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = Bench::new("mybench").samples(3).warmup(0).run(|| ());
+        assert!(r.summary().contains("mybench"));
+    }
+}

@@ -1,0 +1,42 @@
+//! # traff-merge
+//!
+//! A production-grade reproduction of **Jesper Larsson Träff,
+//! "Simplified, stable parallel merging"** (arXiv 2012, CS.DC) as a
+//! three-layer Rust + JAX/Pallas system:
+//!
+//! - **L3 (this crate)** — the paper's algorithm and everything around
+//!   it: the five-case partitioner ([`core`]), parallel merge/sort
+//!   drivers, PRAM and BSP model simulators ([`pram`], [`bsp`]),
+//!   classical baselines ([`baseline`]), a coordinator service
+//!   ([`coordinator`]) and the PJRT runtime bridge ([`runtime`]).
+//! - **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels
+//!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed from
+//!   rust via the `xla` crate. Python never runs on the request path.
+//!
+//! Quickstart:
+//! ```
+//! use traff_merge::core::parallel_merge;
+//! let a = [1i64, 3, 5];
+//! let b = [2i64, 4, 6];
+//! let mut c = [0i64; 6];
+//! parallel_merge(&a, &b, &mut c, 4);
+//! assert_eq!(c, [1, 2, 3, 4, 5, 6]);
+//! ```
+//!
+//! See DESIGN.md for the full system inventory and experiment index,
+//! and EXPERIMENTS.md for reproduction results.
+
+pub mod baseline;
+pub mod bsp;
+pub mod cli;
+pub mod coordinator;
+pub mod core;
+pub mod harness;
+pub mod metrics;
+pub mod pram;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::{parallel_merge, parallel_merge_sort, Partition, Record};

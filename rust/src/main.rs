@@ -1,0 +1,309 @@
+//! `repro` — the launcher for the traff-merge system.
+//!
+//! Subcommands:
+//! - `demo`      — the paper's Figure 1 worked example, end to end.
+//! - `merge`     — generate a workload, run the parallel merge, verify.
+//! - `sort`      — parallel merge sort over a workload, verify + stats.
+//! - `pram`      — the merge on the audited EREW PRAM simulator.
+//! - `bsp`       — superstep comparison: simplified vs baseline.
+//! - `serve`     — coordinator service demo over the worker pool.
+//! - `artifacts` — list loaded XLA artifacts (requires `make artifacts`).
+
+use traff_merge::cli::Args;
+use traff_merge::coordinator::{Config, Engine, MergeService};
+use traff_merge::core::{parallel_merge_instrumented, parallel_merge_sort, Partition};
+use traff_merge::metrics::{fmt_duration, melems_per_sec, time, Table};
+use traff_merge::pram::{pram_merge, Variant};
+use traff_merge::runtime::{KeyedBlock, XlaRuntime};
+use traff_merge::workload::{self, Dist};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.cmd.as_str() {
+        "demo" => cmd_demo(),
+        "merge" => cmd_merge(&args),
+        "sort" => cmd_sort(&args),
+        "pram" => cmd_pram(&args),
+        "bsp" => cmd_bsp(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "repro — simplified, stable parallel merging (Träff 2012)\n\n\
+         usage: repro <cmd> [--flags]\n\n\
+         commands:\n\
+         \x20 demo                         Figure 1 worked example\n\
+         \x20 merge  --n N --m M --p P --dist D --seed S [--verify]\n\
+         \x20 sort   --n N --p P --dist D --seed S [--verify]\n\
+         \x20 pram   --n N --m M --p P [--crew]\n\
+         \x20 bsp    --n N --p P [--g G] [--l L]\n\
+         \x20 serve  --jobs J --n N [--engine rust|hybrid]\n\
+         \x20 artifacts                    list loaded XLA artifacts\n\n\
+         distributions: uniform dupK zipf allequal organpipe presorted\n\
+         \x20                reversed runsR advskew"
+    );
+}
+
+fn cmd_demo() -> Result<(), String> {
+    println!("Figure 1 (Träff 2012): n=18, m=15, p=5\n");
+    let a: Vec<i64> = vec![0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7];
+    let b: Vec<i64> = vec![1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+    let part = Partition::compute(&a, &b, 5);
+    println!("A = {a:?}");
+    println!("B = {b:?}\n");
+    println!("x  = {:?}", part.x);
+    println!("x̄  = {:?}   (rank_low of A[x_i] in B)", part.xbar);
+    println!("y  = {:?}", part.y);
+    println!("ȳ  = {:?}   (rank_high of B[y_j] in A)\n", part.ybar);
+    let tasks = part.tasks();
+    let mut t = Table::new(vec!["side", "case", "A-range", "B-range", "C-offset"]);
+    let mut ordered: Vec<_> = tasks.iter().collect();
+    ordered.sort_by_key(|x| x.c_off);
+    for task in ordered {
+        t.row(vec![
+            format!("{:?}", task.side),
+            format!("{:?}", task.case),
+            format!("{:?}", task.a),
+            format!("{:?}", task.b),
+            format!("{}", task.c_off),
+        ]);
+    }
+    t.print();
+    let mut c = vec![0i64; a.len() + b.len()];
+    traff_merge::core::merge::run_tasks_seq(&a, &b, &mut c, &tasks);
+    println!("\nC = {c:?}");
+    let mut expect = [a, b].concat();
+    expect.sort();
+    assert_eq!(c, expect);
+    println!("\n✓ ten disjoint subproblems, exactly as the Figure 1 caption lists.");
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> Result<(), String> {
+    args.expect_known(&["n", "m", "p", "dist", "seed", "verify"])?;
+    let n = args.get_usize("n", 1_000_000)?;
+    let m = args.get_usize("m", n)?;
+    let p = args.get_usize("p", traff_merge::util::num_cpus())?;
+    let seed = args.get_u64("seed", 42)?;
+    let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
+        .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
+    let a = workload::sorted_keys(dist, n, seed);
+    let b = workload::sorted_keys(dist, m, seed.wrapping_add(1));
+    let mut c = vec![0i64; n + m];
+    let (secs, (part, tasks)) = time(|| parallel_merge_instrumented(&a, &b, &mut c, p));
+    println!(
+        "merged {n} + {m} ({}) with p={p} in {} — {:.1} Melem/s",
+        dist.name(),
+        fmt_duration(secs),
+        melems_per_sec(n + m, secs)
+    );
+    let census = case_census(&tasks);
+    println!("tasks: {} | case census: {census}", tasks.len());
+    let biggest = tasks.iter().map(|t| t.len()).max().unwrap_or(0);
+    println!(
+        "largest task: {biggest} elements (bound 2*ceil(n/p) = {})",
+        2 * part.pa.big.max(part.pb.big)
+    );
+    if args.get_flag("verify") {
+        let (vsecs, ok) = time(|| c.windows(2).all(|w| w[0] <= w[1]));
+        assert!(ok, "output not sorted!");
+        println!("verified sorted in {}", fmt_duration(vsecs));
+    }
+    Ok(())
+}
+
+fn cmd_sort(args: &Args) -> Result<(), String> {
+    args.expect_known(&["n", "p", "dist", "seed", "verify"])?;
+    let n = args.get_usize("n", 1_000_000)?;
+    let p = args.get_usize("p", traff_merge::util::num_cpus())?;
+    let seed = args.get_u64("seed", 42)?;
+    let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
+        .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
+    let mut v = workload::raw_keys(dist, n, seed);
+    let mut baseline = v.clone();
+    let (secs, ()) = time(|| parallel_merge_sort(&mut v, p));
+    println!(
+        "sorted {n} ({}) with p={p} in {} — {:.1} Melem/s",
+        dist.name(),
+        fmt_duration(secs),
+        melems_per_sec(n, secs)
+    );
+    let (ssecs, ()) = time(|| baseline.sort());
+    println!("std stable sort: {} — speedup {:.2}x", fmt_duration(ssecs), ssecs / secs);
+    if args.get_flag("verify") {
+        assert_eq!(v, baseline, "sort mismatch");
+        println!("verified against std sort");
+    }
+    Ok(())
+}
+
+fn cmd_pram(args: &Args) -> Result<(), String> {
+    args.expect_known(&["n", "m", "p", "crew", "seed", "sort"])?;
+    let n = args.get_usize("n", 4096)?;
+    let m = args.get_usize("m", n)?;
+    let p = args.get_usize("p", 8)?;
+    let seed = args.get_u64("seed", 42)?;
+    let variant = if args.get_flag("crew") { Variant::Crew } else { Variant::Erew };
+    if args.get_flag("sort") {
+        // §3 sort on the PRAM model.
+        let v = workload::raw_keys(Dist::Uniform, n, seed);
+        let (out, rep) = traff_merge::pram::pram_sort(&v, p, variant);
+        let mut expect = v.clone();
+        expect.sort();
+        assert_eq!(out, expect, "PRAM sort incorrect");
+        println!("PRAM {variant:?} SORT: n={n} p={p}");
+        println!(
+            "steps: {} (block sort {}, merge rounds {}) | rounds: {} | conflicts: {} {}",
+            rep.report.steps,
+            rep.phase_steps[0],
+            rep.phase_steps[1],
+            rep.rounds,
+            rep.report.conflicts.len(),
+            if rep.report.conflict_free() { "✓" } else { "✗" }
+        );
+        return Ok(());
+    }
+    let a = workload::sorted_keys(Dist::Uniform, n, seed);
+    let b = workload::sorted_keys(Dist::Uniform, m, seed + 1);
+    let (c, rep) = pram_merge(&a, &b, p, variant);
+    let mut expect = [a, b].concat();
+    expect.sort();
+    assert_eq!(c, expect, "PRAM merge incorrect");
+    println!("PRAM {variant:?} merge: n={n} m={m} p={p}");
+    let mut t = Table::new(vec!["phase", "steps"]);
+    for (name, steps) in
+        ["broadcast", "x̄ searches", "ȳ searches", "rank fetch", "merges"].iter().zip(rep.phase_steps)
+    {
+        t.row(vec![name.to_string(), steps.to_string()]);
+    }
+    t.row(vec!["TOTAL".to_string(), rep.report.steps.to_string()]);
+    t.print();
+    println!(
+        "tasks: {} | work: {} ops | conflicts: {} {}",
+        rep.tasks,
+        rep.report.work,
+        rep.report.conflicts.len(),
+        if rep.report.conflict_free() { "✓ (exclusive access holds)" } else { "✗" }
+    );
+    Ok(())
+}
+
+fn cmd_bsp(args: &Args) -> Result<(), String> {
+    args.expect_known(&["n", "p", "g", "l", "seed"])?;
+    let n = args.get_usize("n", 100_000)?;
+    let p = args.get_usize("p", 8)?;
+    let g = args.get_usize("g", 4)? as f64;
+    let l = args.get_usize("l", 10_000)? as f64;
+    let seed = args.get_u64("seed", 42)?;
+    let a = workload::sorted_keys(Dist::Uniform, n, seed);
+    let b = workload::sorted_keys(Dist::Uniform, n, seed + 1);
+    let params = traff_merge::bsp::BspParams { p, g, l };
+    let s = traff_merge::bsp::bsp_merge_simplified(&a, &b, params);
+    let c = traff_merge::bsp::bsp_merge_baseline(&a, &b, params);
+    let mut t = Table::new(vec!["algorithm", "supersteps", "h-words", "BSP cost"]);
+    t.row(vec![
+        "simplified (Träff)".to_string(),
+        s.cost.supersteps.to_string(),
+        s.cost.comm_words.to_string(),
+        format!("{:.0}", s.cost.cost),
+    ]);
+    t.row(vec![
+        "distinguished (classic)".to_string(),
+        c.cost.supersteps.to_string(),
+        c.cost.comm_words.to_string(),
+        format!("{:.0}", c.cost.cost),
+    ]);
+    t.print();
+    println!(
+        "\nsaved rounds: {} (the §3 claim) — cost ratio {:.3}",
+        c.cost.supersteps - s.cost.supersteps,
+        s.cost.cost / c.cost.cost
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.expect_known(&["jobs", "n", "engine", "threads", "seed"])?;
+    let jobs = args.get_usize("jobs", 16)?;
+    let n = args.get_usize("n", 100_000)?;
+    let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
+    let seed = args.get_u64("seed", 42)?;
+    let engine = match args.get("engine").unwrap_or("rust") {
+        "rust" => Engine::Rust,
+        "hybrid" => Engine::Hybrid,
+        other => return Err(format!("unknown engine '{other}'")),
+    };
+    let svc = MergeService::new(Config { threads, engine, leaf_block: 1024 })
+        .map_err(|e| e.to_string())?;
+    println!("service up: engine={engine:?} threads={threads}");
+    let mut rng = traff_merge::util::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    for j in 0..jobs {
+        let keys: Vec<f32> = (0..n).map(|_| rng.range(0, 1 << 20) as f32).collect();
+        let vals: Vec<i32> = (0..n as i32).collect();
+        let out = svc.sort(&KeyedBlock { keys, vals }).map_err(|e| e.to_string())?;
+        assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+        if j == 0 {
+            println!("first job ok ({} records)", out.len());
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let (jobs_done, elems, xla_calls, busy) = svc.stats.snapshot();
+    println!(
+        "{jobs_done} jobs, {elems} records in {} — {:.2} Melem/s, {xla_calls} XLA calls, busy {:.2}s",
+        fmt_duration(secs),
+        melems_per_sec(elems, secs),
+        busy
+    );
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = XlaRuntime::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    let rt = XlaRuntime::load_dir(&dir).map_err(|e| e.to_string())?;
+    println!("platform: {}", rt.platform);
+    let mut t = Table::new(vec!["artifact", "inputs", "outputs", "description"]);
+    for name in rt.names() {
+        let exe = rt.get(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            format!("{:?}", exe.spec.inputs.iter().map(|s| s.numel()).collect::<Vec<_>>()),
+            format!("{:?}", exe.spec.outputs.iter().map(|s| s.numel()).collect::<Vec<_>>()),
+            exe.spec.description.clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn case_census(tasks: &[traff_merge::core::MergeTask]) -> String {
+    use std::collections::BTreeMap;
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    for t in tasks {
+        *counts.entry(format!("{:?}", t.case)).or_default() += 1;
+    }
+    counts.iter().map(|(k, v)| format!("{k}:{v}")).collect::<Vec<_>>().join(" ")
+}

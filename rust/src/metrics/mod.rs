@@ -1,0 +1,16 @@
+//! Measurement plumbing: statistics, markdown tables, timers (S16).
+
+pub mod stats;
+pub mod table;
+
+pub use stats::{percentile, Stats};
+pub use table::{fmt_duration, melems_per_sec, Table};
+
+use std::time::Instant;
+
+/// Time a closure, returning (seconds, result).
+pub fn time<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}

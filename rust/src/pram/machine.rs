@@ -1,0 +1,118 @@
+//! Step-synchronous PRAM machine.
+//!
+//! A PRAM program is a sequence of *parallel steps*: in each step every
+//! PE executes a closure that may perform a bounded number of memory
+//! accesses. The machine runs PEs one after another within a step (the
+//! simulation is sequential — what matters is the per-step access
+//! pattern), audits the step against the variant rule, and counts
+//! steps. This follows the standard "work/step" PRAM accounting
+//! (JáJá [10], Keller–Keßler–Träff [12]).
+
+use super::memory::{Conflict, Memory, Variant};
+
+/// Outcome of a full program run.
+#[derive(Debug)]
+pub struct RunReport {
+    /// Parallel steps executed (the PRAM time).
+    pub steps: usize,
+    /// Total operations across PEs (the PRAM work).
+    pub work: usize,
+    /// All conflicts w.r.t. the machine variant.
+    pub conflicts: Vec<Conflict>,
+}
+
+impl RunReport {
+    pub fn conflict_free(&self) -> bool {
+        self.conflicts.is_empty()
+    }
+}
+
+/// The machine: `p` PEs over an audited shared memory.
+pub struct Pram {
+    pub p: usize,
+    pub mem: Memory,
+    pub variant: Variant,
+    steps: usize,
+    work: usize,
+    conflicts: Vec<Conflict>,
+}
+
+impl Pram {
+    pub fn new(p: usize, mem_size: usize, variant: Variant) -> Pram {
+        Pram { p, mem: Memory::new(mem_size), variant, steps: 0, work: 0, conflicts: Vec::new() }
+    }
+
+    pub fn with_memory(p: usize, mem: Memory, variant: Variant) -> Pram {
+        Pram { p, mem, variant, steps: 0, work: 0, conflicts: Vec::new() }
+    }
+
+    /// Execute one parallel step: `body(pe, mem)` runs for every active
+    /// PE (those for which `active` returns true). Returns per-step
+    /// conflicts (also accumulated).
+    pub fn step<F, A>(&mut self, mut active: A, mut body: F) -> Vec<Conflict>
+    where
+        F: FnMut(usize, &mut Memory),
+        A: FnMut(usize) -> bool,
+    {
+        let mut acted = 0usize;
+        for pe in 0..self.p {
+            if active(pe) {
+                body(pe, &mut self.mem);
+                acted += 1;
+            }
+        }
+        self.work += acted;
+        let conflicts = self.mem.end_step(self.steps, self.variant);
+        self.conflicts.extend(conflicts.iter().cloned());
+        self.steps += 1;
+        conflicts
+    }
+
+    /// Convenience: a step where all PEs are active.
+    pub fn step_all<F: FnMut(usize, &mut Memory)>(&mut self, body: F) -> Vec<Conflict> {
+        self.step(|_| true, body)
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn work(&self) -> usize {
+        self.work
+    }
+
+    pub fn finish(self) -> (Memory, RunReport) {
+        (
+            self.mem,
+            RunReport { steps: self.steps, work: self.work, conflicts: self.conflicts },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_steps_and_work() {
+        let mut m = Pram::new(4, 16, Variant::Erew);
+        m.step_all(|pe, mem| mem.write(pe, pe, pe as i64));
+        m.step(|pe| pe < 2, |pe, mem| mem.write(pe, 8 + pe, 1));
+        let (mem, report) = m.finish();
+        assert_eq!(report.steps, 2);
+        assert_eq!(report.work, 6);
+        assert!(report.conflict_free());
+        assert_eq!(mem.peek(3), 3);
+    }
+
+    #[test]
+    fn detects_cross_pe_conflicts() {
+        let mut m = Pram::new(2, 4, Variant::Erew);
+        let c = m.step_all(|pe, mem| {
+            let _ = mem.read(pe, 0); // both read addr 0
+        });
+        assert_eq!(c.len(), 1);
+        let (_, report) = m.finish();
+        assert!(!report.conflict_free());
+    }
+}

@@ -1,0 +1,171 @@
+//! Audited PRAM shared memory.
+//!
+//! Every read/write in a parallel step is logged per address; at the
+//! end of the step the machine checks the access pattern against the
+//! PRAM variant's rule (EREW: no address touched twice; CREW:
+//! concurrent reads allowed, writes exclusive). This turns the paper's
+//! "can be implemented on an EREW PRAM" claim into a checkable runtime
+//! property (E6).
+
+use std::collections::HashMap;
+
+/// PRAM variants, ordered by permissiveness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Exclusive read, exclusive write.
+    Erew,
+    /// Concurrent read, exclusive write.
+    Crew,
+}
+
+/// A conflict detected in one parallel step.
+#[derive(Clone, Debug)]
+pub struct Conflict {
+    pub step: usize,
+    pub addr: usize,
+    pub readers: Vec<usize>,
+    pub writers: Vec<usize>,
+}
+
+/// Shared memory of word-sized cells with access auditing.
+#[derive(Debug)]
+pub struct Memory {
+    cells: Vec<i64>,
+    /// (pe, is_write) accesses for the current step, per address.
+    log: HashMap<usize, Vec<(usize, bool)>>,
+    auditing: bool,
+}
+
+impl Memory {
+    pub fn new(size: usize) -> Memory {
+        Memory { cells: vec![0; size], log: HashMap::new(), auditing: true }
+    }
+
+    pub fn from_vec(cells: Vec<i64>) -> Memory {
+        Memory { cells, log: HashMap::new(), auditing: true }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Disable auditing (for fast functional runs of the same program).
+    pub fn set_auditing(&mut self, on: bool) {
+        self.auditing = on;
+    }
+
+    /// PE `pe` reads `addr` in the current step.
+    pub fn read(&mut self, pe: usize, addr: usize) -> i64 {
+        if self.auditing {
+            self.log.entry(addr).or_default().push((pe, false));
+        }
+        self.cells[addr]
+    }
+
+    /// PE `pe` writes `addr` in the current step.
+    pub fn write(&mut self, pe: usize, addr: usize, val: i64) {
+        if self.auditing {
+            self.log.entry(addr).or_default().push((pe, true));
+        }
+        self.cells[addr] = val;
+    }
+
+    /// Raw (non-audited) access for setup/verification.
+    pub fn peek(&self, addr: usize) -> i64 {
+        self.cells[addr]
+    }
+
+    pub fn poke(&mut self, addr: usize, val: i64) {
+        self.cells[addr] = val;
+    }
+
+    pub fn slice(&self, lo: usize, hi: usize) -> &[i64] {
+        &self.cells[lo..hi]
+    }
+
+    /// Close the current step: return conflicts w.r.t. `variant` and
+    /// clear the access log.
+    pub fn end_step(&mut self, step: usize, variant: Variant) -> Vec<Conflict> {
+        let mut conflicts = Vec::new();
+        for (&addr, accesses) in &self.log {
+            // PRAM exclusivity is between *distinct processors*; a PE
+            // touching its own cell several times within its step is a
+            // sequential local matter. Dedup by PE.
+            let mut readers: Vec<usize> =
+                accesses.iter().filter(|(_, w)| !w).map(|(p, _)| *p).collect();
+            let mut writers: Vec<usize> =
+                accesses.iter().filter(|(_, w)| *w).map(|(p, _)| *p).collect();
+            readers.sort_unstable();
+            readers.dedup();
+            writers.sort_unstable();
+            writers.dedup();
+            let mut pes: Vec<usize> = readers.iter().chain(writers.iter()).copied().collect();
+            pes.sort_unstable();
+            pes.dedup();
+            let foreign_read = readers.iter().any(|r| !writers.contains(r));
+            let bad = match variant {
+                Variant::Erew => pes.len() > 1,
+                // CREW: concurrent reads fine; writes must be exclusive
+                // and unobserved by other PEs in the same step.
+                Variant::Crew => writers.len() > 1 || (writers.len() == 1 && foreign_read),
+            };
+            if bad {
+                conflicts.push(Conflict { step, addr, readers, writers });
+            }
+        }
+        self.log.clear();
+        conflicts.sort_by_key(|c| c.addr);
+        conflicts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusive_access_is_clean() {
+        let mut m = Memory::new(8);
+        m.write(0, 0, 5);
+        m.write(1, 1, 6);
+        assert_eq!(m.read(2, 0), 5);
+        // PE 2 read addr 0 which PE 0 wrote THIS step — EREW conflict.
+        let c = m.end_step(0, Variant::Erew);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].addr, 0);
+    }
+
+    #[test]
+    fn erew_flags_concurrent_reads() {
+        let mut m = Memory::new(4);
+        m.read(0, 2);
+        m.read(1, 2);
+        let c = m.end_step(0, Variant::Erew);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].readers, vec![0, 1]);
+    }
+
+    #[test]
+    fn crew_allows_concurrent_reads() {
+        let mut m = Memory::new(4);
+        m.read(0, 2);
+        m.read(1, 2);
+        assert!(m.end_step(0, Variant::Crew).is_empty());
+        m.write(0, 3, 1);
+        m.write(1, 3, 2);
+        assert_eq!(m.end_step(1, Variant::Crew).len(), 1);
+    }
+
+    #[test]
+    fn steps_are_independent() {
+        let mut m = Memory::new(4);
+        m.read(0, 1);
+        assert!(m.end_step(0, Variant::Erew).is_empty());
+        m.read(1, 1); // same address, next step: fine
+        assert!(m.end_step(1, Variant::Erew).is_empty());
+    }
+}

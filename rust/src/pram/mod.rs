@@ -1,0 +1,16 @@
+//! PRAM model simulator (S11): step-synchronous machine, audited
+//! shared memory (EREW/CREW legality), parallel prefix, and the paper's
+//! merge as an explicit PRAM program — the substrate for validating the
+//! EREW claim and the `O(n/p + log n)` step bound (E6).
+
+pub mod machine;
+pub mod memory;
+pub mod prefix;
+pub mod programs;
+pub mod sort_program;
+
+pub use machine::{Pram, RunReport};
+pub use memory::{Conflict, Memory, Variant};
+pub use prefix::{broadcast, prefix_sum};
+pub use programs::{pram_merge, PramMergeReport};
+pub use sort_program::{pram_sort, PramSortReport};

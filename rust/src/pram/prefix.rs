@@ -1,0 +1,123 @@
+//! EREW parallel prefix (scan) — the standard broadcast/aggregation
+//! primitive the paper invokes for distributing base addresses
+//! ("copied to the p processing elements in O(log p) steps by parallel
+//! prefix operations").
+//!
+//! Implemented as the classic up-sweep/down-sweep over a length-p
+//! region of audited memory; both sweeps are EREW-legal by
+//! construction (each step touches disjoint (left, right) pairs).
+
+use super::machine::Pram;
+
+
+/// In-place inclusive prefix sum over `mem[base..base+p]` using the
+/// machine's `p` PEs. Returns the number of steps used.
+pub fn prefix_sum(pram: &mut Pram, base: usize) -> usize {
+    let p = pram.p;
+    let steps_before = pram.steps();
+    // Up-sweep: stride doubling. At stride s, PE i (with (i+1) % (2s)
+    // == 0) adds cell (i - s) into cell i. Disjoint pairs => EREW.
+    let mut s = 1usize;
+    while s < p {
+        let stride = s;
+        pram.step(
+            |pe| (pe + 1) % (2 * stride) == 0,
+            |pe, mem| {
+                let l = mem.read(pe, base + pe - stride);
+                let r = mem.read(pe, base + pe);
+                mem.write(pe, base + pe, l + r);
+            },
+        );
+        s *= 2;
+    }
+    // Down-sweep for the inclusive scan: at each halving stride, PE i
+    // with (i + 1) % (2s) == s and i >= s... propagate partial sums.
+    s /= 2;
+    while s >= 1 {
+        let stride = s;
+        pram.step(
+            |pe| pe >= 2 * stride - 1 && (pe + 1 - stride) % (2 * stride) == 0,
+            |pe, mem| {
+                let l = mem.read(pe, base + pe - stride);
+                let r = mem.read(pe, base + pe);
+                mem.write(pe, base + pe, l + r);
+            },
+        );
+        if s == 1 {
+            break;
+        }
+        s /= 2;
+    }
+    pram.steps() - steps_before
+}
+
+/// Broadcast `mem[base]` into `mem[base..base+p]` by recursive doubling
+/// (O(log p) EREW steps): at round r, PEs `2^r..2^(r+1)` copy from
+/// `pe - 2^r` — every source cell is read by exactly one PE.
+pub fn broadcast(pram: &mut Pram, base: usize) -> usize {
+    let p = pram.p;
+    let steps_before = pram.steps();
+    let mut have = 1usize;
+    while have < p {
+        let h = have;
+        pram.step(
+            |pe| pe >= h && pe < 2 * h && pe < p,
+            |pe, mem| {
+                let v = mem.read(pe, base + pe - h);
+                mem.write(pe, base + pe, v);
+            },
+        );
+        have *= 2;
+    }
+    pram.steps() - steps_before
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pram::memory::Variant;
+    use crate::pram::Pram;
+
+    #[test]
+    fn prefix_sum_correct_and_erew() {
+        for p in [1usize, 2, 3, 4, 7, 8, 16, 33] {
+            let mut pram = Pram::new(p, p + 4, Variant::Erew);
+            for i in 0..p {
+                pram.mem.poke(i, (i + 1) as i64);
+            }
+            let steps = prefix_sum(&mut pram, 0);
+            let (mem, report) = pram.finish();
+            assert!(report.conflict_free(), "p={p}: {:?}", report.conflicts);
+            // Inclusive prefix of 1..=p is i*(i+1)/2.
+            for i in 0..p {
+                let expect = ((i + 1) * (i + 2) / 2) as i64;
+                assert_eq!(mem.peek(i), expect, "p={p} i={i}");
+            }
+            assert!(steps <= 2 * (crate::util::log2_ceil(p) as usize) + 2, "p={p} steps={steps}");
+        }
+    }
+
+    #[test]
+    fn broadcast_correct_and_erew() {
+        for p in [1usize, 2, 5, 8, 13, 32] {
+            let mut pram = Pram::new(p, p, Variant::Erew);
+            pram.mem.poke(0, 99);
+            let steps = broadcast(&mut pram, 0);
+            let (mem, report) = pram.finish();
+            assert!(report.conflict_free(), "p={p}");
+            for i in 0..p {
+                assert_eq!(mem.peek(i), 99, "p={p} i={i}");
+            }
+            assert!(steps <= crate::util::log2_ceil(p) as usize + 1);
+        }
+    }
+
+    #[test]
+    fn crew_machine_accepts_same_programs() {
+        let mut pram = Pram::new(8, 8, Variant::Crew);
+        pram.mem.poke(0, 5);
+        broadcast(&mut pram, 0);
+        let (_, report) = pram.finish();
+        assert!(report.conflict_free());
+    }
+}

@@ -1,0 +1,380 @@
+//! The paper's merge as an explicit PRAM program (E6).
+//!
+//! Memory layout (word-addressed):
+//!
+//! ```text
+//! [0 .. n)                A
+//! [n .. n+m)              B
+//! [n+m .. n+m+n+m)        C
+//! [c_end .. +p+1)         x̄ array
+//! [.. +p+1)               ȳ array
+//! ```
+//!
+//! Phases and their step accounting:
+//!
+//! 1. **Address/parameter broadcast** — `ceil(log2 p)` steps (parallel
+//!    prefix doubling, paper's own remark; simulated as counted steps).
+//! 2. **x̄ searches** (Step 1 of the paper): PE `i` binary-searches
+//!    `A[x_i]` in B. EREW-legal by *pipelining*: PE `i` starts at step
+//!    `i`; at any instant all active PEs are at different levels of the
+//!    implicit search tree, and distinct levels touch distinct cells.
+//!    Cost: `p - 1 + ceil(log2(m+1))` steps.
+//! 3. **ȳ searches** (Step 2) — symmetric, reads A.
+//! 4. **Cross-rank fetch**: each PE reads its `x̄_i` then `x̄_{i+1}`
+//!    (two offset steps — the paper's trick), then the ȳ/x̄ cells its
+//!    case needs, with same-cell reads serialized by a precomputed
+//!    schedule (measured, reported; worst case +p, typically +O(1)).
+//! 5. **Merges** (Steps 3–4): one output element per PE per step
+//!    (up to two reads + one write, all within the PE's disjoint
+//!    ranges). Cost: `max_task_group_size` steps ≤ `2*ceil(n/p) + 2`.
+//!
+//! The *single synchronization point* of the paper is the boundary
+//! between phases 3 and 4; phases 4–5 run without any further global
+//! coordination (each PE's schedule is self-determined). The simulator
+//! still steps synchronously — that is the PRAM execution model, not
+//! extra synchronization.
+
+use super::machine::{Pram, RunReport};
+use super::memory::{Memory, Variant};
+use crate::core::cases::{MergeTask, Partition};
+use crate::util::log2_ceil;
+
+/// Result of a PRAM merge run.
+pub struct PramMergeReport {
+    pub report: RunReport,
+    /// Step count per phase: [broadcast, xbar, ybar, fetch, merge].
+    pub phase_steps: [usize; 5],
+    pub tasks: usize,
+}
+
+/// Run the paper's merge on the audited PRAM. Returns the merged
+/// output and the report. `variant` selects the audit rule.
+pub fn pram_merge(a: &[i64], b: &[i64], p: usize, variant: Variant) -> (Vec<i64>, PramMergeReport) {
+    let n = a.len();
+    let m = b.len();
+    let c_base = n + m;
+    let xbar_base = c_base + n + m;
+    let ybar_base = xbar_base + p + 1;
+    let mem_size = ybar_base + p + 1;
+
+    let mut cells = vec![0i64; mem_size];
+    cells[..n].copy_from_slice(a);
+    cells[n..n + m].copy_from_slice(b);
+    let mem = Memory::from_vec(cells);
+    let mut pram = Pram::with_memory(p, mem, variant);
+
+    // Host-side ground truth for schedule construction. The simulator
+    // re-derives every value through audited memory; `part` only shapes
+    // the schedule (which cells, which steps).
+    let part = Partition::compute(a, b, p);
+    let tasks = part.tasks();
+
+    let mut phase_steps = [0usize; 5];
+
+    // ---- Phase 1: broadcast (counted; prefix doubling over p PEs) ---
+    for _ in 0..log2_ceil(p) {
+        pram.step_all(|_, _| {});
+        phase_steps[0] += 1;
+    }
+
+    // ---- Phase 2: pipelined x̄ searches (PE i searches A[x_i] in B) --
+    // PE i is idle until step i, then performs one search level per
+    // step. State per PE: (lo, hi, target, done).
+    {
+        let x = part.x.clone();
+        let mut lo = vec![0usize; p];
+        let mut hi = vec![m; p];
+        let mut target = vec![0i64; p];
+        let mut fetched = vec![false; p];
+        let max_steps = p + log2_ceil(m + 1) as usize + 1;
+        for s in 0..max_steps {
+            let before = pram.steps();
+            pram.step(
+                |pe| pe <= s,
+                |pe, mem| {
+                    if !fetched[pe] {
+                        // First active step: read own pivot A[x_i]
+                        // (exclusive: each PE reads its own block start;
+                        // staggering also separates these reads).
+                        target[pe] = if x[pe] < n { mem.read(pe, x[pe]) } else { i64::MAX };
+                        fetched[pe] = true;
+                        return;
+                    }
+                    if lo[pe] < hi[pe] {
+                        let mid = (lo[pe] + hi[pe]) >> 1;
+                        let v = mem.read(pe, n + mid); // B[mid]
+                        if v < target[pe] {
+                            lo[pe] = mid + 1;
+                        } else {
+                            hi[pe] = mid;
+                        }
+                    }
+                },
+            );
+            phase_steps[1] += pram.steps() - before;
+            if fetched.iter().all(|&f| f) && lo.iter().zip(&hi).all(|(l, h)| l >= h) {
+                break;
+            }
+        }
+        // Write results (one exclusive write each).
+        let before = pram.steps();
+        pram.step_all(|pe, mem| {
+            mem.write(pe, xbar_base + pe, lo[pe] as i64);
+        });
+        phase_steps[1] += pram.steps() - before;
+        pram.mem.poke(xbar_base + p, m as i64); // sentinel, host-set
+        // Cross-check against the reference partition.
+        for i in 0..p {
+            debug_assert_eq!(pram.mem.peek(xbar_base + i), part.xbar[i] as i64);
+        }
+    }
+
+    // ---- Phase 3: pipelined ȳ searches (PE j searches B[y_j] in A) --
+    {
+        let y = part.y.clone();
+        let mut lo = vec![0usize; p];
+        let mut hi = vec![n; p];
+        let mut target = vec![0i64; p];
+        let mut fetched = vec![false; p];
+        let max_steps = p + log2_ceil(n + 1) as usize + 1;
+        for s in 0..max_steps {
+            let before = pram.steps();
+            pram.step(
+                |pe| pe <= s,
+                |pe, mem| {
+                    if !fetched[pe] {
+                        target[pe] = if y[pe] < m { mem.read(pe, n + y[pe]) } else { i64::MAX };
+                        fetched[pe] = true;
+                        return;
+                    }
+                    if lo[pe] < hi[pe] {
+                        let mid = (lo[pe] + hi[pe]) >> 1;
+                        let v = mem.read(pe, mid); // A[mid]
+                        // rank_high: first index with A[idx] > target.
+                        if v <= target[pe] {
+                            lo[pe] = mid + 1;
+                        } else {
+                            hi[pe] = mid;
+                        }
+                    }
+                },
+            );
+            phase_steps[2] += pram.steps() - before;
+            if fetched.iter().all(|&f| f) && lo.iter().zip(&hi).all(|(l, h)| l >= h) {
+                break;
+            }
+        }
+        let before = pram.steps();
+        pram.step_all(|pe, mem| {
+            mem.write(pe, ybar_base + pe, lo[pe] as i64);
+        });
+        phase_steps[2] += pram.steps() - before;
+        pram.mem.poke(ybar_base + p, n as i64);
+        for j in 0..p {
+            debug_assert_eq!(pram.mem.peek(ybar_base + j), part.ybar[j] as i64);
+        }
+    }
+
+    // ================= THE synchronization point =====================
+
+    // ---- Phase 4: cross-rank fetch, conflict-free schedule. ---------
+    // Each PE reads: x̄_i (own), x̄_{i+1}, ȳ_j(+1) or x̄ cells as its
+    // case demands. Build the read list per PE, then schedule reads so
+    // no cell is read twice in one step (greedy slotting).
+    {
+        let mut reads: Vec<Vec<usize>> = vec![Vec::new(); p]; // absolute addrs per PE
+        for i in 0..p {
+            // A-side PE i.
+            reads[i].push(xbar_base + i);
+            reads[i].push(xbar_base + i + 1);
+            if let Some(t) = part.a_side_task(i) {
+                use crate::core::cases::Case::*;
+                let j = if part.xbar[i] < m { part.pb.block_of(part.xbar[i]) } else { 0 };
+                match t.case {
+                    StartAligned => reads[i].push(ybar_base + j),
+                    CrossBlock => reads[i].push(ybar_base + j + 1),
+                    _ => {}
+                }
+            }
+            // B-side duties of PE i (paper Step 4, same PE set).
+            reads[i].push(ybar_base + i);
+            reads[i].push(ybar_base + i + 1);
+            if let Some(t) = part.b_side_task(i) {
+                use crate::core::cases::Case::*;
+                let ii = if part.ybar[i] < n { part.pa.block_of(part.ybar[i]) } else { 0 };
+                match t.case {
+                    StartAligned => reads[i].push(xbar_base + ii),
+                    CrossBlock => reads[i].push(xbar_base + ii + 1),
+                    _ => {}
+                }
+            }
+        }
+        // Greedy slotting: per step, each PE issues its next read
+        // unless another PE already claimed that cell this step.
+        let mut cursors = vec![0usize; p];
+        while cursors.iter().zip(&reads) .any(|(c, r)| *c < r.len()) {
+            let mut claimed: std::collections::HashSet<usize> = std::collections::HashSet::new();
+            let mut plan: Vec<Option<usize>> = vec![None; p];
+            for pe in 0..p {
+                if cursors[pe] < reads[pe].len() {
+                    let addr = reads[pe][cursors[pe]];
+                    if claimed.insert(addr) {
+                        plan[pe] = Some(addr);
+                        cursors[pe] += 1;
+                    }
+                }
+            }
+            let before = pram.steps();
+            pram.step(
+                |pe| plan[pe].is_some(),
+                |pe, mem| {
+                    let _ = mem.read(pe, plan[pe].unwrap());
+                },
+            );
+            phase_steps[3] += pram.steps() - before;
+        }
+    }
+
+    // ---- Phase 5: the 2p merges, one output element per step. -------
+    {
+        // Assign tasks to PEs as the paper does: A-side task i and
+        // B-side task i both belong to PE i. Each PE processes its
+        // tasks one element per step.
+        #[derive(Clone)]
+        struct Cursor {
+            task: MergeTask,
+            ai: usize,
+            bi: usize,
+            ci: usize,
+        }
+        let mut queues: Vec<Vec<Cursor>> = vec![Vec::new(); p];
+        for t in &tasks {
+            // Recover the owning PE: A-side tasks start at a block
+            // start of A; B-side at a block start of B.
+            let pe = match t.side {
+                crate::core::cases::Side::A => part.pa.block_of(t.a.start.min(n - 1)),
+                crate::core::cases::Side::B => part.pb.block_of(t.b.start.min(m - 1)),
+            };
+            queues[pe].push(Cursor { task: t.clone(), ai: t.a.start, bi: t.b.start, ci: t.c_off });
+        }
+        let mut active: Vec<usize> = vec![0; p]; // index into queue
+        loop {
+            // Snapshot the active set so the body may borrow mutably.
+            let is_active: Vec<bool> =
+                (0..p).map(|pe| active[pe] < queues[pe].len()).collect();
+            if !is_active.iter().any(|&a| a) {
+                break;
+            }
+            let before = pram.steps();
+            pram.step(
+                |pe| is_active[pe],
+                |pe, mem| {
+                    let q = &mut queues[pe][active[pe]];
+                    let t = &q.task;
+                    // One comparison + one write (<= 3 accesses, all in
+                    // this PE's disjoint ranges).
+                    let take_a = if q.ai < t.a.end && q.bi < t.b.end {
+                        let av = mem.read(pe, q.ai);
+                        let bv = mem.read(pe, n + q.bi);
+                        av <= bv
+                    } else {
+                        q.ai < t.a.end
+                    };
+                    let v = if take_a {
+                        let v = mem.read(pe, q.ai);
+                        q.ai += 1;
+                        v
+                    } else {
+                        let v = mem.read(pe, n + q.bi);
+                        q.bi += 1;
+                        v
+                    };
+                    mem.write(pe, c_base + q.ci, v);
+                    q.ci += 1;
+                    if q.ai >= t.a.end && q.bi >= t.b.end {
+                        active[pe] += 1;
+                    }
+                },
+            );
+            phase_steps[4] += pram.steps() - before;
+        }
+    }
+
+    let ntasks = tasks.len();
+    let (mem, report) = pram.finish();
+    let c = mem.slice(c_base, c_base + n + m).to_vec();
+    (c, PramMergeReport { report, phase_steps, tasks: ntasks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sorted(rng: &mut Rng, n: usize, hi: i64) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..n).map(|_| rng.range(0, hi)).collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn merges_correctly_on_erew() {
+        let mut rng = Rng::new(41);
+        for _ in 0..25 {
+            let n = 1 + rng.index(200);
+            let m = 1 + rng.index(200);
+            let p = 1 + rng.index(8);
+            let a = sorted(&mut rng, n, 50);
+            let b = sorted(&mut rng, m, 50);
+            let (c, rep) = pram_merge(&a, &b, p, Variant::Erew);
+            let mut expect = [a, b].concat();
+            expect.sort();
+            assert_eq!(c, expect, "n={n} m={m} p={p}");
+            assert!(
+                rep.report.conflict_free(),
+                "EREW conflicts (n={n} m={m} p={p}): {:?}",
+                &rep.report.conflicts[..rep.report.conflicts.len().min(5)]
+            );
+        }
+    }
+
+    #[test]
+    fn figure1_on_erew_is_conflict_free() {
+        let a = vec![0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7];
+        let b = vec![1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7];
+        let (c, rep) = pram_merge(&a, &b, 5, Variant::Erew);
+        let mut expect = [a, b].concat();
+        expect.sort();
+        assert_eq!(c, expect);
+        assert!(rep.report.conflict_free(), "{:?}", rep.report.conflicts);
+        assert_eq!(rep.tasks, 10); // the caption's ten subproblems
+    }
+
+    #[test]
+    fn step_bound_scales_as_n_over_p_plus_log() {
+        // Theorem 1 shape: steps <= c1*(n/p) + c2*log(n) + c3*p (the +p
+        // from the honest pipelined search; see module docs).
+        let mut rng = Rng::new(43);
+        for &(n, p) in &[(256usize, 4usize), (1024, 8), (4096, 16), (8192, 16)] {
+            let a = sorted(&mut rng, n, 1 << 30);
+            let b = sorted(&mut rng, n, 1 << 30);
+            let (_, rep) = pram_merge(&a, &b, p, Variant::Erew);
+            let bound = 4 * (2 * n / p) + 8 * (log2_ceil(n + 1) as usize) + 4 * p + 32;
+            assert!(
+                rep.report.steps <= bound,
+                "steps {} > bound {bound} (n={n} p={p}, phases {:?})",
+                rep.report.steps,
+                rep.phase_steps
+            );
+        }
+    }
+
+    #[test]
+    fn all_equal_keys_erew() {
+        let a = vec![7i64; 100];
+        let b = vec![7i64; 80];
+        let (c, rep) = pram_merge(&a, &b, 8, Variant::Erew);
+        assert_eq!(c, vec![7i64; 180]);
+        assert!(rep.report.conflict_free(), "{:?}", &rep.report.conflicts[..3.min(rep.report.conflicts.len())]);
+    }
+}

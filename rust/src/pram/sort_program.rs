@@ -1,0 +1,246 @@
+//! The §3 stable merge sort as an explicit PRAM program (E7's model-
+//! level half): first each PE sorts its own block "sequentially in
+//! parallel" (counted at one comparison-step per element-move of a
+//! bottom-up merge sort, i.e. Θ((n/p)·log(n/p)) steps), then
+//! `ceil(log2 p)` rounds of the simplified parallel merge — each round
+//! re-using the cross-rank partition, executed under the same audited
+//! memory so the EREW property extends to the whole sort.
+//!
+//! Memory layout: two n-word ping-pong regions plus per-round rank
+//! scratch.
+
+use super::machine::{Pram, RunReport};
+use super::memory::{Memory, Variant};
+use crate::core::blocks::Blocks;
+use crate::core::cases::Partition;
+use crate::util::log2_ceil;
+
+/// Report for a PRAM sort run.
+pub struct PramSortReport {
+    pub report: RunReport,
+    /// [block sort, merge rounds] step split.
+    pub phase_steps: [usize; 2],
+    pub rounds: usize,
+}
+
+/// Run the §3 sort on the audited PRAM. Returns sorted data + report.
+pub fn pram_sort(input: &[i64], p: usize, variant: Variant) -> (Vec<i64>, PramSortReport) {
+    let n = input.len();
+    let src_base = 0usize;
+    let dst_base = n;
+    let mem_size = 2 * n + 4;
+    let mut cells = vec![0i64; mem_size];
+    cells[..n].copy_from_slice(input);
+    let mem = Memory::from_vec(cells);
+    let mut pram = Pram::with_memory(p, mem, variant);
+    let blocks = Blocks::new(n, p);
+    let mut phase_steps = [0usize; 2];
+
+    // ---- Phase 1: each PE sorts its block in place. -----------------
+    // Simulated faithfully at the access level: a bottom-up merge sort
+    // needs ~log2(len) passes; we charge one read+write step per
+    // element per pass, all within the PE's own block (EREW-trivial),
+    // and materialize the result with a host-computed sort (the
+    // *accesses* are what the model costs, and they are block-local).
+    {
+        let max_len = (0..p).map(|i| blocks.block_len(i)).max().unwrap_or(0);
+        let passes = log2_ceil(max_len.max(1)) as usize;
+        // Local sorted copies, written back through audited memory.
+        let mut sorted_blocks: Vec<Vec<i64>> = (0..p)
+            .map(|i| {
+                let mut v = input[blocks.start(i)..blocks.start(i + 1)].to_vec();
+                v.sort();
+                v
+            })
+            .collect();
+        for pass in 0..passes {
+            // One pass = each PE touches each of its elements once.
+            for k in 0..max_len {
+                let before = pram.steps();
+                pram.step(
+                    |pe| k < blocks.block_len(pe),
+                    |pe, mem| {
+                        let addr = src_base + blocks.start(pe) + k;
+                        let v = mem.read(pe, addr);
+                        // Final pass writes the sorted value; earlier
+                        // passes model the intermediate shuffles.
+                        if pass + 1 == passes {
+                            let sv = sorted_blocks[pe][k];
+                            mem.write(pe, addr, sv);
+                        } else {
+                            mem.write(pe, addr, v);
+                        }
+                    },
+                );
+                phase_steps[0] += pram.steps() - before;
+            }
+        }
+        if passes == 0 {
+            // Single-element blocks: nothing to do.
+            for sb in sorted_blocks.iter_mut() {
+                sb.clear();
+            }
+        }
+    }
+
+    // ---- Phase 2: ceil(log2 p) merge rounds over audited memory. ----
+    let mut runs: Vec<usize> = blocks.starts();
+    runs.dedup();
+    let mut in_src = true;
+    let mut rounds = 0usize;
+    while runs.len() > 2 {
+        let (from, to) = if in_src { (src_base, dst_base) } else { (dst_base, src_base) };
+        let snapshot: Vec<i64> = pram.mem.slice(from, from + n).to_vec();
+        // Pair adjacent runs; all pairs' merges execute in the same
+        // stepped loop (the paper's "in parallel on the pairs").
+        let nruns = runs.len() - 1;
+        let npairs = nruns / 2;
+        let per_pair = (p / npairs.max(1)).max(1);
+        struct Cur {
+            a: std::ops::Range<usize>,
+            b: std::ops::Range<usize>,
+            c: usize,
+        }
+        let mut queues: Vec<Vec<Cur>> = (0..p).map(|_| Vec::new()).collect();
+        let mut pe_rr = 0usize;
+        let mut new_runs = vec![0usize];
+        for pair in 0..npairs {
+            let lo = runs[2 * pair];
+            let mid = runs[2 * pair + 1];
+            let hi = runs[2 * pair + 2];
+            let part = Partition::compute(&snapshot[lo..mid], &snapshot[mid..hi], per_pair);
+            for t in part.tasks() {
+                queues[pe_rr % p].push(Cur {
+                    a: (t.a.start + lo)..(t.a.end + lo),
+                    b: (t.b.start + mid)..(t.b.end + mid),
+                    c: t.c_off + lo,
+                });
+                pe_rr += 1;
+            }
+            new_runs.push(hi);
+        }
+        if nruns % 2 == 1 {
+            let lo = runs[nruns - 1];
+            let hi = runs[nruns];
+            queues[pe_rr % p].push(Cur { a: lo..hi, b: hi..hi, c: lo });
+            new_runs.push(hi);
+        }
+        // Charge the binary searches: per_pair searches of log n each,
+        // pipelined — approximated as one stepped loop of
+        // log2(n)+per_pair steps (same accounting as pram_merge).
+        for _ in 0..(log2_ceil(n + 1) as usize + per_pair) {
+            let before = pram.steps();
+            pram.step_all(|_, _| {});
+            phase_steps[1] += pram.steps() - before;
+        }
+        // Execute all tasks one element per step.
+        let mut active = vec![0usize; p];
+        let mut ai: Vec<usize> = queues.iter().map(|q| q.first().map(|c| c.a.start).unwrap_or(0)).collect();
+        let mut bi: Vec<usize> = queues.iter().map(|q| q.first().map(|c| c.b.start).unwrap_or(0)).collect();
+        let mut ci: Vec<usize> = queues.iter().map(|q| q.first().map(|c| c.c).unwrap_or(0)).collect();
+        loop {
+            let is_active: Vec<bool> = (0..p).map(|pe| active[pe] < queues[pe].len()).collect();
+            if !is_active.iter().any(|&x| x) {
+                break;
+            }
+            let before = pram.steps();
+            pram.step(
+                |pe| is_active[pe],
+                |pe, mem| {
+                    let q = &queues[pe][active[pe]];
+                    let take_a = if ai[pe] < q.a.end && bi[pe] < q.b.end {
+                        let av = mem.read(pe, from + ai[pe]);
+                        let bv = mem.read(pe, from + bi[pe]);
+                        av <= bv
+                    } else {
+                        ai[pe] < q.a.end
+                    };
+                    let v = if take_a {
+                        let v = mem.read(pe, from + ai[pe]);
+                        ai[pe] += 1;
+                        v
+                    } else {
+                        let v = mem.read(pe, from + bi[pe]);
+                        bi[pe] += 1;
+                        v
+                    };
+                    mem.write(pe, to + ci[pe], v);
+                    ci[pe] += 1;
+                    if ai[pe] >= q.a.end && bi[pe] >= q.b.end {
+                        active[pe] += 1;
+                        if active[pe] < queues[pe].len() {
+                            let nq = &queues[pe][active[pe]];
+                            ai[pe] = nq.a.start;
+                            bi[pe] = nq.b.start;
+                            ci[pe] = nq.c;
+                        }
+                    }
+                },
+            );
+            phase_steps[1] += pram.steps() - before;
+        }
+        runs = new_runs;
+        in_src = !in_src;
+        rounds += 1;
+    }
+
+    let final_base = if in_src { src_base } else { dst_base };
+    let (mem, report) = pram.finish();
+    let out = mem.slice(final_base, final_base + n).to_vec();
+    (out, PramSortReport { report, phase_steps, rounds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sorts_correctly_and_erew() {
+        let mut rng = Rng::new(71);
+        for &(n, p) in &[(64usize, 2usize), (200, 4), (1000, 8), (777, 3)] {
+            let v: Vec<i64> = (0..n).map(|_| rng.range(0, 100)).collect();
+            let (out, rep) = pram_sort(&v, p, Variant::Erew);
+            let mut expect = v.clone();
+            expect.sort();
+            assert_eq!(out, expect, "n={n} p={p}");
+            assert!(
+                rep.report.conflict_free(),
+                "n={n} p={p}: {:?}",
+                rep.report.conflicts.first()
+            );
+            assert_eq!(rep.rounds, crate::core::sort::expected_rounds(p), "n={n} p={p}");
+        }
+    }
+
+    #[test]
+    fn step_bound_n_log_n_over_p() {
+        // §3: O(n log n / p + log p log n). Check the dominant term.
+        let mut rng = Rng::new(73);
+        for &(n, p) in &[(1024usize, 4usize), (4096, 8), (4096, 16)] {
+            let v: Vec<i64> = (0..n).map(|_| rng.range(0, 1 << 30)).collect();
+            let (_, rep) = pram_sort(&v, p, Variant::Erew);
+            let bound = 4 * (n / p) * (log2_ceil(n) as usize)
+                + 8 * (log2_ceil(p) as usize) * (log2_ceil(n) as usize)
+                + 8 * p
+                + 64;
+            assert!(
+                rep.report.steps <= bound,
+                "steps {} > bound {bound} (n={n} p={p}, phases {:?})",
+                rep.report.steps,
+                rep.phase_steps
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        for n in 0..8 {
+            let v: Vec<i64> = (0..n as i64).rev().collect();
+            let (out, _) = pram_sort(&v, 2, Variant::Erew);
+            let mut expect = v.clone();
+            expect.sort();
+            assert_eq!(out, expect, "n={n}");
+        }
+    }
+}

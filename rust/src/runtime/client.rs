@@ -1,0 +1,167 @@
+//! PJRT client wrapper: load `artifacts/*.hlo.txt`, compile once, run
+//! many times. Adapts /opt/xla-example/load_hlo (HLO *text* is the
+//! interchange format — see aot.py for why).
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Input/output value for an executable call.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self, spec: &super::manifest::TensorSpec) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        // Multi-dimensional artifact inputs (e.g. the batched merge's
+        // f32[8,1024]) are marshalled flat and reshaped here.
+        if spec.shape.len() > 1 {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        } else {
+            Ok(lit)
+        }
+    }
+
+    fn matches(&self, spec: &super::manifest::TensorSpec) -> bool {
+        self.len() == spec.numel()
+            && matches!(
+                (self, &spec.dtype),
+                (Tensor::F32(_), DType::F32) | (Tensor::I32(_), DType::I32)
+            )
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape/dtype checking against the manifest spec.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if !t.matches(s) {
+                return Err(anyhow!(
+                    "{}: input {i} mismatch (len {} vs spec {:?})",
+                    self.spec.name,
+                    t.len(),
+                    s
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&self.spec.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for (lit, spec) in elems.into_iter().zip(&self.spec.outputs) {
+            out.push(match spec.dtype {
+                DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+                DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// The runtime: one PJRT CPU client + all compiled artifacts.
+pub struct XlaRuntime {
+    pub platform: String,
+    executables: HashMap<String, Executable>,
+}
+
+impl XlaRuntime {
+    /// Load every artifact in `dir` (per its manifest) and compile.
+    pub fn load_dir(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let platform = client.platform_name();
+        let mut executables = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            executables.insert(name.clone(), Executable { spec: spec.clone(), exe });
+        }
+        Ok(XlaRuntime { platform, executables })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.executables.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Default artifacts directory: `$REPO/artifacts` or `$ARTIFACTS_DIR`.
+    pub fn default_dir() -> std::path::PathBuf {
+        if let Ok(d) = std::env::var("ARTIFACTS_DIR") {
+            return d.into();
+        }
+        // Walk up from the executable/cwd looking for artifacts/.
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return "artifacts".into();
+            }
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! `artifacts/manifest.json` reader — the contract between `aot.py`
+//! and the rust runtime (shapes/dtypes per artifact).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// One tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub description: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec, String> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or("missing shape")?
+        .iter()
+        .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = DType::parse(v.get("dtype").and_then(Json::as_str).ok_or("missing dtype")?)?;
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let json = Json::parse(text).map_err(|e| e.to_string())?;
+        let obj = json.as_obj().ok_or("manifest must be an object")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry.get("file").and_then(Json::as_str).ok_or("missing file")?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(file),
+                description: entry
+                    .get("description")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                inputs: entry
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing inputs")?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>, _>>()?,
+                outputs: entry
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or("missing outputs")?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect::<Result<Vec<_>, _>>()?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    /// Merge artifacts, sorted by block size descending (offload picks
+    /// the largest block that fits).
+    pub fn merge_artifacts(&self) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .values()
+            .filter(|a| a.name.starts_with("merge_b"))
+            .collect();
+        v.sort_by_key(|a| std::cmp::Reverse(a.inputs[0].numel()));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "merge_b1024": {
+        "file": "merge_b1024.hlo.txt",
+        "description": "merge",
+        "inputs": [
+          {"shape": [1024], "dtype": "float32"},
+          {"shape": [1024], "dtype": "int32"},
+          {"shape": [1024], "dtype": "float32"},
+          {"shape": [1024], "dtype": "int32"}
+        ],
+        "outputs": [
+          {"shape": [2048], "dtype": "float32"},
+          {"shape": [2048], "dtype": "int32"}
+        ],
+        "hlo_bytes": 123
+      },
+      "merge_b4096": {
+        "file": "merge_b4096.hlo.txt",
+        "description": "merge",
+        "inputs": [{"shape": [4096], "dtype": "float32"}],
+        "outputs": [{"shape": [8192], "dtype": "float32"}]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        let a = m.get("merge_b1024").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.inputs[0], TensorSpec { shape: vec![1024], dtype: DType::F32 });
+        assert_eq!(a.outputs[0].numel(), 2048);
+        assert!(a.file.ends_with("merge_b1024.hlo.txt"));
+    }
+
+    #[test]
+    fn merge_artifacts_sorted_desc() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let names: Vec<&str> = m.merge_artifacts().iter().map(|a| a.name.as_str()).collect();
+        assert_eq!(names, vec!["merge_b4096", "merge_b1024"]);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = r#"{"x": {"file": "f", "inputs": [{"shape": [1], "dtype": "float64"}], "outputs": []}}"#;
+        assert!(Manifest::parse(bad, Path::new("/x")).is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! Fixed-shape marshalling for the merge artifacts: pad → execute →
+//! slice. This is the L3↔L2 contract (tested against the pure-rust
+//! merge in `tests/runtime_xla.rs`).
+//!
+//! Padding convention (mirrored by `python/tests/test_rank_merge.py::
+//! test_merge_with_inf_padding`): keys are padded with `+inf`, which
+//! the stable kernel routes to the output tail (A-pads before B-pads,
+//! both after every real key since workload keys are finite); the tail
+//! is sliced off after execution.
+
+use super::client::{Executable, Tensor, XlaRuntime};
+use anyhow::{anyhow, Result};
+
+/// A keyed block in the runtime's interchange layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KeyedBlock {
+    pub keys: Vec<f32>,
+    pub vals: Vec<i32>,
+}
+
+impl KeyedBlock {
+    pub fn new(keys: Vec<f32>, vals: Vec<i32>) -> KeyedBlock {
+        assert_eq!(keys.len(), vals.len());
+        KeyedBlock { keys, vals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    fn padded(&self, to: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut k = Vec::with_capacity(to);
+        k.extend_from_slice(&self.keys);
+        k.resize(to, f32::INFINITY);
+        let mut v = Vec::with_capacity(to);
+        v.extend_from_slice(&self.vals);
+        v.resize(to, -1);
+        (k, v)
+    }
+}
+
+/// Stable-merge executor over the AOT merge artifacts.
+pub struct XlaMerger<'rt> {
+    /// (block_capacity, executable), descending capacity.
+    merges: Vec<(usize, &'rt Executable)>,
+    /// Execution counter (metrics).
+    pub calls: std::cell::Cell<usize>,
+}
+
+impl<'rt> XlaMerger<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> Result<XlaMerger<'rt>> {
+        let mut merges = Vec::new();
+        for name in rt.names() {
+            if let Some(size) = name.strip_prefix("merge_b").and_then(|s| s.parse::<usize>().ok())
+            {
+                merges.push((size, rt.get(name).unwrap()));
+            }
+        }
+        if merges.is_empty() {
+            return Err(anyhow!("no merge_b* artifacts loaded (run `make artifacts`)"));
+        }
+        merges.sort_by_key(|(s, _)| std::cmp::Reverse(*s));
+        Ok(XlaMerger { merges, calls: std::cell::Cell::new(0) })
+    }
+
+    /// Largest block capacity available.
+    pub fn max_block(&self) -> usize {
+        self.merges[0].0
+    }
+
+    /// Pick the smallest artifact that fits both blocks.
+    fn pick(&self, need: usize) -> Result<&Executable> {
+        self.merges
+            .iter()
+            .rev()
+            .find(|(cap, _)| *cap >= need)
+            .map(|(_, e)| *e)
+            .ok_or_else(|| {
+                anyhow!("block of {need} exceeds largest merge artifact {}", self.max_block())
+            })
+    }
+
+    /// Stable merge of two sorted keyed blocks on the XLA executable.
+    ///
+    /// Requires finite keys (the padding sentinel is `+inf`) and block
+    /// lengths within the largest artifact capacity.
+    pub fn merge(&self, a: &KeyedBlock, b: &KeyedBlock) -> Result<KeyedBlock> {
+        let need = a.len().max(b.len());
+        let exe = self.pick(need)?;
+        let cap = exe.spec.inputs[0].numel();
+        let (ak, av) = a.padded(cap);
+        let (bk, bv) = b.padded(cap);
+        let out = exe.run(&[
+            Tensor::F32(ak),
+            Tensor::I32(av),
+            Tensor::F32(bk),
+            Tensor::I32(bv),
+        ])?;
+        self.calls.set(self.calls.get() + 1);
+        let keys = out[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+        let vals = out[1].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+        let real = a.len() + b.len();
+        Ok(KeyedBlock { keys: keys[..real].to_vec(), vals: vals[..real].to_vec() })
+    }
+}
+
+/// Stable-sort executor over the `sort_n*` artifacts (leaf sorting).
+pub struct XlaSorter<'rt> {
+    sorts: Vec<(usize, &'rt Executable)>,
+    pub calls: std::cell::Cell<usize>,
+}
+
+impl<'rt> XlaSorter<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> Result<XlaSorter<'rt>> {
+        let mut sorts = Vec::new();
+        for name in rt.names() {
+            if let Some(size) = name.strip_prefix("sort_n").and_then(|s| s.parse::<usize>().ok()) {
+                sorts.push((size, rt.get(name).unwrap()));
+            }
+        }
+        if sorts.is_empty() {
+            return Err(anyhow!("no sort_n* artifacts loaded"));
+        }
+        sorts.sort_by_key(|(s, _)| std::cmp::Reverse(*s));
+        Ok(XlaSorter { sorts, calls: std::cell::Cell::new(0) })
+    }
+
+    pub fn max_block(&self) -> usize {
+        self.sorts[0].0
+    }
+
+    /// Stable sort of one keyed block (padded to artifact size).
+    pub fn sort(&self, block: &KeyedBlock) -> Result<KeyedBlock> {
+        let exe = self
+            .sorts
+            .iter()
+            .rev()
+            .find(|(cap, _)| *cap >= block.len())
+            .map(|(_, e)| *e)
+            .ok_or_else(|| anyhow!("block exceeds sort artifact capacity"))?;
+        let cap = exe.spec.inputs[0].numel();
+        let (k, v) = block.padded(cap);
+        let out = exe.run(&[Tensor::F32(k), Tensor::I32(v)])?;
+        self.calls.set(self.calls.get() + 1);
+        let keys = out[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+        let vals = out[1].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+        Ok(KeyedBlock {
+            keys: keys[..block.len()].to_vec(),
+            vals: vals[..block.len()].to_vec(),
+        })
+    }
+}
+
+/// Dynamic batcher over the `merge_batchB_bN` artifacts: packs up to B
+/// outstanding small merge jobs into ONE executable call (vLLM-style
+/// request batching, applied to merge jobs). Jobs whose blocks exceed
+/// N fall back to the caller's per-job path.
+pub struct XlaBatchMerger<'rt> {
+    exe: &'rt Executable,
+    /// Batch width B.
+    pub batch: usize,
+    /// Per-side block capacity N.
+    pub block: usize,
+    pub calls: std::cell::Cell<usize>,
+}
+
+impl<'rt> XlaBatchMerger<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> Result<XlaBatchMerger<'rt>> {
+        let name = rt
+            .names()
+            .into_iter()
+            .find(|n| n.starts_with("merge_batch"))
+            .ok_or_else(|| anyhow!("no merge_batch* artifact loaded (run `make artifacts`)"))?;
+        let exe = rt.get(name).unwrap();
+        let shape = &exe.spec.inputs[0].shape;
+        if shape.len() != 2 {
+            return Err(anyhow!("batched merge artifact must be rank-2, got {shape:?}"));
+        }
+        Ok(XlaBatchMerger {
+            exe,
+            batch: shape[0],
+            block: shape[1],
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Stable-merge every (a, b) job. Jobs are packed `batch` at a time
+    /// into single executable calls; a short final group is padded with
+    /// empty jobs. Every block must be `<= self.block` long.
+    pub fn merge_many(&self, jobs: &[(KeyedBlock, KeyedBlock)]) -> Result<Vec<KeyedBlock>> {
+        for (i, (a, b)) in jobs.iter().enumerate() {
+            if a.len() > self.block || b.len() > self.block {
+                return Err(anyhow!(
+                    "job {i} exceeds batch block capacity {} ({} / {})",
+                    self.block,
+                    a.len(),
+                    b.len()
+                ));
+            }
+        }
+        let mut out = Vec::with_capacity(jobs.len());
+        for group in jobs.chunks(self.batch) {
+            let cap = self.block;
+            let bsz = self.batch;
+            let mut ak = Vec::with_capacity(bsz * cap);
+            let mut av = Vec::with_capacity(bsz * cap);
+            let mut bk = Vec::with_capacity(bsz * cap);
+            let mut bv = Vec::with_capacity(bsz * cap);
+            for slot in 0..bsz {
+                if let Some((a, b)) = group.get(slot) {
+                    let (k, v) = a.padded(cap);
+                    ak.extend(k);
+                    av.extend(v);
+                    let (k, v) = b.padded(cap);
+                    bk.extend(k);
+                    bv.extend(v);
+                } else {
+                    // Padding job: all +inf keys.
+                    ak.extend(std::iter::repeat(f32::INFINITY).take(cap));
+                    av.extend(std::iter::repeat(-1).take(cap));
+                    bk.extend(std::iter::repeat(f32::INFINITY).take(cap));
+                    bv.extend(std::iter::repeat(-1).take(cap));
+                }
+            }
+            let res = self.exe.run(&[
+                Tensor::F32(ak),
+                Tensor::I32(av),
+                Tensor::F32(bk),
+                Tensor::I32(bv),
+            ])?;
+            self.calls.set(self.calls.get() + 1);
+            let keys = res[0].as_f32().ok_or_else(|| anyhow!("bad output dtype"))?;
+            let vals = res[1].as_i32().ok_or_else(|| anyhow!("bad output dtype"))?;
+            let row = 2 * cap;
+            for (slot, (a, b)) in group.iter().enumerate() {
+                let real = a.len() + b.len();
+                out.push(KeyedBlock {
+                    keys: keys[slot * row..slot * row + real].to_vec(),
+                    vals: vals[slot * row..slot * row + real].to_vec(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Crossrank executor (paper Steps 1–2 on the accelerator).
+pub struct XlaCrossrank<'rt> {
+    exe: &'rt Executable,
+}
+
+impl<'rt> XlaCrossrank<'rt> {
+    pub fn new(rt: &'rt XlaRuntime) -> Result<XlaCrossrank<'rt>> {
+        let name = rt
+            .names()
+            .into_iter()
+            .find(|n| n.starts_with("crossrank_"))
+            .ok_or_else(|| anyhow!("no crossrank artifact loaded"))?;
+        Ok(XlaCrossrank { exe: rt.get(name).unwrap() })
+    }
+
+    pub fn array_len(&self) -> usize {
+        self.exe.spec.inputs[0].numel()
+    }
+
+    pub fn pivot_count(&self) -> usize {
+        self.exe.spec.inputs[1].numel()
+    }
+
+    /// (rank_low, rank_high) of `pivots` in sorted `arr`; lengths must
+    /// match the artifact shape exactly (callers pad with +inf).
+    pub fn crossrank(&self, arr: &[f32], pivots: &[f32]) -> Result<(Vec<i32>, Vec<i32>)> {
+        let out = self
+            .exe
+            .run(&[Tensor::F32(arr.to_vec()), Tensor::F32(pivots.to_vec())])?;
+        Ok((
+            out[0].as_i32().ok_or_else(|| anyhow!("bad dtype"))?.to_vec(),
+            out[1].as_i32().ok_or_else(|| anyhow!("bad dtype"))?.to_vec(),
+        ))
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime bridge (S13): load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//! Python never runs at request time — the HLO text is compiled once
+//! at startup by the in-process PJRT CPU client.
+
+pub mod client;
+pub mod manifest;
+pub mod merge_exec;
+
+pub use client::{Executable, Tensor, XlaRuntime};
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use merge_exec::{KeyedBlock, XlaBatchMerger, XlaCrossrank, XlaMerger, XlaSorter};

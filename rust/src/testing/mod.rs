@@ -1,0 +1,174 @@
+//! `qcheck` — a small generative property-testing framework (the
+//! offline registry has no proptest; DESIGN.md §3).
+//!
+//! Usage:
+//! ```
+//! use traff_merge::testing::{qcheck, Gen};
+//! qcheck("merge is sorted", 200, |g| {
+//!     let mut a = g.vec_i64(0..300, -50..50);
+//!     a.sort();
+//!     // ... property body panics (or returns Err) on failure
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the failing case index and seed are printed so the exact
+//! case can be replayed with `QCHECK_SEED`. A simple halving shrinker
+//! reruns the property with truncated generator output when the
+//! property uses `g.shrinkable_vec_i64` (vectors are the dominant input
+//! shape in this crate).
+
+use crate::util::Rng;
+use std::ops::Range;
+
+/// The per-case random value source handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// When set, `shrinkable` vectors are truncated to this length
+    /// (used by the shrinking loop).
+    pub truncate: Option<usize>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), truncate: None }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.index(r.end - r.start)
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A vector with length drawn from `len` and elements from `vals`.
+    pub fn vec_i64(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i64> {
+        let mut n = self.usize_in(len);
+        if let Some(t) = self.truncate {
+            n = n.min(t);
+        }
+        (0..n).map(|_| self.rng.range(vals.start, vals.end)).collect()
+    }
+
+    /// A sorted vector (merge-input convenience).
+    pub fn sorted_vec_i64(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i64> {
+        let mut v = self.vec_i64(len, vals);
+        v.sort();
+        v
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `cases` generated cases of `prop`. Panics with replay info on
+/// the first failure, after attempting a truncation shrink.
+pub fn qcheck<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = std::env::var("QCHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: progressively halve the truncation bound.
+            let mut best: Option<(usize, String)> = None;
+            let mut bound = 1usize;
+            while bound <= 4096 {
+                let mut g = Gen::new(seed);
+                g.truncate = Some(bound);
+                if let Err(m) = prop(&mut g) {
+                    best = Some((bound, m));
+                    break;
+                }
+                bound *= 2;
+            }
+            match best {
+                Some((bound, m)) => panic!(
+                    "qcheck '{name}' failed (case {case}, seed {seed}, shrunk to len<={bound}):\n  {m}\n  replay: QCHECK_SEED={base_seed}"
+                ),
+                None => panic!(
+                    "qcheck '{name}' failed (case {case}, seed {seed}):\n  {msg}\n  replay: QCHECK_SEED={base_seed}"
+                ),
+            }
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality helper with debug output.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}\n  left: {:?}\n  right: {:?}",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        qcheck("trivial", 50, |g| {
+            let _ = g.u64();
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "qcheck 'fails'")]
+    fn failing_property_panics_with_seed() {
+        qcheck("fails", 10, |g| {
+            let v = g.vec_i64(0..100, 0..10);
+            prop_assert!(v.len() < 5, "too long: {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sorted_vec_is_sorted() {
+        qcheck("sorted", 50, |g| {
+            let v = g.sorted_vec_i64(0..200, -100..100);
+            prop_assert!(v.windows(2).all(|w| w[0] <= w[1]), "not sorted");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Shared utilities: deterministic PRNGs and a minimal JSON reader.
+//!
+//! The offline crate registry carries neither `rand` nor `serde_json`,
+//! so both are implemented here (DESIGN.md §3 substitution table).
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::{Rng, SplitMix64};
+
+/// `ceil(a / b)` for usize.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `ceil(log2(x))` for x >= 1; 0 for x <= 1.
+#[inline]
+pub fn log2_ceil(x: usize) -> u32 {
+    if x <= 1 {
+        0
+    } else {
+        usize::BITS - (x - 1).leading_zeros()
+    }
+}
+
+/// Number of hardware threads, with a sane floor.
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_cases() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+        assert_eq!(div_ceil(18, 5), 4); // Figure 1: ceil(18/5) = 4
+    }
+
+    #[test]
+    fn log2_ceil_cases() {
+        assert_eq!(log2_ceil(0), 0);
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(1024), 10);
+        assert_eq!(log2_ceil(1025), 11);
+    }
+}

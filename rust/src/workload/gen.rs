@@ -1,0 +1,202 @@
+//! Workload generators — the input distributions every experiment
+//! sweeps (DESIGN.md §5). All deterministic from a seed.
+//!
+//! Merge experiments need *sorted* inputs; sort experiments need raw
+//! ones. `Dist` covers the paper-relevant structure axes:
+//!
+//! - `Uniform`     — the default: keys uniform over a wide range.
+//! - `DupHeavy(k)` — only `k` distinct keys (stability stress; drives
+//!                   the five-case census toward (a)/(e)).
+//! - `Zipf`        — harmonic key popularity (realistic skew).
+//! - `AllEqual`    — single key (worst-case ties; cases (a)/(e) only).
+//! - `OrganPipe`   — ascending then descending (sort stress).
+//! - `Presorted`   — already sorted (best case).
+//! - `Reversed`    — descending (worst case for naive sorts).
+//! - `RunStructured(r)` — r sorted runs concatenated (multiway input).
+//! - `AdversarialSkew` — one input's mass concentrated inside a single
+//!                   gap of the other (the partition's stress case:
+//!                   exercises case (c)/(d) handovers heavily).
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    Uniform,
+    DupHeavy(u32),
+    Zipf,
+    AllEqual,
+    OrganPipe,
+    Presorted,
+    Reversed,
+    RunStructured(u32),
+    AdversarialSkew,
+}
+
+impl Dist {
+    pub fn name(&self) -> String {
+        match self {
+            Dist::Uniform => "uniform".into(),
+            Dist::DupHeavy(k) => format!("dup{k}"),
+            Dist::Zipf => "zipf".into(),
+            Dist::AllEqual => "allequal".into(),
+            Dist::OrganPipe => "organpipe".into(),
+            Dist::Presorted => "presorted".into(),
+            Dist::Reversed => "reversed".into(),
+            Dist::RunStructured(r) => format!("runs{r}"),
+            Dist::AdversarialSkew => "advskew".into(),
+        }
+    }
+
+    /// Parse a CLI name (inverse of `name`).
+    pub fn parse(s: &str) -> Option<Dist> {
+        match s {
+            "uniform" => Some(Dist::Uniform),
+            "zipf" => Some(Dist::Zipf),
+            "allequal" => Some(Dist::AllEqual),
+            "organpipe" => Some(Dist::OrganPipe),
+            "presorted" => Some(Dist::Presorted),
+            "reversed" => Some(Dist::Reversed),
+            "advskew" => Some(Dist::AdversarialSkew),
+            _ => {
+                if let Some(k) = s.strip_prefix("dup") {
+                    k.parse().ok().map(Dist::DupHeavy)
+                } else if let Some(r) = s.strip_prefix("runs") {
+                    r.parse().ok().map(Dist::RunStructured)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// The distributions every sweep-style experiment iterates.
+    pub fn all() -> Vec<Dist> {
+        vec![
+            Dist::Uniform,
+            Dist::DupHeavy(16),
+            Dist::Zipf,
+            Dist::AllEqual,
+            Dist::OrganPipe,
+            Dist::Presorted,
+            Dist::Reversed,
+            Dist::RunStructured(64),
+            Dist::AdversarialSkew,
+        ]
+    }
+}
+
+/// Raw (unsorted) keys for sort experiments.
+pub fn raw_keys(dist: Dist, n: usize, seed: u64) -> Vec<i64> {
+    let mut rng = Rng::new(seed);
+    match dist {
+        Dist::Uniform => (0..n).map(|_| rng.range(0, 1 << 40)).collect(),
+        Dist::DupHeavy(k) => (0..n).map(|_| rng.range(0, k as i64)).collect(),
+        Dist::Zipf => (0..n).map(|_| rng.zipf(1 << 20) as i64).collect(),
+        Dist::AllEqual => vec![42; n],
+        Dist::OrganPipe => (0..n)
+            .map(|i| if i < n / 2 { i as i64 } else { (n - i) as i64 })
+            .collect(),
+        Dist::Presorted => (0..n as i64).collect(),
+        Dist::Reversed => (0..n as i64).rev().collect(),
+        Dist::RunStructured(r) => {
+            let r = (r as usize).max(1);
+            let run = (n / r).max(1);
+            let mut v = Vec::with_capacity(n);
+            while v.len() < n {
+                let len = run.min(n - v.len());
+                let base = rng.range(0, 1 << 30);
+                let mut runv: Vec<i64> = (0..len).map(|_| base + rng.range(0, 1 << 20)).collect();
+                runv.sort();
+                v.extend(runv);
+            }
+            v
+        }
+        Dist::AdversarialSkew => {
+            // Half huge-range sparse, half packed into one narrow band.
+            (0..n)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        rng.range(0, 1 << 40)
+                    } else {
+                        (1 << 39) + rng.range(0, 1000)
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// A sorted key sequence for merge experiments.
+pub fn sorted_keys(dist: Dist, n: usize, seed: u64) -> Vec<i64> {
+    let mut v = raw_keys(dist, n, seed);
+    v.sort();
+    v
+}
+
+/// The adversarial *pair* for the partition: all of `b` lands inside a
+/// single gap between two adjacent `a` elements (stresses (c)/(d)).
+pub fn adversarial_pair(n: usize, m: usize, seed: u64) -> (Vec<i64>, Vec<i64>) {
+    let mut rng = Rng::new(seed);
+    let a: Vec<i64> = (0..n as i64).map(|i| i * 1_000_000).collect();
+    let gap_lo = (n as i64 / 2) * 1_000_000 + 1;
+    let mut b: Vec<i64> = (0..m).map(|_| gap_lo + rng.range(0, 999_998)).collect();
+    b.sort();
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        for d in Dist::all() {
+            assert_eq!(raw_keys(d, 100, 7), raw_keys(d, 100, 7), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn sorted_is_sorted() {
+        for d in Dist::all() {
+            let v = sorted_keys(d, 500, 3);
+            assert!(v.windows(2).all(|w| w[0] <= w[1]), "{d:?}");
+            assert_eq!(v.len(), 500);
+        }
+    }
+
+    #[test]
+    fn dup_heavy_has_few_keys() {
+        let v = raw_keys(Dist::DupHeavy(4), 1000, 1);
+        let mut ks = v.clone();
+        ks.sort();
+        ks.dedup();
+        assert!(ks.len() <= 4);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for d in Dist::all() {
+            assert_eq!(Dist::parse(&d.name()), Some(d), "{d:?}");
+        }
+        assert_eq!(Dist::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn adversarial_pair_is_contained() {
+        let (a, b) = adversarial_pair(100, 57, 9);
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+        let lo = a[50];
+        let hi = a[51];
+        assert!(b.iter().all(|&x| lo < x && x < hi));
+    }
+
+    #[test]
+    fn run_structured_has_runs() {
+        let v = raw_keys(Dist::RunStructured(10), 1000, 2);
+        let run = 100;
+        for c in v.chunks(run) {
+            assert!(c.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation and stability observation (S15).
+
+pub mod gen;
+pub mod stability;
+
+pub use gen::{adversarial_pair, raw_keys, sorted_keys, Dist};
+pub use stability::{
+    assert_stable_merge, check_stable_merge, check_stable_sort, tag_a, tag_b, B_TAG_BASE,
+};

@@ -1,0 +1,121 @@
+//! Stability observation: tag conventions and checkers.
+//!
+//! Convention: A-records carry tags `0..n`, B-records `B_TAG_BASE..`.
+//! A *stable merge* (the paper's definition) must produce, within every
+//! run of equal keys: all A tags (strictly increasing) followed by all
+//! B tags (strictly increasing). A *stable sort* must keep tags of
+//! equal keys strictly increasing.
+
+use crate::core::record::Record;
+
+/// Default tag base for B-side records.
+pub const B_TAG_BASE: u64 = 1_000_000;
+
+/// Check the stable-merge contract; returns the first violation.
+pub fn check_stable_merge(out: &[Record], b_base: u64) -> Result<(), String> {
+    let mut i = 0;
+    while i < out.len() {
+        let mut j = i;
+        while j < out.len() && out[j].key == out[i].key {
+            j += 1;
+        }
+        let seg = &out[i..j];
+        // Split point: A tags then B tags.
+        let split = seg.iter().position(|r| r.tag >= b_base).unwrap_or(seg.len());
+        for (k, r) in seg.iter().enumerate() {
+            let is_b = r.tag >= b_base;
+            if (k < split) == is_b {
+                return Err(format!(
+                    "key {}: A/B interleaving at offset {} (tags {:?})",
+                    out[i].key,
+                    i + k,
+                    seg.iter().map(|r| r.tag).collect::<Vec<_>>()
+                ));
+            }
+        }
+        let incr = |s: &[Record]| s.windows(2).all(|w| w[0].tag < w[1].tag);
+        if !incr(&seg[..split]) || !incr(&seg[split..]) {
+            return Err(format!(
+                "key {}: input order not preserved (tags {:?})",
+                out[i].key,
+                seg.iter().map(|r| r.tag).collect::<Vec<_>>()
+            ));
+        }
+        i = j;
+    }
+    Ok(())
+}
+
+/// Panic on a stable-merge contract violation.
+pub fn assert_stable_merge(out: &[Record], b_base: u64) {
+    if let Err(e) = check_stable_merge(out, b_base) {
+        panic!("stability violated: {e}");
+    }
+}
+
+/// Check the stable-sort contract: equal keys keep increasing tags.
+pub fn check_stable_sort(out: &[Record]) -> Result<(), String> {
+    for (i, w) in out.windows(2).enumerate() {
+        if w[0].key > w[1].key {
+            return Err(format!("not sorted at {i}: {} > {}", w[0].key, w[1].key));
+        }
+        if w[0].key == w[1].key && w[0].tag >= w[1].tag {
+            return Err(format!(
+                "instability at {i}: key {} tags {} !< {}",
+                w[0].key, w[0].tag, w[1].tag
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Tag a sorted key sequence as A-side records.
+pub fn tag_a(keys: &[i64]) -> Vec<Record> {
+    keys.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect()
+}
+
+/// Tag a sorted key sequence as B-side records.
+pub fn tag_b(keys: &[i64]) -> Vec<Record> {
+    keys.iter()
+        .enumerate()
+        .map(|(i, &k)| Record::new(k, B_TAG_BASE + i as u64))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_stable() {
+        let out = vec![
+            Record::new(1, 0),
+            Record::new(2, 1),
+            Record::new(2, B_TAG_BASE),
+            Record::new(3, B_TAG_BASE + 1),
+        ];
+        assert!(check_stable_merge(&out, B_TAG_BASE).is_ok());
+    }
+
+    #[test]
+    fn rejects_b_before_a() {
+        let out = vec![Record::new(2, B_TAG_BASE), Record::new(2, 0)];
+        assert!(check_stable_merge(&out, B_TAG_BASE).is_err());
+    }
+
+    #[test]
+    fn rejects_reordered_a() {
+        let out = vec![Record::new(2, 1), Record::new(2, 0)];
+        assert!(check_stable_merge(&out, B_TAG_BASE).is_err());
+    }
+
+    #[test]
+    fn sort_checker() {
+        let ok = vec![Record::new(1, 5), Record::new(1, 9), Record::new(2, 0)];
+        assert!(check_stable_sort(&ok).is_ok());
+        let bad = vec![Record::new(1, 9), Record::new(1, 5)];
+        assert!(check_stable_sort(&bad).is_err());
+        let unsorted = vec![Record::new(2, 0), Record::new(1, 1)];
+        assert!(check_stable_sort(&unsorted).is_err());
+    }
+}

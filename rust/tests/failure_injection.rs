@@ -1,0 +1,158 @@
+//! Failure injection: the system must *detect* bad inputs, bad
+//! manifests, and (for the PRAM auditor) actually catch planted
+//! violations — a checker that never fires is no checker.
+
+use std::path::Path;
+use traff_merge::pram::{Memory, Pram, Variant};
+use traff_merge::runtime::Manifest;
+use traff_merge::testing::qcheck;
+use traff_merge::util::Json;
+use traff_merge::workload::check_stable_merge;
+use traff_merge::core::Record;
+
+// ---------- PRAM auditor must catch planted conflicts ----------------
+
+#[test]
+fn auditor_catches_planted_concurrent_read() {
+    let mut pram = Pram::new(4, 16, Variant::Erew);
+    let conflicts = pram.step_all(|pe, mem| {
+        let _ = mem.read(pe, 3); // everyone reads cell 3
+    });
+    assert_eq!(conflicts.len(), 1);
+    assert_eq!(conflicts[0].readers.len(), 4);
+}
+
+#[test]
+fn auditor_catches_planted_write_write() {
+    let mut pram = Pram::new(2, 8, Variant::Crew);
+    let conflicts = pram.step_all(|pe, mem| mem.write(pe, 0, pe as i64));
+    assert_eq!(conflicts.len(), 1);
+    assert_eq!(conflicts[0].writers, vec![0, 1]);
+}
+
+#[test]
+fn auditor_catches_read_write_race_crew() {
+    let mut pram = Pram::new(2, 8, Variant::Crew);
+    let conflicts = pram.step_all(|pe, mem| {
+        if pe == 0 {
+            mem.write(pe, 5, 1);
+        } else {
+            let _ = mem.read(pe, 5);
+        }
+    });
+    assert_eq!(conflicts.len(), 1);
+}
+
+#[test]
+fn auditing_can_be_disabled_for_fast_runs() {
+    let mut mem = Memory::new(4);
+    mem.set_auditing(false);
+    mem.read(0, 1);
+    mem.read(1, 1);
+    assert!(mem.end_step(0, Variant::Erew).is_empty());
+}
+
+// ---------- stability checker must catch planted violations ----------
+
+#[test]
+fn stability_checker_catches_planted_swap() {
+    // A correct-keys output with two B-tags before an A-tag.
+    let out = vec![
+        Record::new(1, 0),
+        Record::new(2, 1_000_000),
+        Record::new(2, 3), // A record after B record with equal key
+    ];
+    assert!(check_stable_merge(&out, 1_000_000).is_err());
+}
+
+#[test]
+fn stability_checker_catches_reordered_input() {
+    let out = vec![Record::new(2, 5), Record::new(2, 4)];
+    assert!(check_stable_merge(&out, 1_000_000).is_err());
+}
+
+// ---------- manifest / JSON robustness -------------------------------
+
+#[test]
+fn manifest_rejects_truncated_json() {
+    let bad = r#"{"merge_b1024": {"file": "x", "inputs": ["#;
+    assert!(Manifest::parse(bad, Path::new("/x")).is_err());
+}
+
+#[test]
+fn manifest_rejects_missing_fields() {
+    for bad in [
+        r#"{"a": {"inputs": [], "outputs": []}}"#,                     // no file
+        r#"{"a": {"file": "f", "outputs": []}}"#,                      // no inputs
+        r#"{"a": {"file": "f", "inputs": [{"shape": [1]}], "outputs": []}}"#, // no dtype
+    ] {
+        assert!(Manifest::parse(bad, Path::new("/x")).is_err(), "{bad}");
+    }
+}
+
+#[test]
+fn manifest_load_reports_missing_directory() {
+    let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    // Fuzz the JSON parser with random byte soup and random truncations
+    // of valid documents: must return Err or Ok, never panic.
+    qcheck("json fuzz", 500, |g| {
+        let len = g.usize_in(0..200);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" {}[]\",:0123456789truefalsenul\\."[g.usize_in(0..31)])
+            .collect();
+        let s = String::from_utf8_lossy(&bytes).to_string();
+        let _ = Json::parse(&s); // outcome irrelevant; no panic allowed
+        let valid = r#"{"a": [1, 2.5, "x"], "b": {"c": null}}"#;
+        let cut = g.usize_in(0..valid.len());
+        let _ = Json::parse(&valid[..cut]);
+        Ok(())
+    });
+}
+
+// ---------- API misuse is rejected loudly -----------------------------
+
+#[test]
+#[should_panic(expected = "output length mismatch")]
+fn merge_rejects_wrong_output_length() {
+    let mut out = vec![0i64; 3];
+    traff_merge::core::parallel_merge(&[1, 2], &[3, 4], &mut out, 2);
+}
+
+#[test]
+#[should_panic(expected = "p must be positive")]
+fn merge_rejects_zero_p() {
+    let mut out = vec![0i64; 4];
+    traff_merge::core::parallel_merge(&[1, 2], &[3, 4], &mut out, 0);
+}
+
+#[test]
+fn cli_rejects_malformed_input() {
+    use traff_merge::cli::Args;
+    let a = Args::parse(["merge".into(), "--n".into(), "NaN".into()]).unwrap();
+    assert!(a.get_usize("n", 0).is_err());
+    assert!(Args::parse(["x".into(), "--".into()]).is_err());
+}
+
+// ---------- degenerate-but-legal inputs stay defined ------------------
+
+#[test]
+fn extreme_p_values_are_defined() {
+    qcheck("extreme p", 100, |g| {
+        let a = g.sorted_vec_i64(0..50, -5..5);
+        let b = g.sorted_vec_i64(0..50, -5..5);
+        let p = *g.choose(&[1usize, 2, 63, 64, 65, 255, 1024]);
+        let mut out = vec![0i64; a.len() + b.len()];
+        traff_merge::core::parallel_merge(&a, &b, &mut out, p);
+        let mut want = [a, b].concat();
+        want.sort();
+        if out != want {
+            return Err(format!("p={p} wrong"));
+        }
+        Ok(())
+    });
+}

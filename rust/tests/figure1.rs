@@ -1,0 +1,105 @@
+//! E1 — the paper's Figure 1 worked example, verified end to end
+//! through the public API (partition values, the ten subproblems, the
+//! merged output, PRAM conflict-freedom, and stability tagging).
+
+use traff_merge::core::{parallel_merge, Case, Partition, Record, Side};
+use traff_merge::pram::{pram_merge, Variant};
+use traff_merge::workload::{assert_stable_merge, tag_a, tag_b, B_TAG_BASE};
+
+fn fig1() -> (Vec<i64>, Vec<i64>) {
+    (
+        vec![0, 0, 1, 1, 1, 2, 2, 2, 4, 5, 5, 5, 5, 5, 6, 6, 7, 7],
+        vec![1, 1, 3, 3, 3, 3, 4, 5, 6, 6, 6, 6, 7, 7, 7],
+    )
+}
+
+#[test]
+fn partition_matches_figure() {
+    let (a, b) = fig1();
+    let part = Partition::compute(&a, &b, 5);
+    assert_eq!(part.x, vec![0, 4, 8, 12, 15, 18]);
+    assert_eq!(part.y, vec![0, 3, 6, 9, 12, 15]);
+    assert_eq!(part.xbar, vec![0, 0, 6, 7, 8, 15]);
+    assert_eq!(part.ybar, vec![5, 8, 9, 16, 18, 18]);
+}
+
+#[test]
+fn the_ten_subproblems() {
+    let (a, b) = fig1();
+    let part = Partition::compute(&a, &b, 5);
+    let mut tasks = part.tasks();
+    tasks.sort_by_key(|t| t.c_off);
+    // The caption, row by row (ranges half-open):
+    let expect: Vec<(Side, usize, usize, usize, usize, usize)> = vec![
+        // (side, a.start, a.end, b.start, b.end, c_off)
+        (Side::A, 0, 4, 0, 0, 0),    // A[0..3]  -> C[0..3]
+        (Side::A, 4, 5, 0, 0, 4),    // A[4]     -> C[4]
+        (Side::B, 5, 8, 0, 3, 5),    // B[0..2] + A[5..7]  -> C[5..10]
+        (Side::B, 8, 8, 3, 6, 11),   // B[3..5]  -> C[11..13]
+        (Side::A, 8, 9, 6, 6, 14),   // A[8]     -> C[14]
+        (Side::B, 9, 12, 6, 7, 15),  // B[6] + A[9..11]    -> C[15..18]
+        (Side::A, 12, 15, 7, 8, 19), // A[12..14] + B[7]   -> C[19..22]
+        (Side::A, 15, 16, 8, 9, 23), // A[15] + B[8]       -> C[23..24]
+        (Side::B, 16, 18, 9, 12, 25),// B[9..11] + A[16,17]-> C[25..29]
+        (Side::B, 18, 18, 12, 15, 30),// B[12..14]          -> C[30..32]
+    ];
+    assert_eq!(tasks.len(), expect.len());
+    for (t, e) in tasks.iter().zip(&expect) {
+        assert_eq!(t.side, e.0, "{t:?}");
+        assert_eq!((t.a.start, t.a.end), (e.1, e.2), "{t:?}");
+        assert_eq!((t.b.start, t.b.end), (e.3, e.4), "{t:?}");
+        assert_eq!(t.c_off, e.5, "{t:?}");
+    }
+}
+
+#[test]
+fn caption_case_labels() {
+    let (a, b) = fig1();
+    let part = Partition::compute(&a, &b, 5);
+    // "x_0 (a), x_1 and x_2 (e), x_3 (b), x_4 (c)"
+    assert_eq!(part.a_side_task(0).unwrap().case, Case::CopyA);
+    assert_eq!(part.a_side_task(1).unwrap().case, Case::StartAligned);
+    assert_eq!(part.a_side_task(2).unwrap().case, Case::StartAligned);
+    assert_eq!(part.a_side_task(3).unwrap().case, Case::SameBlock);
+    assert_eq!(part.a_side_task(4).unwrap().case, Case::CrossBlock);
+    // "ȳ_0 and ȳ_3 from B illustrate case (d)"
+    assert_eq!(part.b_side_task(0).unwrap().case, Case::CrossBlockAligned);
+    assert_eq!(part.b_side_task(3).unwrap().case, Case::CrossBlockAligned);
+}
+
+#[test]
+fn merged_output_and_stability() {
+    let (a, b) = fig1();
+    let ta = tag_a(&a);
+    let tb = tag_b(&b);
+    let mut out = vec![Record::new(0, 0); a.len() + b.len()];
+    parallel_merge(&ta, &tb, &mut out, 5);
+    let keys: Vec<i64> = out.iter().map(|r| r.key).collect();
+    let mut expect = [a.clone(), b.clone()].concat();
+    expect.sort();
+    assert_eq!(keys, expect);
+    assert_stable_merge(&out, B_TAG_BASE);
+}
+
+#[test]
+fn figure1_erew_single_sync() {
+    let (a, b) = fig1();
+    let (c, rep) = pram_merge(&a, &b, 5, Variant::Erew);
+    let mut expect = [a, b].concat();
+    expect.sort();
+    assert_eq!(c, expect);
+    assert!(rep.report.conflict_free());
+    assert_eq!(rep.tasks, 10);
+}
+
+#[test]
+fn all_p_values_agree_on_figure1() {
+    let (a, b) = fig1();
+    let mut expect = [a.clone(), b.clone()].concat();
+    expect.sort();
+    for p in 1..=40 {
+        let mut out = vec![0i64; 33];
+        parallel_merge(&a, &b, &mut out, p);
+        assert_eq!(out, expect, "p={p}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Cross-module integration: algorithms × substrates × service.
+
+use traff_merge::baseline;
+use traff_merge::bsp::{bsp_merge_baseline, bsp_merge_simplified, BspParams};
+use traff_merge::coordinator::{Config, Engine, MergeService};
+use traff_merge::core::{parallel_merge, parallel_merge_sort, Record};
+use traff_merge::pram::{pram_merge, Variant};
+use traff_merge::runtime::KeyedBlock;
+use traff_merge::util::Rng;
+use traff_merge::workload::{self, Dist};
+
+/// All four merge implementations agree on content across every
+/// workload distribution.
+#[test]
+fn all_merges_agree_across_distributions() {
+    for dist in Dist::all() {
+        let a = workload::sorted_keys(dist, 3000, 11);
+        let b = workload::sorted_keys(dist, 2500, 12);
+        let mut expect = [a.clone(), b.clone()].concat();
+        expect.sort();
+        for p in [1usize, 3, 8] {
+            let mut c1 = vec![0i64; expect.len()];
+            parallel_merge(&a, &b, &mut c1, p);
+            assert_eq!(c1, expect, "traff {dist:?} p={p}");
+            let mut c2 = vec![0i64; expect.len()];
+            baseline::distinguished_merge(&a, &b, &mut c2, p);
+            assert_eq!(c2, expect, "distinguished {dist:?} p={p}");
+            let mut c3 = vec![0i64; expect.len()];
+            baseline::merge_path_merge(&a, &b, &mut c3, p);
+            assert_eq!(c3, expect, "mergepath {dist:?} p={p}");
+            assert_eq!(baseline::seq_merge(&a, &b), expect, "seq {dist:?}");
+        }
+    }
+}
+
+/// Sort agrees with std stable sort across distributions.
+#[test]
+fn sort_across_distributions() {
+    for dist in Dist::all() {
+        let mut v = workload::raw_keys(dist, 20_000, 5);
+        let mut expect = v.clone();
+        expect.sort();
+        parallel_merge_sort(&mut v, 8);
+        assert_eq!(v, expect, "{dist:?}");
+    }
+}
+
+/// PRAM EREW legality across distributions and machine sizes (E6).
+#[test]
+fn erew_conflict_free_across_workloads() {
+    for dist in [Dist::Uniform, Dist::AllEqual, Dist::DupHeavy(3), Dist::AdversarialSkew] {
+        let a = workload::sorted_keys(dist, 600, 21);
+        let b = workload::sorted_keys(dist, 500, 22);
+        for p in [2usize, 5, 16] {
+            let (c, rep) = pram_merge(&a, &b, p, Variant::Erew);
+            let mut expect = [a.clone(), b.clone()].concat();
+            expect.sort();
+            assert_eq!(c, expect, "{dist:?} p={p}");
+            assert!(
+                rep.report.conflict_free(),
+                "{dist:?} p={p}: {} conflicts, first: {:?}",
+                rep.report.conflicts.len(),
+                rep.report.conflicts.first()
+            );
+        }
+    }
+}
+
+/// The PRAM step count follows Theorem 1's shape: scaling p at fixed n
+/// reduces merge-phase steps proportionally (E6).
+#[test]
+fn pram_steps_scale_down_with_p() {
+    let a = workload::sorted_keys(Dist::Uniform, 4096, 31);
+    let b = workload::sorted_keys(Dist::Uniform, 4096, 32);
+    let (_, rep2) = pram_merge(&a, &b, 2, Variant::Erew);
+    let (_, rep16) = pram_merge(&a, &b, 16, Variant::Erew);
+    let merge2 = rep2.phase_steps[4] as f64;
+    let merge16 = rep16.phase_steps[4] as f64;
+    // 8x more PEs: merge phase must shrink at least 4x (2x slack for
+    // the paper's own factor-2 imbalance).
+    assert!(
+        merge2 / merge16 >= 4.0,
+        "merge steps p=2: {merge2}, p=16: {merge16} (ratio {:.2})",
+        merge2 / merge16
+    );
+}
+
+/// BSP: the §3 claim quantified across machine sizes (E8).
+#[test]
+fn bsp_round_savings() {
+    let a = workload::sorted_keys(Dist::Uniform, 5000, 41);
+    let b = workload::sorted_keys(Dist::Uniform, 5000, 42);
+    for p in [2usize, 8, 32] {
+        let params = BspParams { p, g: 4.0, l: 10_000.0 };
+        let simp = bsp_merge_simplified(&a, &b, params);
+        let base = bsp_merge_baseline(&a, &b, params);
+        assert_eq!(base.cost.supersteps - simp.cost.supersteps, 1, "p={p}");
+        assert!(simp.cost.cost < base.cost.cost, "p={p}");
+        let mut expect = [a.clone(), b.clone()].concat();
+        expect.sort();
+        assert_eq!(simp.output, expect);
+        assert_eq!(base.output, expect);
+    }
+}
+
+/// Coordinator service: rust engine handles concurrent jobs from the
+/// pool with correct, stable results.
+#[test]
+fn service_concurrent_jobs() {
+    let svc =
+        MergeService::new(Config { threads: 4, engine: Engine::Rust, leaf_block: 1024 }).unwrap();
+    let mut rng = Rng::new(77);
+    let blocks: Vec<KeyedBlock> = (0..8)
+        .map(|_| {
+            let n = 5000 + rng.index(5000);
+            KeyedBlock {
+                keys: (0..n).map(|_| rng.range(0, 500) as f32).collect(),
+                vals: (0..n as i32).collect(),
+            }
+        })
+        .collect();
+    let handles: Vec<_> = blocks.iter().map(|b| svc.submit_sort(b.clone())).collect();
+    for (h, input) in handles.into_iter().zip(&blocks) {
+        let out = h.recv().unwrap().unwrap();
+        assert_eq!(out.len(), input.len());
+        assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+        for i in 1..out.len() {
+            if out.keys[i - 1] == out.keys[i] {
+                assert!(out.vals[i - 1] < out.vals[i], "service sort instability");
+            }
+        }
+    }
+    let (jobs, _, _, _) = svc.stats.snapshot();
+    assert_eq!(jobs, 8);
+}
+
+/// Multiway k-way merge composes with the workload generators.
+#[test]
+fn multiway_on_run_structured_workload() {
+    let keys = workload::raw_keys(Dist::RunStructured(16), 16_000, 9);
+    let run = 1000;
+    let runs: Vec<&[i64]> = keys.chunks(run).collect();
+    let merged = traff_merge::core::multiway::parallel_kway_merge(&runs, 8);
+    let mut expect = keys.clone();
+    expect.sort();
+    assert_eq!(merged, expect);
+    let lt = traff_merge::core::multiway::loser_tree_merge(&runs);
+    assert_eq!(lt, expect);
+}
+
+/// Instrumented merge exposes the case census used by E9.
+#[test]
+fn case_census_sane() {
+    use std::collections::HashMap;
+    let a = workload::sorted_keys(Dist::Uniform, 50_000, 1);
+    let b = workload::sorted_keys(Dist::Uniform, 50_000, 2);
+    let mut out = vec![0i64; 100_000];
+    let (part, tasks) = traff_merge::core::parallel_merge_instrumented(&a, &b, &mut out, 16);
+    let mut census: HashMap<_, usize> = HashMap::new();
+    for t in &tasks {
+        *census.entry(t.case).or_default() += 1;
+    }
+    assert!(tasks.len() <= 32);
+    assert!(out.windows(2).all(|w| w[0] <= w[1]));
+    // Balance: every task within the paper's 2x bound.
+    let cap = 2 * part.pa.big.max(part.pb.big);
+    assert!(tasks.iter().all(|t| t.len() <= cap));
+}
+
+/// Stability tags survive a full sort+merge pipeline (sort two halves,
+/// then merge them) — the §3 composition.
+#[test]
+fn sort_then_merge_pipeline_stable() {
+    let mut rng = Rng::new(3);
+    let mut a: Vec<Record> =
+        (0..4000).map(|i| Record::new(rng.range(0, 40), i as u64)).collect();
+    let mut b: Vec<Record> = (0..3000)
+        .map(|i| Record::new(rng.range(0, 40), workload::B_TAG_BASE + i as u64))
+        .collect();
+    parallel_merge_sort(&mut a, 8);
+    parallel_merge_sort(&mut b, 8);
+    let mut out = vec![Record::new(0, 0); 7000];
+    parallel_merge(&a, &b, &mut out, 8);
+    assert!(out.windows(2).all(|w| w[0].key <= w[1].key));
+    traff_merge::workload::assert_stable_merge(&out, workload::B_TAG_BASE);
+}

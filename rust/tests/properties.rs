@@ -1,0 +1,189 @@
+//! E2 / E4 / E9 — property tests over the core invariants, via the
+//! in-crate `qcheck` framework (proptest substitute).
+
+use traff_merge::core::{parallel_merge, Blocks, Partition, Record};
+use traff_merge::testing::qcheck;
+use traff_merge::workload::{check_stable_merge, tag_a, tag_b, B_TAG_BASE};
+use traff_merge::{prop_assert, prop_assert_eq};
+
+/// E2: for arbitrary sorted inputs and p, the five cases produce tasks
+/// that are disjoint, consume both inputs in order, tile C exactly,
+/// and respect the 2*ceil(n/p) size bound.
+#[test]
+fn tasks_partition_everything() {
+    qcheck("tasks partition", 500, |g| {
+        let a = g.sorted_vec_i64(0..400, -40..40);
+        let b = g.sorted_vec_i64(0..400, -40..40);
+        let p = g.usize_in(1..24);
+        let part = Partition::compute(&a, &b, p);
+        let tasks = part.tasks();
+        part.validate_tasks(&tasks).map_err(|e| format!("n={} m={} p={p}: {e}", a.len(), b.len()))
+    });
+}
+
+/// E2: every task count is at most 2p and each side of a task stays
+/// within one block's worth of elements + the balance bound.
+#[test]
+fn at_most_2p_tasks() {
+    qcheck("<= 2p tasks", 300, |g| {
+        let a = g.sorted_vec_i64(0..600, 0..100);
+        let b = g.sorted_vec_i64(0..600, 0..100);
+        let p = g.usize_in(1..17);
+        let tasks = Partition::compute(&a, &b, p).tasks();
+        prop_assert!(tasks.len() <= 2 * p, "{} tasks > 2p={}", tasks.len(), 2 * p);
+        Ok(())
+    });
+}
+
+/// The merged output equals the sorted concatenation for every
+/// distribution shape the generator can produce.
+#[test]
+fn merge_equals_sorted_concat() {
+    qcheck("merge == sort(a++b)", 400, |g| {
+        let a = g.sorted_vec_i64(0..500, -30..30);
+        let b = g.sorted_vec_i64(0..500, -30..30);
+        let p = g.usize_in(1..33);
+        let mut out = vec![0i64; a.len() + b.len()];
+        parallel_merge(&a, &b, &mut out, p);
+        let mut expect = [a, b].concat();
+        expect.sort();
+        prop_assert_eq!(out, expect);
+        Ok(())
+    });
+}
+
+/// E4: stability under duplicate-heavy inputs, arbitrary p.
+#[test]
+fn merge_stability_property() {
+    qcheck("stable merge", 300, |g| {
+        let ka = g.sorted_vec_i64(1..300, 0..6);
+        let kb = g.sorted_vec_i64(1..300, 0..6);
+        let p = g.usize_in(1..17);
+        let a = tag_a(&ka);
+        let b = tag_b(&kb);
+        let mut out = vec![Record::new(0, 0); a.len() + b.len()];
+        parallel_merge(&a, &b, &mut out, p);
+        check_stable_merge(&out, B_TAG_BASE).map_err(|e| format!("p={p}: {e}"))
+    });
+}
+
+/// The paper's §2 rank identity: output position of A[i] is
+/// i + rank_low(A[i], B); of B[j] is j + rank_high(B[j], A) — and those
+/// positions form a permutation.
+#[test]
+fn rank_identity_is_permutation() {
+    use traff_merge::core::ranks::{rank_high, rank_low};
+    qcheck("rank identity", 300, |g| {
+        let a = g.sorted_vec_i64(0..200, -20..20);
+        let b = g.sorted_vec_i64(0..200, -20..20);
+        let mut pos: Vec<usize> = a.iter().enumerate().map(|(i, x)| i + rank_low(x, &b)).collect();
+        pos.extend(b.iter().enumerate().map(|(j, x)| j + rank_high(x, &a)));
+        pos.sort();
+        prop_assert_eq!(pos, (0..a.len() + b.len()).collect::<Vec<_>>());
+        Ok(())
+    });
+}
+
+/// Observation 1 ("cross ranks do not cross"), tested directly.
+#[test]
+fn observation_one() {
+    use traff_merge::core::ranks::{rank_high, rank_low};
+    qcheck("observation 1", 300, |g| {
+        let a = g.sorted_vec_i64(1..200, -15..15);
+        let b = g.sorted_vec_i64(1..200, -15..15);
+        let i = g.usize_in(0..a.len());
+        let j = rank_low(&a[i], &b);
+        for jp in 0..j {
+            prop_assert!(
+                rank_high(&b[jp], &a) <= i,
+                "j'={jp} < j={j} but rank_high > i={i}"
+            );
+        }
+        if j < b.len() {
+            prop_assert!(rank_high(&b[j], &a) > i, "i'={} !> i={i}", rank_high(&b[j], &a));
+        }
+        Ok(())
+    });
+}
+
+/// E9: block partition arithmetic — starts invert block_of, sizes
+/// differ by at most one, for arbitrary (len, p).
+#[test]
+fn block_arithmetic_total() {
+    qcheck("blocks", 500, |g| {
+        let len = g.usize_in(0..5000);
+        let p = g.usize_in(1..65);
+        let blk = Blocks::new(len, p);
+        prop_assert_eq!(blk.start(0), 0usize);
+        prop_assert_eq!(blk.start(p), len);
+        for i in 0..p {
+            let s = blk.start(i);
+            let e = blk.start(i + 1);
+            prop_assert!(e >= s, "negative block");
+            prop_assert!(e - s <= blk.big.max(1), "block too big");
+        }
+        if len > 0 {
+            let k = g.usize_in(0..len);
+            let i = blk.block_of(k);
+            prop_assert!(blk.start(i) <= k && k < blk.start(i + 1), "block_of wrong");
+        }
+        Ok(())
+    });
+}
+
+/// E9: the task size bound 2*ceil(n/p) holds on the adversarial-skew
+/// pair specifically (the partition's stress case).
+#[test]
+fn balance_bound_adversarial() {
+    qcheck("balance adversarial", 100, |g| {
+        let n = g.usize_in(10..2000);
+        let m = g.usize_in(10..2000);
+        let p = g.usize_in(1..33);
+        let (a, b) = traff_merge::workload::adversarial_pair(n, m, g.u64());
+        let part = Partition::compute(&a, &b, p);
+        let tasks = part.tasks();
+        let cap = 2 * part.pa.big.max(part.pb.big);
+        for t in &tasks {
+            prop_assert!(t.len() <= cap.max(2), "task {} > {cap} (n={n} m={m} p={p})", t.len());
+        }
+        Ok(())
+    });
+}
+
+/// Baselines agree with the reference on content (not stability).
+#[test]
+fn baselines_agree_on_content() {
+    qcheck("baselines", 200, |g| {
+        let a = g.sorted_vec_i64(0..400, 0..50);
+        let b = g.sorted_vec_i64(0..400, 0..50);
+        let p = g.usize_in(1..13);
+        let mut expect = [a.clone(), b.clone()].concat();
+        expect.sort();
+        let mut out1 = vec![0i64; expect.len()];
+        traff_merge::baseline::distinguished_merge(&a, &b, &mut out1, p);
+        prop_assert_eq!(out1, expect);
+        let mut out2 = vec![0i64; expect.len()];
+        traff_merge::baseline::merge_path_merge(&a, &b, &mut out2, p);
+        prop_assert_eq!(out2, expect);
+        Ok(())
+    });
+}
+
+/// Parallel merge sort is a stable sort for arbitrary inputs.
+#[test]
+fn sort_stability_property() {
+    qcheck("stable sort", 150, |g| {
+        let n = g.usize_in(0..1500);
+        let p = g.usize_in(1..17);
+        let mut v: Vec<Record> = (0..n)
+            .map(|i| Record::new(g.i64_in(0..20), i as u64))
+            .collect();
+        let mut expect = v.clone();
+        expect.sort_by_key(|r| r.key);
+        traff_merge::core::parallel_merge_sort(&mut v, p);
+        let got: Vec<(i64, u64)> = v.iter().map(|r| (r.key, r.tag)).collect();
+        let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
+        prop_assert_eq!(got, want);
+        Ok(())
+    });
+}

@@ -1,0 +1,201 @@
+//! E11 (correctness half) — the PJRT runtime path: load the AOT
+//! artifacts, execute the L1 Pallas kernels from rust, and verify
+//! against the pure-rust reference implementations.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so plain
+//! `cargo test` works on a fresh checkout).
+
+use traff_merge::coordinator::{to_recs, Config, Engine, MergeService};
+use traff_merge::core::record::F32Key;
+use traff_merge::runtime::{KeyedBlock, XlaCrossrank, XlaMerger, XlaRuntime, XlaSorter};
+use traff_merge::util::Rng;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = XlaRuntime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(XlaRuntime::load_dir(&dir).expect("artifacts load"))
+}
+
+fn sorted_block(rng: &mut Rng, n: usize, key_hi: i64, base: i32) -> KeyedBlock {
+    let mut keys: Vec<f32> = (0..n).map(|_| rng.range(0, key_hi) as f32).collect();
+    keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    KeyedBlock { keys, vals: (0..n as i32).map(|i| base + i).collect() }
+}
+
+#[test]
+fn artifacts_load_and_list() {
+    let Some(rt) = runtime() else { return };
+    let names = rt.names();
+    assert!(names.iter().any(|n| n.starts_with("merge_b")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("sort_n")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("crossrank_")), "{names:?}");
+}
+
+#[test]
+fn xla_merge_matches_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let merger = XlaMerger::new(&rt).unwrap();
+    let mut rng = Rng::new(101);
+    for _ in 0..6 {
+        let n = 1 + rng.index(1024);
+        let m = 1 + rng.index(1024);
+        let a = sorted_block(&mut rng, n, 50, 0);
+        let b = sorted_block(&mut rng, m, 50, 100_000);
+        let got = merger.merge(&a, &b).unwrap();
+        // Rust reference with the same stability convention.
+        let ra = to_recs(&a);
+        let rb = to_recs(&b);
+        let mut expect = vec![traff_merge::coordinator::KRec { key: F32Key(0.0), val: 0 }; n + m];
+        traff_merge::core::seqmerge::merge_into(&ra, &rb, &mut expect);
+        assert_eq!(got.keys, expect.iter().map(|r| r.key.0).collect::<Vec<_>>());
+        assert_eq!(
+            got.vals,
+            expect.iter().map(|r| r.val).collect::<Vec<_>>(),
+            "stability mismatch (n={n} m={m})"
+        );
+    }
+}
+
+#[test]
+fn xla_merge_duplicate_stability() {
+    let Some(rt) = runtime() else { return };
+    let merger = XlaMerger::new(&rt).unwrap();
+    // All-equal keys: A vals then B vals, verbatim.
+    let a = KeyedBlock { keys: vec![7.0; 100], vals: (0..100).collect() };
+    let b = KeyedBlock { keys: vec![7.0; 80], vals: (1000..1080).collect() };
+    let out = merger.merge(&a, &b).unwrap();
+    let expect: Vec<i32> = (0..100).chain(1000..1080).collect();
+    assert_eq!(out.vals, expect);
+}
+
+#[test]
+fn xla_sort_matches_stable_sort() {
+    let Some(rt) = runtime() else { return };
+    let sorter = XlaSorter::new(&rt).unwrap();
+    let mut rng = Rng::new(103);
+    for &n in &[1usize, 17, 500, 1024] {
+        let keys: Vec<f32> = (0..n).map(|_| rng.range(0, 30) as f32).collect();
+        let vals: Vec<i32> = (0..n as i32).collect();
+        let out = sorter.sort(&KeyedBlock { keys: keys.clone(), vals }).unwrap();
+        let mut expect: Vec<(F32Key, i32)> =
+            keys.iter().enumerate().map(|(i, &k)| (F32Key(k), i as i32)).collect();
+        expect.sort_by_key(|e| e.0); // std stable sort
+        assert_eq!(out.keys, expect.iter().map(|e| e.0 .0).collect::<Vec<_>>(), "n={n}");
+        assert_eq!(out.vals, expect.iter().map(|e| e.1).collect::<Vec<_>>(), "n={n} stability");
+    }
+}
+
+#[test]
+fn xla_crossrank_matches_rust_ranks() {
+    let Some(rt) = runtime() else { return };
+    let cr = XlaCrossrank::new(&rt).unwrap();
+    let n = cr.array_len();
+    let p = cr.pivot_count();
+    let mut rng = Rng::new(107);
+    let mut arr: Vec<f32> = (0..n).map(|_| rng.range(0, 10_000) as f32).collect();
+    arr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pivots: Vec<f32> = (0..p).map(|_| rng.range(-10, 10_010) as f32).collect();
+    let (lo, hi) = cr.crossrank(&arr, &pivots).unwrap();
+    let arr_k: Vec<F32Key> = arr.iter().map(|&k| F32Key(k)).collect();
+    for (i, &pv) in pivots.iter().enumerate() {
+        let expect_lo = traff_merge::core::ranks::rank_low(&F32Key(pv), &arr_k);
+        let expect_hi = traff_merge::core::ranks::rank_high(&F32Key(pv), &arr_k);
+        assert_eq!(lo[i] as usize, expect_lo, "pivot {i}");
+        assert_eq!(hi[i] as usize, expect_hi, "pivot {i}");
+    }
+}
+
+#[test]
+fn batched_merge_matches_per_pair() {
+    use traff_merge::runtime::XlaBatchMerger;
+    let Some(rt) = runtime() else { return };
+    let batcher = XlaBatchMerger::new(&rt).unwrap();
+    let merger = XlaMerger::new(&rt).unwrap();
+    let mut rng = Rng::new(211);
+    // 13 jobs (non-multiple of batch=8) with mixed sizes incl. tiny.
+    let jobs: Vec<_> = (0..13)
+        .map(|i| {
+            let n = 1 + rng.index(batcher.block);
+            let m = 1 + rng.index(batcher.block);
+            (
+                sorted_block(&mut rng, n, 40, 0),
+                sorted_block(&mut rng, m, 40, 10_000 + i),
+            )
+        })
+        .collect();
+    let batched = batcher.merge_many(&jobs).unwrap();
+    assert_eq!(batched.len(), jobs.len());
+    assert_eq!(batcher.calls.get(), 2, "13 jobs / batch 8 = 2 calls");
+    for ((a, b), got) in jobs.iter().zip(&batched) {
+        let expect = merger.merge(a, b).unwrap();
+        assert_eq!(got.keys, expect.keys);
+        assert_eq!(got.vals, expect.vals, "stability must survive batching");
+    }
+}
+
+#[test]
+fn service_merge_many_batches() {
+    let Some(_) = runtime() else { return };
+    let svc =
+        MergeService::new(Config { threads: 2, engine: Engine::Hybrid, leaf_block: 1024 }).unwrap();
+    let mut rng = Rng::new(213);
+    let jobs: Vec<_> = (0..20)
+        .map(|_| {
+            let n = 1 + rng.index(800);
+            let m = 1 + rng.index(800);
+            (
+                sorted_block(&mut rng, n, 99, 0),
+                sorted_block(&mut rng, m, 99, 50_000),
+            )
+        })
+        .collect();
+    let outs = svc.merge_many(&jobs).unwrap();
+    for ((a, b), out) in jobs.iter().zip(&outs) {
+        assert_eq!(out.len(), a.len() + b.len());
+        assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+    }
+    let (_, _, xla_calls, _) = svc.stats.snapshot();
+    assert!(xla_calls <= 4, "20 small jobs must batch into few calls, got {xla_calls}");
+
+    // Rust engine gives identical results.
+    let rsvc =
+        MergeService::new(Config { threads: 2, engine: Engine::Rust, leaf_block: 1024 }).unwrap();
+    let routs = rsvc.merge_many(&jobs).unwrap();
+    for (x, y) in outs.iter().zip(&routs) {
+        assert_eq!(x.keys, y.keys);
+        assert_eq!(x.vals, y.vals);
+    }
+}
+
+#[test]
+fn hybrid_service_end_to_end() {
+    let Some(_) = runtime() else { return };
+    let svc =
+        MergeService::new(Config { threads: 4, engine: Engine::Hybrid, leaf_block: 1024 }).unwrap();
+    let mut rng = Rng::new(109);
+    let n = 20_000;
+    let data = KeyedBlock {
+        keys: (0..n).map(|_| rng.range(0, 2_000) as f32).collect(),
+        vals: (0..n as i32).collect(),
+    };
+    let out = svc.sort(&data).unwrap();
+    assert_eq!(out.len(), n);
+    assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+    for i in 1..n {
+        if out.keys[i - 1] == out.keys[i] {
+            assert!(out.vals[i - 1] < out.vals[i], "hybrid sort instability at {i}");
+        }
+    }
+    let (_, _, xla_calls, _) = svc.stats.snapshot();
+    assert!(xla_calls > 0, "hybrid path must actually use the XLA executables");
+
+    // Hybrid merge too.
+    let a = sorted_block(&mut rng, 9000, 700, 0);
+    let b = sorted_block(&mut rng, 11_000, 700, 1 << 20);
+    let m = svc.merge(&a, &b).unwrap();
+    assert!(m.keys.windows(2).all(|w| w[0] <= w[1]));
+    assert_eq!(m.len(), 20_000);
+}
