@@ -9,7 +9,7 @@
 //!   A4. the two-sided task construction itself: paper's 2p tasks vs
 //!       merge-path's p tasks (partition-strategy ablation)
 
-use traff_merge::core::merge::{carve_output, partition_parallel, run_tasks_parallel};
+use traff_merge::core::merge::{carve_output, partition_parallel_with_cutoff, run_tasks_parallel};
 use traff_merge::core::seqmerge::merge_into;
 use traff_merge::core::Partition;
 use traff_merge::harness::{quick_mode, section, Bench};
@@ -28,7 +28,7 @@ fn main() {
         let r_inline =
             Bench::new("inline").run(|| Partition::compute(&a, &b, p));
         let r_thread =
-            Bench::new("threads").run(|| partition_parallel(&a, &b, p, 4));
+            Bench::new("threads").run(|| partition_parallel_with_cutoff(&a, &b, p, 4, 0));
         t.row(vec![
             p.to_string(),
             format!("{:.1} µs", r_inline.median() * 1e6),
@@ -36,18 +36,21 @@ fn main() {
         ]);
     }
     t.print();
-    println!("(the p<=64 crossover avoids spawn cost exactly where it hurts)");
+    println!(
+        "(measured crossover: p < {} stays inline — exec::tunables)",
+        traff_merge::exec::tunables().parallel_search_cutoff
+    );
 
     section("A2: task-to-thread assignment policy");
     let part = Partition::compute(&a, &b, 16);
     let tasks = part.tasks();
     let r_greedy = Bench::new("greedy").run(|| {
-        run_tasks_parallel(&a, &b, &mut out, &tasks, 4);
+        run_tasks_parallel(&a, &b, &mut out, &tasks, 4).expect("tasks tile");
     });
     // Naive: fixed two-tasks-per-group regardless of size.
     let (a_ref, b_ref): (&[i64], &[i64]) = (&a, &b);
     let r_naive = Bench::new("naive").run(|| {
-        let pairs = carve_output(&tasks, &mut out);
+        let pairs = carve_output(&tasks, &mut out).expect("tasks tile");
         let groups: Vec<Vec<_>> = {
             let mut gs = Vec::new();
             let mut it = pairs.into_iter().peekable();

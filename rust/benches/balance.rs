@@ -5,8 +5,10 @@
 //! compare with the merge-path family's perfect (±1) balance.
 
 use traff_merge::baseline::merge_path::merge_path_segment_sizes;
+use traff_merge::core::merge::{carve_output, chunk_tasks, run_tasks_parallel};
+use traff_merge::core::seqmerge::merge_into;
 use traff_merge::core::{Case, Partition};
-use traff_merge::harness::{quick_mode, section};
+use traff_merge::harness::{quick_mode, section, Bench};
 use traff_merge::metrics::Table;
 use traff_merge::workload::{adversarial_pair, sorted_keys, Dist};
 
@@ -83,4 +85,41 @@ fn main() {
         sizes.iter().min().unwrap(),
         sizes.iter().max().unwrap()
     );
+
+    section("E9e: merge phase — persistent executor vs per-call thread::scope");
+    {
+        let threads = traff_merge::util::num_cpus();
+        // out.len() must exceed the largest possible
+        // parallel_merge_cutoff (2^18) or run_tasks_parallel would
+        // silently take its sequential bail and the comparison would
+        // be meaningless.
+        let n = n.max(1 << 18);
+        let a = sorted_keys(Dist::Uniform, n, 40);
+        let b = sorted_keys(Dist::Uniform, n, 41);
+        let mut out = vec![0i64; 2 * n];
+        let part = Partition::compute(&a, &b, p);
+        let tasks = part.tasks();
+        let r_exec = Bench::new("exec").run(|| {
+            run_tasks_parallel(&a, &b, &mut out, &tasks, threads).expect("tasks tile");
+        });
+        let (ar, br): (&[i64], &[i64]) = (&a, &b);
+        let r_scoped = Bench::new("scoped").run(|| {
+            let pairs = carve_output(&tasks, &mut out).expect("tasks tile");
+            let groups = chunk_tasks(pairs, threads);
+            std::thread::scope(|s| {
+                for group in groups {
+                    s.spawn(move || {
+                        for (t, slice) in group {
+                            merge_into(&ar[t.a.clone()], &br[t.b.clone()], slice);
+                        }
+                    });
+                }
+            });
+        });
+        println!(
+            "same task set, same chunking: exec {:.2} ms | scoped spawn {:.2} ms",
+            r_exec.median() * 1e3,
+            r_scoped.median() * 1e3
+        );
+    }
 }

@@ -2,11 +2,110 @@
 //! buffers only. Throughput vs n and p across distributions, against
 //! std stable sort and our sequential merge sort.
 
+use traff_merge::core::merge::{carve_output, chunk_tasks};
 use traff_merge::core::parallel_merge_sort;
+use traff_merge::core::seqmerge::{merge_into, merge_sort};
 use traff_merge::core::sort::expected_rounds;
+use traff_merge::core::{Blocks, Case, MergeTask, Partition, Side};
 use traff_merge::harness::{quick_mode, section, Bench};
 use traff_merge::metrics::{melems_per_sec, Table};
 use traff_merge::workload::{raw_keys, Dist};
+
+/// The pre-executor implementation, preserved verbatim for the
+/// comparison: a fresh `std::thread::scope` fleet for phase 1 and for
+/// every merge round (spawn/join cost on every call).
+fn scoped_sort(data: &mut [i64], p: usize) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    if p == 1 || n < 2 * p {
+        let mut scratch = data.to_vec();
+        merge_sort(data, &mut scratch);
+        return;
+    }
+    let blocks = Blocks::new(n, p);
+    let bounds = blocks.starts();
+    {
+        let mut rest: &mut [i64] = data;
+        let mut slices = Vec::with_capacity(p);
+        for i in 0..p {
+            let (head, tail) = rest.split_at_mut(blocks.block_len(i));
+            rest = tail;
+            slices.push(head);
+        }
+        std::thread::scope(|s| {
+            for slice in slices {
+                s.spawn(move || {
+                    let mut scratch = slice.to_vec();
+                    merge_sort(slice, &mut scratch);
+                });
+            }
+        });
+    }
+    let mut aux: Vec<i64> = data.to_vec();
+    let mut runs: Vec<usize> = bounds;
+    let mut in_data = true;
+    while runs.len() > 2 {
+        runs = if in_data {
+            scoped_round(&*data, &mut aux, &runs, p)
+        } else {
+            scoped_round(&aux, data, &runs, p)
+        };
+        in_data = !in_data;
+    }
+    if !in_data {
+        data.copy_from_slice(&aux);
+    }
+}
+
+fn scoped_round(src: &[i64], dst: &mut [i64], runs: &[usize], p: usize) -> Vec<usize> {
+    let nruns = runs.len() - 1;
+    let npairs = nruns / 2;
+    let per_pair = (p / npairs).max(1);
+    let mut tasks: Vec<MergeTask> = Vec::new();
+    let mut new_runs = vec![0usize];
+    for pair in 0..npairs {
+        let lo = runs[2 * pair];
+        let mid = runs[2 * pair + 1];
+        let hi = runs[2 * pair + 2];
+        let part = Partition::compute(&src[lo..mid], &src[mid..hi], per_pair);
+        for mut t in part.tasks() {
+            t.a = (t.a.start + lo)..(t.a.end + lo);
+            t.b = (t.b.start + mid)..(t.b.end + mid);
+            t.c_off += lo;
+            tasks.push(t);
+        }
+        new_runs.push(hi);
+    }
+    if nruns % 2 == 1 {
+        let lo = runs[nruns - 1];
+        let hi = runs[nruns];
+        if hi > lo {
+            tasks.push(MergeTask {
+                a: lo..hi,
+                b: hi..hi,
+                c_off: lo,
+                case: Case::CopyA,
+                side: Side::A,
+            });
+            new_runs.push(hi);
+        }
+    }
+    tasks.sort_by_key(|t| t.c_off);
+    let pairs = carve_output(&tasks, dst).expect("tasks tile");
+    let groups = chunk_tasks(pairs, p);
+    std::thread::scope(|s| {
+        for group in groups {
+            s.spawn(move || {
+                for (t, slice) in group {
+                    merge_into(&src[t.a.clone()], &src[t.b.clone()], slice);
+                }
+            });
+        }
+    });
+    new_runs
+}
 
 fn main() {
     let n = if quick_mode() { 200_000 } else { 2_000_000 };
@@ -109,4 +208,47 @@ fn main() {
         ]);
     }
     t.print();
+
+    section("E7e: persistent executor vs per-call thread::scope (n = 1M, p = num_cpus)");
+    {
+        // Keep n above the largest possible parallel_merge_cutoff
+        // (2^18) even in quick mode, so BOTH paths genuinely run
+        // parallel — otherwise the table would compare a sequential
+        // bail against a threaded run.
+        let n = if quick_mode() { 1 << 19 } else { 1_000_000 };
+        let p = traff_merge::util::num_cpus();
+        let base = raw_keys(Dist::Uniform, n, 33);
+        // Correctness cross-check before timing.
+        let mut check_exec = base.clone();
+        let mut check_scoped = base.clone();
+        parallel_merge_sort(&mut check_exec, p);
+        scoped_sort(&mut check_scoped, p);
+        assert_eq!(check_exec, check_scoped, "paths must agree");
+        let r_exec = Bench::new("executor").run(|| {
+            let mut v = base.clone();
+            parallel_merge_sort(&mut v, p);
+            v
+        });
+        let r_scoped = Bench::new("scoped spawn").run(|| {
+            let mut v = base.clone();
+            scoped_sort(&mut v, p);
+            v
+        });
+        let mut t = Table::new(vec!["path", "median", "Melem/s"]);
+        t.row(vec![
+            "exec (persistent workers)".to_string(),
+            format!("{:.1} ms", r_exec.median() * 1e3),
+            format!("{:.1}", melems_per_sec(n, r_exec.median())),
+        ]);
+        t.row(vec![
+            "std::thread::scope per call".to_string(),
+            format!("{:.1} ms", r_scoped.median() * 1e3),
+            format!("{:.1}", melems_per_sec(n, r_scoped.median())),
+        ]);
+        t.print();
+        println!(
+            "(acceptance: executor ≥ scoped — {} spawn/join generations per sort are gone)",
+            1 + expected_rounds(p)
+        );
+    }
 }

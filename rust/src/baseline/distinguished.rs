@@ -112,7 +112,7 @@ pub fn distinguished_merge<T: Copy + Ord + Send + Sync>(
         pairs.push((f, head));
     }
     let per = div_ceil(pairs.len().max(1), threads);
-    std::thread::scope(|s| {
+    crate::exec::global().scope(|s| {
         let mut iter = pairs.into_iter().peekable();
         while iter.peek().is_some() {
             let group: Vec<_> = iter.by_ref().take(per).collect();

@@ -67,7 +67,7 @@ pub fn merge_path_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut
             segs.push((i0..i1, j0..j1, head));
         }
     }
-    std::thread::scope(|s| {
+    crate::exec::global().scope(|s| {
         for (ar, br, slice) in segs {
             s.spawn(move || {
                 merge_into(&a[ar.clone()], &b[br.clone()], slice);

@@ -118,7 +118,8 @@ pub fn bsp_merge_simplified(a: &[i64], b: &[i64], params: BspParams) -> BspMerge
     // Materialize the full output for verification (outside the cost
     // model — a real deployment leaves C distributed).
     let mut output = vec![0i64; n + m];
-    crate::core::merge::run_tasks_seq(a, b, &mut output, &tasks);
+    crate::core::merge::run_tasks_seq(a, b, &mut output, &tasks)
+        .expect("classifier tasks tile the output");
 
     BspMergeReport { cost: machine.cost(), output }
 }

@@ -1,7 +1,14 @@
 //! Coordinator service (S14): the deployable layer on top of the
-//! algorithm — a job API (merge / sort over keyed data), a persistent
-//! worker pool, engine selection (pure-rust threads vs XLA-offloaded
-//! block pipeline), and service metrics.
+//! algorithm — a job API (merge / sort over keyed data) on the shared
+//! persistent executor, engine selection (pure-rust threads vs
+//! XLA-offloaded block pipeline), and service metrics.
+//!
+//! Thread budget: service jobs and each job's internal parallel phases
+//! run on the same [`crate::exec`] worker fleet (the [`WorkerPool`]
+//! facade), so concurrent jobs overlap without oversubscribing the
+//! machine. Batched entry points ([`MergeService::merge_many`],
+//! [`MergeService::submit_sort_batch`]) enqueue whole job lists in one
+//! executor pass.
 //!
 //! Engines:
 //! - [`Engine::Rust`]  — the paper's algorithm on OS threads (L3 only).
@@ -64,6 +71,17 @@ pub fn to_block(recs: &[KRec]) -> KeyedBlock {
     }
 }
 
+/// Stable merge of two keyed blocks on the rust engine with an
+/// explicit thread budget (free function so executor tasks can call it
+/// without capturing the service).
+fn merge_blocks(a: &KeyedBlock, b: &KeyedBlock, threads: usize) -> KeyedBlock {
+    let ra = to_recs(a);
+    let rb = to_recs(b);
+    let mut out = vec![KRec { key: F32Key(0.0), val: 0 }; ra.len() + rb.len()];
+    parallel_merge(&ra, &rb, &mut out, threads);
+    to_block(&out)
+}
+
 /// Execution engine selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
@@ -76,6 +94,12 @@ pub enum Engine {
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Parallelism granularity for this service's algorithms (the `p`
+    /// handed to merge/sort). Since the executor unification this is
+    /// NOT an OS-thread count or a concurrency bound: all services
+    /// share the process-wide [`crate::exec`] fleet (pin its width
+    /// with `EXEC_THREADS`). Per-service admission control is a
+    /// ROADMAP follow-on.
     pub threads: usize,
     pub engine: Engine,
     /// Leaf block size for the hybrid pipeline (must be within the
@@ -99,6 +123,15 @@ pub struct ServiceStats {
 }
 
 impl ServiceStats {
+    /// Record one completed job: the single bookkeeping path every
+    /// sync and async entry point shares.
+    pub fn record(&self, elems: usize, t0: Instant) {
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(elems, Ordering::Relaxed);
+        self.busy_nanos
+            .fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> (usize, usize, usize, f64) {
         (
             self.jobs.load(Ordering::Relaxed),
@@ -313,11 +346,7 @@ impl MergeService {
     }
 
     fn rust_merge_blocks(&self, a: &KeyedBlock, b: &KeyedBlock) -> KeyedBlock {
-        let ra = to_recs(a);
-        let rb = to_recs(b);
-        let mut out = vec![KRec { key: F32Key(0.0), val: 0 }; ra.len() + rb.len()];
-        parallel_merge(&ra, &rb, &mut out, self.config.threads);
-        to_block(&out)
+        merge_blocks(a, b, self.config.threads)
     }
 
     /// Batched stable merge of many small job pairs. The hybrid engine
@@ -331,10 +360,25 @@ impl MergeService {
         let t0 = Instant::now();
         let total: usize = jobs.iter().map(|(a, b)| a.len() + b.len()).sum();
         let out = match self.config.engine {
-            Engine::Rust => jobs
-                .iter()
-                .map(|(a, b)| self.rust_merge_blocks(a, b))
-                .collect(),
+            Engine::Rust => {
+                // All jobs fan out over the shared executor in one
+                // scope; each job's internal merge phases nest on the
+                // same workers.
+                let threads = self.config.threads;
+                let mut results: Vec<Option<KeyedBlock>> = Vec::with_capacity(jobs.len());
+                results.resize_with(jobs.len(), || None);
+                crate::exec::global().scope(|s| {
+                    for ((a, b), slot) in jobs.iter().zip(results.iter_mut()) {
+                        s.spawn(move || {
+                            *slot = Some(merge_blocks(a, b, threads));
+                        });
+                    }
+                });
+                results
+                    .into_iter()
+                    .map(|r| r.expect("merge job completed"))
+                    .collect()
+            }
             Engine::Hybrid => {
                 let rt = self.runtime.as_ref().expect("hybrid runtime");
                 let batcher = crate::runtime::XlaBatchMerger::new(rt)?;
@@ -388,11 +432,7 @@ impl MergeService {
                     let mut recs = to_recs(&data);
                     parallel_merge_sort(&mut recs, threads);
                     let out = to_block(&recs);
-                    stats.jobs.fetch_add(1, Ordering::Relaxed);
-                    stats.elements.fetch_add(out.len(), Ordering::Relaxed);
-                    stats
-                        .busy_nanos
-                        .fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+                    stats.record(out.len(), t0);
                     Ok(out)
                 })
             }
@@ -404,12 +444,47 @@ impl MergeService {
         }
     }
 
+    /// Batched asynchronous sort submission: the whole job list enters
+    /// the executor's deques in one pass (`exec::submit_many` — one
+    /// queue lock per worker, a single wake-up broadcast) instead of a
+    /// channel send per job. The receiver yields `(job index, result)`
+    /// pairs in completion order. The hybrid engine executes inline on
+    /// the caller thread (PJRT handles are not `Send`).
+    pub fn submit_sort_batch(
+        &self,
+        blocks: Vec<KeyedBlock>,
+    ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
+        match self.config.engine {
+            Engine::Rust => {
+                let threads = self.config.threads;
+                let jobs: Vec<_> = blocks
+                    .into_iter()
+                    .map(|data| {
+                        let stats = Arc::clone(&self.stats);
+                        move || {
+                            let t0 = Instant::now();
+                            let mut recs = to_recs(&data);
+                            parallel_merge_sort(&mut recs, threads);
+                            let out = to_block(&recs);
+                            stats.record(out.len(), t0);
+                            Ok::<KeyedBlock, String>(out)
+                        }
+                    })
+                    .collect();
+                self.pool.submit_many(jobs)
+            }
+            Engine::Hybrid => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for (i, data) in blocks.iter().enumerate() {
+                    let _ = tx.send((i, self.sort(data).map_err(|e| e.to_string())));
+                }
+                rx
+            }
+        }
+    }
+
     fn note_job(&self, elems: usize, t0: Instant) {
-        self.stats.jobs.fetch_add(1, Ordering::Relaxed);
-        self.stats.elements.fetch_add(elems, Ordering::Relaxed);
-        self.stats
-            .busy_nanos
-            .fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+        self.stats.record(elems, t0);
     }
 }
 
@@ -454,6 +529,69 @@ mod tests {
         let (jobs, elems, _, _) = svc.stats.snapshot();
         assert_eq!(jobs, 2);
         assert_eq!(elems, 3200);
+    }
+
+    #[test]
+    fn batched_sort_submission() {
+        let svc = MergeService::new(Config {
+            threads: 4,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+        })
+        .unwrap();
+        let mut rng = Rng::new(19);
+        let blocks: Vec<KeyedBlock> = (0..6)
+            .map(|_| {
+                let n = 500 + rng.index(1500);
+                KeyedBlock {
+                    keys: (0..n).map(|_| rng.range(0, 200) as f32).collect(),
+                    vals: (0..n as i32).collect(),
+                }
+            })
+            .collect();
+        let lens: Vec<usize> = blocks.iter().map(|b| b.len()).collect();
+        let rx = svc.submit_sort_batch(blocks);
+        let mut results: Vec<Option<KeyedBlock>> = (0..6).map(|_| None).collect();
+        for (i, r) in rx.iter() {
+            results[i] = Some(r.unwrap());
+        }
+        for (i, out) in results.into_iter().enumerate() {
+            let out = out.expect("every job reports back");
+            assert_eq!(out.len(), lens[i]);
+            assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+            // Stability: equal keys keep increasing vals.
+            for w in out.keys.windows(2).zip(out.vals.windows(2)) {
+                if w.0[0] == w.0[1] {
+                    assert!(w.1[0] < w.1[1], "instability in batched sort");
+                }
+            }
+        }
+        let (jobs, _, _, _) = svc.stats.snapshot();
+        assert_eq!(jobs, 6);
+    }
+
+    #[test]
+    fn parallel_merge_many_matches_sequential() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+        })
+        .unwrap();
+        let mut rng = Rng::new(23);
+        let jobs: Vec<(KeyedBlock, KeyedBlock)> = (0..10)
+            .map(|_| {
+                let n = 300 + rng.index(700);
+                let m = 300 + rng.index(700);
+                (sorted_block(&mut rng, n, 0), sorted_block(&mut rng, m, 50_000))
+            })
+            .collect();
+        let outs = svc.merge_many(&jobs).unwrap();
+        for ((a, b), out) in jobs.iter().zip(&outs) {
+            let expect = merge_blocks(a, b, 1);
+            assert_eq!(out.keys, expect.keys);
+            assert_eq!(out.vals, expect.vals);
+        }
     }
 
     #[test]

@@ -1,49 +1,28 @@
-//! Persistent worker pool for job-level parallelism.
+//! Job-level entry point for the service layer — a thin facade over
+//! the process-wide [`crate::exec::Executor`].
 //!
-//! The core algorithms use `std::thread::scope` fork/join (their data
-//! is borrowed); the *service* layer runs whole jobs — which own their
-//! data — on this persistent pool, so concurrent client jobs don't pay
-//! thread spawn costs and can overlap.
+//! Historically this was a second, independent mpsc worker pool, so a
+//! service with `threads = t` actually ran `t` pool threads *plus* a
+//! fresh `std::thread::scope` fleet inside every merge/sort call —
+//! oversubscribing the machine. Now service jobs and intra-job
+//! parallelism share one persistent thread budget: jobs are pushed to
+//! the shared executor's deques, and when a job opens an `exec::scope`
+//! for its own parallel phases, the waiting worker helps drain the
+//! queues instead of blocking a thread.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::mpsc::Receiver;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-enum Cmd {
-    Run(Job),
-    Shutdown,
-}
-
-/// Fixed-size worker pool with a shared queue.
+/// Facade handle kept for API compatibility: `size` records the
+/// service's configured concurrency, execution happens on
+/// [`crate::exec::global`].
 pub struct WorkerPool {
-    tx: Sender<Cmd>,
-    handles: Vec<JoinHandle<()>>,
     size: usize,
 }
 
 impl WorkerPool {
     pub fn new(size: usize) -> WorkerPool {
         assert!(size > 0);
-        let (tx, rx) = channel::<Cmd>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("traff-worker-{i}"))
-                    .spawn(move || loop {
-                        let cmd = { rx.lock().unwrap().recv() };
-                        match cmd {
-                            Ok(Cmd::Run(job)) => job(),
-                            Ok(Cmd::Shutdown) | Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        WorkerPool { tx, handles, size }
+        WorkerPool { size }
     }
 
     pub fn size(&self) -> usize {
@@ -55,13 +34,16 @@ impl WorkerPool {
         &self,
         job: impl FnOnce() -> R + Send + 'static,
     ) -> Receiver<R> {
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Cmd::Run(Box::new(move || {
-                let _ = rtx.send(job());
-            })))
-            .expect("pool alive");
-        rrx
+        crate::exec::global().submit(job)
+    }
+
+    /// Submit a batch of jobs in one queue pass; the receiver yields
+    /// `(index, result)` pairs in completion order.
+    pub fn submit_many<R: Send + 'static, F: FnOnce() -> R + Send + 'static>(
+        &self,
+        jobs: Vec<F>,
+    ) -> Receiver<(usize, R)> {
+        crate::exec::global().submit_many(jobs)
     }
 
     /// Submit and wait.
@@ -70,21 +52,11 @@ impl WorkerPool {
     }
 }
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        for _ in &self.handles {
-            let _ = self.tx.send(Cmd::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn runs_jobs_on_workers() {
@@ -108,21 +80,38 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let pool = WorkerPool::new(2);
         pool.run(|| ());
-        drop(pool); // must not hang
+        drop(pool); // must not hang (the shared executor persists)
     }
 
     #[test]
-    fn jobs_overlap_across_workers() {
-        use std::time::{Duration, Instant};
+    fn concurrent_jobs_all_complete() {
+        // Overlap timing is asserted against a private executor in
+        // `exec::tests` (immune to sibling-test queue contention); the
+        // facade test checks completion through the shared pool.
+        use std::time::Duration;
         let pool = WorkerPool::new(4);
-        let t0 = Instant::now();
-        let rxs: Vec<_> = (0..4)
-            .map(|_| pool.submit(|| std::thread::sleep(Duration::from_millis(50))))
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                pool.submit(move || {
+                    std::thread::sleep(Duration::from_millis(5));
+                    i
+                })
+            })
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap();
+        let got: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_submission_yields_every_job() {
+        let pool = WorkerPool::new(3);
+        let jobs: Vec<_> = (0..40).map(|i| move || i + 1).collect();
+        let rx = pool.submit_many(jobs);
+        let mut seen = vec![false; 40];
+        for (i, r) in rx.iter() {
+            assert_eq!(r, i + 1);
+            seen[i] = true;
         }
-        // 4 x 50ms in parallel must take well under 200ms.
-        assert!(t0.elapsed() < Duration::from_millis(180));
+        assert!(seen.iter().all(|&s| s));
     }
 }

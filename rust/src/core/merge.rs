@@ -13,26 +13,72 @@
 //! The disjointness of output ranges (Observation 1 / `validate_tasks`)
 //! is what lets the merge phase write `C` from `p` threads without any
 //! locking: we materialize the disjointness for the borrow checker by
-//! carving `out` with `split_at_mut` along task boundaries.
+//! carving `out` with `split_at_mut` along task boundaries — and we
+//! validate the tiling *unconditionally* ([`carve_output`] returns
+//! `Err` instead of silently mis-slicing in release builds).
+//!
+//! Both parallel phases execute on the persistent [`crate::exec`]
+//! executor (no per-call thread spawn/join); the sequential crossovers
+//! come from the measured [`crate::exec::tunables`] instead of
+//! hardcoded constants.
 
 use super::cases::{MergeTask, Partition};
 use super::seqmerge::merge_into;
-use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::fmt;
+
+/// Error returned when a task list does not exactly tile the output
+/// buffer (a broken classifier invariant — previously only caught by a
+/// `debug_assert!`, i.e. silent corruption in release builds).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TilingError {
+    detail: String,
+}
+
+impl TilingError {
+    fn new(detail: String) -> TilingError {
+        TilingError { detail }
+    }
+}
+
+impl fmt::Display for TilingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "merge tasks do not tile the output: {}", self.detail)
+    }
+}
+
+impl std::error::Error for TilingError {}
 
 /// Execute the 2(p+1) binary searches of Steps 1–2, distributing them
-/// over `threads` OS threads. Returns the completed [`Partition`].
+/// over the persistent executor. Returns the completed [`Partition`].
 ///
-/// For small `p` the searches are cheaper than thread spawn; the driver
-/// inlines them sequentially below a crossover (measured in §Perf).
+/// For small `p` the searches are cheaper than a dispatch round-trip;
+/// the crossover is the measured `exec::tunables()` value rather than a
+/// hardcoded guess.
 pub fn partition_parallel<T: Copy + Ord + Send + Sync>(
     a: &[T],
     b: &[T],
     p: usize,
     threads: usize,
 ) -> Partition {
-    // Sequential crossover: 2(p+1) searches of <= log2(n)+log2(m) total
-    // comparisons are cheaper than a thread spawn below ~64 searches.
-    if threads <= 1 || p <= 64 {
+    partition_parallel_with_cutoff(
+        a,
+        b,
+        p,
+        threads,
+        crate::exec::tunables().parallel_search_cutoff,
+    )
+}
+
+/// [`partition_parallel`] with an explicit sequential crossover —
+/// exposed so tests and benches can force either path.
+pub fn partition_parallel_with_cutoff<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    p: usize,
+    threads: usize,
+    cutoff: usize,
+) -> Partition {
+    if threads <= 1 || p < cutoff {
         return Partition::compute(a, b, p);
     }
     let pa = super::blocks::Blocks::new(a.len(), p);
@@ -41,120 +87,124 @@ pub fn partition_parallel<T: Copy + Ord + Send + Sync>(
     let y = pb.starts();
     let mut xbar = vec![0usize; p + 1];
     let mut ybar = vec![0usize; p + 1];
-    let next = AtomicUsize::new(0);
-    let chunk = crate::util::div_ceil(p + 1, threads * 4).max(8);
-    // Carve the output arrays into fixed chunks; a shared atomic
-    // cursor hands chunks to threads (cheap dynamic load balance).
-    let mut slots: Vec<(usize, &mut [usize], &mut [usize])> = Vec::new();
+    let exec = crate::exec::global();
+    // Fixed chunks over the 0..=p search indices; idle workers steal,
+    // which replaces the old atomic-cursor-plus-Mutex double dispatch.
+    let chunk = crate::util::div_ceil(p + 1, threads.min(exec.size()) * 4).max(8);
     {
-        let mut xb_rest: &mut [usize] = &mut xbar;
-        let mut yb_rest: &mut [usize] = &mut ybar;
-        let mut off = 0usize;
-        while off <= p {
-            let take = chunk.min(p + 1 - off);
-            let (xh, xt) = xb_rest.split_at_mut(take);
-            let (yh, yt) = yb_rest.split_at_mut(take);
-            xb_rest = xt;
-            yb_rest = yt;
-            slots.push((off, xh, yh));
-            off += take;
-        }
-    }
-    let slots = std::sync::Mutex::new(slots.into_iter().map(Some).collect::<Vec<_>>());
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for _ in 0..threads {
-            let next = &next;
-            let slots = &slots;
-            let x = &x;
-            let y = &y;
-            handles.push(s.spawn(move || loop {
-                let idx = next.fetch_add(1, AtomicOrdering::Relaxed);
-                let slot = {
-                    let mut guard = slots.lock().unwrap();
-                    if idx >= guard.len() {
-                        return;
+        let x_ref = &x;
+        let y_ref = &y;
+        exec.scope(|s| {
+            let mut xb_rest: &mut [usize] = &mut xbar;
+            let mut yb_rest: &mut [usize] = &mut ybar;
+            let mut off = 0usize;
+            while off <= p {
+                let take = chunk.min(p + 1 - off);
+                let (xh, xt) = xb_rest.split_at_mut(take);
+                let (yh, yt) = yb_rest.split_at_mut(take);
+                xb_rest = xt;
+                yb_rest = yt;
+                s.spawn(move || {
+                    for (k, slot) in xh.iter_mut().enumerate() {
+                        let xi = x_ref[off + k];
+                        *slot = if xi < a.len() {
+                            super::ranks::rank_low(&a[xi], b)
+                        } else {
+                            b.len()
+                        };
                     }
-                    guard[idx].take()
-                };
-                let Some((off, xh, yh)) = slot else { return };
-                for (k, slot) in xh.iter_mut().enumerate() {
-                    let xi = x[off + k];
-                    *slot = if xi < a.len() {
-                        super::ranks::rank_low(&a[xi], b)
-                    } else {
-                        b.len()
-                    };
-                }
-                for (k, slot) in yh.iter_mut().enumerate() {
-                    let yj = y[off + k];
-                    *slot = if yj < b.len() {
-                        super::ranks::rank_high(&b[yj], a)
-                    } else {
-                        a.len()
-                    };
-                }
-            }));
-        }
-        for h in handles {
-            h.join().unwrap();
-        }
-    });
-    drop(slots);
+                    for (k, slot) in yh.iter_mut().enumerate() {
+                        let yj = y_ref[off + k];
+                        *slot = if yj < b.len() {
+                            super::ranks::rank_high(&b[yj], a)
+                        } else {
+                            a.len()
+                        };
+                    }
+                });
+                off += take;
+            }
+        });
+    }
     Partition { pa, pb, x, y, xbar, ybar }
 }
 
 /// Carve `out` into the per-task disjoint output slices.
 ///
-/// Tasks must tile `out` exactly (guaranteed by the classifier,
-/// re-checked here in debug builds). Tasks are returned sorted by
-/// output offset, paired with their `&mut` slice.
+/// Tasks must tile `out` exactly (guaranteed by the classifier);
+/// violations are detected **unconditionally** and reported as
+/// [`TilingError`] instead of corrupting the output. Tasks are
+/// returned sorted by output offset, paired with their `&mut` slice.
 pub fn carve_output<'t, 'o, T>(
     tasks: &'t [MergeTask],
     out: &'o mut [T],
-) -> Vec<(&'t MergeTask, &'o mut [T])> {
+) -> Result<Vec<(&'t MergeTask, &'o mut [T])>, TilingError> {
     let mut order: Vec<&MergeTask> = tasks.iter().collect();
     order.sort_by_key(|t| t.c_off);
     let mut pairs = Vec::with_capacity(order.len());
     let mut rest = out;
     let mut cursor = 0usize;
     for t in order {
-        debug_assert_eq!(t.c_off, cursor, "tasks must tile the output");
+        if t.c_off != cursor {
+            return Err(TilingError::new(format!(
+                "gap/overlap at C[{cursor}]: next task starts at {} ({t:?})",
+                t.c_off
+            )));
+        }
+        if t.len() > rest.len() {
+            return Err(TilingError::new(format!(
+                "task overruns the output ({} elements left, task {t:?})",
+                rest.len()
+            )));
+        }
         let (slice, tail) = rest.split_at_mut(t.len());
         rest = tail;
         cursor += t.len();
         pairs.push((t, slice));
     }
-    debug_assert!(rest.is_empty(), "tasks must cover the whole output");
-    pairs
+    if !rest.is_empty() {
+        return Err(TilingError::new(format!(
+            "tasks cover only C[..{cursor}] of {} output slots",
+            cursor + rest.len()
+        )));
+    }
+    Ok(pairs)
 }
 
 /// Execute a set of merge tasks sequentially (used by tests, the PRAM
-/// driver, and as the `threads == 1` fast path).
-pub fn run_tasks_seq<T: Copy + Ord>(a: &[T], b: &[T], out: &mut [T], tasks: &[MergeTask]) {
-    for (t, slice) in carve_output(tasks, out) {
+/// driver, and as the small-input fast path).
+pub fn run_tasks_seq<T: Copy + Ord>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    tasks: &[MergeTask],
+) -> Result<(), TilingError> {
+    for (t, slice) in carve_output(tasks, out)? {
         merge_into(&a[t.a.clone()], &b[t.b.clone()], slice);
     }
+    Ok(())
 }
 
-/// Execute merge tasks across `threads` OS threads. Each thread takes a
-/// contiguous group of tasks (every task is already `O(n/p)`, so simple
-/// round-chunking is within 2x of optimal — the paper's own balance
-/// bound).
+/// Execute merge tasks on the persistent executor. Each spawned task
+/// takes a contiguous group of merge tasks (every task is already
+/// `O(n/p)`, so chunking to near-equal element counts is within 2x of
+/// optimal — the paper's own balance bound).
 pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
     a: &[T],
     b: &[T],
     out: &mut [T],
     tasks: &[MergeTask],
     threads: usize,
-) {
-    if threads <= 1 || tasks.len() <= 1 {
-        run_tasks_seq(a, b, out, tasks);
-        return;
+) -> Result<(), TilingError> {
+    if threads <= 1
+        || tasks.len() <= 1
+        || out.len() < crate::exec::tunables().parallel_merge_cutoff
+    {
+        return run_tasks_seq(a, b, out, tasks);
     }
-    let pairs = carve_output(tasks, out);
+    let pairs = carve_output(tasks, out)?;
     let groups = chunk_tasks(pairs, threads);
-    std::thread::scope(|s| {
+    crate::exec::global().scope(|s| {
         for group in groups {
             s.spawn(move || {
                 for (t, slice) in group {
@@ -163,26 +213,38 @@ pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
             });
         }
     });
+    Ok(())
 }
 
 /// Split task/slice pairs into at most `k` contiguous groups with
-/// near-equal total element counts (linear greedy walk).
+/// near-equal total element counts.
+///
+/// The target is recomputed from the *remaining* elements and groups
+/// each time a group closes, so an early oversized task (cases (c)/(d)
+/// can produce up to `2⌈n/p⌉` elements) shrinks only its own group's
+/// budget instead of starving the tail groups — the old single fixed
+/// target could emit far fewer than `k` groups and over-pack the last
+/// one, idling threads.
 pub fn chunk_tasks<'t, 'o, T>(
     pairs: Vec<(&'t MergeTask, &'o mut [T])>,
     k: usize,
 ) -> Vec<Vec<(&'t MergeTask, &'o mut [T])>> {
-    let total: usize = pairs.iter().map(|(t, _)| t.len()).sum();
-    let target = crate::util::div_ceil(total.max(1), k);
-    let mut groups = Vec::with_capacity(k);
+    let k = k.max(1);
+    let mut remaining: usize = pairs.iter().map(|(t, _)| t.len()).sum();
+    let mut groups: Vec<Vec<(&MergeTask, &mut [T])>> = Vec::with_capacity(k);
     let mut cur = Vec::new();
     let mut acc = 0usize;
     for (t, s) in pairs {
         let l = t.len();
-        if acc + l > target && !cur.is_empty() && groups.len() + 1 < k {
+        let groups_left = k - groups.len();
+        // Fair share of everything not yet sealed into a closed group.
+        let target = crate::util::div_ceil((acc + remaining).max(1), groups_left);
+        if !cur.is_empty() && groups_left > 1 && acc + l > target {
             groups.push(std::mem::take(&mut cur));
             acc = 0;
         }
         acc += l;
+        remaining -= l;
         cur.push((t, s));
     }
     if !cur.is_empty() {
@@ -192,14 +254,15 @@ pub fn chunk_tasks<'t, 'o, T>(
 }
 
 /// **The headline API**: stable parallel merge of sorted `a` and `b`
-/// into `out`, using `p` logical processing elements executed on
-/// `p.min(available)` OS threads. Implements the paper end to end.
+/// into `out`, using `p` logical processing elements executed on the
+/// persistent executor's workers. Implements the paper end to end.
 ///
 /// Stability: for equal elements, everything from `a` precedes
 /// everything from `b`, and each input's internal order is preserved.
 ///
 /// # Panics
-/// If `out.len() != a.len() + b.len()` or `p == 0`.
+/// If `out.len() != a.len() + b.len()` or `p == 0`, and on a broken
+/// classifier invariant (non-tiling tasks — checked unconditionally).
 pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [T], p: usize) {
     assert_eq!(out.len(), a.len() + b.len(), "output length mismatch");
     assert!(p > 0, "p must be positive");
@@ -221,7 +284,7 @@ pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [
     let part = partition_parallel(a, b, p, p);
     let tasks = part.tasks();
     debug_assert!(part.validate_tasks(&tasks).is_ok());
-    run_tasks_parallel(a, b, out, &tasks, p);
+    run_tasks_parallel(a, b, out, &tasks, p).expect("classifier produced non-tiling tasks");
 }
 
 /// Like [`parallel_merge`] but returns the partition + per-case task
@@ -235,7 +298,7 @@ pub fn parallel_merge_instrumented<T: Copy + Ord + Send + Sync>(
     assert_eq!(out.len(), a.len() + b.len());
     let part = partition_parallel(a, b, p, p);
     let tasks = part.tasks();
-    run_tasks_parallel(a, b, out, &tasks, p);
+    run_tasks_parallel(a, b, out, &tasks, p).expect("classifier produced non-tiling tasks");
     (part, tasks)
 }
 
@@ -339,6 +402,107 @@ mod tests {
             let seq = Partition::compute(&a, &b, p);
             assert_eq!(par.xbar, seq.xbar, "p={p}");
             assert_eq!(par.ybar, seq.ybar, "p={p}");
+        }
+    }
+
+    #[test]
+    fn forced_parallel_partition_matches_sequential() {
+        // cutoff 0 forces the executor path even for tiny p, including
+        // threads > p and (p + 1) not divisible by the chunk size.
+        let mut rng = Rng::new(33);
+        let mut a: Vec<i64> = (0..3000).map(|_| rng.range(0, 300)).collect();
+        let mut b: Vec<i64> = (0..2000).map(|_| rng.range(0, 300)).collect();
+        a.sort();
+        b.sort();
+        for p in [1usize, 2, 3, 7, 9, 23, 64, 100] {
+            let par = partition_parallel_with_cutoff(&a, &b, p, 16, 0);
+            let seq = Partition::compute(&a, &b, p);
+            assert_eq!(par.xbar, seq.xbar, "p={p}");
+            assert_eq!(par.ybar, seq.ybar, "p={p}");
+        }
+    }
+
+    fn copy_task(off: usize, len: usize) -> MergeTask {
+        MergeTask {
+            a: 0..len,
+            b: 0..0,
+            c_off: off,
+            case: crate::core::cases::Case::CopyA,
+            side: crate::core::cases::Side::A,
+        }
+    }
+
+    #[test]
+    fn carve_output_rejects_non_tiling_tasks() {
+        let mut out = vec![0u8; 10];
+        // Gap: second task starts at 6, not 4.
+        let gap = vec![copy_task(0, 4), copy_task(6, 4)];
+        assert!(carve_output(&gap, &mut out).is_err());
+        // Short cover: only 8 of 10 slots.
+        let short = vec![copy_task(0, 4), copy_task(4, 4)];
+        assert!(carve_output(&short, &mut out).is_err());
+        // Overrun: 12 of 10 slots.
+        let long = vec![copy_task(0, 4), copy_task(4, 8)];
+        assert!(carve_output(&long, &mut out).is_err());
+        // Exact tiling is accepted, in any input order.
+        let ok = vec![copy_task(6, 4), copy_task(0, 6)];
+        let pairs = carve_output(&ok, &mut out).unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].1.len(), 6);
+        assert_eq!(pairs[1].1.len(), 4);
+    }
+
+    #[test]
+    fn run_tasks_propagate_tiling_errors() {
+        let a = [1i64, 2, 3, 4];
+        let b: [i64; 0] = [];
+        let mut out = vec![0i64; 4];
+        let bad = vec![copy_task(1, 3)];
+        assert!(run_tasks_seq(&a, &b, &mut out, &bad).is_err());
+        assert!(run_tasks_parallel(&a, &b, &mut out, &bad, 4).is_err());
+    }
+
+    #[test]
+    fn chunk_tasks_rebalances_after_oversized_task() {
+        // One oversized task first (the regression shape): the old
+        // fixed-target walk produced < k groups with an over-packed
+        // tail; the remaining-aware walk must fill all k groups evenly.
+        let sizes = [100usize, 10, 10, 10, 10, 10, 10, 10, 10, 10, 10];
+        let total: usize = sizes.iter().sum();
+        let mut tasks = Vec::new();
+        let mut off = 0;
+        for &len in &sizes {
+            tasks.push(copy_task(off, len));
+            off += len;
+        }
+        let mut out = vec![0u8; total];
+        let k = 4;
+        let pairs = carve_output(&tasks, &mut out).unwrap();
+        let groups = chunk_tasks(pairs, k);
+        assert_eq!(groups.len(), k, "no thread may idle");
+        let sums: Vec<usize> =
+            groups.iter().map(|g| g.iter().map(|(t, _)| t.len()).sum()).collect();
+        assert_eq!(sums[0], 100, "oversized task isolated in its own group");
+        // Remaining 100 elements over 3 groups: ceil = 34; allow one
+        // task of slack.
+        for s in &sums[1..] {
+            assert!((*s as i64 - 33).unsigned_abs() <= 10, "unbalanced tail: {sums:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_tasks_uniform_stays_balanced() {
+        let mut tasks = Vec::new();
+        for i in 0..32 {
+            tasks.push(copy_task(i * 5, 5));
+        }
+        let mut out = vec![0u8; 160];
+        let pairs = carve_output(&tasks, &mut out).unwrap();
+        let groups = chunk_tasks(pairs, 8);
+        assert_eq!(groups.len(), 8);
+        for g in &groups {
+            let s: usize = g.iter().map(|(t, _)| t.len()).sum();
+            assert_eq!(s, 20, "uniform tasks split evenly");
         }
     }
 }

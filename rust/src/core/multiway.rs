@@ -4,7 +4,9 @@
 //! this module packages that as a reusable k-way merge:
 //!
 //! - [`parallel_kway_merge`] — `ceil(log2 k)` levels of the simplified
-//!   parallel two-way merge (each level is one §3 round over all pairs).
+//!   parallel two-way merge (each level is one §3 round over all pairs,
+//!   executed on the persistent [`crate::exec`] executor via
+//!   [`merge_round`]).
 //! - [`loser_tree_merge`] — the classical sequential k-way loser tree,
 //!   used as the comparison baseline (one pass, k-way comparisons).
 //!

@@ -10,10 +10,14 @@
 //!
 //! Space: input buffer + one output buffer (ping-pong), as the paper
 //! claims ("no extra space apart from input and output arrays").
+//!
+//! Both the block-sort phase and every merge round run on the
+//! persistent [`crate::exec`] executor — one fixed worker fleet for the
+//! whole sort instead of `1 + ceil(log p)` spawn/join generations.
 
 use super::blocks::Blocks;
 use super::cases::{MergeTask, Partition};
-use super::merge::{chunk_tasks, carve_output};
+use super::merge::{carve_output, chunk_tasks};
 use super::seqmerge::{merge_into, merge_sort};
 
 /// Stable parallel merge sort of `data` using `p` processing elements.
@@ -23,7 +27,11 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
     if n <= 1 {
         return;
     }
-    if p == 1 || n < 2 * p {
+    // Sequential bail: the crossover is calibrated for ONE merge pass;
+    // a sort does 1 + ceil(log2 p) parallel phases over O(n log n)
+    // work, so compare the cutoff against n·log2(n), not n.
+    let seq_work = n.saturating_mul((crate::util::log2_ceil(n) as usize).max(1));
+    if p == 1 || n < 2 * p || seq_work < crate::exec::tunables().parallel_merge_cutoff {
         let mut scratch = data.to_vec();
         merge_sort(data, &mut scratch);
         return;
@@ -40,7 +48,7 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
             rest = tail;
             slices.push(head);
         }
-        std::thread::scope(|s| {
+        crate::exec::global().scope(|s| {
             for slice in slices {
                 s.spawn(move || {
                     let mut scratch = slice.to_vec();
@@ -77,7 +85,8 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
 /// One §3 merge round: merge adjacent run pairs `(0,1), (2,3), ...`
 /// from `src` into `dst`; an odd trailing run is copied. Returns the
 /// new run boundary vector. All pairs' tasks execute in ONE parallel
-/// phase over `p` threads (the paper's modified multi-pair merge).
+/// phase on the persistent executor (the paper's modified multi-pair
+/// merge).
 pub fn merge_round<T: Copy + Ord + Send + Sync>(
     src: &[T],
     dst: &mut [T],
@@ -138,9 +147,15 @@ pub fn merge_round<T: Copy + Ord + Send + Sync>(
     tasks.sort_by_key(|t| t.c_off);
 
     // One parallel execution phase over all pairs' tasks.
-    let pairs = carve_output(&tasks, dst);
+    let pairs = carve_output(&tasks, dst).expect("round tasks tile the destination");
+    if dst.len() < crate::exec::tunables().parallel_merge_cutoff {
+        for (t, slice) in pairs {
+            merge_into(&src[t.a.clone()], &src[t.b.clone()], slice);
+        }
+        return new_runs;
+    }
     let groups = chunk_tasks(pairs, p);
-    std::thread::scope(|s| {
+    crate::exec::global().scope(|s| {
         for group in groups {
             s.spawn(move || {
                 for (t, slice) in group {
@@ -266,5 +281,19 @@ mod tests {
                 expected_rounds(p)
             );
         }
+    }
+
+    #[test]
+    fn large_sort_exercises_executor_rounds() {
+        // Big enough that phase 1 and every round take the executor
+        // path regardless of the calibrated crossover (cutoff clamps
+        // at 2^18).
+        let mut rng = Rng::new(12);
+        let n = 1 << 19;
+        let mut v: Vec<i64> = (0..n).map(|_| rng.range(0, 1 << 20)).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        parallel_merge_sort(&mut v, 8);
+        assert_eq!(v, expect);
     }
 }

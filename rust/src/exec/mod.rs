@@ -1,0 +1,626 @@
+//! `exec` — the persistent parallel substrate every parallel phase in
+//! this crate runs on.
+//!
+//! Architecture (one picture):
+//!
+//! ```text
+//! core phases                          exec                      coordinator
+//! ───────────────                      ─────────────────────     ─────────────────
+//! partition_parallel ─┐                ┌─ worker 0: deque ◄─┐    MergeService jobs
+//! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: deque ◄─┼─── WorkerPool facade
+//! sort block/rounds  ─┤                │  ...        steal ─┘    submit / submit_many
+//! k-way merge rounds ─┘                └─ worker N-1: deque
+//! ```
+//!
+//! The paper's headline property is a merge with a *single*
+//! synchronization point; paying a full OS-thread spawn/join on every
+//! call threw that advantage away. [`Executor`] keeps a fixed set of
+//! worker threads alive for the process lifetime, each with its own
+//! injector deque; idle workers steal from the back of their
+//! neighbours' deques. Two entry points:
+//!
+//! - [`Executor::scope`] — structured fork/join over **borrowed** data,
+//!   the same shape as `std::thread::scope`: tasks spawned inside the
+//!   scope may borrow from the caller's stack, and `scope` does not
+//!   return until every task finished (task panics are propagated).
+//!   Scope tasks live in a scope-local queue reached from the worker
+//!   deques through proxy jobs; the waiting thread drains its *own*
+//!   scope's tasks, so scopes nest freely — a service job running on a
+//!   worker can open a scope for its intra-job parallelism without
+//!   deadlocking a fully-busy pool, and a small scope's latency never
+//!   inflates to an unrelated job's runtime. Service jobs and
+//!   algorithm phases share one thread budget instead of
+//!   oversubscribing.
+//! - [`Executor::submit`] / [`Executor::submit_many`] — fire-and-collect
+//!   jobs owning their data (the coordinator's job layer). `submit_many`
+//!   batch-distributes a whole job list with one queue lock per worker
+//!   and a single wake-up broadcast.
+//!
+//! [`tunables`] holds the measured sequential/parallel crossover points
+//! (overridable via `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF`); the
+//! drivers in `core::merge` consult them instead of hardcoded guesses.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the executor handle and its workers.
+struct Shared {
+    /// One injector deque per worker. Owners pop the front; idle
+    /// workers steal from the back of their neighbours' deques.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Round-robin cursor for spreading pushes across deques.
+    rr: AtomicUsize,
+    /// Sleep/wake coordination for idle workers.
+    sleep: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Worker-side pop: own deque first (front), then steal (back).
+    fn pop(&self, id: usize) -> Option<Job> {
+        if let Some(job) = self.queues[id].lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let n = self.queues.len();
+        for k in 1..n {
+            if let Some(job) = self.queues[(id + k) % n].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    fn queues_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.lock().unwrap().is_empty())
+    }
+
+    fn notify_one(&self) {
+        let _guard = self.sleep.lock().unwrap();
+        self.wake.notify_one();
+    }
+
+    fn notify_all(&self) {
+        let _guard = self.sleep.lock().unwrap();
+        self.wake.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    loop {
+        if let Some(job) = shared.pop(id) {
+            // Keep the worker alive across panicking jobs; scoped tasks
+            // capture their own panics, plain jobs surface them as a
+            // dropped result channel.
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let guard = shared.sleep.lock().unwrap();
+        if shared.queues_empty() && !shared.shutdown.load(Ordering::Acquire) {
+            // Timeout is a missed-wakeup backstop only; pushes notify
+            // under the same lock, so the common path is event-driven.
+            let _ = shared.wake.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+        }
+    }
+}
+
+/// A persistent, scope-capable worker pool. See the module docs.
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn `threads` persistent workers.
+    pub fn new(threads: usize) -> Executor {
+        assert!(threads > 0, "executor needs at least one worker");
+        let shared = Arc::new(Shared {
+            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            rr: AtomicUsize::new(0),
+            sleep: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("exec-worker-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("spawn exec worker")
+            })
+            .collect();
+        Executor { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    fn push_job(&self, job: Job) {
+        let idx = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
+        self.shared.queues[idx].lock().unwrap().push_back(job);
+        self.shared.notify_one();
+    }
+
+    /// Structured fork/join over borrowed data, like `std::thread::scope`
+    /// but on the persistent workers. Does not return until every task
+    /// spawned on the scope has finished; the first task panic (or a
+    /// panic of `f` itself) is resumed on the caller.
+    pub fn scope<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        let state = Arc::new(ScopeState::new());
+        let scope = Scope {
+            exec: self,
+            state: Arc::clone(&state),
+            _scope: PhantomData,
+            _env: PhantomData,
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Drain this scope's OWN remaining tasks on the waiting thread.
+        // Tasks live in the scope-local queue (workers reach them via
+        // the proxy jobs in the deques), so the waiter always makes
+        // progress no matter how busy the pool is — a job already
+        // running on a worker can open a scope without deadlock — and
+        // it never adopts unrelated long-running jobs, so a small
+        // scope's latency cannot inflate to a foreign job's runtime.
+        // Nesting depth is bounded by the structural scope nesting
+        // (job → sort → round), not by the queue length.
+        while state.pending.load(Ordering::Acquire) != 0 {
+            let own = state.tasks.lock().unwrap().pop_front();
+            if let Some(task) = own {
+                task();
+                continue;
+            }
+            // All remaining tasks are in flight on workers; park until
+            // the last one reports in.
+            let guard = state.done.lock().unwrap();
+            if state.pending.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            let _ = state.done_cv.wait_timeout(guard, Duration::from_micros(200)).unwrap();
+        }
+        match result {
+            Err(payload) => resume_unwind(payload),
+            Ok(value) => {
+                if let Some(payload) = state.panic.lock().unwrap().take() {
+                    resume_unwind(payload);
+                }
+                value
+            }
+        }
+    }
+
+    /// Submit one owned job; the receiver yields its result. A panicking
+    /// job drops the sender, surfacing as `RecvError`.
+    pub fn submit<R, F>(&self, job: F) -> Receiver<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        self.push_job(Box::new(move || {
+            let _ = tx.send(job());
+        }));
+        rx
+    }
+
+    /// Batched submission: distribute a whole job list across the worker
+    /// deques with one lock per deque and a single wake-up broadcast.
+    /// The receiver yields `(index, result)` pairs in completion order.
+    pub fn submit_many<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let n = self.shared.queues.len();
+        let start = self.shared.rr.fetch_add(jobs.len().max(1), Ordering::Relaxed);
+        let mut buckets: Vec<Vec<Job>> = (0..n).map(|_| Vec::new()).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            buckets[(start + i) % n].push(Box::new(move || {
+                let _ = tx.send((i, job()));
+            }));
+        }
+        drop(tx);
+        for (queue, bucket) in self.shared.queues.iter().zip(buckets) {
+            if !bucket.is_empty() {
+                queue.lock().unwrap().extend(bucket);
+            }
+        }
+        self.shared.notify_all();
+        rx
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+struct ScopeState {
+    pending: AtomicUsize,
+    /// The scope's not-yet-started tasks. Workers execute them through
+    /// proxy jobs pushed to the deques; the scope's waiter pops them
+    /// directly (guaranteed progress + latency isolation).
+    tasks: Mutex<VecDeque<Job>>,
+    done: Mutex<()>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl ScopeState {
+    fn new() -> ScopeState {
+        ScopeState {
+            pending: AtomicUsize::new(0),
+            tasks: Mutex::new(VecDeque::new()),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        }
+    }
+}
+
+/// Handle for spawning borrowed tasks inside [`Executor::scope`].
+/// Mirrors `std::thread::Scope`: `'scope` is the scope's own region
+/// (invariant), `'env` the environment the tasks may borrow from.
+pub struct Scope<'scope, 'env: 'scope> {
+    exec: &'scope Executor,
+    state: Arc<ScopeState>,
+    _scope: PhantomData<&'scope mut &'scope ()>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'scope, 'env> Scope<'scope, 'env> {
+    /// Spawn a task that may borrow `'scope` data. The enclosing
+    /// [`Executor::scope`] call joins it before returning.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.pending.fetch_add(1, Ordering::SeqCst);
+        let state = Arc::clone(&self.state);
+        let boxed: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the closure (and everything it borrows, bounded by
+        // 'scope) outlives its execution because `Executor::scope` does
+        // not return before `pending` reaches zero — i.e. before this
+        // task has run to completion. Only the lifetime is erased; the
+        // layout of the fat pointer is identical.
+        let boxed: Box<dyn FnOnce() + Send + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'scope>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
+        };
+        let wrapped: Job = Box::new(move || {
+            let result = catch_unwind(AssertUnwindSafe(boxed));
+            if let Err(payload) = result {
+                let mut slot = state.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if state.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let _guard = state.done.lock().unwrap();
+                state.done_cv.notify_all();
+            }
+        });
+        self.state.tasks.lock().unwrap().push_back(wrapped);
+        // Proxy job in the worker deques: runs the next queued task of
+        // this scope, or no-ops if the waiter already took it. Stale
+        // proxies left behind after the scope returns are harmless
+        // (the Arc keeps the empty queue alive).
+        let proxy_state = Arc::clone(&self.state);
+        self.exec.push_job(Box::new(move || {
+            let task = proxy_state.tasks.lock().unwrap().pop_front();
+            if let Some(task) = task {
+                task();
+            }
+        }));
+    }
+}
+
+/// The process-wide executor every parallel phase shares. Sized from
+/// the hardware (floor 4 so small containers still overlap service
+/// jobs), overridable with `EXEC_THREADS`.
+pub fn global() -> &'static Executor {
+    static GLOBAL: OnceLock<Executor> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let threads = std::env::var("EXEC_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| crate::util::num_cpus().max(4));
+        Executor::new(threads)
+    })
+}
+
+/// Measured sequential/parallel crossover points.
+#[derive(Clone, Copy, Debug)]
+pub struct Tunables {
+    /// Minimum `p` (block count ≈ number of binary searches) for which
+    /// dispatching the partition's searches to the executor beats
+    /// running them inline.
+    pub parallel_search_cutoff: usize,
+    /// Minimum output length for which dispatching the merge phase to
+    /// the executor beats a sequential task sweep.
+    pub parallel_merge_cutoff: usize,
+}
+
+/// Conservative defaults served while calibration is in flight (and
+/// the floor/ceiling pair the measured values are clamped into).
+const DEFAULT_TUNABLES: Tunables =
+    Tunables { parallel_search_cutoff: 64, parallel_merge_cutoff: 1 << 15 };
+
+/// The crossover points, measured once per process on first use (a few
+/// hundred microseconds) against the live executor, or pinned via the
+/// `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF` environment variables.
+///
+/// Deliberately NOT a blocking `get_or_init`: calibration itself runs
+/// a scope on the executor, so worker threads executing unrelated
+/// parallel phases may call `tunables()` *while* calibration is in
+/// flight; with a blocking once-cell those callers (and any future
+/// reentrant path) would stall behind the measurement. Concurrent or
+/// reentrant callers during the window get [`DEFAULT_TUNABLES`].
+pub fn tunables() -> Tunables {
+    // 0 = unmeasured, 1 = measuring, 2 = ready.
+    static STATE: AtomicUsize = AtomicUsize::new(0);
+    static CELL: OnceLock<Tunables> = OnceLock::new();
+    if let Some(t) = CELL.get() {
+        return *t;
+    }
+    if STATE
+        .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
+        .is_ok()
+    {
+        // Env pins are taken verbatim (a developer forcing a path gets
+        // exactly what they asked for); only measured values are
+        // clamped into a sane band.
+        let measured = calibrate();
+        let t = Tunables {
+            parallel_search_cutoff: env_usize("EXEC_SEQ_CUTOFF")
+                .unwrap_or_else(|| measured.parallel_search_cutoff.clamp(32, 4096)),
+            parallel_merge_cutoff: env_usize("EXEC_MERGE_CUTOFF")
+                .unwrap_or_else(|| measured.parallel_merge_cutoff.clamp(4096, 1 << 18)),
+        };
+        let _ = CELL.set(t);
+        STATE.store(2, Ordering::Release);
+        return t;
+    }
+    DEFAULT_TUNABLES
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// Measure (a) the cross-thread dispatch round-trip, (b) the
+/// per-search and per-element costs of the sequential kernels, and
+/// derive the points where parallel dispatch pays for itself (with a
+/// 2x hysteresis so the crossover favours the lower-variance
+/// sequential path near the break-even point).
+fn calibrate() -> Tunables {
+    let exec = global();
+    // (a) dispatch round-trip: best of a few cross-thread submit
+    // round-trips (push → wake → run → reply). A scope-based probe
+    // would be short-circuited by the waiter draining its own queue.
+    // The recv is bounded: if calibration runs ON the only worker (or
+    // the pool is saturated), the probe job may never get a thread —
+    // blocking recv() would deadlock a size-1 executor — so fall back
+    // to a scope probe, which self-drains on the waiting thread.
+    let mut scope_ns = f64::INFINITY;
+    for _ in 0..8 {
+        let t0 = Instant::now();
+        let rx = exec.submit(|| {});
+        if rx.recv_timeout(Duration::from_millis(20)).is_err() {
+            // Starved probe (saturated or size-1 pool with calibration
+            // running on the worker itself); keep any samples already
+            // taken and stop submitting.
+            break;
+        }
+        scope_ns = scope_ns.min(t0.elapsed().as_nanos() as f64);
+    }
+    if !scope_ns.is_finite() {
+        // No probe came back: measure a one-task scope instead — the
+        // waiter self-drains its own queue, so this cannot starve.
+        for _ in 0..8 {
+            let t0 = Instant::now();
+            exec.scope(|s| s.spawn(|| {}));
+            scope_ns = scope_ns.min(t0.elapsed().as_nanos() as f64);
+        }
+    }
+    scope_ns = scope_ns.max(1_000.0);
+    // (b) per-search cost on a representative array.
+    let haystack: Vec<i64> = (0..4096).map(|i| (i as i64) * 7).collect();
+    let t0 = Instant::now();
+    let mut acc = 0usize;
+    for i in 0..2048u64 {
+        let needle = ((i * 13) % 28_672) as i64;
+        acc += crate::core::ranks::rank_low(&needle, &haystack);
+    }
+    std::hint::black_box(acc);
+    let search_ns = (t0.elapsed().as_nanos() as f64 / 2048.0).max(1.0);
+    // (c) per-element cost of the sequential merge kernel.
+    let a: Vec<i64> = (0..8192).map(|i| (i as i64) * 2).collect();
+    let b: Vec<i64> = (0..8192).map(|i| (i as i64) * 2 + 1).collect();
+    let mut out = vec![0i64; 16_384];
+    let t0 = Instant::now();
+    crate::core::seqmerge::merge_into(&a, &b, &mut out);
+    std::hint::black_box(&out);
+    let elem_ns = (t0.elapsed().as_nanos() as f64 / 16_384.0).max(0.05);
+    Tunables {
+        parallel_search_cutoff: (2.0 * scope_ns / search_ns) as usize,
+        parallel_merge_cutoff: (2.0 * scope_ns / elem_ns) as usize,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_runs_borrowed_tasks() {
+        let exec = Executor::new(3);
+        let mut data = vec![0usize; 64];
+        exec.scope(|s| {
+            for (i, chunk) in data.chunks_mut(8).enumerate() {
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = i * 8 + j;
+                    }
+                });
+            }
+        });
+        assert_eq!(data, (0..64usize).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_joins_before_returning() {
+        use std::sync::atomic::AtomicUsize;
+        let exec = Executor::new(2);
+        let count = AtomicUsize::new(0);
+        exec.scope(|s| {
+            for _ in 0..100 {
+                s.spawn(|| {
+                    std::thread::sleep(Duration::from_micros(50));
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn nested_scopes_do_not_deadlock() {
+        // More nested scopes than workers: the waiting threads must
+        // help execute queued tasks.
+        let exec = Executor::new(2);
+        let mut totals = vec![0usize; 8];
+        exec.scope(|s| {
+            for (i, total) in totals.iter_mut().enumerate() {
+                s.spawn(move || {
+                    let mut parts = vec![0usize; 4];
+                    global().scope(|inner| {
+                        for (j, p) in parts.iter_mut().enumerate() {
+                            inner.spawn(move || *p = i + j);
+                        }
+                    });
+                    *total = parts.iter().sum();
+                });
+            }
+        });
+        for (i, total) in totals.iter().enumerate() {
+            assert_eq!(*total, 4 * i + 6);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let exec = Executor::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            exec.scope(|s| {
+                s.spawn(|| panic!("task boom"));
+                s.spawn(|| {});
+            });
+        }));
+        assert!(result.is_err());
+        // The executor stays usable after a panic.
+        let mut v = [0u8; 4];
+        exec.scope(|s| {
+            for slot in v.iter_mut() {
+                s.spawn(move || *slot = 1);
+            }
+        });
+        assert_eq!(v, [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn submit_returns_results() {
+        let exec = Executor::new(2);
+        let rxs: Vec<_> = (0..20usize).map(|i| exec.submit(move || i * i)).collect();
+        let got: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(got, (0..20usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_many_covers_all_jobs() {
+        let exec = Executor::new(3);
+        let jobs: Vec<_> = (0..50usize).map(|i| move || i * 3).collect();
+        let rx = exec.submit_many(jobs);
+        let mut results: Vec<Option<usize>> = vec![None; 50];
+        for (i, r) in rx.iter() {
+            results[i] = Some(r);
+        }
+        for (i, r) in results.into_iter().enumerate() {
+            assert_eq!(r, Some(i * 3));
+        }
+    }
+
+    #[test]
+    fn sleep_jobs_overlap_across_workers() {
+        // A private executor: its deques see no traffic from sibling
+        // tests, so start latency is deterministic.
+        let exec = Executor::new(4);
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| exec.submit(|| std::thread::sleep(Duration::from_millis(50))))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // 4 x 50ms in parallel must take well under the 200ms serial time.
+        assert!(t0.elapsed() < Duration::from_millis(180));
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let exec = Executor::new(2);
+        exec.scope(|s| s.spawn(|| {}));
+        drop(exec); // must not hang
+    }
+
+    #[test]
+    fn global_is_shared_and_sized() {
+        let a = global() as *const Executor;
+        let b = global() as *const Executor;
+        assert_eq!(a, b);
+        // The default sizing floor only applies when the operator has
+        // not pinned the fleet width explicitly.
+        if std::env::var("EXEC_THREADS").is_err() {
+            assert!(global().size() >= 4);
+        }
+    }
+
+    #[test]
+    fn tunables_are_sane() {
+        let t = tunables();
+        // Env pins are taken verbatim; the clamped band only applies
+        // to measured values.
+        if std::env::var("EXEC_SEQ_CUTOFF").is_err() {
+            assert!((32..=4096).contains(&t.parallel_search_cutoff));
+        }
+        if std::env::var("EXEC_MERGE_CUTOFF").is_err() {
+            assert!((4096..=(1 << 18)).contains(&t.parallel_merge_cutoff));
+        }
+    }
+}

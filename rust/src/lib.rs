@@ -6,9 +6,10 @@
 //!
 //! - **L3 (this crate)** — the paper's algorithm and everything around
 //!   it: the five-case partitioner ([`core`]), parallel merge/sort
-//!   drivers, PRAM and BSP model simulators ([`pram`], [`bsp`]),
-//!   classical baselines ([`baseline`]), a coordinator service
-//!   ([`coordinator`]) and the PJRT runtime bridge ([`runtime`]).
+//!   drivers on a persistent work-stealing executor ([`exec`]), PRAM
+//!   and BSP model simulators ([`pram`], [`bsp`]), classical baselines
+//!   ([`baseline`]), a coordinator service ([`coordinator`]) and the
+//!   PJRT runtime bridge ([`runtime`]).
 //! - **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels
 //!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed from
 //!   rust via the `xla` crate. Python never runs on the request path.
@@ -31,6 +32,7 @@ pub mod bsp;
 pub mod cli;
 pub mod coordinator;
 pub mod core;
+pub mod exec;
 pub mod harness;
 pub mod metrics;
 pub mod pram;

@@ -92,7 +92,8 @@ fn cmd_demo() -> Result<(), String> {
     }
     t.print();
     let mut c = vec![0i64; a.len() + b.len()];
-    traff_merge::core::merge::run_tasks_seq(&a, &b, &mut c, &tasks);
+    traff_merge::core::merge::run_tasks_seq(&a, &b, &mut c, &tasks)
+        .map_err(|e| e.to_string())?;
     println!("\nC = {c:?}");
     let mut expect = [a, b].concat();
     expect.sort();

@@ -1,0 +1,206 @@
+//! Executor-era invariants: the persistent `exec` substrate must be
+//! transparent — same results as the sequential reference on every
+//! path — and must actually persist (no per-call thread churn).
+
+use traff_merge::core::merge::partition_parallel_with_cutoff;
+use traff_merge::core::sort::merge_round;
+use traff_merge::core::{parallel_merge, parallel_merge_sort, Blocks, Partition, Record};
+use traff_merge::testing::qcheck;
+use traff_merge::util::Rng;
+use traff_merge::{prop_assert, prop_assert_eq};
+
+/// (a) Stable sort property under duplicate-heavy keys and
+/// non-power-of-two `p`: drives the §3 rounds directly (bypassing the
+/// adaptive sequential crossover), so the odd-trailing-run pairing is
+/// exercised at every size.
+#[test]
+fn sort_rounds_stable_duplicate_heavy_non_pow2_p() {
+    qcheck("dup-heavy §3 rounds, odd p", 40, |g| {
+        let n = g.usize_in(2..3000);
+        let p = *g.choose(&[3usize, 5, 6, 7, 9, 11, 13]);
+        let mut data: Vec<Record> =
+            (0..n).map(|i| Record::new(g.i64_in(0..5), i as u64)).collect();
+        let mut expect = data.clone();
+        expect.sort_by_key(|r| r.key); // std stable sort as oracle
+        // Phase 1: stable-sort each block in place.
+        let blocks = Blocks::new(n, p);
+        let mut runs = blocks.starts();
+        runs.dedup();
+        for w in runs.clone().windows(2) {
+            data[w[0]..w[1]].sort_by_key(|r| r.key);
+        }
+        // Phase 2: the §3 rounds, ping-ponging.
+        let mut aux = data.clone();
+        let mut in_data = true;
+        while runs.len() > 2 {
+            runs = if in_data {
+                merge_round(&data, &mut aux, &runs, p)
+            } else {
+                merge_round(&aux, &mut data, &runs, p)
+            };
+            in_data = !in_data;
+        }
+        let result = if in_data { &data } else { &aux };
+        let got: Vec<(i64, u64)> = result.iter().map(|r| (r.key, r.tag)).collect();
+        let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
+        prop_assert_eq!(got, want);
+        Ok(())
+    });
+}
+
+/// End-to-end: duplicate-heavy stable sort at a size that forces the
+/// executor path through the public API, with non-power-of-two `p`.
+#[test]
+fn sort_stability_duplicate_heavy_non_pow2_p() {
+    let mut rng = Rng::new(606);
+    let n = 300_000;
+    for p in [6usize, 13] {
+        let mut v: Vec<Record> =
+            (0..n).map(|i| Record::new(rng.range(0, 7), i as u64)).collect();
+        let mut expect = v.clone();
+        expect.sort_by_key(|r| r.key);
+        parallel_merge_sort(&mut v, p);
+        let got: Vec<(i64, u64)> = v.iter().map(|r| (r.key, r.tag)).collect();
+        let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
+        assert_eq!(got, want, "instability at p={p}");
+    }
+}
+
+/// (b) The executor-dispatched partition equals the sequential one for
+/// arbitrary `p`, `threads > p` included, and `p + 1` not divisible by
+/// the chunk size (the chunk floor is 8, so most generated `p` hit a
+/// ragged final chunk). Cutoff 0 forces the parallel path.
+#[test]
+fn forced_parallel_partition_matches_sequential() {
+    qcheck("partition parallel == sequential", 80, |g| {
+        let a = g.sorted_vec_i64(0..2000, -100..100);
+        let b = g.sorted_vec_i64(0..2000, -100..100);
+        let p = g.usize_in(1..64);
+        let threads = p + 1 + g.usize_in(1..32); // always threads > p
+        let par = partition_parallel_with_cutoff(&a, &b, p, threads, 0);
+        let seq = Partition::compute(&a, &b, p);
+        prop_assert_eq!(&par.x, &seq.x);
+        prop_assert_eq!(&par.y, &seq.y);
+        prop_assert_eq!(&par.xbar, &seq.xbar);
+        prop_assert_eq!(&par.ybar, &seq.ybar);
+        Ok(())
+    });
+}
+
+#[cfg(target_os = "linux")]
+fn os_thread_count() -> Option<usize> {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()?
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn os_thread_count() -> Option<usize> {
+    None
+}
+
+/// (c) Executor reuse across 1000 consecutive merges: results stay
+/// deterministic and the process does not accumulate threads (the old
+/// per-call `std::thread::scope` spawned a fleet per merge; the
+/// executor must not).
+#[test]
+fn executor_reuse_1000_merges_no_thread_leak() {
+    let mut rng = Rng::new(404);
+    // Large pair: big enough to take the executor path regardless of
+    // the calibrated crossover (which clamps at 2^18 output elements).
+    let mut big_a: Vec<i64> = (0..150_000).map(|_| rng.range(0, 1 << 20)).collect();
+    let mut big_b: Vec<i64> = (0..150_000).map(|_| rng.range(0, 1 << 20)).collect();
+    big_a.sort();
+    big_b.sort();
+    let mut big_expect = [big_a.clone(), big_b.clone()].concat();
+    big_expect.sort();
+    // Small pair: exercises the sequential-crossover path in the same
+    // stream of calls.
+    let mut small_a: Vec<i64> = (0..700).map(|_| rng.range(0, 50)).collect();
+    let mut small_b: Vec<i64> = (0..500).map(|_| rng.range(0, 50)).collect();
+    small_a.sort();
+    small_b.sort();
+    let mut small_expect = [small_a.clone(), small_b.clone()].concat();
+    small_expect.sort();
+
+    let p = traff_merge::util::num_cpus();
+    let mut big_out = vec![0i64; big_expect.len()];
+    let mut small_out = vec![0i64; small_expect.len()];
+
+    // Warm up: executor threads + tunables calibration happen here.
+    parallel_merge(&big_a, &big_b, &mut big_out, p);
+    assert_eq!(big_out, big_expect);
+    let before = os_thread_count();
+
+    for i in 0..1000 {
+        if i % 10 == 0 {
+            big_out.iter_mut().for_each(|x| *x = 0);
+            parallel_merge(&big_a, &big_b, &mut big_out, p);
+            assert_eq!(big_out, big_expect, "nondeterminism at iteration {i}");
+        } else {
+            small_out.iter_mut().for_each(|x| *x = 0);
+            parallel_merge(&small_a, &small_b, &mut small_out, p);
+            assert_eq!(small_out, small_expect, "nondeterminism at iteration {i}");
+        }
+    }
+
+    let after = os_thread_count();
+    if let (Some(before), Some(after)) = (before, after) {
+        // Sibling tests may start harness threads concurrently; what
+        // must NOT happen is per-merge growth (the old scope'd path
+        // would have created thousands).
+        assert!(
+            after <= before + 4,
+            "thread leak: {before} threads before, {after} after 1000 merges"
+        );
+    }
+}
+
+/// Large-scale sanity: a full sort through service-sized data lands on
+/// the executor path and agrees with std.
+#[test]
+fn large_parallel_sort_matches_std() {
+    let mut rng = Rng::new(505);
+    let n = 1 << 19;
+    let mut v: Vec<i64> = (0..n).map(|_| rng.range(0, 1 << 16)).collect();
+    let mut expect = v.clone();
+    expect.sort();
+    parallel_merge_sort(&mut v, traff_merge::util::num_cpus().max(4));
+    assert_eq!(v, expect);
+}
+
+/// The executor path must keep the paper's stability guarantee under
+/// maximal duplicate pressure at scale (all-equal keys, forced
+/// parallel merge phase).
+#[test]
+fn large_all_equal_merge_is_stable() {
+    let n = 200_000;
+    let a: Vec<Record> = (0..n).map(|i| Record::new(7, i as u64)).collect();
+    let b: Vec<Record> =
+        (0..n).map(|i| Record::new(7, 1_000_000_000 + i as u64)).collect();
+    let mut out = vec![Record::new(0, 0); 2 * n];
+    parallel_merge(&a, &b, &mut out, traff_merge::util::num_cpus().max(4));
+    for (i, r) in out.iter().enumerate() {
+        let want = if i < n { i as u64 } else { 1_000_000_000 + (i - n) as u64 };
+        assert_eq!(r.tag, want, "stability broken at {i}");
+    }
+}
+
+/// `prop_assert` smoke so the macro import is exercised from an
+/// integration-test crate as well.
+#[test]
+fn executor_is_shared_across_call_sites() {
+    qcheck("shared executor determinism", 10, |g| {
+        let a = g.sorted_vec_i64(0..300, 0..20);
+        let b = g.sorted_vec_i64(0..300, 0..20);
+        let mut out1 = vec![0i64; a.len() + b.len()];
+        let mut out2 = vec![0i64; a.len() + b.len()];
+        parallel_merge(&a, &b, &mut out1, 8);
+        parallel_merge(&a, &b, &mut out2, 8);
+        prop_assert!(out1 == out2, "two runs disagree");
+        Ok(())
+    });
+}
