@@ -115,21 +115,21 @@ fn main() {
     t.row(vec![
         "hybrid (L1+L2+L3)".to_string(),
         fmt_duration(t_hybrid),
-        format!("{:.2}", melems_per_sec(n, t_hybrid)),
+        format!("{:.2}", melems_per_sec(n as u64, t_hybrid)),
         xla_calls.to_string(),
         "✓".to_string(),
     ]);
     t.row(vec![
         "rust (L3 only)".to_string(),
         fmt_duration(t_rust),
-        format!("{:.2}", melems_per_sec(n, t_rust)),
+        format!("{:.2}", melems_per_sec(n as u64, t_rust)),
         "0".to_string(),
         "✓".to_string(),
     ]);
     t.row(vec![
         "std::sort_by (1 thread)".to_string(),
         fmt_duration(t_std),
-        format!("{:.2}", melems_per_sec(n, t_std)),
+        format!("{:.2}", melems_per_sec(n as u64, t_std)),
         "0".to_string(),
         "✓".to_string(),
     ]);

@@ -62,7 +62,7 @@ fn main() {
         t.row(vec![
             name.to_string(),
             fmt_duration(secs),
-            format!("{:.1}", melems_per_sec(total, secs)),
+            format!("{:.1}", melems_per_sec(total as u64, secs)),
             format!("{:.2}x", t_loser / secs),
         ]);
     }

@@ -4,13 +4,139 @@
 //! the actual task-size distribution and case census per workload, and
 //! compare with the merge-path family's perfect (±1) balance.
 
+use std::sync::Arc;
 use traff_merge::baseline::merge_path::merge_path_segment_sizes;
 use traff_merge::core::merge::{carve_output, chunk_tasks, run_tasks_parallel};
 use traff_merge::core::seqmerge::merge_into;
-use traff_merge::core::{Case, Partition};
+use traff_merge::core::{parallel_merge, Case, Partition};
+use traff_merge::exec::Executor;
 use traff_merge::harness::{quick_mode, section, Bench};
 use traff_merge::metrics::Table;
 use traff_merge::workload::{adversarial_pair, sorted_keys, Dist};
+
+/// The PR-1 executor's `Mutex<VecDeque>` substrate, preserved (minus
+/// the scope machinery) as the bench baseline for E9f: round-robin
+/// injection across per-worker locked deques, lock-guarded pop-front /
+/// steal-back, condvar parking. The production executor replaced this
+/// with lock-free Chase–Lev deques.
+mod mutex_pool {
+    use std::collections::VecDeque;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::mpsc::{channel, Receiver};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::Duration;
+
+    type Job = Box<dyn FnOnce() + Send + 'static>;
+
+    struct Shared {
+        queues: Vec<Mutex<VecDeque<Job>>>,
+        rr: AtomicUsize,
+        sleep: Mutex<()>,
+        wake: Condvar,
+        shutdown: AtomicBool,
+    }
+
+    impl Shared {
+        fn pop(&self, id: usize) -> Option<Job> {
+            if let Some(job) = self.queues[id].lock().unwrap().pop_front() {
+                return Some(job);
+            }
+            let n = self.queues.len();
+            for k in 1..n {
+                if let Some(job) = self.queues[(id + k) % n].lock().unwrap().pop_back() {
+                    return Some(job);
+                }
+            }
+            None
+        }
+
+        fn queues_empty(&self) -> bool {
+            self.queues.iter().all(|q| q.lock().unwrap().is_empty())
+        }
+
+        fn notify_all(&self) {
+            let _guard = self.sleep.lock().unwrap();
+            self.wake.notify_all();
+        }
+    }
+
+    pub struct MutexPool {
+        shared: Arc<Shared>,
+        handles: Vec<JoinHandle<()>>,
+    }
+
+    impl MutexPool {
+        pub fn new(threads: usize) -> MutexPool {
+            let shared = Arc::new(Shared {
+                queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+                rr: AtomicUsize::new(0),
+                sleep: Mutex::new(()),
+                wake: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            });
+            let handles = (0..threads)
+                .map(|i| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || loop {
+                        if let Some(job) = shared.pop(i) {
+                            job();
+                            continue;
+                        }
+                        if shared.shutdown.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let guard = shared.sleep.lock().unwrap();
+                        if shared.queues_empty()
+                            && !shared.shutdown.load(Ordering::Acquire)
+                        {
+                            let _ = shared
+                                .wake
+                                .wait_timeout(guard, Duration::from_millis(50))
+                                .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            MutexPool { shared, handles }
+        }
+
+        pub fn submit_many<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
+        where
+            R: Send + 'static,
+            F: FnOnce() -> R + Send + 'static,
+        {
+            let (tx, rx) = channel();
+            let n = self.shared.queues.len();
+            let start = self.shared.rr.fetch_add(jobs.len().max(1), Ordering::Relaxed);
+            let mut buckets: Vec<Vec<Job>> = (0..n).map(|_| Vec::new()).collect();
+            for (i, job) in jobs.into_iter().enumerate() {
+                let tx = tx.clone();
+                buckets[(start + i) % n].push(Box::new(move || {
+                    let _ = tx.send((i, job()));
+                }));
+            }
+            drop(tx);
+            for (queue, bucket) in self.shared.queues.iter().zip(buckets) {
+                if !bucket.is_empty() {
+                    queue.lock().unwrap().extend(bucket);
+                }
+            }
+            self.shared.notify_all();
+            rx
+        }
+    }
+
+    impl Drop for MutexPool {
+        fn drop(&mut self) {
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.notify_all();
+            for handle in self.handles.drain(..) {
+                let _ = handle.join();
+            }
+        }
+    }
+}
 
 fn main() {
     let n = if quick_mode() { 100_000 } else { 1_000_000 };
@@ -120,6 +246,122 @@ fn main() {
             "same task set, same chunking: exec {:.2} ms | scoped spawn {:.2} ms",
             r_exec.median() * 1e3,
             r_scoped.median() * 1e3
+        );
+    }
+
+    section("E9f: executor substrate — lock-free Chase–Lev vs Mutex-deque baseline");
+    {
+        let threads = traff_merge::util::num_cpus();
+        let exec = Executor::new(threads);
+        let pool = mutex_pool::MutexPool::new(threads);
+        // One job = one sequential merge of an input pair; the job set
+        // is rebuilt per run (jobs are consumed), the inputs are shared
+        // behind Arcs so rebuild cost is just closure allocation.
+        fn merge_jobs(
+            pairs: &[(Arc<Vec<i64>>, Arc<Vec<i64>>)],
+        ) -> Vec<impl FnOnce() -> usize + Send + 'static> {
+            pairs
+                .iter()
+                .map(|(a, b)| {
+                    let a = Arc::clone(a);
+                    let b = Arc::clone(b);
+                    move || {
+                        let mut out = vec![0i64; a.len() + b.len()];
+                        merge_into(&a, &b, &mut out);
+                        std::hint::black_box(out.len())
+                    }
+                })
+                .collect()
+        }
+
+        // (i) uniform coarse tasks: 2 jobs per worker, equal sizes —
+        // the Mutex baseline's best case (no steal pressure). The
+        // acceptance bar is "no slower".
+        let coarse_n = if quick_mode() { 20_000 } else { 100_000 };
+        let coarse: Vec<(Arc<Vec<i64>>, Arc<Vec<i64>>)> = (0..2 * threads)
+            .map(|i| {
+                (
+                    Arc::new(sorted_keys(Dist::Uniform, coarse_n, 100 + i as u64)),
+                    Arc::new(sorted_keys(Dist::Uniform, coarse_n, 500 + i as u64)),
+                )
+            })
+            .collect();
+        let r_cl_coarse = Bench::new("chase-lev coarse")
+            .run(|| exec.submit_many(merge_jobs(&coarse)).iter().count());
+        let r_mx_coarse = Bench::new("mutex coarse")
+            .run(|| pool.submit_many(merge_jobs(&coarse)).iter().count());
+
+        // (ii) skewed fine-grained tasks: 1/i-sized jobs — round-robin
+        // pre-assignment load-imbalances the Mutex pool, and every
+        // rebalancing pop pays a lock; the Chase–Lev fleet rebalances
+        // with CAS steals. The acceptance bar is "faster".
+        let head = if quick_mode() { 40_000 } else { 200_000 };
+        let skewed: Vec<(Arc<Vec<i64>>, Arc<Vec<i64>>)> = (0..256)
+            .map(|i| {
+                let n = (head / (i + 1)).max(64);
+                (
+                    Arc::new(sorted_keys(Dist::Uniform, n, 1000 + i as u64)),
+                    Arc::new(sorted_keys(Dist::Uniform, n, 2000 + i as u64)),
+                )
+            })
+            .collect();
+        let r_cl_skew = Bench::new("chase-lev skewed")
+            .run(|| exec.submit_many(merge_jobs(&skewed)).iter().count());
+        let r_mx_skew = Bench::new("mutex skewed")
+            .run(|| pool.submit_many(merge_jobs(&skewed)).iter().count());
+
+        let mut t = Table::new(vec!["task set", "chase-lev", "mutex-deque", "speedup"]);
+        t.row(vec![
+            format!("uniform coarse ({} x {}k)", 2 * threads, coarse_n / 1000),
+            format!("{:.2} ms", r_cl_coarse.median() * 1e3),
+            format!("{:.2} ms", r_mx_coarse.median() * 1e3),
+            format!("{:.2}x", r_mx_coarse.median() / r_cl_coarse.median()),
+        ]);
+        t.row(vec![
+            "skewed fine (256 x 1/i)".to_string(),
+            format!("{:.2} ms", r_cl_skew.median() * 1e3),
+            format!("{:.2} ms", r_mx_skew.median() * 1e3),
+            format!("{:.2}x", r_mx_skew.median() / r_cl_skew.median()),
+        ]);
+        t.print();
+        let tel = exec.telemetry();
+        println!(
+            "chase-lev fleet: {} executed, {} steals, {} misses, {} injector batches",
+            tel.executed(),
+            tel.steals(),
+            tel.steal_misses(),
+            tel.injector_pops()
+        );
+    }
+
+    section("E9g: steal-driven fine chunking vs greedy k-group pre-balance");
+    {
+        let threads = traff_merge::util::num_cpus();
+        // Keep the output above the largest possible merge cutoff
+        // (2^18) so the merge phase cannot take its sequential bail.
+        let n = n.max(1 << 18);
+        let (a, b) = adversarial_pair(n, n / 2, 5);
+        let mut out = vec![0i64; a.len() + b.len()];
+        // Full production path (`parallel_merge`): fine mode must act
+        // at the PARTITION — grouping can only combine tasks, never
+        // split one — so the over-partitioning happens inside
+        // parallel_merge via exec::chunk_groups. The adversarial pair
+        // packs most of the work into few p-lane tasks, exactly the
+        // skew a finer partition plus steals recovers.
+        std::env::set_var("EXEC_FINE_CHUNK", "1"); // pin: greedy, p lanes
+        let r_greedy = Bench::new("greedy").run(|| {
+            parallel_merge(&a, &b, &mut out, threads);
+        });
+        std::env::set_var("EXEC_FINE_CHUNK", "8"); // pin: 8p lanes
+        let r_fine = Bench::new("fine").run(|| {
+            parallel_merge(&a, &b, &mut out, threads);
+        });
+        std::env::remove_var("EXEC_FINE_CHUNK"); // back to telemetry-driven
+        println!(
+            "adversarial-skew merge (n = {n}, p = {threads}): greedy {:.2} ms | fine (8x lanes) {:.2} ms | ratio {:.2}x",
+            r_greedy.median() * 1e3,
+            r_fine.median() * 1e3,
+            r_greedy.median() / r_fine.median()
         );
     }
 }

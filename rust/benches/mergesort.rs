@@ -135,7 +135,7 @@ fn main() {
             format!("{:.1} ms", r_par.median() * 1e3),
             format!("{:.1} ms", r_seq.median() * 1e3),
             format!("{:.1} ms", r_std.median() * 1e3),
-            format!("{:.1}", melems_per_sec(n, r_par.median())),
+            format!("{:.1}", melems_per_sec(n as u64, r_par.median())),
         ]);
     }
     t.print();
@@ -204,7 +204,7 @@ fn main() {
         t.row(vec![
             p.to_string(),
             format!("{:.1} ms", r.median() * 1e3),
-            format!("{:.1}", melems_per_sec(base.len(), r.median())),
+            format!("{:.1}", melems_per_sec(base.len() as u64, r.median())),
         ]);
     }
     t.print();
@@ -238,17 +238,63 @@ fn main() {
         t.row(vec![
             "exec (persistent workers)".to_string(),
             format!("{:.1} ms", r_exec.median() * 1e3),
-            format!("{:.1}", melems_per_sec(n, r_exec.median())),
+            format!("{:.1}", melems_per_sec(n as u64, r_exec.median())),
         ]);
         t.row(vec![
             "std::thread::scope per call".to_string(),
             format!("{:.1} ms", r_scoped.median() * 1e3),
-            format!("{:.1}", melems_per_sec(n, r_scoped.median())),
+            format!("{:.1}", melems_per_sec(n as u64, r_scoped.median())),
         ]);
         t.print();
         println!(
             "(acceptance: executor ≥ scoped — {} spawn/join generations per sort are gone)",
             1 + expected_rounds(p)
+        );
+    }
+
+    section("E7f: steal-driven fine chunking vs greedy pre-balance (skewed keys)");
+    {
+        // Above the largest possible merge cutoff so every round runs
+        // the parallel phase in BOTH modes.
+        let n = if quick_mode() { 1 << 19 } else { 2_000_000 };
+        let p = traff_merge::util::num_cpus();
+        let mut t = Table::new(vec!["dist", "greedy (p lanes)", "fine (8p lanes)", "ratio"]);
+        for dist in [Dist::Zipf, Dist::AdversarialSkew, Dist::Uniform] {
+            let base = raw_keys(dist, n, 55);
+            // Correctness cross-check in each mode before timing.
+            std::env::set_var("EXEC_FINE_CHUNK", "1"); // pin: greedy
+            let mut check = base.clone();
+            parallel_merge_sort(&mut check, p);
+            let mut expect = base.clone();
+            expect.sort();
+            assert_eq!(check, expect, "greedy mode mis-sorted {dist:?}");
+            let r_greedy = Bench::new("greedy").run(|| {
+                let mut v = base.clone();
+                parallel_merge_sort(&mut v, p);
+                v
+            });
+            std::env::set_var("EXEC_FINE_CHUNK", "8"); // pin: 8x finer
+            let mut check = base.clone();
+            parallel_merge_sort(&mut check, p);
+            assert_eq!(check, expect, "fine mode mis-sorted {dist:?}");
+            let r_fine = Bench::new("fine").run(|| {
+                let mut v = base.clone();
+                parallel_merge_sort(&mut v, p);
+                v
+            });
+            std::env::remove_var("EXEC_FINE_CHUNK"); // back to telemetry-driven
+            t.row(vec![
+                dist.name(),
+                format!("{:.1} ms", r_greedy.median() * 1e3),
+                format!("{:.1} ms", r_fine.median() * 1e3),
+                format!("{:.2}x", r_greedy.median() / r_fine.median()),
+            ]);
+        }
+        t.print();
+        println!(
+            "(fine mode partitions each merge round below the greedy per-pair\n\
+             lane share; cheap Chase–Lev steals absorb the extra groups and\n\
+             recover skew dynamically)"
         );
     }
 }

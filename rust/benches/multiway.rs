@@ -39,7 +39,7 @@ fn main() {
             format!("{:.1} ms", r_tree.median() * 1e3),
             format!("{:.1} ms", r_loser.median() * 1e3),
             format!("{:.1} ms", r_fold.median() * 1e3),
-            format!("{:.1}", melems_per_sec(total, r_tree.median())),
+            format!("{:.1}", melems_per_sec(total as u64, r_tree.median())),
         ]);
     }
     t.print();

@@ -58,7 +58,7 @@ fn main() {
             n.to_string(),
             format!("{:.3} ms", r_par.median() * 1e3),
             format!("{:.3} ms", r_seq.median() * 1e3),
-            format!("{:.1}", melems_per_sec(2 * n, r_par.median())),
+            format!("{:.1}", melems_per_sec(2 * n as u64, r_par.median())),
         ]);
     }
     t.print();
@@ -75,7 +75,7 @@ fn main() {
         t.row(vec![
             p.to_string(),
             format!("{:.3} ms", r.median() * 1e3),
-            format!("{:.1}", melems_per_sec(2 * n, r.median())),
+            format!("{:.1}", melems_per_sec(2 * n as u64, r.median())),
         ]);
     }
     t.print();

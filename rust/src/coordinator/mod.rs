@@ -23,7 +23,7 @@ use crate::core::record::F32Key;
 use crate::core::{parallel_merge, parallel_merge_sort};
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -114,12 +114,18 @@ impl Default for Config {
 }
 
 /// Rolling service metrics.
+///
+/// All counters are `AtomicU64` end to end: `busy_nanos` in particular
+/// used to accumulate `as_nanos() as usize`, which truncates on 32-bit
+/// targets (usize = u32 wraps after ~4.3 seconds of busy time) and
+/// silently wraps on long-running services. A u64 of nanoseconds holds
+/// ~584 years.
 #[derive(Debug, Default)]
 pub struct ServiceStats {
-    pub jobs: AtomicUsize,
-    pub elements: AtomicUsize,
-    pub xla_calls: AtomicUsize,
-    pub busy_nanos: AtomicUsize,
+    pub jobs: AtomicU64,
+    pub elements: AtomicU64,
+    pub xla_calls: AtomicU64,
+    pub busy_nanos: AtomicU64,
 }
 
 impl ServiceStats {
@@ -127,12 +133,13 @@ impl ServiceStats {
     /// sync and async entry point shares.
     pub fn record(&self, elems: usize, t0: Instant) {
         self.jobs.fetch_add(1, Ordering::Relaxed);
-        self.elements.fetch_add(elems, Ordering::Relaxed);
+        self.elements.fetch_add(elems as u64, Ordering::Relaxed);
         self.busy_nanos
-            .fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
-    pub fn snapshot(&self) -> (usize, usize, usize, f64) {
+    /// `(jobs, elements, xla_calls, busy_seconds)`.
+    pub fn snapshot(&self) -> (u64, u64, u64, f64) {
         (
             self.jobs.load(Ordering::Relaxed),
             self.elements.load(Ordering::Relaxed),
@@ -185,7 +192,7 @@ impl MergeService {
                 let rt = self.runtime.as_ref().expect("hybrid runtime");
                 let merger = XlaMerger::new(rt)?;
                 let out = self.hybrid_merge(&merger, a, b)?;
-                self.stats.xla_calls.fetch_add(merger.calls.get(), Ordering::Relaxed);
+                self.stats.xla_calls.fetch_add(merger.calls.get() as u64, Ordering::Relaxed);
                 out
             }
         };
@@ -209,9 +216,10 @@ impl MergeService {
                 let batcher = crate::runtime::XlaBatchMerger::new(rt).ok();
                 let out = self.hybrid_sort(&merger, batcher.as_ref(), &sorter, data)?;
                 self.stats.xla_calls.fetch_add(
-                    merger.calls.get()
+                    (merger.calls.get()
                         + sorter.calls.get()
-                        + batcher.map(|b| b.calls.get()).unwrap_or(0),
+                        + batcher.map(|b| b.calls.get()).unwrap_or(0))
+                        as u64,
                     Ordering::Relaxed,
                 );
                 out
@@ -400,17 +408,17 @@ impl MergeService {
                     results[i] = Some(r);
                 }
                 self.stats.xla_calls.fetch_add(
-                    batcher.calls.get() + merger.calls.get(),
+                    (batcher.calls.get() + merger.calls.get()) as u64,
                     Ordering::Relaxed,
                 );
                 results.into_iter().map(|r| r.unwrap()).collect()
             }
         };
-        self.stats.jobs.fetch_add(jobs.len(), Ordering::Relaxed);
-        self.stats.elements.fetch_add(total, Ordering::Relaxed);
+        self.stats.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        self.stats.elements.fetch_add(total as u64, Ordering::Relaxed);
         self.stats
             .busy_nanos
-            .fetch_add(t0.elapsed().as_nanos() as usize, Ordering::Relaxed);
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(out)
     }
 
@@ -495,7 +503,7 @@ mod tests {
 
     fn sorted_block(rng: &mut Rng, n: usize, base: i32) -> KeyedBlock {
         let mut keys: Vec<f32> = (0..n).map(|_| rng.range(0, 1000) as f32).collect();
-        keys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        keys.sort_by(|a, b| a.total_cmp(b));
         KeyedBlock { keys, vals: (0..n as i32).map(|i| base + i).collect() }
     }
 
@@ -511,7 +519,7 @@ mod tests {
         let a = sorted_block(&mut rng, 500, 0);
         let b = sorted_block(&mut rng, 700, 10_000);
         let m = svc.merge(&a, &b).unwrap();
-        assert!(m.keys.windows(2).all(|w| w[0] <= w[1]));
+        assert!(m.is_key_sorted());
         assert_eq!(m.len(), 1200);
 
         let raw = KeyedBlock {
@@ -519,7 +527,7 @@ mod tests {
             vals: (0..2000).collect(),
         };
         let s = svc.sort(&raw).unwrap();
-        assert!(s.keys.windows(2).all(|w| w[0] <= w[1]));
+        assert!(s.is_key_sorted());
         // Stability: equal keys keep increasing vals.
         for w in s.keys.windows(2).zip(s.vals.windows(2)) {
             if w.0[0] == w.0[1] {
@@ -558,7 +566,7 @@ mod tests {
         for (i, out) in results.into_iter().enumerate() {
             let out = out.expect("every job reports back");
             assert_eq!(out.len(), lens[i]);
-            assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
+            assert!(out.is_key_sorted());
             // Stability: equal keys keep increasing vals.
             for w in out.keys.windows(2).zip(out.vals.windows(2)) {
                 if w.0[0] == w.0[1] {
@@ -599,5 +607,57 @@ mod tests {
         let a = KRec { key: F32Key(1.0), val: 5 };
         let b = KRec { key: F32Key(1.0), val: 9 };
         assert_eq!(a, b);
+    }
+
+    /// NaN-key regression: the engines order f32 keys by
+    /// `f32::total_cmp` (via `F32Key`), so NaN keys must sort to a
+    /// deterministic position (above `+inf` for positive NaN) instead
+    /// of violating the sort invariant the service asserts — the old
+    /// `<=`-based check was vacuously false next to any NaN.
+    #[test]
+    fn nan_keys_sort_under_total_order() {
+        let svc = MergeService::new(Config {
+            threads: 4,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+        })
+        .unwrap();
+        let n = 512usize;
+        let mut keys: Vec<f32> = (0..n).map(|i| ((i * 37) % 101) as f32).collect();
+        for i in (0..n).step_by(17) {
+            keys[i] = f32::NAN;
+        }
+        let nans = keys.iter().filter(|k| k.is_nan()).count();
+        assert!(nans > 0);
+        let out = svc
+            .sort(&KeyedBlock { keys, vals: (0..n as i32).collect() })
+            .unwrap();
+        assert!(out.is_key_sorted(), "total-order invariant broken by NaN keys");
+        // Positive NaN is the maximum under total_cmp: all NaNs at the
+        // tail, the finite prefix ordinarily sorted.
+        assert!(out.keys[out.len() - nans..].iter().all(|k| k.is_nan()));
+        assert!(out.keys[..out.len() - nans].windows(2).all(|w| w[0] <= w[1]));
+        // Stability: the NaN payloads keep their submission order.
+        let nan_vals: Vec<i32> = out.vals[out.len() - nans..].to_vec();
+        let expect: Vec<i32> = (0..n).step_by(17).map(|i| i as i32).collect();
+        assert_eq!(nan_vals, expect, "NaN records lost their stable order");
+    }
+
+    #[test]
+    fn nan_keys_merge_stably() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+        })
+        .unwrap();
+        // Both inputs sorted under total_cmp (NaN last).
+        let a = KeyedBlock { keys: vec![1.0, 2.0, f32::NAN], vals: vec![0, 1, 2] };
+        let b = KeyedBlock { keys: vec![1.5, f32::NAN], vals: vec![10, 11] };
+        let m = svc.merge(&a, &b).unwrap();
+        assert!(m.is_key_sorted());
+        assert_eq!(m.keys.iter().filter(|k| k.is_nan()).count(), 2);
+        // Stable: for equal keys (the two NaNs) A's record precedes B's.
+        assert_eq!(m.vals, vec![0, 10, 1, 2, 11]);
     }
 }

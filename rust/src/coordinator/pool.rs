@@ -29,6 +29,14 @@ impl WorkerPool {
         self.size
     }
 
+    /// Snapshot of the shared executor's per-worker counters
+    /// (executed / steals / steal misses / injector batches / parks) —
+    /// the service-level window into the Chase–Lev substrate. See
+    /// [`crate::exec::telemetry`] for field semantics.
+    pub fn telemetry(&self) -> crate::exec::telemetry::Telemetry {
+        crate::exec::global().telemetry()
+    }
+
     /// Submit a job; returns a receiver for its result.
     pub fn submit<R: Send + 'static>(
         &self,

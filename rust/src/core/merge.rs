@@ -188,7 +188,10 @@ pub fn run_tasks_seq<T: Copy + Ord>(
 /// Execute merge tasks on the persistent executor. Each spawned task
 /// takes a contiguous group of merge tasks (every task is already
 /// `O(n/p)`, so chunking to near-equal element counts is within 2x of
-/// optimal — the paper's own balance bound).
+/// optimal — the paper's own balance bound). The group count comes
+/// from [`crate::exec::chunk_groups`]: one group per lane by default,
+/// or finer groups when the executor's steal telemetry says cheap
+/// Chase–Lev steals will absorb the skew dynamically.
 pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
     a: &[T],
     b: &[T],
@@ -202,8 +205,24 @@ pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
     {
         return run_tasks_seq(a, b, out, tasks);
     }
+    let groups_wanted = crate::exec::chunk_groups(out.len(), threads);
+    run_tasks_grouped(a, b, out, tasks, groups_wanted)
+}
+
+/// Parallel task execution with a caller-decided group budget — used by
+/// [`parallel_merge`] to thread the SAME lane count it partitioned with,
+/// so partition granularity and execution grouping cannot drift apart
+/// (and the telemetry sweep runs once per phase). Callers are expected
+/// to have applied the sequential crossover already.
+fn run_tasks_grouped<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    tasks: &[MergeTask],
+    groups_wanted: usize,
+) -> Result<(), TilingError> {
     let pairs = carve_output(tasks, out)?;
-    let groups = chunk_tasks(pairs, threads);
+    let groups = chunk_tasks(pairs, groups_wanted.max(1));
     crate::exec::global().scope(|s| {
         for group in groups {
             s.spawn(move || {
@@ -281,14 +300,36 @@ pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [
         merge_into(a, b, out);
         return;
     }
-    let part = partition_parallel(a, b, p, p);
+    // Fine-granularity mode happens HERE, at the partition: grouping
+    // (`chunk_tasks`) can only combine tasks, never split one, so a
+    // skewed task list must be born finer. When the executor's steal
+    // telemetry says cheap steals will rebalance the surplus (see
+    // [`crate::exec::chunk_groups`]), partition into more lanes than
+    // `p`; otherwise `lanes == p` and this is the paper's partition
+    // exactly. Correctness is granularity-independent (the partition
+    // is exact for every lane count). Below the sequential crossover
+    // the lane budget stays `p` — a finer partition would be pure
+    // wasted search work for a task sweep that runs inline anyway.
+    let below_cutoff = out.len() < crate::exec::tunables().parallel_merge_cutoff;
+    let lanes =
+        if below_cutoff { p } else { crate::exec::chunk_groups(out.len(), p) };
+    let part = partition_parallel(a, b, lanes, p);
     let tasks = part.tasks();
     debug_assert!(part.validate_tasks(&tasks).is_ok());
-    run_tasks_parallel(a, b, out, &tasks, p).expect("classifier produced non-tiling tasks");
+    if below_cutoff || tasks.len() <= 1 {
+        run_tasks_seq(a, b, out, &tasks).expect("classifier produced non-tiling tasks");
+    } else {
+        // Same lane budget for partition and grouping — decided once.
+        run_tasks_grouped(a, b, out, &tasks, lanes)
+            .expect("classifier produced non-tiling tasks");
+    }
 }
 
 /// Like [`parallel_merge`] but returns the partition + per-case task
-/// census for diagnostics (used by the balance bench, E9).
+/// census for diagnostics (used by the balance bench, E9). Unlike the
+/// production path it always partitions with exactly `p` lanes — the
+/// census is a view of the *paper's* structure at the requested `p`,
+/// not of the steal-telemetry-driven over-partitioning.
 pub fn parallel_merge_instrumented<T: Copy + Ord + Send + Sync>(
     a: &[T],
     b: &[T],

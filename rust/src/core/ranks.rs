@@ -12,6 +12,13 @@
 //! `B[j]`. This asymmetry is what makes the whole algorithm stable for
 //! free (paper §2) — every use in this crate goes through these two
 //! functions so the convention cannot drift.
+//!
+//! Midpoint invariant: every halving loop computes its midpoint as
+//! `lo + (hi - lo) / 2`, never `(lo + hi) >> 1` — the sum form
+//! overflows once `lo + hi > usize::MAX`, which is reachable for
+//! slices longer than `usize::MAX / 2` (the classic binary-search
+//! bug). The subtraction form cannot overflow because `lo <= hi <=
+//! len` holds throughout.
 
 use std::cmp::Ordering;
 
@@ -24,7 +31,7 @@ pub fn rank_low<T: Ord>(x: &T, xs: &[T]) -> usize {
     let mut lo = 0usize;
     let mut hi = xs.len();
     while lo < hi {
-        let mid = (lo + hi) >> 1;
+        let mid = lo + (hi - lo) / 2;
         // SAFETY-free: mid < hi <= len.
         if xs[mid] < *x {
             lo = mid + 1;
@@ -43,7 +50,7 @@ pub fn rank_high<T: Ord>(x: &T, xs: &[T]) -> usize {
     let mut lo = 0usize;
     let mut hi = xs.len();
     while lo < hi {
-        let mid = (lo + hi) >> 1;
+        let mid = lo + (hi - lo) / 2;
         if xs[mid] <= *x {
             lo = mid + 1;
         } else {
@@ -60,7 +67,7 @@ pub fn rank_low_by<T, F: FnMut(&T, &T) -> Ordering>(x: &T, xs: &[T], mut cmp: F)
     let mut lo = 0usize;
     let mut hi = xs.len();
     while lo < hi {
-        let mid = (lo + hi) >> 1;
+        let mid = lo + (hi - lo) / 2;
         if cmp(&xs[mid], x) == Ordering::Less {
             lo = mid + 1;
         } else {
@@ -75,7 +82,7 @@ pub fn rank_high_by<T, F: FnMut(&T, &T) -> Ordering>(x: &T, xs: &[T], mut cmp: F
     let mut lo = 0usize;
     let mut hi = xs.len();
     while lo < hi {
-        let mid = (lo + hi) >> 1;
+        let mid = lo + (hi - lo) / 2;
         if cmp(&xs[mid], x) != Ordering::Greater {
             lo = mid + 1;
         } else {

@@ -96,12 +96,22 @@ pub fn merge_round<T: Copy + Ord + Send + Sync>(
     let nruns = runs.len() - 1;
     debug_assert!(nruns >= 2);
     let npairs = nruns / 2;
-    let per_pair = (p / npairs).max(1);
+    // Fine-granularity mode is decided at the per-pair partition width:
+    // grouping can only combine tasks, never split one, so when the
+    // executor's steal telemetry favours finer work (see
+    // [`crate::exec::chunk_groups`]) each pair is partitioned with its
+    // share of an over-provisioned lane budget. With fine mode off —
+    // or below the sequential crossover, where a finer partition would
+    // be wasted search work — `lanes == p`, the original split.
+    let out_len = dst.len();
+    let parallel = out_len >= crate::exec::tunables().parallel_merge_cutoff;
+    let lanes = if parallel { crate::exec::chunk_groups(out_len, p) } else { p };
+    let per_pair = (lanes / npairs).max(1);
 
     // Build the global task list: each pair contributes its partition's
     // tasks, rebased into global coordinates. MergeTask.{a,b} index into
     // `src` directly; c_off into `dst`.
-    let mut global: Vec<(usize, usize, MergeTask)> = Vec::with_capacity(2 * p + 2);
+    let mut global: Vec<(usize, usize, MergeTask)> = Vec::with_capacity(2 * lanes + 2);
     let mut new_runs = Vec::with_capacity(npairs + 2);
     new_runs.push(0usize);
     for pair in 0..npairs {
@@ -146,15 +156,19 @@ pub fn merge_round<T: Copy + Ord + Send + Sync>(
         .collect();
     tasks.sort_by_key(|t| t.c_off);
 
-    // One parallel execution phase over all pairs' tasks.
+    // One parallel execution phase over all pairs' tasks. (`out_len`
+    // was read before carving: the carved pairs hold exclusive borrows
+    // of `dst` for the rest of the function.)
     let pairs = carve_output(&tasks, dst).expect("round tasks tile the destination");
-    if dst.len() < crate::exec::tunables().parallel_merge_cutoff {
+    if !parallel {
         for (t, slice) in pairs {
             merge_into(&src[t.a.clone()], &src[t.b.clone()], slice);
         }
         return new_runs;
     }
-    let groups = chunk_tasks(pairs, p);
+    // Same lane budget for the grouping: `lanes` groups over ~2·lanes
+    // tasks realizes the fine granularity the partition produced.
+    let groups = chunk_tasks(pairs, lanes);
     crate::exec::global().scope(|s| {
         for group in groups {
             s.spawn(move || {

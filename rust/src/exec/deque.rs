@@ -1,0 +1,417 @@
+//! Lock-free Chase–Lev work-stealing deque (Chase & Lev, SPAA'05),
+//! with the memory orderings of Lê, Pop, Cohen & Zappa Nardelli,
+//! "Correct and Efficient Work-Stealing for Weakly Ordered Memory
+//! Models" (PPoPP'13).
+//!
+//! Shape: the owning worker pushes and pops at the *bottom* end (LIFO,
+//! cache-warm); thieves take from the *top* end (FIFO) with a single
+//! CAS. Only that CAS is a synchronizing read-modify-write — the
+//! owner's push and (non-racing) pop are plain loads/stores plus
+//! fences, which is what makes the owner's fast path cheaper than any
+//! `Mutex<VecDeque>` round-trip.
+//!
+//! # Memory-ordering invariants (the correctness argument)
+//!
+//! `top` and `bottom` are `isize` indices into an infinite logical
+//! array (the buffer is a power-of-two circular window onto it). `top`
+//! only ever increases; the live window is `[top, bottom)`.
+//!
+//! - **Publish** (`push`): the slot write is `Relaxed`, followed by a
+//!   `Release` fence, then the `bottom` store. A thief that observes
+//!   the incremented `bottom` through its `Acquire` load therefore
+//!   also observes the slot contents (fence/fence pairing), so a thief
+//!   can never steal an uninitialized or half-written slot.
+//! - **Claim** (`steal`): `top` is loaded `Acquire`, then a `SeqCst`
+//!   fence, then `bottom` is loaded `Acquire`. The fence keeps the two
+//!   loads ordered, so the window the thief computes is never wider
+//!   than a real historical window. The slot is read *before* the
+//!   `SeqCst` CAS on `top`: a successful CAS proves `top` was still
+//!   `t` at the claim, and logical slot `t` is immutable while
+//!   `t >= top` — the owner only writes slots `>= bottom`, growth
+//!   copies the live window unchanged, and the owner can only recycle
+//!   the physical slot `t % cap` for logical index `t + cap` after
+//!   `top` has moved past `t`, which would make this CAS fail. The
+//!   winning CAS transfers sole ownership of the boxed job.
+//! - **Take race** (`pop`): the owner stores the decremented `bottom`,
+//!   executes a `SeqCst` fence, and only then loads `top`. The fence
+//!   places the decrement before the inspection in the single total
+//!   order that `SeqCst` fences and the thieves' `SeqCst` CASes agree
+//!   on, so when owner and thieves race for the last element exactly
+//!   one wins: either the thief's CAS lands first (the owner then sees
+//!   `top == bottom` and must CAS too, losing), or the owner's
+//!   decrement is visible first (the thief's recheck of `bottom` sees
+//!   an empty window, or its CAS fails).
+//! - **Growth** (`grow`): only the owner grows, so the buffer swap
+//!   itself is unsynchronized with other writers. The new buffer is
+//!   published with a `Release` store, paired with the thief's
+//!   `Acquire` load of the buffer pointer. The old buffer is *retired,
+//!   not freed*, until the deque is dropped — a thief still holding a
+//!   stale buffer pointer reads valid memory, and any value it reads
+//!   from a recycled slot is rejected by its subsequent CAS (see
+//!   Claim).
+//!
+//! Jobs are stored as thin raw pointers (`*mut Job`, a pointer to the
+//! boxed closure) so slots can be read speculatively; ownership is
+//! materialized back into a `Box` only by the unique claimant.
+
+use std::ptr;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
+use std::sync::Mutex;
+
+/// The job type stored in the deque (same shape as `exec::Job`).
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Outcome of a [`Deque::steal`] attempt.
+pub enum Steal {
+    /// The deque was (or appeared) empty.
+    Empty,
+    /// Lost the `top` CAS race to the owner or another thief. The
+    /// victim still has (or very recently had) work — retrying can pay.
+    Retry,
+    /// A job, now exclusively owned by the caller.
+    Success(Job),
+}
+
+/// Power-of-two circular slot array, indexed by the logical position.
+struct Buffer {
+    mask: usize,
+    slots: Box<[AtomicPtr<Job>]>,
+}
+
+impl Buffer {
+    fn alloc(cap: usize) -> *mut Buffer {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[AtomicPtr<Job>]> =
+            (0..cap).map(|_| AtomicPtr::new(ptr::null_mut())).collect();
+        Box::into_raw(Box::new(Buffer { mask: cap - 1, slots }))
+    }
+
+    #[inline]
+    fn cap(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    fn get(&self, i: isize) -> *mut Job {
+        self.slots[i as usize & self.mask].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    fn put(&self, i: isize, p: *mut Job) {
+        self.slots[i as usize & self.mask].store(p, Ordering::Relaxed);
+    }
+}
+
+/// The deque proper. `push` and `pop` MUST only be called by the
+/// owning worker thread (the `exec` module guarantees this via the
+/// worker-id TLS); `steal`, `len` and `is_empty` are safe from any
+/// thread.
+pub struct Deque {
+    /// Steal end; only ever incremented, always through `SeqCst` CAS
+    /// (thieves) or the owner's last-element CAS.
+    top: AtomicIsize,
+    /// Owner end; written only by the owner.
+    bottom: AtomicIsize,
+    /// Current buffer; swapped only by the owner in `grow`.
+    buf: AtomicPtr<Buffer>,
+    /// Buffers replaced by growth, kept alive until drop so a thief
+    /// holding a stale pointer never reads freed memory. Touched only
+    /// on growth (owner) and on drop — never on the hot path.
+    retired: Mutex<Vec<*mut Buffer>>,
+}
+
+// SAFETY: the raw buffer pointers are managed per the protocol above —
+// slots transfer job ownership through the `top` CAS, buffers are
+// freed only under `&mut self` in `Drop`.
+unsafe impl Send for Deque {}
+unsafe impl Sync for Deque {}
+
+impl Deque {
+    pub fn new() -> Deque {
+        Deque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Buffer::alloc(64)),
+            retired: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Approximate live length — monitoring and sleep checks only.
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        if b > t {
+            (b - t) as usize
+        } else {
+            0
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner-only: push a job at the bottom.
+    pub fn push(&self, job: Job) {
+        let p = Box::into_raw(Box::new(job));
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buf.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*buf).cap() as isize {
+                buf = self.grow(buf, b, t);
+            }
+            (*buf).put(b, p);
+        }
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only: pop from the bottom (LIFO).
+    pub fn pop(&self) -> Option<Job> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: undo the speculative decrement.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let p = unsafe { (*buf).get(b) };
+        if t == b {
+            // Last element: race the thieves for it with the same CAS
+            // they use, then restore `bottom` to the canonical empty
+            // position either way.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None;
+            }
+        }
+        Some(unsafe { *Box::from_raw(p) })
+    }
+
+    /// Any thread: try to take the oldest job from the top (FIFO).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Read the slot BEFORE claiming it: after a successful CAS the
+        // owner may recycle the slot at any time. A stale read here is
+        // harmless — it implies `top` already moved, so the CAS fails.
+        let buf = self.buf.load(Ordering::Acquire);
+        let p = unsafe { (*buf).get(t) };
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return Steal::Retry;
+        }
+        Steal::Success(unsafe { *Box::from_raw(p) })
+    }
+
+    /// Owner-only (from `push`): double the buffer, copy the live
+    /// window, publish the new buffer, retire the old one.
+    fn grow(&self, old: *mut Buffer, b: isize, t: isize) -> *mut Buffer {
+        let new = Buffer::alloc(unsafe { (*old).cap() } * 2);
+        unsafe {
+            for i in t..b {
+                (*new).put(i, (*old).get(i));
+            }
+        }
+        self.buf.store(new, Ordering::Release);
+        self.retired.lock().unwrap().push(old);
+        new
+    }
+}
+
+impl Default for Deque {
+    fn default() -> Deque {
+        Deque::new()
+    }
+}
+
+impl Drop for Deque {
+    fn drop(&mut self) {
+        // `&mut self`: no concurrent owner or thieves remain. Drop the
+        // unconsumed jobs, then every buffer ever allocated.
+        while let Some(job) = self.pop() {
+            drop(job);
+        }
+        unsafe {
+            drop(Box::from_raw(self.buf.load(Ordering::Relaxed)));
+            for old in self.retired.lock().unwrap().drain(..) {
+                drop(Box::from_raw(old));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_is_lifo_thief_is_fifo() {
+        let d = Deque::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..3 {
+            let log = Arc::clone(&log);
+            d.push(Box::new(move || log.lock().unwrap().push(i)));
+        }
+        // The thief takes the oldest job...
+        match d.steal() {
+            Steal::Success(job) => job(),
+            _ => panic!("steal from a 3-element deque failed"),
+        }
+        // ...the owner takes the newest.
+        d.pop().expect("two jobs left")();
+        d.pop().expect("one job left")();
+        assert!(d.pop().is_none());
+        assert_eq!(*log.lock().unwrap(), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn growth_preserves_every_job() {
+        let d = Deque::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let n = 1000; // well past the initial capacity of 64
+        for _ in 0..n {
+            let hits = Arc::clone(&hits);
+            d.push(Box::new(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        let mut ran = 0;
+        while let Some(job) = d.pop() {
+            job();
+            ran += 1;
+        }
+        assert_eq!(ran, n);
+        assert_eq!(hits.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn unconsumed_jobs_are_dropped_not_leaked() {
+        struct Canary(Arc<AtomicUsize>);
+        impl Drop for Canary {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let d = Deque::new();
+        for _ in 0..10 {
+            let canary = Canary(Arc::clone(&drops));
+            d.push(Box::new(move || {
+                let _keep = &canary;
+            }));
+        }
+        drop(d);
+        assert_eq!(drops.load(Ordering::Relaxed), 10);
+    }
+
+    /// Forced-steal correctness at the deque level: the owner only
+    /// pushes, so every job MUST arrive through a steal — across
+    /// growth, contention and CAS races, each job runs exactly once.
+    #[test]
+    fn concurrent_thieves_deliver_each_job_exactly_once() {
+        const JOBS: usize = 10_000;
+        const THIEVES: usize = 4;
+        let d = Arc::new(Deque::new());
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..JOBS).map(|_| AtomicUsize::new(0)).collect());
+        let stolen = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..THIEVES {
+                let d = Arc::clone(&d);
+                let stolen = Arc::clone(&stolen);
+                s.spawn(move || loop {
+                    if stolen.load(Ordering::Relaxed) >= JOBS {
+                        break;
+                    }
+                    match d.steal() {
+                        Steal::Success(job) => {
+                            job();
+                            stolen.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Empty | Steal::Retry => std::hint::spin_loop(),
+                    }
+                });
+            }
+            // This thread is the owner: push while the thieves race.
+            for i in 0..JOBS {
+                let seen = Arc::clone(&seen);
+                d.push(Box::new(move || {
+                    seen[i].fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+        });
+        assert_eq!(stolen.load(Ordering::Relaxed), JOBS);
+        for (i, count) in seen.iter().enumerate() {
+            assert_eq!(count.load(Ordering::Relaxed), 1, "job {i} misdelivered");
+        }
+    }
+
+    /// Owner pops race thief steals for the same jobs: nothing is lost
+    /// and nothing runs twice, including the 1-element take race.
+    #[test]
+    fn owner_pops_race_thief_steals() {
+        const JOBS: usize = 20_000;
+        let d = Arc::new(Deque::new());
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..JOBS).map(|_| AtomicUsize::new(0)).collect());
+        let done = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let d = Arc::clone(&d);
+                let done = Arc::clone(&done);
+                s.spawn(move || loop {
+                    match d.steal() {
+                        Steal::Success(job) => job(),
+                        Steal::Retry => {}
+                        Steal::Empty => {
+                            if done.load(Ordering::Acquire) {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+            // Owner: interleave pushes with pops, then drain. After
+            // `pop` returns None the deque holds nothing (None means
+            // empty or the last element went to a thief), so setting
+            // `done` afterwards cannot strand jobs.
+            for i in 0..JOBS {
+                let seen = Arc::clone(&seen);
+                d.push(Box::new(move || {
+                    seen[i].fetch_add(1, Ordering::Relaxed);
+                }));
+                if i % 3 == 0 {
+                    if let Some(job) = d.pop() {
+                        job();
+                    }
+                }
+            }
+            while let Some(job) = d.pop() {
+                job();
+            }
+            done.store(true, Ordering::Release);
+        });
+        for (i, count) in seen.iter().enumerate() {
+            assert_eq!(count.load(Ordering::Relaxed), 1, "job {i} misdelivered");
+        }
+    }
+}

@@ -4,20 +4,51 @@
 //! Architecture (one picture):
 //!
 //! ```text
-//! core phases                          exec                      coordinator
-//! ───────────────                      ─────────────────────     ─────────────────
-//! partition_parallel ─┐                ┌─ worker 0: deque ◄─┐    MergeService jobs
-//! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: deque ◄─┼─── WorkerPool facade
-//! sort block/rounds  ─┤                │  ...        steal ─┘    submit / submit_many
-//! k-way merge rounds ─┘                └─ worker N-1: deque
+//! core phases                          exec                        coordinator
+//! ───────────────                      ───────────────────────     ─────────────────
+//! partition_parallel ─┐                ┌─ worker 0: Chase–Lev ◄┐   MergeService jobs
+//! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: Chase–Lev ◄┼── WorkerPool facade
+//! sort block/rounds  ─┤                │  ...       CAS-steal ─┘   submit / submit_many
+//! k-way merge rounds ─┘                └─ injector (external entry)
 //! ```
 //!
 //! The paper's headline property is a merge with a *single*
 //! synchronization point; paying a full OS-thread spawn/join on every
-//! call threw that advantage away. [`Executor`] keeps a fixed set of
-//! worker threads alive for the process lifetime, each with its own
-//! injector deque; idle workers steal from the back of their
-//! neighbours' deques. Two entry points:
+//! call threw that advantage away, and (post-PR 1) guarding every
+//! worker queue with a `Mutex` made the substrate pay lock traffic the
+//! algorithm never asked for. [`Executor`] keeps a fixed set of worker
+//! threads alive for the process lifetime; each owns a **lock-free
+//! Chase–Lev deque** ([`deque`]): the owner pushes and pops at the
+//! bottom with plain stores plus fences, idle siblings steal from the
+//! top with a single CAS. The full memory-ordering argument (publish /
+//! claim / take-race / growth invariants) is documented in [`deque`];
+//! the short version is that the only synchronizing RMW on the hot
+//! path is the thief's `SeqCst` CAS on `top`, so owner-side push/pop —
+//! the overwhelmingly common operations — never block or bounce a lock
+//! cache line.
+//!
+//! Work enters the fleet on two paths:
+//!
+//! - a thread that *is* an executor worker (detected via TLS) pushes
+//!   spawned jobs straight onto its own deque, lock-free; siblings
+//!   steal them as they go idle — this is the nested-parallelism fast
+//!   path every core phase hits;
+//! - any other thread appends to the global **injector** queue (one
+//!   short critical section per submission or per batch). A worker
+//!   that runs dry takes a *batch* from the injector: it keeps the
+//!   first job and publishes the rest on its own deque, turning
+//!   external traffic into the same steal-distributed flow.
+//!
+//! Every worker keeps cache-padded counters — executed jobs, steals,
+//! steal misses (lost CAS races), injector batches, parks — exposed
+//! through [`Executor::telemetry`] (see [`telemetry`] for exact field
+//! semantics). The counters are not just monitoring: [`chunk_groups`]
+//! consults them to decide whether a parallel phase should carve its
+//! work *finer* than one group per lane (cheap steals rebalance skew
+//! better than any static pre-balance) or fall back to the greedy
+//! pre-balanced chunking when the fleet shows steal contention.
+//!
+//! Two entry points:
 //!
 //! - [`Executor::scope`] — structured fork/join over **borrowed** data,
 //!   the same shape as `std::thread::scope`: tasks spawned inside the
@@ -33,13 +64,21 @@
 //!   oversubscribing.
 //! - [`Executor::submit`] / [`Executor::submit_many`] — fire-and-collect
 //!   jobs owning their data (the coordinator's job layer). `submit_many`
-//!   batch-distributes a whole job list with one queue lock per worker
-//!   and a single wake-up broadcast.
+//!   enqueues a whole job list under one injector lock (or straight
+//!   onto the submitting worker's own deque) with a single wake-up
+//!   broadcast.
 //!
 //! [`tunables`] holds the measured sequential/parallel crossover points
-//! (overridable via `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF`); the
-//! drivers in `core::merge` consult them instead of hardcoded guesses.
+//! (overridable via `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF`) plus the
+//! fine-chunking floor (`EXEC_FINE_CHUNK_MIN`); the drivers in
+//! `core::merge` / `core::sort` consult them instead of hardcoded
+//! guesses.
 
+pub mod deque;
+pub mod telemetry;
+
+use deque::{Deque, Steal};
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -48,16 +87,28 @@ use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+use telemetry::{Counters, Telemetry};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+thread_local! {
+    /// `(Shared address, worker id)` when the current thread is an
+    /// executor worker — the lock-free fast path for `push_job`. The
+    /// address disambiguates between executors (tests run several).
+    static WORKER: Cell<(usize, usize)> = Cell::new((0, usize::MAX));
+}
+
 /// State shared between the executor handle and its workers.
 struct Shared {
-    /// One injector deque per worker. Owners pop the front; idle
-    /// workers steal from the back of their neighbours' deques.
-    queues: Vec<Mutex<VecDeque<Job>>>,
-    /// Round-robin cursor for spreading pushes across deques.
-    rr: AtomicUsize,
+    /// One Chase–Lev deque per worker: the owner pushes/pops at the
+    /// bottom, idle siblings CAS-steal at the top. See [`deque`] for
+    /// the memory-ordering invariants.
+    deques: Vec<Deque>,
+    /// Entry queue for jobs submitted from non-worker threads; workers
+    /// that run dry take batches from here onto their own deques.
+    injector: Mutex<VecDeque<Job>>,
+    /// Per-worker counters, index-aligned with `deques`.
+    counters: Vec<Counters>,
     /// Sleep/wake coordination for idle workers.
     sleep: Mutex<()>,
     wake: Condvar,
@@ -65,22 +116,68 @@ struct Shared {
 }
 
 impl Shared {
-    /// Worker-side pop: own deque first (front), then steal (back).
-    fn pop(&self, id: usize) -> Option<Job> {
-        if let Some(job) = self.queues[id].lock().unwrap().pop_front() {
+    /// Worker-side acquisition order: own deque first (bottom — LIFO,
+    /// cache-warm), then a batch from the injector, then steal from
+    /// the siblings (top — FIFO, oldest first).
+    fn next_job(&self, id: usize) -> Option<Job> {
+        if let Some(job) = self.deques[id].pop() {
             return Some(job);
         }
-        let n = self.queues.len();
+        if let Some(job) = self.pop_injector(id) {
+            return Some(job);
+        }
+        self.try_steal(id)
+    }
+
+    /// Take a batch from the injector: run the first job, publish up
+    /// to half the backlog (capped) on this worker's own deque where
+    /// the siblings can steal it — external submissions thus flow
+    /// through the same lock-free distribution as nested spawns.
+    fn pop_injector(&self, id: usize) -> Option<Job> {
+        const BATCH: usize = 32;
+        let mut queue = self.injector.lock().unwrap();
+        let first = queue.pop_front()?;
+        let extra = (queue.len() / 2).min(BATCH);
+        let moved: Vec<Job> = queue.drain(..extra).collect();
+        drop(queue);
+        self.counters[id].injector_pops.fetch_add(1, Ordering::Relaxed);
+        let took_extra = !moved.is_empty();
+        for job in moved {
+            self.deques[id].push(job);
+        }
+        if took_extra {
+            self.notify_all();
+        }
+        Some(first)
+    }
+
+    /// One steal sweep over the sibling deques, starting just past our
+    /// own. Lost CAS races are counted as `steal_misses` (the fall-back
+    /// signal for fine chunking) and retried a few times before moving
+    /// on — the worker loop re-sweeps anyway while queues are non-empty.
+    fn try_steal(&self, id: usize) -> Option<Job> {
+        let n = self.deques.len();
         for k in 1..n {
-            if let Some(job) = self.queues[(id + k) % n].lock().unwrap().pop_back() {
-                return Some(job);
+            let victim = (id + k) % n;
+            for _ in 0..4 {
+                match self.deques[victim].steal() {
+                    Steal::Success(job) => {
+                        self.counters[id].steals.fetch_add(1, Ordering::Relaxed);
+                        return Some(job);
+                    }
+                    Steal::Retry => {
+                        self.counters[id].steal_misses.fetch_add(1, Ordering::Relaxed);
+                        std::hint::spin_loop();
+                    }
+                    Steal::Empty => break,
+                }
             }
         }
         None
     }
 
     fn queues_empty(&self) -> bool {
-        self.queues.iter().all(|q| q.lock().unwrap().is_empty())
+        self.injector.lock().unwrap().is_empty() && self.deques.iter().all(|d| d.is_empty())
     }
 
     fn notify_one(&self) {
@@ -95,8 +192,13 @@ impl Shared {
 }
 
 fn worker_loop(shared: Arc<Shared>, id: usize) {
+    WORKER.with(|w| w.set((Arc::as_ptr(&shared) as usize, id)));
     loop {
-        if let Some(job) = shared.pop(id) {
+        if let Some(job) = shared.next_job(id) {
+            // Count before running so the bump happens-before anything
+            // the job publishes (e.g. its result send): a reader that
+            // synchronized with the job's output observes its count.
+            shared.counters[id].executed.fetch_add(1, Ordering::Relaxed);
             // Keep the worker alive across panicking jobs; scoped tasks
             // capture their own panics, plain jobs surface them as a
             // dropped result channel.
@@ -110,6 +212,7 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
         if shared.queues_empty() && !shared.shutdown.load(Ordering::Acquire) {
             // Timeout is a missed-wakeup backstop only; pushes notify
             // under the same lock, so the common path is event-driven.
+            shared.counters[id].parks.fetch_add(1, Ordering::Relaxed);
             let _ = shared.wake.wait_timeout(guard, Duration::from_millis(50)).unwrap();
         }
     }
@@ -126,8 +229,9 @@ impl Executor {
     pub fn new(threads: usize) -> Executor {
         assert!(threads > 0, "executor needs at least one worker");
         let shared = Arc::new(Shared {
-            queues: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
-            rr: AtomicUsize::new(0),
+            deques: (0..threads).map(|_| Deque::new()).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            counters: (0..threads).map(|_| Counters::default()).collect(),
             sleep: Mutex::new(()),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -146,12 +250,30 @@ impl Executor {
 
     /// Number of worker threads.
     pub fn size(&self) -> usize {
-        self.shared.queues.len()
+        self.shared.deques.len()
+    }
+
+    /// Snapshot the per-worker counters. See [`telemetry`] for field
+    /// semantics; snapshots are monotone but not instantaneous cuts.
+    pub fn telemetry(&self) -> Telemetry {
+        Telemetry { workers: self.shared.counters.iter().map(Counters::snapshot).collect() }
+    }
+
+    /// `Some(worker id)` when the calling thread is one of THIS
+    /// executor's workers.
+    fn worker_id(&self) -> Option<usize> {
+        let (addr, id) = WORKER.with(|w| w.get());
+        (addr == Arc::as_ptr(&self.shared) as usize && id < self.shared.deques.len())
+            .then_some(id)
     }
 
     fn push_job(&self, job: Job) {
-        let idx = self.shared.rr.fetch_add(1, Ordering::Relaxed) % self.shared.queues.len();
-        self.shared.queues[idx].lock().unwrap().push_back(job);
+        if let Some(id) = self.worker_id() {
+            // Lock-free owner push; siblings steal from the top.
+            self.shared.deques[id].push(job);
+        } else {
+            self.shared.injector.lock().unwrap().push_back(job);
+        }
         self.shared.notify_one();
     }
 
@@ -219,8 +341,9 @@ impl Executor {
         rx
     }
 
-    /// Batched submission: distribute a whole job list across the worker
-    /// deques with one lock per deque and a single wake-up broadcast.
+    /// Batched submission: enqueue a whole job list in one pass — one
+    /// injector lock for the batch (or lock-free pushes onto the
+    /// submitting worker's own deque) and a single wake-up broadcast.
     /// The receiver yields `(index, result)` pairs in completion order.
     pub fn submit_many<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
     where
@@ -228,21 +351,23 @@ impl Executor {
         F: FnOnce() -> R + Send + 'static,
     {
         let (tx, rx) = channel();
-        let n = self.shared.queues.len();
-        let start = self.shared.rr.fetch_add(jobs.len().max(1), Ordering::Relaxed);
-        let mut buckets: Vec<Vec<Job>> = (0..n).map(|_| Vec::new()).collect();
-        for (i, job) in jobs.into_iter().enumerate() {
-            let tx = tx.clone();
-            buckets[(start + i) % n].push(Box::new(move || {
-                let _ = tx.send((i, job()));
-            }));
-        }
-        drop(tx);
-        for (queue, bucket) in self.shared.queues.iter().zip(buckets) {
-            if !bucket.is_empty() {
-                queue.lock().unwrap().extend(bucket);
+        if let Some(id) = self.worker_id() {
+            for (i, job) in jobs.into_iter().enumerate() {
+                let tx = tx.clone();
+                self.shared.deques[id].push(Box::new(move || {
+                    let _ = tx.send((i, job()));
+                }));
+            }
+        } else {
+            let mut queue = self.shared.injector.lock().unwrap();
+            for (i, job) in jobs.into_iter().enumerate() {
+                let tx = tx.clone();
+                queue.push_back(Box::new(move || {
+                    let _ = tx.send((i, job()));
+                }));
             }
         }
+        drop(tx);
         self.shared.notify_all();
         rx
     }
@@ -329,7 +454,9 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         // Proxy job in the worker deques: runs the next queued task of
         // this scope, or no-ops if the waiter already took it. Stale
         // proxies left behind after the scope returns are harmless
-        // (the Arc keeps the empty queue alive).
+        // (the Arc keeps the empty queue alive). A worker spawning
+        // (nested scope) pushes the proxy onto its own deque lock-free;
+        // idle siblings steal it from the top.
         let proxy_state = Arc::clone(&self.state);
         self.exec.push_job(Box::new(move || {
             let task = proxy_state.tasks.lock().unwrap().pop_front();
@@ -365,16 +492,24 @@ pub struct Tunables {
     /// Minimum output length for which dispatching the merge phase to
     /// the executor beats a sequential task sweep.
     pub parallel_merge_cutoff: usize,
+    /// Minimum elements a task group must keep for steal-driven
+    /// over-partitioning (fine chunking) to amortize one steal's cost;
+    /// `0` disables fine chunking entirely.
+    pub fine_chunk_min: usize,
 }
 
 /// Conservative defaults served while calibration is in flight (and
 /// the floor/ceiling pair the measured values are clamped into).
-const DEFAULT_TUNABLES: Tunables =
-    Tunables { parallel_search_cutoff: 64, parallel_merge_cutoff: 1 << 15 };
+const DEFAULT_TUNABLES: Tunables = Tunables {
+    parallel_search_cutoff: 64,
+    parallel_merge_cutoff: 1 << 15,
+    fine_chunk_min: 1 << 12,
+};
 
 /// The crossover points, measured once per process on first use (a few
 /// hundred microseconds) against the live executor, or pinned via the
-/// `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF` environment variables.
+/// `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF` / `EXEC_FINE_CHUNK_MIN`
+/// environment variables.
 ///
 /// Deliberately NOT a blocking `get_or_init`: calibration itself runs
 /// a scope on the executor, so worker threads executing unrelated
@@ -402,6 +537,8 @@ pub fn tunables() -> Tunables {
                 .unwrap_or_else(|| measured.parallel_search_cutoff.clamp(32, 4096)),
             parallel_merge_cutoff: env_usize("EXEC_MERGE_CUTOFF")
                 .unwrap_or_else(|| measured.parallel_merge_cutoff.clamp(4096, 1 << 18)),
+            fine_chunk_min: env_usize("EXEC_FINE_CHUNK_MIN")
+                .unwrap_or_else(|| measured.fine_chunk_min.clamp(1 << 10, 1 << 16)),
         };
         let _ = CELL.set(t);
         STATE.store(2, Ordering::Release);
@@ -414,11 +551,63 @@ fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse().ok())
 }
 
+/// Upper bound on steal-driven over-partitioning: at most this many
+/// fine groups per requested lane.
+const FINE_FACTOR_CAP: usize = 8;
+
+/// How many task groups a parallel phase should carve `total` elements
+/// into when it wants `k` lanes.
+///
+/// Default is `k` — the greedy pre-balanced target (`chunk_tasks`'
+/// near-equal element counts, one group per lane). When the fleet's
+/// steal telemetry says cheap steals will rebalance skew dynamically,
+/// the phase is carved up to [`FINE_FACTOR_CAP`]·`k` finer groups
+/// instead, each keeping at least `tunables().fine_chunk_min` elements
+/// so a single steal's cost stays amortized. The live counters drive
+/// the decision:
+///
+/// - a single-worker fleet never over-partitions (nobody to steal);
+/// - if thieves are mostly *losing* their CAS races (`steal_misses`
+///   dominating `steals`), the deques are contended and extra groups
+///   would only add dispatch overhead — fall back to the pre-balanced
+///   path;
+/// - `EXEC_FINE_CHUNK` pins the factor outright (`1` = always greedy).
+pub fn chunk_groups(total: usize, k: usize) -> usize {
+    let k = k.max(1);
+    // Deliberately re-read per call (not cached in a OnceLock like the
+    // other pins): benches toggle greedy/fine modes within one process.
+    // One env lookup per parallel *phase* is noise next to the phase.
+    if let Some(factor) = env_usize("EXEC_FINE_CHUNK") {
+        return k.saturating_mul(factor.max(1));
+    }
+    let exec = global();
+    if exec.size() <= 1 {
+        return k;
+    }
+    let t = tunables();
+    if t.fine_chunk_min == 0 {
+        return k;
+    }
+    // Sum the two relevant counters directly — no snapshot allocation
+    // on the per-phase path.
+    let (mut steals, mut misses) = (0u64, 0u64);
+    for c in &exec.shared.counters {
+        steals += c.steals.load(Ordering::Relaxed);
+        misses += c.steal_misses.load(Ordering::Relaxed);
+    }
+    if misses > 4 * steals + 64 {
+        return k;
+    }
+    let max_fine = total / t.fine_chunk_min;
+    k.max(max_fine).min(k.saturating_mul(FINE_FACTOR_CAP))
+}
+
 /// Measure (a) the cross-thread dispatch round-trip, (b) the
-/// per-search and per-element costs of the sequential kernels, and
-/// derive the points where parallel dispatch pays for itself (with a
-/// 2x hysteresis so the crossover favours the lower-variance
-/// sequential path near the break-even point).
+/// per-search and per-element costs of the sequential kernels, (c) the
+/// per-steal cost of the Chase–Lev deque, and derive the points where
+/// parallel dispatch pays for itself (with a 2x hysteresis so the
+/// crossover favours the lower-variance sequential path near the
+/// break-even point).
 fn calibrate() -> Tunables {
     let exec = global();
     // (a) dispatch round-trip: best of a few cross-thread submit
@@ -468,9 +657,28 @@ fn calibrate() -> Tunables {
     crate::core::seqmerge::merge_into(&a, &b, &mut out);
     std::hint::black_box(&out);
     let elem_ns = (t0.elapsed().as_nanos() as f64 / 16_384.0).max(0.05);
+    // (d) per-steal cost: push a batch of no-op jobs into a private
+    // Chase–Lev deque and steal them all back on this thread (a
+    // single-threaded thief never loses its CAS, so every attempt
+    // succeeds). This bounds the thief-side CAS + transfer cost that
+    // fine chunking has to amortize.
+    let probe = Deque::new();
+    for _ in 0..1024 {
+        probe.push(Box::new(|| {}));
+    }
+    let t0 = Instant::now();
+    let mut got = 0usize;
+    while let Steal::Success(job) = probe.steal() {
+        drop(job);
+        got += 1;
+    }
+    let steal_ns = (t0.elapsed().as_nanos() as f64 / got.max(1) as f64).max(1.0);
     Tunables {
         parallel_search_cutoff: (2.0 * scope_ns / search_ns) as usize,
         parallel_merge_cutoff: (2.0 * scope_ns / elem_ns) as usize,
+        // A fine group must carry ~32 steals' worth of merge work so
+        // the rebalancing overhead stays in the low single percents.
+        fine_chunk_min: (32.0 * steal_ns / elem_ns) as usize,
     }
 }
 
@@ -600,6 +808,44 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_counts_executed_jobs() {
+        let exec = Executor::new(2);
+        let rxs: Vec<_> = (0..40usize).map(|i| exec.submit(move || i)).collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let tel = exec.telemetry();
+        assert_eq!(tel.workers.len(), 2);
+        // Every submitted job ran on a worker (this private executor
+        // sees no other traffic); the channel recv happens-after the
+        // counter bump, so the snapshot includes all of them.
+        assert_eq!(tel.executed(), 40, "telemetry {tel:?}");
+        // External submissions enter through the injector.
+        assert!(tel.injector_pops() >= 1, "telemetry {tel:?}");
+    }
+
+    #[test]
+    fn chunk_groups_stays_within_bounds() {
+        if std::env::var("EXEC_FINE_CHUNK").is_ok()
+            || std::env::var("EXEC_FINE_CHUNK_MIN").is_ok()
+        {
+            return; // operator pinned the policy; bounds don't apply
+        }
+        let k = 4;
+        // Tiny totals never over-partition below the amortization floor.
+        assert_eq!(chunk_groups(100, k), k);
+        // Large totals stay within [k, FINE_FACTOR_CAP * k].
+        let groups = chunk_groups(1 << 26, k);
+        assert!(
+            groups >= k && groups <= k * FINE_FACTOR_CAP,
+            "groups {groups} outside [{k}, {}]",
+            k * FINE_FACTOR_CAP
+        );
+        // Degenerate request.
+        assert_eq!(chunk_groups(0, 0), 1);
+    }
+
+    #[test]
     fn global_is_shared_and_sized() {
         let a = global() as *const Executor;
         let b = global() as *const Executor;
@@ -621,6 +867,9 @@ mod tests {
         }
         if std::env::var("EXEC_MERGE_CUTOFF").is_err() {
             assert!((4096..=(1 << 18)).contains(&t.parallel_merge_cutoff));
+        }
+        if std::env::var("EXEC_FINE_CHUNK_MIN").is_err() {
+            assert!(((1 << 10)..=(1 << 16)).contains(&t.fine_chunk_min));
         }
     }
 }

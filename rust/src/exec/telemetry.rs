@@ -1,0 +1,95 @@
+//! Per-worker executor counters — the `exec` telemetry surface.
+//!
+//! Each worker owns one cache-line-padded [`Counters`] block and is the
+//! only thread that ever writes it (`Relaxed` increments, so the hot
+//! path pays a single uncontended RMW and no false sharing). Readers
+//! take [`crate::exec::Executor::telemetry`] snapshots from any thread:
+//! each field is monotone, but a snapshot is not a globally
+//! instantaneous cut — it is meant for steering heuristics (the
+//! steal-driven fine-chunking mode), benchmarks and monitoring, not
+//! for exact accounting.
+//!
+//! Field semantics (one [`WorkerTelemetry`] per worker):
+//!
+//! - `executed` — jobs this worker picked up and ran, from any source
+//!   (own deque, injector batch, or stolen); counted at pick-up so the
+//!   bump is visible to anything the job publishes. Scope tasks
+//!   drained by a *waiting* thread are not counted here — the waiter
+//!   is not a worker.
+//! - `steals` — successful Chase–Lev steals from sibling deques: the
+//!   load-rebalancing traffic. Cheap, plentiful steals are what make
+//!   fine-grained chunking profitable.
+//! - `steal_misses` — steal attempts that lost the `top` CAS race to
+//!   the owner or another thief. Empty probes are *not* counted; a
+//!   miss always means the victim's deque was contended, so a high
+//!   miss:steal ratio is the signal to fall back to the greedy
+//!   pre-balanced chunking.
+//! - `injector_pops` — batches taken from the global injector (the
+//!   entry path for jobs submitted from non-worker threads).
+//! - `parks` — times the worker went to sleep with nothing to run
+//!   anywhere: the idleness signal.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One worker's live counters, padded to (at least) a cache line so
+/// neighbouring workers never write the same line.
+#[repr(align(128))]
+#[derive(Default)]
+pub(super) struct Counters {
+    pub executed: AtomicU64,
+    pub steals: AtomicU64,
+    pub steal_misses: AtomicU64,
+    pub injector_pops: AtomicU64,
+    pub parks: AtomicU64,
+}
+
+impl Counters {
+    pub(super) fn snapshot(&self) -> WorkerTelemetry {
+        WorkerTelemetry {
+            executed: self.executed.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            steal_misses: self.steal_misses.load(Ordering::Relaxed),
+            injector_pops: self.injector_pops.load(Ordering::Relaxed),
+            parks: self.parks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of one worker's lifetime counters. See the module docs for
+/// field semantics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerTelemetry {
+    pub executed: u64,
+    pub steals: u64,
+    pub steal_misses: u64,
+    pub injector_pops: u64,
+    pub parks: u64,
+}
+
+/// Whole-fleet snapshot: one entry per worker, plus summing helpers.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub workers: Vec<WorkerTelemetry>,
+}
+
+impl Telemetry {
+    pub fn executed(&self) -> u64 {
+        self.workers.iter().map(|w| w.executed).sum()
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals).sum()
+    }
+
+    pub fn steal_misses(&self) -> u64 {
+        self.workers.iter().map(|w| w.steal_misses).sum()
+    }
+
+    pub fn injector_pops(&self) -> u64 {
+        self.workers.iter().map(|w| w.injector_pops).sum()
+    }
+
+    pub fn parks(&self) -> u64 {
+        self.workers.iter().map(|w| w.parks).sum()
+    }
+}

@@ -12,7 +12,7 @@
 use traff_merge::cli::Args;
 use traff_merge::coordinator::{Config, Engine, MergeService};
 use traff_merge::core::{parallel_merge_instrumented, parallel_merge_sort, Partition};
-use traff_merge::metrics::{fmt_duration, melems_per_sec, time, Table};
+use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
 use traff_merge::pram::{pram_merge, Variant};
 use traff_merge::runtime::{KeyedBlock, XlaRuntime};
 use traff_merge::workload::{self, Dist};
@@ -118,7 +118,7 @@ fn cmd_merge(args: &Args) -> Result<(), String> {
         "merged {n} + {m} ({}) with p={p} in {} — {:.1} Melem/s",
         dist.name(),
         fmt_duration(secs),
-        melems_per_sec(n + m, secs)
+        melems_per_sec((n + m) as u64, secs)
     );
     let census = case_census(&tasks);
     println!("tasks: {} | case census: {census}", tasks.len());
@@ -149,7 +149,7 @@ fn cmd_sort(args: &Args) -> Result<(), String> {
         "sorted {n} ({}) with p={p} in {} — {:.1} Melem/s",
         dist.name(),
         fmt_duration(secs),
-        melems_per_sec(n, secs)
+        melems_per_sec(n as u64, secs)
     );
     let (ssecs, ()) = time(|| baseline.sort());
     println!("std stable sort: {} — speedup {:.2}x", fmt_duration(ssecs), ssecs / secs);
@@ -260,23 +260,68 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     println!("service up: engine={engine:?} threads={threads}");
     let mut rng = traff_merge::util::Rng::new(seed);
+    let blocks: Vec<KeyedBlock> = (0..jobs)
+        .map(|_| KeyedBlock {
+            keys: (0..n).map(|_| rng.range(0, 1 << 20) as f32).collect(),
+            vals: (0..n as i32).collect(),
+        })
+        .collect();
+    // Batched submission: the whole job list enters the executor in
+    // one pass (`MergeService::submit_sort_batch`) instead of one
+    // blocking `svc.sort` per job; per-job latency is measured from
+    // the batch submit to each job's completion, so it includes queue
+    // wait — the number a caller of the service actually sees.
     let t0 = std::time::Instant::now();
-    for j in 0..jobs {
-        let keys: Vec<f32> = (0..n).map(|_| rng.range(0, 1 << 20) as f32).collect();
-        let vals: Vec<i32> = (0..n as i32).collect();
-        let out = svc.sort(&KeyedBlock { keys, vals }).map_err(|e| e.to_string())?;
-        assert!(out.keys.windows(2).all(|w| w[0] <= w[1]));
-        if j == 0 {
-            println!("first job ok ({} records)", out.len());
-        }
+    let rx = svc.submit_sort_batch(blocks);
+    // Drain first, stamping each job's latency the moment it arrives;
+    // the O(n) invariant sweeps run AFTER the drain so consumer-side
+    // validation cost cannot inflate later jobs' recorded latency.
+    let mut completed: Vec<(f64, KeyedBlock)> = Vec::with_capacity(jobs);
+    for (_idx, result) in rx.iter() {
+        completed.push((t0.elapsed().as_secs_f64(), result?));
     }
     let secs = t0.elapsed().as_secs_f64();
+    // A job that panicked on a worker drops its result sender without
+    // sending; the drain above would just end early. Partial results
+    // must be an error, not a rosy report over the survivors.
+    if completed.len() != jobs {
+        return Err(format!("only {} of {jobs} jobs reported back", completed.len()));
+    }
+    let mut latencies: Vec<f64> = Vec::with_capacity(completed.len());
+    for (i, (latency, out)) in completed.iter().enumerate() {
+        // NaN-safe invariant check: keys ordered under f32::total_cmp.
+        if !out.is_key_sorted() {
+            return Err("service returned a block unsorted under total order".into());
+        }
+        if i == 0 {
+            println!("first job done ({} records)", out.len());
+        }
+        latencies.push(*latency);
+    }
     let (jobs_done, elems, xla_calls, busy) = svc.stats.snapshot();
     println!(
         "{jobs_done} jobs, {elems} records in {} — {:.2} Melem/s, {xla_calls} XLA calls, busy {:.2}s",
         fmt_duration(secs),
         melems_per_sec(elems, secs),
         busy
+    );
+    if !latencies.is_empty() {
+        latencies.sort_by(f64::total_cmp);
+        println!(
+            "job latency (batched submission): p50 {} | p99 {} | max {}",
+            fmt_duration(percentile(&latencies, 50.0)),
+            fmt_duration(percentile(&latencies, 99.0)),
+            fmt_duration(latencies[latencies.len() - 1]),
+        );
+    }
+    let tel = svc.pool.telemetry();
+    println!(
+        "executor: {} jobs executed, {} steals ({} misses), {} injector batches, {} parks",
+        tel.executed(),
+        tel.steals(),
+        tel.steal_misses(),
+        tel.injector_pops(),
+        tel.parks()
     );
     Ok(())
 }

@@ -68,8 +68,10 @@ pub fn fmt_duration(secs: f64) -> String {
     }
 }
 
-/// Throughput in Melem/s for `elems` processed in `secs`.
-pub fn melems_per_sec(elems: usize, secs: f64) -> f64 {
+/// Throughput in Melem/s for `elems` processed in `secs`. Takes `u64`
+/// so 32-bit targets cannot truncate large service counters (the
+/// arithmetic is f64 anyway).
+pub fn melems_per_sec(elems: u64, secs: f64) -> f64 {
     if secs == 0.0 {
         f64::INFINITY
     } else {

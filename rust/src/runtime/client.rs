@@ -6,8 +6,11 @@
 //! offline build environment carries no `xla` crate, so the default
 //! build compiles a stub that parses manifests and reports shapes but
 //! returns an error from [`XlaRuntime::load_dir`] / [`Executable::run`].
-//! Enabling `--features xla` (and adding the `xla` dependency to
-//! Cargo.toml) restores the real execution path unchanged.
+//! Enabling `--features xla` compiles this full path against the
+//! vendored API stub (`rust/vendor/xla-stub`) — CI keeps it
+//! type-checked — and still fails fast at `PjRtClient::cpu()`;
+//! pointing the `xla` path dependency at the real crate restores the
+//! execution path unchanged.
 
 use super::manifest::{ArtifactSpec, DType, Manifest};
 use anyhow::{anyhow, Result};

@@ -32,6 +32,18 @@ impl KeyedBlock {
         self.keys.is_empty()
     }
 
+    /// True when the keys are non-decreasing under `f32::total_cmp` —
+    /// the service's sort invariant. This is the NaN-safe check: a
+    /// plain `w[0] <= w[1]` sweep is vacuously *false* next to any NaN
+    /// key, so it would reject outputs that are correctly ordered
+    /// under the total order the engines actually sort by
+    /// (`F32Key`/`total_cmp`, which places NaN above `+inf`).
+    pub fn is_key_sorted(&self) -> bool {
+        self.keys
+            .windows(2)
+            .all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater)
+    }
+
     fn padded(&self, to: usize) -> (Vec<f32>, Vec<i32>) {
         let mut k = Vec::with_capacity(to);
         k.extend_from_slice(&self.keys);
