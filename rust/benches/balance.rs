@@ -364,4 +364,86 @@ fn main() {
             r_greedy.median() / r_fine.median()
         );
     }
+
+    section("E9h: injector — lock-free sharded vs Mutex baseline, 8 external submitters");
+    {
+        // High external submission rate: many NON-worker threads
+        // firing small batches concurrently. The Mutex baseline pays
+        // lock round-trips on the entry path (and its workers pay one
+        // per pop); the sharded injector spreads submitters over
+        // per-shard lock-free FIFO queues and workers drain batches
+        // with one CAS claim. Jobs are tiny merges, so the entry path
+        // (not the work) dominates — exactly the regime the ROADMAP
+        // named as the next contention target.
+        let threads = traff_merge::util::num_cpus();
+        let exec = Executor::new(threads);
+        let pool = mutex_pool::MutexPool::new(threads);
+        const SUBMITTERS: usize = 8;
+        let batches = if quick_mode() { 8 } else { 30 };
+        let batch_jobs = 64usize;
+        let job_n = 256usize;
+        let a = Arc::new(sorted_keys(Dist::Uniform, job_n, 7000));
+        let b = Arc::new(sorted_keys(Dist::Uniform, job_n, 7001));
+        let make_jobs = |a: &Arc<Vec<i64>>, b: &Arc<Vec<i64>>| {
+            (0..batch_jobs)
+                .map(|_| {
+                    let a = Arc::clone(a);
+                    let b = Arc::clone(b);
+                    move || {
+                        let mut out = vec![0i64; a.len() + b.len()];
+                        merge_into(&a, &b, &mut out);
+                        std::hint::black_box(out.len())
+                    }
+                })
+                .collect::<Vec<_>>()
+        };
+
+        let r_sharded = Bench::new("sharded injector").run(|| {
+            std::thread::scope(|s| {
+                for _ in 0..SUBMITTERS {
+                    s.spawn(|| {
+                        for _ in 0..batches {
+                            // Each submitter waits for its batch before
+                            // firing the next: round-trip under fire.
+                            let rx = exec.submit_many(make_jobs(&a, &b));
+                            assert_eq!(rx.iter().count(), batch_jobs);
+                        }
+                    });
+                }
+            });
+        });
+        let r_mutex = Bench::new("mutex injector").run(|| {
+            std::thread::scope(|s| {
+                for _ in 0..SUBMITTERS {
+                    s.spawn(|| {
+                        for _ in 0..batches {
+                            let rx = pool.submit_many(make_jobs(&a, &b));
+                            assert_eq!(rx.iter().count(), batch_jobs);
+                        }
+                    });
+                }
+            });
+        });
+        let mut t = Table::new(vec!["entry path", "time", "vs mutex"]);
+        t.row(vec![
+            format!("sharded lock-free ({SUBMITTERS} submitters x {batches} x {batch_jobs})"),
+            format!("{:.2} ms", r_sharded.median() * 1e3),
+            format!("{:.2}x", r_mutex.median() / r_sharded.median()),
+        ]);
+        t.row(vec![
+            "Mutex<VecDeque> baseline".to_string(),
+            format!("{:.2} ms", r_mutex.median() * 1e3),
+            "1.00x".to_string(),
+        ]);
+        t.print();
+        let (rates, _) = exec.recalibrate_now();
+        println!(
+            "sharded fleet windowed rates: {:.0} exec/s | {:.0} steals/s (miss ratio {:.2}) \
+             | {:.0} injector batches/s",
+            rates.executed_per_sec,
+            rates.steals_per_sec,
+            rates.miss_ratio(),
+            rates.injector_per_sec
+        );
+    }
 }

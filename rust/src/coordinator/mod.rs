@@ -494,6 +494,19 @@ impl MergeService {
     fn note_job(&self, elems: usize, t0: Instant) {
         self.stats.record(elems, t0);
     }
+
+    /// End-of-batch telemetry checkpoint: force a window roll on the
+    /// shared executor and run the tunables recalibration against the
+    /// freshly recorded rates, so a phase shift this batch caused (a
+    /// submission burst, a contention spike) is acted on — and
+    /// observable via [`crate::exec::recalibration_stats`] — even when
+    /// the batch finished inside one periodic epoch. Returns the
+    /// windowed rates and the number of tunable adjustments applied.
+    pub fn recalibration_checkpoint(
+        &self,
+    ) -> (crate::exec::telemetry::WindowRates, usize) {
+        self.pool.recalibrate_now()
+    }
 }
 
 #[cfg(test)]

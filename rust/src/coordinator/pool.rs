@@ -37,6 +37,21 @@ impl WorkerPool {
         crate::exec::global().telemetry()
     }
 
+    /// Windowed (rate-based) view of the shared executor: per-second
+    /// steal / injector / execution rates over the last recorded
+    /// epochs — what a service dashboard should chart instead of
+    /// lifetime totals.
+    pub fn window_rates(&self) -> crate::exec::telemetry::WindowRates {
+        crate::exec::global().window_rates()
+    }
+
+    /// Force an epoch roll + tunables recalibration on the shared
+    /// executor (the service checkpoint path); returns the fresh rates
+    /// and how many tunable adjustments were applied.
+    pub fn recalibrate_now(&self) -> (crate::exec::telemetry::WindowRates, usize) {
+        crate::exec::global().recalibrate_now()
+    }
+
     /// Submit a job; returns a receiver for its result.
     pub fn submit<R: Send + 'static>(
         &self,

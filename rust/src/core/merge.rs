@@ -19,7 +19,7 @@
 //!
 //! Both parallel phases execute on the persistent [`crate::exec`]
 //! executor (no per-call thread spawn/join); the sequential crossovers
-//! come from the measured [`crate::exec::tunables`] instead of
+//! come from the measured [`crate::exec::tunables_for`] instead of
 //! hardcoded constants.
 
 use super::cases::{MergeTask, Partition};
@@ -65,7 +65,7 @@ pub fn partition_parallel<T: Copy + Ord + Send + Sync>(
         b,
         p,
         threads,
-        crate::exec::tunables().parallel_search_cutoff,
+        crate::exec::tunables_for::<T>().parallel_search_cutoff,
     )
 }
 
@@ -189,9 +189,10 @@ pub fn run_tasks_seq<T: Copy + Ord>(
 /// takes a contiguous group of merge tasks (every task is already
 /// `O(n/p)`, so chunking to near-equal element counts is within 2x of
 /// optimal — the paper's own balance bound). The group count comes
-/// from [`crate::exec::chunk_groups`]: one group per lane by default,
-/// or finer groups when the executor's steal telemetry says cheap
-/// Chase–Lev steals will absorb the skew dynamically.
+/// from [`crate::exec::chunk_groups_for`] (keyed by `T`'s size class):
+/// one group per lane by default, or finer groups when the executor's
+/// windowed steal telemetry says cheap Chase–Lev steals will absorb
+/// the skew dynamically.
 pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
     a: &[T],
     b: &[T],
@@ -201,11 +202,11 @@ pub fn run_tasks_parallel<T: Copy + Ord + Send + Sync>(
 ) -> Result<(), TilingError> {
     if threads <= 1
         || tasks.len() <= 1
-        || out.len() < crate::exec::tunables().parallel_merge_cutoff
+        || out.len() < crate::exec::tunables_for::<T>().parallel_merge_cutoff
     {
         return run_tasks_seq(a, b, out, tasks);
     }
-    let groups_wanted = crate::exec::chunk_groups(out.len(), threads);
+    let groups_wanted = crate::exec::chunk_groups_for::<T>(out.len(), threads);
     run_tasks_grouped(a, b, out, tasks, groups_wanted)
 }
 
@@ -304,15 +305,15 @@ pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [
     // (`chunk_tasks`) can only combine tasks, never split one, so a
     // skewed task list must be born finer. When the executor's steal
     // telemetry says cheap steals will rebalance the surplus (see
-    // [`crate::exec::chunk_groups`]), partition into more lanes than
+    // [`crate::exec::chunk_groups_for`]), partition into more lanes than
     // `p`; otherwise `lanes == p` and this is the paper's partition
     // exactly. Correctness is granularity-independent (the partition
     // is exact for every lane count). Below the sequential crossover
     // the lane budget stays `p` — a finer partition would be pure
     // wasted search work for a task sweep that runs inline anyway.
-    let below_cutoff = out.len() < crate::exec::tunables().parallel_merge_cutoff;
+    let below_cutoff = out.len() < crate::exec::tunables_for::<T>().parallel_merge_cutoff;
     let lanes =
-        if below_cutoff { p } else { crate::exec::chunk_groups(out.len(), p) };
+        if below_cutoff { p } else { crate::exec::chunk_groups_for::<T>(out.len(), p) };
     let part = partition_parallel(a, b, lanes, p);
     let tasks = part.tasks();
     debug_assert!(part.validate_tasks(&tasks).is_ok());

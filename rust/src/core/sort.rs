@@ -31,7 +31,8 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
     // a sort does 1 + ceil(log2 p) parallel phases over O(n log n)
     // work, so compare the cutoff against n·log2(n), not n.
     let seq_work = n.saturating_mul((crate::util::log2_ceil(n) as usize).max(1));
-    if p == 1 || n < 2 * p || seq_work < crate::exec::tunables().parallel_merge_cutoff {
+    if p == 1 || n < 2 * p || seq_work < crate::exec::tunables_for::<T>().parallel_merge_cutoff
+    {
         let mut scratch = data.to_vec();
         merge_sort(data, &mut scratch);
         return;
@@ -98,14 +99,14 @@ pub fn merge_round<T: Copy + Ord + Send + Sync>(
     let npairs = nruns / 2;
     // Fine-granularity mode is decided at the per-pair partition width:
     // grouping can only combine tasks, never split one, so when the
-    // executor's steal telemetry favours finer work (see
-    // [`crate::exec::chunk_groups`]) each pair is partitioned with its
+    // executor's windowed steal telemetry favours finer work (see
+    // [`crate::exec::chunk_groups_for`]) each pair is partitioned with its
     // share of an over-provisioned lane budget. With fine mode off —
     // or below the sequential crossover, where a finer partition would
     // be wasted search work — `lanes == p`, the original split.
     let out_len = dst.len();
-    let parallel = out_len >= crate::exec::tunables().parallel_merge_cutoff;
-    let lanes = if parallel { crate::exec::chunk_groups(out_len, p) } else { p };
+    let parallel = out_len >= crate::exec::tunables_for::<T>().parallel_merge_cutoff;
+    let lanes = if parallel { crate::exec::chunk_groups_for::<T>(out_len, p) } else { p };
     let per_pair = (lanes / npairs).max(1);
 
     // Build the global task list: each pair contributes its partition's

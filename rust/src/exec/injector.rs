@@ -1,0 +1,437 @@
+//! Lock-free sharded injector — the external entry queue of the
+//! executor.
+//!
+//! Before this module the injector was one `Mutex<VecDeque>`: every
+//! submission from a non-worker thread and every worker drain crossed
+//! the same lock, so under high external submission rates the entry
+//! point serialized exactly the way the paper's single-synchronization
+//! merge works to avoid. The replacement shards the entry queue:
+//!
+//! - **Submitters** pick a shard by a thread-local submitter id (one
+//!   cheap TLS read; distinct submitter threads spread over shards, so
+//!   concurrent producers rarely touch the same cache line). A push is
+//!   one `swap` on the shard's tail plus one `Release` store — no lock,
+//!   no CAS loop, O(1) regardless of contention.
+//! - **Workers** drain a shard in batches, round-robin from a
+//!   per-worker starting offset. A worker claims a shard with a single
+//!   CAS on its `draining` flag; a claim failure means another worker
+//!   is already moving that shard's backlog onto its deque, so the
+//!   sweep just tries the next shard — a worker never waits on a
+//!   drain in progress.
+//! - **Per-shard FIFO**: each shard is a FIFO queue and a batch
+//!   submitted by one thread lands in one shard, so jobs drain in
+//!   exactly their submission order (the property that keeps
+//!   `submit_many` job-list order — and with it the stable, index-
+//!   aligned delivery the coordinator's batched sort relies on —
+//!   intact within a shard).
+//!
+//! # Shard structure and memory ordering
+//!
+//! Each `Shard` is a Vyukov-style intrusive MPSC queue: producers
+//! link nodes at the tail with an atomic `swap`, the (single, at a
+//! time) consumer unlinks at the head. The "single consumer" is
+//! whoever holds the shard's `draining` flag, so across the whole
+//! fleet the queue is multi-producer/multi-consumer while every
+//! individual drain session sees the simple MPSC invariants:
+//!
+//! - **Push**: the node is fully initialized before the `AcqRel`
+//!   `swap` publishes it as the new tail; the `Release` store of
+//!   `prev.next` is what makes it reachable. A consumer that observes
+//!   `next` non-null (`Acquire`) therefore observes the node's
+//!   contents. The `swap` linearizes concurrent producers — FIFO
+//!   order is swap order.
+//! - **Pop** (drain-claim holder only): read `head.next` `Acquire`;
+//!   null means empty *or* a producer is between its `swap` and its
+//!   `next` store — both are "nothing takeable now". Otherwise move
+//!   the job out of the next node, advance `head`, and free the old
+//!   head. The old head's `next` was already observed non-null, and a
+//!   node's `next` is written exactly once (by the one producer whose
+//!   `swap` returned it), so nobody can touch the freed node again.
+//! - **Claim**: `draining` CAS `Acquire` on claim / `Release` store on
+//!   release orders consumer sessions, so `head` itself needs no
+//!   ordering beyond the flag's.
+//! - **`len`**: a published length per shard, incremented after a push
+//!   completes and decremented per pop. It is the *lock-free idleness
+//!   signal*: `Shared::is_idle` sums these instead of taking any lock.
+//!   It can transiently undercount a push in flight; the executor's
+//!   park protocol tolerates that because a submitter always notifies
+//!   *after* its push (and its `len` increment) completes.
+//!
+//! The momentary `len > 0` / `pop == None` inconsistency window (a
+//! producer preempted between `swap` and the `next` store) only makes
+//! a draining worker fall through to stealing and re-sweep; it cannot
+//! park (idleness keys off `len`) and it cannot lose the job.
+
+use std::cell::{Cell, UnsafeCell};
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+
+/// The job type stored in the injector (same shape as `exec::Job`).
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-wide submitter-id allocator; each submitting thread gets a
+/// stable small integer on first use, which picks its shard.
+static SUBMITTER_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SUBMITTER_ID: Cell<usize> = Cell::new(usize::MAX);
+}
+
+/// Stable per-thread submitter id (assigned on first submission).
+fn submitter_id() -> usize {
+    SUBMITTER_ID.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = SUBMITTER_SEQ.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+/// One queue node. `next` is written once by the producer that pushed
+/// the *following* node; `job` is moved out once by the consumer that
+/// pops it (the node then lives on as the queue's stub).
+struct Node {
+    next: AtomicPtr<Node>,
+    job: UnsafeCell<Option<Job>>,
+}
+
+impl Node {
+    fn alloc(job: Option<Job>) -> *mut Node {
+        Box::into_raw(Box::new(Node {
+            next: AtomicPtr::new(ptr::null_mut()),
+            job: UnsafeCell::new(job),
+        }))
+    }
+}
+
+/// One injector shard: an intrusive FIFO queue (see module docs) plus
+/// its drain claim and published length. Padded so neighbouring
+/// shards' producers never write the same cache line.
+#[repr(align(128))]
+struct Shard {
+    /// Producers `swap` here; the returned previous tail is the node
+    /// whose `next` the producer links.
+    tail: AtomicPtr<Node>,
+    /// Consumer end; the current node is the stub (job already taken).
+    head: AtomicPtr<Node>,
+    /// Drain claim: exactly one worker at a time pops this shard.
+    draining: AtomicBool,
+    /// Published length — the lock-free idleness/backlog signal.
+    len: AtomicUsize,
+}
+
+// SAFETY: the raw node pointers follow the single-writer protocols in
+// the module docs — `next` has one writer, `job` is moved out by the
+// exclusive drain-claim holder, nodes are freed only after their
+// `next` link was observed (no later access can exist).
+unsafe impl Send for Shard {}
+unsafe impl Sync for Shard {}
+
+impl Shard {
+    fn new() -> Shard {
+        let stub = Node::alloc(None);
+        Shard {
+            tail: AtomicPtr::new(stub),
+            head: AtomicPtr::new(stub),
+            draining: AtomicBool::new(false),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lock-free FIFO push from any thread.
+    fn push(&self, job: Job) {
+        let node = Node::alloc(Some(job));
+        // AcqRel: Release publishes our node's initialization to the
+        // producer that will link behind it; Acquire makes the previous
+        // producer's node allocation visible before we store into it.
+        let prev = self.tail.swap(node, Ordering::AcqRel);
+        // SAFETY: `prev` is a live node — nodes are freed only after
+        // their `next` is observed non-null by the consumer, and only
+        // this producer ever writes this `next`.
+        unsafe { (*prev).next.store(node, Ordering::Release) };
+        self.len.fetch_add(1, Ordering::Release);
+    }
+
+    /// Pop the oldest job.
+    ///
+    /// # Safety
+    /// Caller must hold this shard's `draining` claim (exclusive
+    /// consumer); the `Injector::drain` sweep is the only caller.
+    unsafe fn pop(&self) -> Option<Job> {
+        let head = self.head.load(Ordering::Relaxed);
+        let next = (*head).next.load(Ordering::Acquire);
+        if next.is_null() {
+            // Empty, or a producer is mid-push: nothing takeable now.
+            return None;
+        }
+        // The Acquire above makes `next`'s contents visible; the node
+        // becomes the new stub once its job is moved out. Only the
+        // claim holder touches `job`, so the &mut through the
+        // UnsafeCell cannot alias another access.
+        let job = (*(*next).job.get()).take();
+        debug_assert!(job.is_some(), "non-stub node without a job");
+        self.head.store(next, Ordering::Relaxed);
+        // The old stub's `next` was observed non-null: its one writer
+        // is done and no other thread holds it — safe to free.
+        drop(Box::from_raw(head));
+        self.len.fetch_sub(1, Ordering::Release);
+        job
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        // `&mut self`: workers are joined and no external submitter
+        // can hold a reference (dropping the Executor requires
+        // ownership). Walk the chain, dropping unconsumed jobs.
+        let mut p = *self.head.get_mut();
+        while !p.is_null() {
+            // SAFETY: exclusive access; every node in the chain is a
+            // live allocation from `Node::alloc`.
+            let next = unsafe { (*p).next.load(Ordering::Relaxed) };
+            drop(unsafe { Box::from_raw(p) });
+            p = next;
+        }
+    }
+}
+
+/// The sharded external-entry queue. See the module docs.
+pub struct Injector {
+    shards: Box<[Shard]>,
+    /// `shards.len() - 1`; shard count is a power of two.
+    mask: usize,
+}
+
+impl Injector {
+    /// Build an injector with at least `shards` shards (rounded up to
+    /// a power of two).
+    pub fn new(shards: usize) -> Injector {
+        let n = shards.max(1).next_power_of_two();
+        Injector {
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            mask: n - 1,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn home_shard(&self) -> &Shard {
+        &self.shards[submitter_id() & self.mask]
+    }
+
+    /// Push one job from any thread (lock-free).
+    pub fn push(&self, job: Job) {
+        self.home_shard().push(job);
+    }
+
+    /// Push a whole batch from any thread into ONE shard, preserving
+    /// its order — the per-shard FIFO guarantee `submit_many` relies
+    /// on.
+    pub fn push_batch(&self, jobs: Vec<Job>) {
+        let shard = self.home_shard();
+        for job in jobs {
+            shard.push(job);
+        }
+    }
+
+    /// Drain up to `max` jobs from the first claimable non-empty
+    /// shard, sweeping round-robin from `start`. Returns in per-shard
+    /// FIFO order; an empty result means every shard was empty or
+    /// being drained by another worker.
+    pub fn drain(&self, start: usize, max: usize) -> Vec<Job> {
+        let n = self.shards.len();
+        let mut out = Vec::new();
+        for k in 0..n {
+            let shard = &self.shards[(start + k) & self.mask];
+            if shard.len.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            if shard
+                .draining
+                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+            {
+                // Another worker is already distributing this backlog.
+                continue;
+            }
+            while out.len() < max {
+                // SAFETY: we hold the drain claim.
+                match unsafe { shard.pop() } {
+                    Some(job) => out.push(job),
+                    None => break,
+                }
+            }
+            shard.draining.store(false, Ordering::Release);
+            if !out.is_empty() {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Published backlog across all shards — lock-free; may
+    /// transiently undercount a push in flight (see module docs).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len.load(Ordering::Acquire)).sum()
+    }
+
+    /// Lock-free idleness check against the published lengths.
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.len.load(Ordering::Acquire) == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn single_submitter_drains_in_fifo_order() {
+        // One shard so the single submitting thread and the drain see
+        // the same queue regardless of this thread's submitter id.
+        let inj = Injector::new(1);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let n = if cfg!(miri) { 40 } else { 400 };
+        for i in 0..n {
+            let log = Arc::clone(&log);
+            inj.push(Box::new(move || log.lock().unwrap().push(i)));
+        }
+        assert_eq!(inj.len(), n);
+        // Drain in bounded batches, running jobs in drained order.
+        let mut drained = 0;
+        while drained < n {
+            let batch = inj.drain(drained, 32);
+            assert!(!batch.is_empty(), "backlog of {} yielded nothing", n - drained);
+            assert!(batch.len() <= 32, "drain ignored the batch cap");
+            drained += batch.len();
+            for job in batch {
+                job();
+            }
+        }
+        assert!(inj.is_empty());
+        assert_eq!(*log.lock().unwrap(), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_push_keeps_submission_order_in_one_shard() {
+        let inj = Injector::new(8);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let n = if cfg!(miri) { 30 } else { 300 };
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                let log = Arc::clone(&log);
+                Box::new(move || log.lock().unwrap().push(i)) as Job
+            })
+            .collect();
+        inj.push_batch(jobs);
+        // The batch went to ONE shard; a sweep from any start must
+        // return it in submission order.
+        let mut drained = 0;
+        while drained < n {
+            let batch = inj.drain(3, n);
+            drained += batch.len();
+            for job in batch {
+                job();
+            }
+        }
+        assert_eq!(*log.lock().unwrap(), (0..n).collect::<Vec<_>>());
+    }
+
+    /// Satellite stress: N submitter threads × M batches race the
+    /// drains; every job must execute exactly once.
+    #[test]
+    fn concurrent_submitters_and_drains_exactly_once() {
+        let submitters = if cfg!(miri) { 2 } else { 8 };
+        let batches = if cfg!(miri) { 3 } else { 40 };
+        let batch_len = if cfg!(miri) { 8 } else { 32 };
+        let total = submitters * batches * batch_len;
+        let inj = Arc::new(Injector::new(4));
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+        let done = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for t in 0..submitters {
+                let inj = Arc::clone(&inj);
+                let seen = Arc::clone(&seen);
+                s.spawn(move || {
+                    for b in 0..batches {
+                        let jobs: Vec<Job> = (0..batch_len)
+                            .map(|j| {
+                                let seen = Arc::clone(&seen);
+                                let idx = t * batches * batch_len + b * batch_len + j;
+                                Box::new(move || {
+                                    seen[idx].fetch_add(1, Ordering::Relaxed);
+                                }) as Job
+                            })
+                            .collect();
+                        inj.push_batch(jobs);
+                    }
+                });
+            }
+            // Two draining "workers" race the submitters and each
+            // other (drain-claim CAS churn included).
+            for w in 0..2 {
+                let inj = Arc::clone(&inj);
+                let done = Arc::clone(&done);
+                s.spawn(move || loop {
+                    let batch = inj.drain(w, 16);
+                    if batch.is_empty() {
+                        if done.load(Ordering::Acquire) >= total {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    let got = batch.len();
+                    for job in batch {
+                        job();
+                    }
+                    done.fetch_add(got, Ordering::AcqRel);
+                });
+            }
+        });
+        for (i, count) in seen.iter().enumerate() {
+            assert_eq!(count.load(Ordering::Relaxed), 1, "job {i} misdelivered");
+        }
+        assert!(inj.is_empty());
+        assert_eq!(inj.len(), 0);
+    }
+
+    #[test]
+    fn unconsumed_jobs_are_dropped_not_leaked() {
+        struct Canary(Arc<AtomicUsize>);
+        impl Drop for Canary {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let inj = Injector::new(4);
+        for _ in 0..10 {
+            let canary = Canary(Arc::clone(&drops));
+            inj.push(Box::new(move || {
+                let _keep = &canary;
+            }));
+        }
+        // Drain (and drop unrun) a couple, leave the rest to Drop.
+        let batch = inj.drain(0, 3);
+        drop(batch);
+        drop(inj);
+        assert_eq!(drops.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn shard_count_rounds_to_power_of_two() {
+        assert_eq!(Injector::new(1).shard_count(), 1);
+        assert_eq!(Injector::new(3).shard_count(), 4);
+        assert_eq!(Injector::new(8).shard_count(), 8);
+        assert_eq!(Injector::new(9).shard_count(), 16);
+    }
+}

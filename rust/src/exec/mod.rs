@@ -9,7 +9,16 @@
 //! partition_parallel ─┐                ┌─ worker 0: Chase–Lev ◄┐   MergeService jobs
 //! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: Chase–Lev ◄┼── WorkerPool facade
 //! sort block/rounds  ─┤                │  ...       CAS-steal ─┘   submit / submit_many
-//! k-way merge rounds ─┘                └─ injector (external entry)
+//! k-way merge rounds ─┘                └─◄ injector shard 0..s ◄── external submitters
+//!                                           (lock-free FIFO,        (shard by thread)
+//!                                            batch drain)
+//!
+//!        counters ──► window ring (per-epoch deltas, rolled by the
+//!        (lifetime)   first worker to notice the interval elapse)
+//!                        │
+//!                        ├──► chunk_groups (fine vs greedy, windowed)
+//!                        └──► tunables::recalibrate_from (crossovers
+//!                             re-anchored per key class, evented)
 //! ```
 //!
 //! The paper's headline property is a merge with a *single*
@@ -27,26 +36,40 @@
 //! the overwhelmingly common operations — never block or bounce a lock
 //! cache line.
 //!
-//! Work enters the fleet on two paths:
+//! Work enters the fleet on two paths, neither of which takes a lock:
 //!
 //! - a thread that *is* an executor worker (detected via TLS) pushes
 //!   spawned jobs straight onto its own deque, lock-free; siblings
 //!   steal them as they go idle — this is the nested-parallelism fast
 //!   path every core phase hits;
-//! - any other thread appends to the global **injector** queue (one
-//!   short critical section per submission or per batch). A worker
-//!   that runs dry takes a *batch* from the injector: it keeps the
-//!   first job and publishes the rest on its own deque, turning
-//!   external traffic into the same steal-distributed flow.
+//! - any other thread pushes into the **sharded injector**
+//!   ([`injector`]): submitters spread over per-shard lock-free FIFO
+//!   queues by thread id, so concurrent external submitters don't
+//!   serialize on one entry lock the way the old `Mutex<VecDeque>`
+//!   injector forced them to. A worker that runs dry claims a shard
+//!   with one CAS and takes a *batch*: it keeps the first job and
+//!   batch-publishes the rest on its own deque
+//!   ([`deque::Deque::push_batch`] — one fence for the whole batch),
+//!   turning external traffic into the same steal-distributed flow.
+//!   Batches stay in per-shard FIFO order end to end, which is what
+//!   keeps `submit_many` job-list order deterministic within a shard.
 //!
 //! Every worker keeps cache-padded counters — executed jobs, steals,
 //! steal misses (lost CAS races), injector batches, parks — exposed
 //! through [`Executor::telemetry`] (see [`telemetry`] for exact field
-//! semantics). The counters are not just monitoring: [`chunk_groups`]
-//! consults them to decide whether a parallel phase should carve its
-//! work *finer* than one group per lane (cheap steals rebalance skew
-//! better than any static pre-balance) or fall back to the greedy
-//! pre-balanced chunking when the fleet shows steal contention.
+//! semantics). On top of the lifetime counters sits the **window
+//! ring** ([`telemetry::WindowRates`]): per-epoch counter deltas,
+//! epoch-rolled by the first worker to notice the interval elapsed
+//! (`EXEC_WINDOW_MS`, default 25). The windowed rates — not the
+//! lifetime sums — are what steer the fleet: [`chunk_groups`] reads
+//! them to decide whether a parallel phase should carve its work
+//! *finer* than one group per lane, and the global executor feeds
+//! each rolled window to [`tunables::recalibrate_from`], which
+//! re-anchors the seq/parallel crossovers and the fine-chunk gate per
+//! key class ([`tunables::KeyClass`]) — so a phase change inside one
+//! process (a submission burst, a skew-heavy workload) re-tunes the
+//! substrate within one window instead of being averaged into the
+//! lifetime history.
 //!
 //! Two entry points:
 //!
@@ -64,20 +87,23 @@
 //!   oversubscribing.
 //! - [`Executor::submit`] / [`Executor::submit_many`] — fire-and-collect
 //!   jobs owning their data (the coordinator's job layer). `submit_many`
-//!   enqueues a whole job list under one injector lock (or straight
-//!   onto the submitting worker's own deque) with a single wake-up
-//!   broadcast.
+//!   enqueues a whole job list into one injector shard lock-free (or
+//!   batch-publishes onto the submitting worker's own deque) with a
+//!   single wake-up broadcast.
 //!
-//! [`tunables`] holds the measured sequential/parallel crossover points
+//! [`tunables`](mod@tunables) holds the measured sequential/parallel crossover points
 //! (overridable via `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF`) plus the
-//! fine-chunking floor (`EXEC_FINE_CHUNK_MIN`); the drivers in
-//! `core::merge` / `core::sort` consult them instead of hardcoded
-//! guesses.
+//! fine-chunking floor (`EXEC_FINE_CHUNK_MIN`), per key class, with
+//! the windowed recalibration path; the drivers in `core::merge` /
+//! `core::sort` consult them instead of hardcoded guesses.
 
 pub mod deque;
+pub mod injector;
 pub mod telemetry;
+pub mod tunables;
 
 use deque::{Deque, Steal};
+use injector::Injector;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -87,7 +113,13 @@ use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-use telemetry::{Counters, Telemetry};
+use telemetry::{Counters, Telemetry, WindowRates, WindowRing};
+use tunables::env_usize;
+
+pub use tunables::{
+    recalibrate_from, recalibration_stats, tunables, tunables_class, tunables_for, KeyClass,
+    RecalibrationEvent, Tunables,
+};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -104,11 +136,21 @@ struct Shared {
     /// bottom, idle siblings CAS-steal at the top. See [`deque`] for
     /// the memory-ordering invariants.
     deques: Vec<Deque>,
-    /// Entry queue for jobs submitted from non-worker threads; workers
-    /// that run dry take batches from here onto their own deques.
-    injector: Mutex<VecDeque<Job>>,
+    /// Sharded lock-free entry queue for jobs submitted from
+    /// non-worker threads; workers that run dry claim a shard and take
+    /// batches from it onto their own deques. See [`injector`].
+    injector: Injector,
     /// Per-worker counters, index-aligned with `deques`.
     counters: Vec<Counters>,
+    /// Windowed (rate-based) telemetry over `counters`; rolled by the
+    /// first worker to notice the epoch interval elapsed.
+    window: WindowRing,
+    /// Monotone clock origin for the window epochs.
+    t0: Instant,
+    /// Whether this executor's rolled windows drive the global
+    /// [`tunables`](mod@tunables) recalibration (true only for [`global`] — private
+    /// test/bench fleets must not steer process-wide crossovers).
+    recalibrates: AtomicBool,
     /// Sleep/wake coordination for idle workers.
     sleep: Mutex<()>,
     wake: Condvar,
@@ -117,35 +159,35 @@ struct Shared {
 
 impl Shared {
     /// Worker-side acquisition order: own deque first (bottom — LIFO,
-    /// cache-warm), then a batch from the injector, then steal from
-    /// the siblings (top — FIFO, oldest first).
-    fn next_job(&self, id: usize) -> Option<Job> {
+    /// cache-warm), then a batch from an injector shard, then steal
+    /// from the siblings (top — FIFO, oldest first). `rot` is the
+    /// worker-owned round-robin cursor over injector shards.
+    fn next_job(&self, id: usize, rot: &mut usize) -> Option<Job> {
         if let Some(job) = self.deques[id].pop() {
             return Some(job);
         }
-        if let Some(job) = self.pop_injector(id) {
+        if let Some(job) = self.drain_injector(id, rot) {
             return Some(job);
         }
         self.try_steal(id)
     }
 
-    /// Take a batch from the injector: run the first job, publish up
-    /// to half the backlog (capped) on this worker's own deque where
-    /// the siblings can steal it — external submissions thus flow
-    /// through the same lock-free distribution as nested spawns.
-    fn pop_injector(&self, id: usize) -> Option<Job> {
+    /// Take a batch from the sharded injector: run the first job,
+    /// batch-publish the rest (single fence) on this worker's own
+    /// deque where the siblings can steal it — external submissions
+    /// thus flow through the same lock-free distribution as nested
+    /// spawns, in per-shard FIFO order.
+    fn drain_injector(&self, id: usize, rot: &mut usize) -> Option<Job> {
         const BATCH: usize = 32;
-        let mut queue = self.injector.lock().unwrap();
-        let first = queue.pop_front()?;
-        let extra = (queue.len() / 2).min(BATCH);
-        let moved: Vec<Job> = queue.drain(..extra).collect();
-        drop(queue);
-        self.counters[id].injector_pops.fetch_add(1, Ordering::Relaxed);
-        let took_extra = !moved.is_empty();
-        for job in moved {
-            self.deques[id].push(job);
+        let mut batch = self.injector.drain(id.wrapping_add(*rot), BATCH);
+        *rot = rot.wrapping_add(1);
+        if batch.is_empty() {
+            return None;
         }
-        if took_extra {
+        self.counters[id].injector_pops.fetch_add(1, Ordering::Relaxed);
+        let first = batch.remove(0);
+        if !batch.is_empty() {
+            self.deques[id].push_batch(batch);
             self.notify_all();
         }
         Some(first)
@@ -176,8 +218,28 @@ impl Shared {
         None
     }
 
-    fn queues_empty(&self) -> bool {
-        self.injector.lock().unwrap().is_empty() && self.deques.iter().all(|d| d.is_empty())
+    /// Fully lock-free idleness check: the injector's published shard
+    /// lengths plus the deques' top/bottom windows. The old
+    /// implementation took the injector Mutex on every pre-park spin;
+    /// now parking costs a handful of relaxed loads. A push in flight
+    /// may be transiently invisible, which is safe: the submitter
+    /// notifies (under the sleep lock) only *after* its push and
+    /// length publish complete, so a worker that read "idle" here
+    /// either sees the job on its next sweep or is woken.
+    fn is_idle(&self) -> bool {
+        self.injector.is_empty() && self.deques.iter().all(|d| d.is_empty())
+    }
+
+    /// Roll the telemetry window if this worker is the first to notice
+    /// the epoch elapsed; the global executor's winner also feeds the
+    /// fresh window to the tunables recalibration.
+    fn maybe_roll_window(&self) {
+        let now = self.t0.elapsed().as_nanos() as u64;
+        if self.window.maybe_roll(now, &self.counters, false)
+            && self.recalibrates.load(Ordering::Relaxed)
+        {
+            tunables::recalibrate_from(&self.window.rates());
+        }
     }
 
     fn notify_one(&self) {
@@ -193,8 +255,24 @@ impl Shared {
 
 fn worker_loop(shared: Arc<Shared>, id: usize) {
     WORKER.with(|w| w.set((Arc::as_ptr(&shared) as usize, id)));
+    // Worker-owned injector-shard cursor: staggers the drain sweep
+    // start across calls without any shared round-robin counter.
+    let mut rot = 0usize;
+    // Window bookkeeping rides the worker loop, but the clock read is
+    // NOT on the per-job hot path: a busy worker checks every
+    // `ROLL_CHECK_EVERY` jobs (fine chunking deliberately makes jobs
+    // microsecond-tiny — a vDSO clock call per job would tax exactly
+    // the regime this substrate optimizes), and an idle worker checks
+    // on every empty sweep, so rolls still land within ~one interval.
+    const ROLL_CHECK_EVERY: u32 = 64;
+    let mut until_roll_check = 1u32;
     loop {
-        if let Some(job) = shared.next_job(id) {
+        until_roll_check -= 1;
+        if until_roll_check == 0 {
+            until_roll_check = ROLL_CHECK_EVERY;
+            shared.maybe_roll_window();
+        }
+        if let Some(job) = shared.next_job(id, &mut rot) {
             // Count before running so the bump happens-before anything
             // the job publishes (e.g. its result send): a reader that
             // synchronized with the job's output observes its count.
@@ -208,8 +286,12 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
         if shared.shutdown.load(Ordering::Acquire) {
             return;
         }
+        // Idle path: always give the window a chance to roll before
+        // parking (an idle fleet would otherwise only roll every
+        // ROLL_CHECK_EVERY wakeups).
+        until_roll_check = 1;
         let guard = shared.sleep.lock().unwrap();
-        if shared.queues_empty() && !shared.shutdown.load(Ordering::Acquire) {
+        if shared.is_idle() && !shared.shutdown.load(Ordering::Acquire) {
             // Timeout is a missed-wakeup backstop only; pushes notify
             // under the same lock, so the common path is event-driven.
             shared.counters[id].parks.fetch_add(1, Ordering::Relaxed);
@@ -225,13 +307,19 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Spawn `threads` persistent workers.
+    /// Spawn `threads` persistent workers. The injector gets one shard
+    /// per worker (power-of-two rounded, capped) so concurrent
+    /// external submitters spread instead of serializing.
     pub fn new(threads: usize) -> Executor {
         assert!(threads > 0, "executor needs at least one worker");
+        let window_ms = env_usize("EXEC_WINDOW_MS").unwrap_or(25).max(1) as u64;
         let shared = Arc::new(Shared {
             deques: (0..threads).map(|_| Deque::new()).collect(),
-            injector: Mutex::new(VecDeque::new()),
+            injector: Injector::new(threads.min(16)),
             counters: (0..threads).map(|_| Counters::default()).collect(),
+            window: WindowRing::new(window_ms * 1_000_000),
+            t0: Instant::now(),
+            recalibrates: AtomicBool::new(false),
             sleep: Mutex::new(()),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -259,6 +347,32 @@ impl Executor {
         Telemetry { workers: self.shared.counters.iter().map(Counters::snapshot).collect() }
     }
 
+    /// Windowed (rate-based) telemetry: per-second rates over the last
+    /// recorded epochs. `epochs == 0` until the first roll.
+    pub fn window_rates(&self) -> WindowRates {
+        self.shared.window.rates()
+    }
+
+    /// Force an epoch roll now and (for the global executor) run the
+    /// tunables recalibration on the fresh window; returns the rates
+    /// and the number of tunable adjustments applied. This is the
+    /// service checkpoint path (`repro serve` calls it at the end of a
+    /// batch so phase shifts are recorded even if the periodic roll
+    /// has not fired yet).
+    pub fn recalibrate_now(&self) -> (WindowRates, usize) {
+        let now = self.shared.t0.elapsed().as_nanos() as u64;
+        let rolled = self.shared.window.maybe_roll(now, &self.shared.counters, true);
+        let rates = self.shared.window.rates();
+        // Same gate as the periodic path: only the global executor's
+        // windows may steer the process-wide tunables.
+        let applied = if rolled && self.shared.recalibrates.load(Ordering::Relaxed) {
+            tunables::recalibrate_from(&rates)
+        } else {
+            0
+        };
+        (rates, applied)
+    }
+
     /// `Some(worker id)` when the calling thread is one of THIS
     /// executor's workers.
     fn worker_id(&self) -> Option<usize> {
@@ -272,7 +386,8 @@ impl Executor {
             // Lock-free owner push; siblings steal from the top.
             self.shared.deques[id].push(job);
         } else {
-            self.shared.injector.lock().unwrap().push_back(job);
+            // Lock-free sharded entry; drained in batches by workers.
+            self.shared.injector.push(job);
         }
         self.shared.notify_one();
     }
@@ -341,33 +456,33 @@ impl Executor {
         rx
     }
 
-    /// Batched submission: enqueue a whole job list in one pass — one
-    /// injector lock for the batch (or lock-free pushes onto the
-    /// submitting worker's own deque) and a single wake-up broadcast.
-    /// The receiver yields `(index, result)` pairs in completion order.
+    /// Batched submission: enqueue a whole job list in one pass — all
+    /// jobs enter ONE injector shard lock-free in submission order (or
+    /// are batch-published onto the submitting worker's own deque with
+    /// a single fence) and a single wake-up broadcast follows. The
+    /// receiver yields `(index, result)` pairs in completion order.
     pub fn submit_many<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
     where
         R: Send + 'static,
         F: FnOnce() -> R + Send + 'static,
     {
         let (tx, rx) = channel();
-        if let Some(id) = self.worker_id() {
-            for (i, job) in jobs.into_iter().enumerate() {
+        let boxed: Vec<Job> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, job)| {
                 let tx = tx.clone();
-                self.shared.deques[id].push(Box::new(move || {
+                Box::new(move || {
                     let _ = tx.send((i, job()));
-                }));
-            }
-        } else {
-            let mut queue = self.shared.injector.lock().unwrap();
-            for (i, job) in jobs.into_iter().enumerate() {
-                let tx = tx.clone();
-                queue.push_back(Box::new(move || {
-                    let _ = tx.send((i, job()));
-                }));
-            }
-        }
+                }) as Job
+            })
+            .collect();
         drop(tx);
+        if let Some(id) = self.worker_id() {
+            self.shared.deques[id].push_batch(boxed);
+        } else {
+            self.shared.injector.push_batch(boxed);
+        }
         self.shared.notify_all();
         rx
     }
@@ -469,7 +584,8 @@ impl<'scope, 'env> Scope<'scope, 'env> {
 
 /// The process-wide executor every parallel phase shares. Sized from
 /// the hardware (floor 4 so small containers still overlap service
-/// jobs), overridable with `EXEC_THREADS`.
+/// jobs), overridable with `EXEC_THREADS`. Only this executor's
+/// windows drive the [`tunables`](mod@tunables) recalibration.
 pub fn global() -> &'static Executor {
     static GLOBAL: OnceLock<Executor> = OnceLock::new();
     GLOBAL.get_or_init(|| {
@@ -478,82 +594,29 @@ pub fn global() -> &'static Executor {
             .and_then(|v| v.parse::<usize>().ok())
             .filter(|&n| n > 0)
             .unwrap_or_else(|| crate::util::num_cpus().max(4));
-        Executor::new(threads)
+        let exec = Executor::new(threads);
+        exec.shared.recalibrates.store(true, Ordering::Relaxed);
+        exec
     })
-}
-
-/// Measured sequential/parallel crossover points.
-#[derive(Clone, Copy, Debug)]
-pub struct Tunables {
-    /// Minimum `p` (block count ≈ number of binary searches) for which
-    /// dispatching the partition's searches to the executor beats
-    /// running them inline.
-    pub parallel_search_cutoff: usize,
-    /// Minimum output length for which dispatching the merge phase to
-    /// the executor beats a sequential task sweep.
-    pub parallel_merge_cutoff: usize,
-    /// Minimum elements a task group must keep for steal-driven
-    /// over-partitioning (fine chunking) to amortize one steal's cost;
-    /// `0` disables fine chunking entirely.
-    pub fine_chunk_min: usize,
-}
-
-/// Conservative defaults served while calibration is in flight (and
-/// the floor/ceiling pair the measured values are clamped into).
-const DEFAULT_TUNABLES: Tunables = Tunables {
-    parallel_search_cutoff: 64,
-    parallel_merge_cutoff: 1 << 15,
-    fine_chunk_min: 1 << 12,
-};
-
-/// The crossover points, measured once per process on first use (a few
-/// hundred microseconds) against the live executor, or pinned via the
-/// `EXEC_SEQ_CUTOFF` / `EXEC_MERGE_CUTOFF` / `EXEC_FINE_CHUNK_MIN`
-/// environment variables.
-///
-/// Deliberately NOT a blocking `get_or_init`: calibration itself runs
-/// a scope on the executor, so worker threads executing unrelated
-/// parallel phases may call `tunables()` *while* calibration is in
-/// flight; with a blocking once-cell those callers (and any future
-/// reentrant path) would stall behind the measurement. Concurrent or
-/// reentrant callers during the window get [`DEFAULT_TUNABLES`].
-pub fn tunables() -> Tunables {
-    // 0 = unmeasured, 1 = measuring, 2 = ready.
-    static STATE: AtomicUsize = AtomicUsize::new(0);
-    static CELL: OnceLock<Tunables> = OnceLock::new();
-    if let Some(t) = CELL.get() {
-        return *t;
-    }
-    if STATE
-        .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire)
-        .is_ok()
-    {
-        // Env pins are taken verbatim (a developer forcing a path gets
-        // exactly what they asked for); only measured values are
-        // clamped into a sane band.
-        let measured = calibrate();
-        let t = Tunables {
-            parallel_search_cutoff: env_usize("EXEC_SEQ_CUTOFF")
-                .unwrap_or_else(|| measured.parallel_search_cutoff.clamp(32, 4096)),
-            parallel_merge_cutoff: env_usize("EXEC_MERGE_CUTOFF")
-                .unwrap_or_else(|| measured.parallel_merge_cutoff.clamp(4096, 1 << 18)),
-            fine_chunk_min: env_usize("EXEC_FINE_CHUNK_MIN")
-                .unwrap_or_else(|| measured.fine_chunk_min.clamp(1 << 10, 1 << 16)),
-        };
-        let _ = CELL.set(t);
-        STATE.store(2, Ordering::Release);
-        return t;
-    }
-    DEFAULT_TUNABLES
-}
-
-fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.parse().ok())
 }
 
 /// Upper bound on steal-driven over-partitioning: at most this many
 /// fine groups per requested lane.
 const FINE_FACTOR_CAP: usize = 8;
+
+/// How many task groups a parallel phase should carve `total` elements
+/// into when it wants `k` lanes — narrow-key view (see
+/// [`chunk_groups_for`] for the generic entry point).
+pub fn chunk_groups(total: usize, k: usize) -> usize {
+    chunk_groups_class(total, k, KeyClass::Narrow)
+}
+
+/// [`chunk_groups`] for element type `T`: the fine-chunk floor comes
+/// from `T`'s key class, so `Record` phases amortize a steal with
+/// fewer (heavier) elements than `i64` phases.
+pub fn chunk_groups_for<T>(total: usize, k: usize) -> usize {
+    chunk_groups_class(total, k, KeyClass::of::<T>())
+}
 
 /// How many task groups a parallel phase should carve `total` elements
 /// into when it wants `k` lanes.
@@ -562,17 +625,18 @@ const FINE_FACTOR_CAP: usize = 8;
 /// near-equal element counts, one group per lane). When the fleet's
 /// steal telemetry says cheap steals will rebalance skew dynamically,
 /// the phase is carved up to [`FINE_FACTOR_CAP`]·`k` finer groups
-/// instead, each keeping at least `tunables().fine_chunk_min` elements
-/// so a single steal's cost stays amortized. The live counters drive
-/// the decision:
+/// instead, each keeping at least the class' `fine_chunk_min` elements
+/// so a single steal's cost stays amortized. The decision reads the
+/// **windowed** rates (current phase) once the window has rolled, and
+/// falls back to the lifetime counters before the first roll:
 ///
 /// - a single-worker fleet never over-partitions (nobody to steal);
-/// - if thieves are mostly *losing* their CAS races (`steal_misses`
-///   dominating `steals`), the deques are contended and extra groups
+/// - if thieves are mostly *losing* their CAS races (miss rate
+///   dominating steal rate), the deques are contended and extra groups
 ///   would only add dispatch overhead — fall back to the pre-balanced
 ///   path;
 /// - `EXEC_FINE_CHUNK` pins the factor outright (`1` = always greedy).
-pub fn chunk_groups(total: usize, k: usize) -> usize {
+fn chunk_groups_class(total: usize, k: usize, class: KeyClass) -> usize {
     let k = k.max(1);
     // Deliberately re-read per call (not cached in a OnceLock like the
     // other pins): benches toggle greedy/fine modes within one process.
@@ -584,102 +648,34 @@ pub fn chunk_groups(total: usize, k: usize) -> usize {
     if exec.size() <= 1 {
         return k;
     }
-    let t = tunables();
+    let t = tunables_class(class);
     if t.fine_chunk_min == 0 {
         return k;
     }
-    // Sum the two relevant counters directly — no snapshot allocation
-    // on the per-phase path.
-    let (mut steals, mut misses) = (0u64, 0u64);
-    for c in &exec.shared.counters {
-        steals += c.steals.load(Ordering::Relaxed);
-        misses += c.steal_misses.load(Ordering::Relaxed);
-    }
-    if misses > 4 * steals + 64 {
+    let w = exec.shared.window.rates();
+    let contended = if w.has_signal() {
+        // Windowed: the *current* phase's contention. Compare absolute
+        // per-window counts (rate x span), with the same +64 noise
+        // floor as the lifetime gate — a near-idle window where one
+        // thief loses a handful of CAS races must not flip the gate.
+        let misses = w.steal_misses_per_sec * w.span_secs;
+        let steals = w.steals_per_sec * w.span_secs;
+        misses > 4.0 * steals + 64.0
+    } else {
+        // Before the first roll: lifetime counters, summed directly —
+        // no snapshot allocation on the per-phase path.
+        let (mut steals, mut misses) = (0u64, 0u64);
+        for c in &exec.shared.counters {
+            steals += c.steals.load(Ordering::Relaxed);
+            misses += c.steal_misses.load(Ordering::Relaxed);
+        }
+        misses > 4 * steals + 64
+    };
+    if contended {
         return k;
     }
     let max_fine = total / t.fine_chunk_min;
     k.max(max_fine).min(k.saturating_mul(FINE_FACTOR_CAP))
-}
-
-/// Measure (a) the cross-thread dispatch round-trip, (b) the
-/// per-search and per-element costs of the sequential kernels, (c) the
-/// per-steal cost of the Chase–Lev deque, and derive the points where
-/// parallel dispatch pays for itself (with a 2x hysteresis so the
-/// crossover favours the lower-variance sequential path near the
-/// break-even point).
-fn calibrate() -> Tunables {
-    let exec = global();
-    // (a) dispatch round-trip: best of a few cross-thread submit
-    // round-trips (push → wake → run → reply). A scope-based probe
-    // would be short-circuited by the waiter draining its own queue.
-    // The recv is bounded: if calibration runs ON the only worker (or
-    // the pool is saturated), the probe job may never get a thread —
-    // blocking recv() would deadlock a size-1 executor — so fall back
-    // to a scope probe, which self-drains on the waiting thread.
-    let mut scope_ns = f64::INFINITY;
-    for _ in 0..8 {
-        let t0 = Instant::now();
-        let rx = exec.submit(|| {});
-        if rx.recv_timeout(Duration::from_millis(20)).is_err() {
-            // Starved probe (saturated or size-1 pool with calibration
-            // running on the worker itself); keep any samples already
-            // taken and stop submitting.
-            break;
-        }
-        scope_ns = scope_ns.min(t0.elapsed().as_nanos() as f64);
-    }
-    if !scope_ns.is_finite() {
-        // No probe came back: measure a one-task scope instead — the
-        // waiter self-drains its own queue, so this cannot starve.
-        for _ in 0..8 {
-            let t0 = Instant::now();
-            exec.scope(|s| s.spawn(|| {}));
-            scope_ns = scope_ns.min(t0.elapsed().as_nanos() as f64);
-        }
-    }
-    scope_ns = scope_ns.max(1_000.0);
-    // (b) per-search cost on a representative array.
-    let haystack: Vec<i64> = (0..4096).map(|i| (i as i64) * 7).collect();
-    let t0 = Instant::now();
-    let mut acc = 0usize;
-    for i in 0..2048u64 {
-        let needle = ((i * 13) % 28_672) as i64;
-        acc += crate::core::ranks::rank_low(&needle, &haystack);
-    }
-    std::hint::black_box(acc);
-    let search_ns = (t0.elapsed().as_nanos() as f64 / 2048.0).max(1.0);
-    // (c) per-element cost of the sequential merge kernel.
-    let a: Vec<i64> = (0..8192).map(|i| (i as i64) * 2).collect();
-    let b: Vec<i64> = (0..8192).map(|i| (i as i64) * 2 + 1).collect();
-    let mut out = vec![0i64; 16_384];
-    let t0 = Instant::now();
-    crate::core::seqmerge::merge_into(&a, &b, &mut out);
-    std::hint::black_box(&out);
-    let elem_ns = (t0.elapsed().as_nanos() as f64 / 16_384.0).max(0.05);
-    // (d) per-steal cost: push a batch of no-op jobs into a private
-    // Chase–Lev deque and steal them all back on this thread (a
-    // single-threaded thief never loses its CAS, so every attempt
-    // succeeds). This bounds the thief-side CAS + transfer cost that
-    // fine chunking has to amortize.
-    let probe = Deque::new();
-    for _ in 0..1024 {
-        probe.push(Box::new(|| {}));
-    }
-    let t0 = Instant::now();
-    let mut got = 0usize;
-    while let Steal::Success(job) = probe.steal() {
-        drop(job);
-        got += 1;
-    }
-    let steal_ns = (t0.elapsed().as_nanos() as f64 / got.max(1) as f64).max(1.0);
-    Tunables {
-        parallel_search_cutoff: (2.0 * scope_ns / search_ns) as usize,
-        parallel_merge_cutoff: (2.0 * scope_ns / elem_ns) as usize,
-        // A fine group must carry ~32 steals' worth of merge work so
-        // the rebalancing overhead stays in the low single percents.
-        fine_chunk_min: (32.0 * steal_ns / elem_ns) as usize,
-    }
 }
 
 #[cfg(test)]
@@ -820,8 +816,39 @@ mod tests {
         // sees no other traffic); the channel recv happens-after the
         // counter bump, so the snapshot includes all of them.
         assert_eq!(tel.executed(), 40, "telemetry {tel:?}");
-        // External submissions enter through the injector.
+        // External submissions enter through the sharded injector.
         assert!(tel.injector_pops() >= 1, "telemetry {tel:?}");
+    }
+
+    #[test]
+    fn window_rates_capture_activity() {
+        let exec = Executor::new(2);
+        let rxs: Vec<_> = (0..64usize).map(|i| exec.submit(move || i)).collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        // Force the epoch roll (a private fleet may finish well inside
+        // one interval); recalibration stays off — `recalibrates` is
+        // only set on the global executor.
+        let (rates, applied) = exec.recalibrate_now();
+        assert_eq!(applied, 0, "private fleets must not steer tunables");
+        assert!(rates.has_signal());
+        assert!(rates.executed_per_sec > 0.0, "rates {rates:?}");
+        assert!(rates.injector_per_sec > 0.0, "rates {rates:?}");
+    }
+
+    #[test]
+    fn is_idle_goes_quiet_after_drain() {
+        let exec = Executor::new(2);
+        let rxs: Vec<_> = (0..16usize).map(|i| exec.submit(move || i)).collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        // All results received => every job was popped; the lock-free
+        // idleness view must agree (no stuck published lengths).
+        assert!(exec.shared.injector.is_empty());
+        assert_eq!(exec.shared.injector.len(), 0);
+        assert!(exec.shared.is_idle());
     }
 
     #[test]
@@ -841,6 +868,9 @@ mod tests {
             "groups {groups} outside [{k}, {}]",
             k * FINE_FACTOR_CAP
         );
+        // The wide class obeys the same envelope.
+        let wide = chunk_groups_for::<crate::core::record::Record>(1 << 26, k);
+        assert!(wide >= k && wide <= k * FINE_FACTOR_CAP);
         // Degenerate request.
         assert_eq!(chunk_groups(0, 0), 1);
     }
@@ -861,7 +891,7 @@ mod tests {
     fn tunables_are_sane() {
         let t = tunables();
         // Env pins are taken verbatim; the clamped band only applies
-        // to measured values.
+        // to measured (and recalibrated) values.
         if std::env::var("EXEC_SEQ_CUTOFF").is_err() {
             assert!((32..=4096).contains(&t.parallel_search_cutoff));
         }

@@ -1,6 +1,6 @@
 //! Per-worker executor counters — the `exec` telemetry surface.
 //!
-//! Each worker owns one cache-line-padded [`Counters`] block and is the
+//! Each worker owns one cache-line-padded `Counters` block and is the
 //! only thread that ever writes it (`Relaxed` increments, so the hot
 //! path pays a single uncontended RMW and no false sharing). Readers
 //! take [`crate::exec::Executor::telemetry`] snapshots from any thread:
@@ -24,12 +24,34 @@
 //!   miss always means the victim's deque was contended, so a high
 //!   miss:steal ratio is the signal to fall back to the greedy
 //!   pre-balanced chunking.
-//! - `injector_pops` — batches taken from the global injector (the
+//! - `injector_pops` — batches taken from the sharded injector (the
 //!   entry path for jobs submitted from non-worker threads).
 //! - `parks` — times the worker went to sleep with nothing to run
 //!   anywhere: the idleness signal.
+//!
+//! # Windowed (rate-based) telemetry
+//!
+//! Lifetime counters answer "what happened since the process
+//! started"; steering heuristics need "what is happening *now*". The
+//! `WindowRing` turns the lifetime counters into per-epoch deltas: a
+//! fixed-size ring of snapshots, where the epoch is rolled by the
+//! first worker to notice the interval elapsed (a single CAS on the
+//! epoch start picks the winner; losers carry on). Each roll writes
+//! one slot: the fleet-wide counter deltas since the previous roll,
+//! plus the epoch's real span. [`WindowRates`] folds the live slots
+//! into per-second rates over the window's horizon — the signal
+//! [`crate::exec::chunk_groups`] and the `Tunables` recalibration
+//! consume, so a phase change (a burst of external submissions, a
+//! skew-heavy merge) steers the fleet within one window instead of
+//! being averaged away by the whole process history.
+//!
+//! Slot writes are serialized by the winner flag (a forced roll can
+//! never interleave with a periodic one mid-write); a reader folding
+//! rates may still see one slot mid-update. Like the lifetime
+//! snapshots, window rates steer heuristics — they are not exact
+//! accounting.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// One worker's live counters, padded to (at least) a cache line so
 /// neighbouring workers never write the same line.
@@ -93,3 +115,243 @@ impl Telemetry {
         self.workers.iter().map(|w| w.parks).sum()
     }
 }
+
+/// Number of epochs the window ring holds; the rate horizon is
+/// `WINDOW_EPOCHS x` the roll interval.
+pub const WINDOW_EPOCHS: usize = 8;
+
+/// Counter fields tracked per epoch, in `Counters` declaration
+/// order: executed, steals, steal_misses, injector_pops, parks.
+const NFIELDS: usize = 5;
+
+/// One epoch's fleet-wide counter deltas. All-atomic so the roll
+/// winner can write and readers can fold without locks.
+#[derive(Default)]
+struct EpochSlot {
+    fields: [AtomicU64; NFIELDS],
+    span_nanos: AtomicU64,
+}
+
+/// Fixed-size ring of per-epoch snapshots. See the module docs for
+/// the roll protocol.
+pub(super) struct WindowRing {
+    /// Epoch length in nanoseconds (monotone executor clock).
+    interval: u64,
+    /// Start of the current epoch; written only under `rolling`.
+    epoch_start: AtomicU64,
+    /// Winner exclusion: the whole roll (epoch advance + slot write)
+    /// happens under this try-flag, so a forced roll can never
+    /// interleave with a periodic one mid-slot-write. Losers return
+    /// immediately — nobody ever waits on it.
+    rolling: AtomicBool,
+    /// Fleet totals at the last roll (written by roll winners only).
+    last: [AtomicU64; NFIELDS],
+    slots: Vec<EpochSlot>,
+    cursor: AtomicUsize,
+    rolls: AtomicU64,
+}
+
+impl WindowRing {
+    pub(super) fn new(interval_nanos: u64) -> WindowRing {
+        WindowRing {
+            interval: interval_nanos.max(1),
+            epoch_start: AtomicU64::new(0),
+            rolling: AtomicBool::new(false),
+            last: Default::default(),
+            slots: (0..WINDOW_EPOCHS).map(|_| EpochSlot::default()).collect(),
+            cursor: AtomicUsize::new(0),
+            rolls: AtomicU64::new(0),
+        }
+    }
+
+    /// Roll the epoch if the interval elapsed (or `force`). `now` is
+    /// nanoseconds on the executor's monotone clock. Exactly one
+    /// caller at a time holds the `rolling` flag through the whole
+    /// winner section (epoch advance, `last` swap, slot write), so a
+    /// forced roll racing a periodic one cannot interleave writes;
+    /// everyone else returns `false` immediately. Returns `true` to
+    /// the winner so it can feed the fresh window to recalibration.
+    pub(super) fn maybe_roll(&self, now: u64, counters: &[Counters], force: bool) -> bool {
+        let start = self.epoch_start.load(Ordering::Relaxed);
+        if now <= start || (!force && now - start < self.interval) {
+            return false;
+        }
+        if self
+            .rolling
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        // Re-check under the flag: the previous holder may have just
+        // advanced the epoch past `now`.
+        let start = self.epoch_start.load(Ordering::Relaxed);
+        if now <= start || (!force && now - start < self.interval) {
+            self.rolling.store(false, Ordering::Release);
+            return false;
+        }
+        self.epoch_start.store(now, Ordering::Relaxed);
+        // Winner: fold the fleet totals into one per-epoch delta slot.
+        let mut totals = [0u64; NFIELDS];
+        for c in counters {
+            totals[0] += c.executed.load(Ordering::Relaxed);
+            totals[1] += c.steals.load(Ordering::Relaxed);
+            totals[2] += c.steal_misses.load(Ordering::Relaxed);
+            totals[3] += c.injector_pops.load(Ordering::Relaxed);
+            totals[4] += c.parks.load(Ordering::Relaxed);
+        }
+        let idx = self.cursor.load(Ordering::Relaxed) % WINDOW_EPOCHS;
+        let slot = &self.slots[idx];
+        for (i, &total) in totals.iter().enumerate() {
+            let prev = self.last[i].swap(total, Ordering::Relaxed);
+            slot.fields[i].store(total.saturating_sub(prev), Ordering::Relaxed);
+        }
+        slot.span_nanos.store(now - start, Ordering::Relaxed);
+        self.cursor.store(idx + 1, Ordering::Relaxed);
+        self.rolls.fetch_add(1, Ordering::Relaxed);
+        self.rolling.store(false, Ordering::Release);
+        true
+    }
+
+    /// Fold the live slots into per-second rates.
+    pub(super) fn rates(&self) -> WindowRates {
+        let mut sums = [0u64; NFIELDS];
+        let mut span = 0u64;
+        let mut epochs = 0usize;
+        for slot in &self.slots {
+            let s = slot.span_nanos.load(Ordering::Relaxed);
+            if s == 0 {
+                continue; // never written
+            }
+            span += s;
+            epochs += 1;
+            for (acc, field) in sums.iter_mut().zip(&slot.fields) {
+                *acc += field.load(Ordering::Relaxed);
+            }
+        }
+        let secs = span as f64 / 1e9;
+        let per_sec = |v: u64| if secs > 0.0 { v as f64 / secs } else { 0.0 };
+        WindowRates {
+            span_secs: secs,
+            epochs,
+            executed_per_sec: per_sec(sums[0]),
+            steals_per_sec: per_sec(sums[1]),
+            steal_misses_per_sec: per_sec(sums[2]),
+            injector_per_sec: per_sec(sums[3]),
+            parks_per_sec: per_sec(sums[4]),
+        }
+    }
+
+    pub(super) fn rolls(&self) -> u64 {
+        self.rolls.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-second counter rates over the windowed horizon (the last
+/// [`WINDOW_EPOCHS`] epochs actually recorded). `epochs == 0` means
+/// the window has never rolled — callers should fall back to the
+/// lifetime counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowRates {
+    /// Real time covered by the recorded epochs, in seconds.
+    pub span_secs: f64,
+    /// Number of recorded epochs contributing to the rates.
+    pub epochs: usize,
+    pub executed_per_sec: f64,
+    pub steals_per_sec: f64,
+    pub steal_misses_per_sec: f64,
+    pub injector_per_sec: f64,
+    pub parks_per_sec: f64,
+}
+
+impl WindowRates {
+    /// `true` when the window holds at least one recorded epoch.
+    pub fn has_signal(&self) -> bool {
+        self.epochs > 0 && self.span_secs > 0.0
+    }
+
+    /// Windowed miss:steal ratio — the contention signal. Zero when
+    /// the fleet neither stole nor missed in the window.
+    pub fn miss_ratio(&self) -> f64 {
+        if self.steals_per_sec > 0.0 {
+            self.steal_misses_per_sec / self.steals_per_sec
+        } else if self.steal_misses_per_sec > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_counter(executed: u64, steals: u64, misses: u64) -> Vec<Counters> {
+        let c = Counters::default();
+        c.executed.store(executed, Ordering::Relaxed);
+        c.steals.store(steals, Ordering::Relaxed);
+        c.steal_misses.store(misses, Ordering::Relaxed);
+        vec![c]
+    }
+
+    #[test]
+    fn roll_records_deltas_not_totals() {
+        let ring = WindowRing::new(1_000);
+        let counters = one_counter(100, 10, 2);
+        assert!(ring.maybe_roll(2_000, &counters, false));
+        counters[0].executed.store(180, Ordering::Relaxed);
+        counters[0].steals.store(14, Ordering::Relaxed);
+        assert!(ring.maybe_roll(4_000, &counters, false));
+        let rates = ring.rates();
+        assert_eq!(rates.epochs, 2);
+        assert_eq!(ring.rolls(), 2);
+        // 180 executed over 4 microseconds of span.
+        let span = 4_000.0 / 1e9;
+        assert!((rates.span_secs - span).abs() < 1e-12);
+        assert!((rates.executed_per_sec - 180.0 / span).abs() < 1e-3);
+        assert!((rates.steals_per_sec - 14.0 / span).abs() < 1e-3);
+    }
+
+    #[test]
+    fn roll_respects_interval_unless_forced() {
+        let ring = WindowRing::new(1_000_000);
+        let counters = one_counter(5, 0, 0);
+        assert!(!ring.maybe_roll(10, &counters, false), "interval not elapsed");
+        assert!(ring.maybe_roll(10, &counters, true), "force ignores interval");
+        assert!(!ring.maybe_roll(10, &counters, true), "clock tie cannot roll");
+        let rates = ring.rates();
+        assert_eq!(rates.epochs, 1);
+        assert!(rates.has_signal());
+    }
+
+    #[test]
+    fn window_evicts_oldest_epochs() {
+        let ring = WindowRing::new(1);
+        let counters = one_counter(0, 0, 0);
+        // 3 x WINDOW_EPOCHS rolls: the ring must only ever report
+        // WINDOW_EPOCHS epochs.
+        for i in 1..=(3 * WINDOW_EPOCHS as u64) {
+            counters[0].executed.store(10 * i, Ordering::Relaxed);
+            assert!(ring.maybe_roll(i * 100, &counters, false));
+        }
+        let rates = ring.rates();
+        assert_eq!(rates.epochs, WINDOW_EPOCHS);
+        // Only the last 8 epochs' deltas (10 each over 100ns epochs).
+        let span = (WINDOW_EPOCHS as f64 * 100.0) / 1e9;
+        assert!((rates.span_secs - span).abs() < 1e-12);
+        assert!((rates.executed_per_sec - (WINDOW_EPOCHS as f64 * 10.0) / span).abs() < 1.0);
+    }
+
+    #[test]
+    fn miss_ratio_handles_zero_steals() {
+        let mut r =
+            WindowRates { steals_per_sec: 0.0, steal_misses_per_sec: 0.0, ..Default::default() };
+        assert_eq!(r.miss_ratio(), 0.0);
+        r.steal_misses_per_sec = 5.0;
+        assert!(r.miss_ratio().is_infinite());
+        r.steals_per_sec = 10.0;
+        assert!((r.miss_ratio() - 0.5).abs() < 1e-12);
+    }
+}
+

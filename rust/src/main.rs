@@ -323,6 +323,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         tel.injector_pops(),
         tel.parks()
     );
+    // Windowed view + recalibration checkpoint: roll the epoch over
+    // this batch's activity and let the tunables react to it, so the
+    // rates below describe THIS run (not process lifetime) and any
+    // phase shift the batch caused is recorded as an event.
+    let (rates, applied) = svc.recalibration_checkpoint();
+    println!(
+        "windowed ({} epochs, {:.2}s horizon): {:.0} exec/s | {:.0} steals/s \
+         (miss ratio {:.2}) | {:.0} injector batches/s | {:.0} parks/s",
+        rates.epochs,
+        rates.span_secs,
+        rates.executed_per_sec,
+        rates.steals_per_sec,
+        rates.miss_ratio(),
+        rates.injector_per_sec,
+        rates.parks_per_sec,
+    );
+    let (events, last) = traff_merge::exec::recalibration_stats();
+    match last {
+        Some(event) => println!(
+            "tunables: {events} recalibration events ({applied} this checkpoint) — last: {event}"
+        ),
+        None => println!("tunables: no recalibration events (window saw no phase shift)"),
+    }
     Ok(())
 }
 
