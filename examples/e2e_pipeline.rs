@@ -84,6 +84,7 @@ fn main() {
         threads,
         engine: Engine::Hybrid,
         leaf_block: 1024,
+        ..Config::default()
     })
     .expect("artifacts missing? run `make artifacts`");
     println!(
@@ -96,8 +97,13 @@ fn main() {
     let (_, _, xla_calls, _) = hybrid.stats.snapshot();
 
     // --- Rust engine comparison ---------------------------------------
-    let rust = MergeService::new(Config { threads, engine: Engine::Rust, leaf_block: 1024 })
-        .unwrap();
+    let rust = MergeService::new(Config {
+        threads,
+        engine: Engine::Rust,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .unwrap();
     let (t_rust, out_rust) = time(|| rust.sort(&data).expect("rust sort"));
     verify_stable_sort(&data, &out_rust);
     assert_eq!(out_hybrid.keys, out_rust.keys);

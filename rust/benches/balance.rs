@@ -9,9 +9,9 @@ use traff_merge::baseline::merge_path::merge_path_segment_sizes;
 use traff_merge::core::merge::{carve_output, chunk_tasks, run_tasks_parallel};
 use traff_merge::core::seqmerge::merge_into;
 use traff_merge::core::{parallel_merge, Case, Partition};
-use traff_merge::exec::Executor;
+use traff_merge::exec::{Executor, JobClass};
 use traff_merge::harness::{quick_mode, section, Bench};
-use traff_merge::metrics::Table;
+use traff_merge::metrics::{fmt_duration, percentile, Table};
 use traff_merge::workload::{adversarial_pair, sorted_keys, Dist};
 
 /// The PR-1 executor's `Mutex<VecDeque>` substrate, preserved (minus
@@ -444,6 +444,98 @@ fn main() {
             rates.steals_per_sec,
             rates.miss_ratio(),
             rates.injector_per_sec
+        );
+    }
+
+    section("E9i: QoS lanes — service p99 under a background flood vs classless");
+    {
+        // 8 flooder threads keep a deep backlog of small background
+        // merge jobs queued while a service tenant submits small
+        // batches and measures per-job latency (submit -> completion,
+        // queue wait included). Run twice: flood in the BACKGROUND
+        // lane (the new QoS path) vs flood submitted classless (all
+        // Service — the pre-PR-4 behavior). The lanes must cut the
+        // service tenant's p99 while total throughput stays within
+        // noise (the same jobs run either way; only who waits moves).
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+        use std::time::{Duration, Instant};
+        let threads = traff_merge::util::num_cpus();
+        const FLOODERS: usize = 8;
+        let service_batches = if quick_mode() { 10 } else { 40 };
+        let service_jobs = 8usize;
+        let flood_batch = 64usize;
+        let job_n = 2048usize;
+        let a = Arc::new(sorted_keys(Dist::Uniform, job_n, 9100));
+        let b = Arc::new(sorted_keys(Dist::Uniform, job_n, 9101));
+        let merge_job = |a: &Arc<Vec<i64>>, b: &Arc<Vec<i64>>| {
+            let a = Arc::clone(a);
+            let b = Arc::clone(b);
+            move || {
+                let mut out = vec![0i64; a.len() + b.len()];
+                merge_into(&a, &b, &mut out);
+                std::hint::black_box(out.len())
+            }
+        };
+
+        let run_mode = |flood_class: JobClass| -> (Vec<f64>, f64) {
+            let exec = Executor::new(threads);
+            let stop = AtomicBool::new(false);
+            let flood_done = AtomicUsize::new(0);
+            let mut latencies: Vec<f64> = Vec::new();
+            let t_all = Instant::now();
+            std::thread::scope(|s| {
+                for _ in 0..FLOODERS {
+                    s.spawn(|| {
+                        // Each flooder keeps one batch in flight: a
+                        // sustained, bounded backlog (~FLOODERS x 64
+                        // jobs) across up to FLOODERS shards.
+                        while !stop.load(Ordering::Acquire) {
+                            let jobs: Vec<_> =
+                                (0..flood_batch).map(|_| merge_job(&a, &b)).collect();
+                            let rx = exec.submit_many_with_class(flood_class, jobs);
+                            flood_done.fetch_add(rx.iter().count(), Ordering::Relaxed);
+                        }
+                    });
+                }
+                // Let the flood establish its backlog first.
+                std::thread::sleep(Duration::from_millis(20));
+                for _ in 0..service_batches {
+                    let jobs: Vec<_> = (0..service_jobs).map(|_| merge_job(&a, &b)).collect();
+                    let t0 = Instant::now();
+                    let rx = exec.submit_many(jobs);
+                    for _ in rx.iter() {
+                        latencies.push(t0.elapsed().as_secs_f64());
+                    }
+                }
+                stop.store(true, Ordering::Release);
+            });
+            let secs = t_all.elapsed().as_secs_f64();
+            latencies.sort_by(f64::total_cmp);
+            (latencies, flood_done.load(Ordering::Relaxed) as f64 / secs)
+        };
+
+        let (lanes_lat, lanes_tput) = run_mode(JobClass::Background);
+        let (classless_lat, classless_tput) = run_mode(JobClass::Service);
+        let mut t = Table::new(vec![
+            "flood mode", "service p50", "service p99", "service max", "flood jobs/s",
+        ]);
+        let row = |name: &str, lat: &[f64], tput: f64| {
+            vec![
+                name.to_string(),
+                fmt_duration(percentile(lat, 50.0)),
+                fmt_duration(percentile(lat, 99.0)),
+                fmt_duration(lat[lat.len() - 1]),
+                format!("{tput:.0}"),
+            ]
+        };
+        t.row(row("background lane (QoS)", &lanes_lat, lanes_tput));
+        t.row(row("classless (all service)", &classless_lat, classless_tput));
+        t.print();
+        println!(
+            "service p99 ratio (classless / lanes): {:.2}x — the lanes' win; flood \
+             throughput ratio {:.2}x (expect ~1: same work, different waiters)",
+            percentile(&classless_lat, 99.0) / percentile(&lanes_lat, 99.0).max(1e-9),
+            classless_tput / lanes_tput.max(1.0)
         );
     }
 }

@@ -63,6 +63,23 @@ impl Args {
         matches!(self.opts.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
     }
 
+    /// Value of `--key` validated against a closed set of choices
+    /// (`default` when the flag is absent); the error enumerates the
+    /// valid values.
+    pub fn get_choice<'a>(
+        &'a self,
+        key: &str,
+        choices: &[&'a str],
+        default: &'a str,
+    ) -> Result<&'a str, String> {
+        let v = self.get(key).unwrap_or(default);
+        if choices.contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!("--{key}: expected one of {}, got '{v}'", choices.join("|")))
+        }
+    }
+
     /// Reject unknown options (catches typos).
     pub fn expect_known(&self, known: &[&str]) -> Result<(), String> {
         for k in self.opts.keys() {
@@ -119,5 +136,15 @@ mod tests {
     fn bad_integer_reported() {
         let a = parse("merge --n abc");
         assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn choice_validates_and_defaults() {
+        let a = parse("serve --engine hybrid");
+        assert_eq!(a.get_choice("engine", &["rust", "hybrid"], "rust").unwrap(), "hybrid");
+        assert_eq!(a.get_choice("mode", &["a", "b"], "a").unwrap(), "a");
+        let bad = parse("serve --engine cuda");
+        let err = bad.get_choice("engine", &["rust", "hybrid"], "rust").unwrap_err();
+        assert!(err.contains("rust|hybrid"), "{err}");
     }
 }

@@ -4,11 +4,22 @@
 //! XLA-offloaded block pipeline), and service metrics.
 //!
 //! Thread budget: service jobs and each job's internal parallel phases
-//! run on the same [`crate::exec`] worker fleet (the [`WorkerPool`]
-//! facade), so concurrent jobs overlap without oversubscribing the
-//! machine. Batched entry points ([`MergeService::merge_many`],
-//! [`MergeService::submit_sort_batch`]) enqueue whole job lists in one
-//! executor pass.
+//! run on the same [`crate::exec`] worker fleet, so concurrent jobs
+//! overlap without oversubscribing the machine — and every
+//! *asynchronous* job entry ([`MergeService::submit_sort`],
+//! [`MergeService::submit_sort_batch`],
+//! [`MergeService::submit_background`]) is **admission controlled** by
+//! the service's [`WorkerPool`] (`Config.threads` permits; see
+//! `coordinator::pool`), so a tenant's submitted backlog cannot occupy
+//! the whole fleet. Jobs carry a [`JobClass`](crate::exec::JobClass)
+//! (`Config.class`, or [`MergeService::submit_background`] per job):
+//! background traffic enters the executor's yielding injector lane.
+//! The *synchronous* calls ([`MergeService::merge`],
+//! [`MergeService::sort`], [`MergeService::merge_many`]) are one job
+//! each from the caller's perspective and fan their internal
+//! parallelism out through `exec::scope` directly — cooperative
+//! shared-fleet work, not admission-gated (a caller can only have as
+//! many in flight as it has blocked threads).
 //!
 //! Engines:
 //! - [`Engine::Rust`]  — the paper's algorithm on OS threads (L3 only).
@@ -21,8 +32,9 @@ pub mod pool;
 
 use crate::core::record::F32Key;
 use crate::core::{parallel_merge, parallel_merge_sort};
+use crate::exec::JobClass;
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -94,22 +106,62 @@ pub enum Engine {
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
-    /// Parallelism granularity for this service's algorithms (the `p`
-    /// handed to merge/sort). Since the executor unification this is
-    /// NOT an OS-thread count or a concurrency bound: all services
-    /// share the process-wide [`crate::exec`] fleet (pin its width
-    /// with `EXEC_THREADS`). Per-service admission control is a
-    /// ROADMAP follow-on.
+    /// This service's concurrency budget, doing double duty:
+    /// the parallelism granularity for its algorithms (the `p` handed
+    /// to merge/sort — all services still share the process-wide
+    /// [`crate::exec`] fleet, pin its width with `EXEC_THREADS`), AND
+    /// the service's **admission bound**: at most `threads` of this
+    /// service's submitted jobs are in flight at once (the
+    /// [`WorkerPool`] semaphore — see `coordinator::pool` for the full
+    /// semantics and history).
     pub threads: usize,
     pub engine: Engine,
     /// Leaf block size for the hybrid pipeline (must be within the
     /// sort artifact capacity).
     pub leaf_block: usize,
+    /// Default [`JobClass`] for this service's submitted jobs: a
+    /// `Background` service's traffic enters the executor's background
+    /// injector lane and yields to service-class tenants fleet-wide.
+    /// [`MergeService::submit_background`] forces the background lane
+    /// per job regardless of this default.
+    pub class: JobClass,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Config { threads: crate::util::num_cpus(), engine: Engine::Rust, leaf_block: 1024 }
+        Config {
+            threads: crate::util::num_cpus(),
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            class: JobClass::Service,
+        }
+    }
+}
+
+/// Ingress policy for f32 keys, decided per engine (ROADMAP item):
+///
+/// - [`Engine::Rust`] **accepts** non-finite keys: every comparison on
+///   the rust path is `f32::total_cmp` (via `F32Key`), under which
+///   NaN and ±inf have well-defined, deterministic positions — there
+///   is nothing unsound to reject.
+/// - [`Engine::Hybrid`] **rejects** NaN/±inf at job entry: the XLA
+///   marshalling layer pads blocks with `+inf` sentinels and slices
+///   the tail back off, so a real `+inf`/NaN key is indistinguishable
+///   from padding and the kernel's output is not defined for it.
+///   Failing fast at ingress (with the offending index) beats
+///   returning silently wrong data.
+pub fn validate_ingress(engine: Engine, block: &KeyedBlock) -> Result<(), String> {
+    if engine == Engine::Rust {
+        return Ok(());
+    }
+    match block.keys.iter().position(|k| !k.is_finite()) {
+        None => Ok(()),
+        Some(i) => Err(format!(
+            "hybrid engine rejects non-finite key {} at index {i}: XLA blocks are \
+             +inf-padded, so NaN/±inf inputs have undefined merge output (use the \
+             rust engine for total_cmp ordering of non-finite keys)",
+            block.keys[i]
+        )),
     }
 }
 
@@ -166,7 +218,7 @@ impl MergeService {
             Engine::Hybrid => Some(Arc::new(XlaRuntime::load_dir(&XlaRuntime::default_dir())?)),
         };
         Ok(MergeService {
-            pool: WorkerPool::new(config.threads.max(1)),
+            pool: WorkerPool::with_class(config.threads.max(1), config.class),
             config,
             stats: Arc::new(ServiceStats::default()),
             runtime,
@@ -177,8 +229,11 @@ impl MergeService {
         self.runtime.as_deref()
     }
 
-    /// Synchronous stable merge of two sorted keyed blocks.
+    /// Synchronous stable merge of two sorted keyed blocks. The hybrid
+    /// engine rejects non-finite keys at entry ([`validate_ingress`]).
     pub fn merge(&self, a: &KeyedBlock, b: &KeyedBlock) -> Result<KeyedBlock> {
+        validate_ingress(self.config.engine, a).map_err(|e| anyhow!("{e}"))?;
+        validate_ingress(self.config.engine, b).map_err(|e| anyhow!("{e}"))?;
         let t0 = Instant::now();
         let out = match self.config.engine {
             Engine::Rust => {
@@ -200,8 +255,10 @@ impl MergeService {
         Ok(out)
     }
 
-    /// Synchronous stable sort of a keyed block.
+    /// Synchronous stable sort of a keyed block. The hybrid engine
+    /// rejects non-finite keys at entry ([`validate_ingress`]).
     pub fn sort(&self, data: &KeyedBlock) -> Result<KeyedBlock> {
+        validate_ingress(self.config.engine, data).map_err(|e| anyhow!("{e}"))?;
         let t0 = Instant::now();
         let out = match self.config.engine {
             Engine::Rust => {
@@ -388,6 +445,10 @@ impl MergeService {
                     .collect()
             }
             Engine::Hybrid => {
+                for (a, b) in jobs {
+                    validate_ingress(Engine::Hybrid, a).map_err(|e| anyhow!("{e}"))?;
+                    validate_ingress(Engine::Hybrid, b).map_err(|e| anyhow!("{e}"))?;
+                }
                 let rt = self.runtime.as_ref().expect("hybrid runtime");
                 let batcher = crate::runtime::XlaBatchMerger::new(rt)?;
                 // Jobs too large for the batch artifact go one-by-one
@@ -422,20 +483,42 @@ impl MergeService {
         Ok(out)
     }
 
-    /// Asynchronous sort submission. For the rust engine the job runs
-    /// on the worker pool (data is moved, all-Send); the hybrid engine
-    /// executes synchronously on the caller thread because PJRT handles
-    /// are not `Send` in the `xla` crate — the pool still decouples
-    /// rust-engine traffic, which is the common concurrent case.
+    /// Asynchronous sort submission under the service's configured
+    /// class. For the rust engine the job runs through the admission-
+    /// controlled worker pool (data is moved, all-Send); the hybrid
+    /// engine executes synchronously on the caller thread because PJRT
+    /// handles are not `Send` in the `xla` crate — the pool still
+    /// decouples rust-engine traffic, which is the common concurrent
+    /// case.
     pub fn submit_sort(
         &self,
+        data: KeyedBlock,
+    ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
+        self.submit_sort_class(self.config.class, data)
+    }
+
+    /// Background-lane sort submission: the job enters the executor's
+    /// background injector lane (yielding to service traffic
+    /// fleet-wide) regardless of `Config.class`, while still counting
+    /// against this service's admission permits — maintenance cannot
+    /// bypass the tenant's concurrency bound.
+    pub fn submit_background(
+        &self,
+        data: KeyedBlock,
+    ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
+        self.submit_sort_class(JobClass::Background, data)
+    }
+
+    fn submit_sort_class(
+        &self,
+        class: JobClass,
         data: KeyedBlock,
     ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
         match self.config.engine {
             Engine::Rust => {
                 let threads = self.config.threads;
                 let stats = Arc::clone(&self.stats);
-                self.pool.submit(move || {
+                self.pool.submit_with_class(class, move || {
                     let t0 = Instant::now();
                     let mut recs = to_recs(&data);
                     parallel_merge_sort(&mut recs, threads);
@@ -452,12 +535,13 @@ impl MergeService {
         }
     }
 
-    /// Batched asynchronous sort submission: the whole job list enters
-    /// the executor's deques in one pass (`exec::submit_many` — one
-    /// queue lock per worker, a single wake-up broadcast) instead of a
-    /// channel send per job. The receiver yields `(job index, result)`
-    /// pairs in completion order. The hybrid engine executes inline on
-    /// the caller thread (PJRT handles are not `Send`).
+    /// Batched asynchronous sort submission: the whole job list is
+    /// handed to the admission-controlled pool in one pass — up to
+    /// `Config.threads` jobs are in flight at once, the rest follow in
+    /// submission order as permits free up. The receiver yields
+    /// `(job index, result)` pairs in completion order. The hybrid
+    /// engine executes inline on the caller thread (PJRT handles are
+    /// not `Send`).
     pub fn submit_sort_batch(
         &self,
         blocks: Vec<KeyedBlock>,
@@ -526,6 +610,7 @@ mod tests {
             threads: 4,
             engine: Engine::Rust,
             leaf_block: 1024,
+            ..Config::default()
         })
         .unwrap();
         let mut rng = Rng::new(7);
@@ -558,6 +643,7 @@ mod tests {
             threads: 4,
             engine: Engine::Rust,
             leaf_block: 1024,
+            ..Config::default()
         })
         .unwrap();
         let mut rng = Rng::new(19);
@@ -597,6 +683,7 @@ mod tests {
             threads: 2,
             engine: Engine::Rust,
             leaf_block: 1024,
+            ..Config::default()
         })
         .unwrap();
         let mut rng = Rng::new(23);
@@ -633,6 +720,7 @@ mod tests {
             threads: 4,
             engine: Engine::Rust,
             leaf_block: 1024,
+            ..Config::default()
         })
         .unwrap();
         let n = 512usize;
@@ -656,12 +744,85 @@ mod tests {
         assert_eq!(nan_vals, expect, "NaN records lost their stable order");
     }
 
+    /// Satellite: the non-finite-key ingress policy. The hybrid
+    /// engine (XLA pads with `+inf`) rejects NaN/±inf at job entry
+    /// with the offending index; the rust engine accepts them (it
+    /// orders by `total_cmp` end to end).
+    #[test]
+    fn hybrid_ingress_rejects_non_finite_keys() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let block = KeyedBlock { keys: vec![1.0, bad, 3.0], vals: vec![0, 1, 2] };
+            let err = validate_ingress(Engine::Hybrid, &block)
+                .expect_err("hybrid must reject non-finite keys");
+            assert!(err.contains("index 1"), "error names the index: {err}");
+            // The rust engine's policy is acceptance.
+            assert!(validate_ingress(Engine::Rust, &block).is_ok());
+        }
+        let finite = KeyedBlock { keys: vec![1.0, 2.0], vals: vec![0, 1] };
+        assert!(validate_ingress(Engine::Hybrid, &finite).is_ok());
+    }
+
+    /// The rust engine accepts non-finite keys END TO END (not just in
+    /// the validator): ±inf and NaN sort to their total_cmp positions
+    /// through the full service path.
+    #[test]
+    fn rust_engine_sorts_non_finite_keys_end_to_end() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let keys = vec![2.0, f32::NEG_INFINITY, f32::NAN, 0.5, f32::INFINITY, 1.0];
+        let out = svc
+            .sort(&KeyedBlock { keys, vals: (0..6).collect() })
+            .unwrap();
+        assert!(out.is_key_sorted());
+        // total_cmp order: -inf < finite < +inf < NaN.
+        assert_eq!(out.keys[0], f32::NEG_INFINITY);
+        assert_eq!(out.keys[4], f32::INFINITY);
+        assert!(out.keys[5].is_nan());
+        assert_eq!(&out.keys[1..4], &[0.5, 1.0, 2.0]);
+    }
+
+    /// Tentpole: `submit_background` completes through the background
+    /// lane and still respects the service's admission bound (it
+    /// cannot bypass the tenant's permit count).
+    #[test]
+    fn background_submission_sorts_and_respects_admission() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(91);
+        let blocks: Vec<KeyedBlock> = (0..6)
+            .map(|_| KeyedBlock {
+                keys: (0..800).map(|_| rng.range(0, 300) as f32).collect(),
+                vals: (0..800).collect(),
+            })
+            .collect();
+        let rxs: Vec<_> = blocks.into_iter().map(|b| svc.submit_background(b)).collect();
+        for rx in rxs {
+            let out = rx.recv().expect("job reports back").expect("sort succeeds");
+            assert!(out.is_key_sorted());
+        }
+        // All jobs went through the pool's permits (none in flight
+        // after completion) and the stats counted them.
+        let (jobs, _, _, _) = svc.stats.snapshot();
+        assert_eq!(jobs, 6);
+    }
+
     #[test]
     fn nan_keys_merge_stably() {
         let svc = MergeService::new(Config {
             threads: 2,
             engine: Engine::Rust,
             leaf_block: 1024,
+            ..Config::default()
         })
         .unwrap();
         // Both inputs sorted under total_cmp (NaN last).

@@ -1,46 +1,189 @@
-//! Job-level entry point for the service layer — a thin facade over
-//! the process-wide [`crate::exec::Executor`].
+//! Job-level entry point for the service layer: an **admission
+//! controller** in front of the process-wide [`crate::exec::Executor`].
 //!
-//! Historically this was a second, independent mpsc worker pool, so a
-//! service with `threads = t` actually ran `t` pool threads *plus* a
-//! fresh `std::thread::scope` fleet inside every merge/sort call —
-//! oversubscribing the machine. Now service jobs and intra-job
-//! parallelism share one persistent thread budget: jobs are pushed to
-//! the shared executor's deques, and when a job opens an `exec::scope`
-//! for its own parallel phases, the waiting worker helps drain the
-//! queues instead of blocking a thread.
+//! # History — and what `size` means now
+//!
+//! Three generations of semantics live behind this one type:
+//!
+//! 1. **Pre-executor**: an independent mpsc worker pool — `threads = t`
+//!    really ran `t` OS threads, *plus* a fresh `std::thread::scope`
+//!    fleet inside every merge/sort call, oversubscribing the machine.
+//! 2. **PR 1 (facade era)**: execution moved to the shared executor
+//!    and `size` degraded into a *granularity hint* — it still set the
+//!    `p` handed to the algorithms, but NOTHING bounded how many of a
+//!    service's jobs ran at once: a tenant configured with
+//!    `threads = 2` could occupy every worker in the fleet the moment
+//!    it submitted a burst.
+//! 3. **This PR (admission era)**: `size` is a real bound again, but
+//!    at the right layer — a **semaphore of `size` permits acquired at
+//!    job entry**. At most `size` of this pool's jobs are *admitted*
+//!    (submitted to the executor) concurrently; the overflow waits in
+//!    a pool-local FIFO and is dispatched, in submission order, as
+//!    permits free up. Crucially the permits are NOT thread
+//!    reservations: an admitted job still runs on the shared fleet,
+//!    its internal parallel phases still fan out over every worker,
+//!    and idle workers still help-steal it. Admission bounds a
+//!    tenant's *concurrent footprint*, not its *speed*.
+//!
+//! Permits are released when a job finishes — including by panic (the
+//! release rides a drop guard inside the wrapped job, so an unwinding
+//! job cannot leak its permit). The caller-facing API is unchanged and
+//! non-blocking: `submit` always returns a `Receiver` immediately;
+//! admission only delays when the job starts.
+//!
+//! Each pool also carries a default [`JobClass`]: a background-class
+//! pool's jobs enter the executor's background injector lane and yield
+//! to service traffic fleet-wide (see [`crate::exec::injector`]). The
+//! class decides *which lane* a job queues in; admission decides *how
+//! many* of them may be dispatched at all. Note the permit is held
+//! from dispatch to completion, INCLUDING any time the job waits in
+//! its injector lane — so a background job parked behind fleet-wide
+//! service traffic keeps holding its permit. Mixing both classes in
+//! one pool therefore lets slow-to-schedule background work crowd out
+//! the same pool's service submissions; tenants that want the classes
+//! isolated from each other should run one pool per class (as `repro
+//! serve` does with its two tenants), which is also the configuration
+//! the admission bound is meant to protect.
+//!
+//! One sharp edge, inherent to any entry semaphore: a job that
+//! submits to its OWN pool and blocks on the result can deadlock a
+//! fully-admitted pool (the classic semaphore self-wait). Nested
+//! parallelism does not do this — `exec::scope` is not admission
+//! controlled — but job-level recursion through the same pool is on
+//! the caller.
 
+use crate::exec::JobClass;
+use std::collections::VecDeque;
 use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
 
-/// Facade handle kept for API compatibility: `size` records the
-/// service's configured concurrency, execution happens on
-/// [`crate::exec::global`].
+/// The boxed-job shape handed to the executor.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Admission state: free permits plus the not-yet-admitted overflow,
+/// in submission order. One short-held Mutex — admission is per JOB
+/// (milliseconds of work), not per task, so this lock is nowhere near
+/// the executor's lock-free hot paths.
+struct AdmissionState {
+    available: usize,
+    pending: VecDeque<(Job, JobClass)>,
+}
+
+struct Admission {
+    state: Mutex<AdmissionState>,
+}
+
+impl Admission {
+    fn new(permits: usize) -> Admission {
+        Admission {
+            state: Mutex::new(AdmissionState {
+                available: permits,
+                pending: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Admit `job` now if a permit is free, else queue it. Dispatch
+    /// happens outside the lock.
+    fn admit(&self, job: Job, class: JobClass) {
+        let admitted = {
+            let mut st = self.state.lock().unwrap();
+            if st.available > 0 {
+                st.available -= 1;
+                Some((job, class))
+            } else {
+                st.pending.push_back((job, class));
+                None
+            }
+        };
+        if let Some((job, class)) = admitted {
+            crate::exec::global().submit_boxed(job, class);
+        }
+    }
+
+    /// A job finished: hand its permit to the oldest queued job, or
+    /// return it to the pool. Dispatch happens outside the lock (a
+    /// worker thread calls this from inside the finished job).
+    fn release(&self) {
+        let next = {
+            let mut st = self.state.lock().unwrap();
+            match st.pending.pop_front() {
+                Some(queued) => Some(queued),
+                None => {
+                    st.available += 1;
+                    None
+                }
+            }
+        };
+        if let Some((job, class)) = next {
+            crate::exec::global().submit_boxed(job, class);
+        }
+    }
+}
+
+/// Releases the permit when dropped — the normal completion path and
+/// the unwind path of a panicking job are the same code.
+struct PermitGuard(Arc<Admission>);
+
+impl Drop for PermitGuard {
+    fn drop(&mut self) {
+        self.0.release();
+    }
+}
+
+/// Per-service admission controller over the shared executor. See the
+/// module docs for the semantics of `size`.
 pub struct WorkerPool {
     size: usize,
+    class: JobClass,
+    admission: Arc<Admission>,
 }
 
 impl WorkerPool {
+    /// A service-class pool with `size` admission permits.
     pub fn new(size: usize) -> WorkerPool {
-        assert!(size > 0);
-        WorkerPool { size }
+        WorkerPool::with_class(size, JobClass::Service)
     }
 
+    /// A pool whose jobs default to `class` (see [`JobClass`]).
+    pub fn with_class(size: usize, class: JobClass) -> WorkerPool {
+        assert!(size > 0);
+        WorkerPool { size, class, admission: Arc::new(Admission::new(size)) }
+    }
+
+    /// The admission bound (maximum concurrently admitted jobs).
     pub fn size(&self) -> usize {
         self.size
     }
 
+    /// This pool's default job class.
+    pub fn class(&self) -> JobClass {
+        self.class
+    }
+
+    /// Jobs currently admitted (holding a permit). A steering/metrics
+    /// snapshot — concurrent submit/release make it advisory.
+    pub fn in_flight(&self) -> usize {
+        self.size - self.admission.state.lock().unwrap().available
+    }
+
+    /// Jobs waiting for a permit.
+    pub fn queued(&self) -> usize {
+        self.admission.state.lock().unwrap().pending.len()
+    }
+
     /// Snapshot of the shared executor's per-worker counters
-    /// (executed / steals / steal misses / injector batches / parks) —
-    /// the service-level window into the Chase–Lev substrate. See
-    /// [`crate::exec::telemetry`] for field semantics.
+    /// (executed / steals / steal misses / injector batches / parks /
+    /// per-lane jobs) — the service-level window into the Chase–Lev
+    /// substrate. See [`crate::exec::telemetry`] for field semantics.
     pub fn telemetry(&self) -> crate::exec::telemetry::Telemetry {
         crate::exec::global().telemetry()
     }
 
     /// Windowed (rate-based) view of the shared executor: per-second
-    /// steal / injector / execution rates over the last recorded
-    /// epochs — what a service dashboard should chart instead of
-    /// lifetime totals.
+    /// steal / injector / execution / per-lane rates over the last
+    /// recorded epochs — what a service dashboard should chart instead
+    /// of lifetime totals.
     pub fn window_rates(&self) -> crate::exec::telemetry::WindowRates {
         crate::exec::global().window_rates()
     }
@@ -52,21 +195,85 @@ impl WorkerPool {
         crate::exec::global().recalibrate_now()
     }
 
-    /// Submit a job; returns a receiver for its result.
+    /// Submit a job under the pool's default class; returns a receiver
+    /// for its result. Non-blocking: if the pool is fully admitted the
+    /// job waits in the pool's FIFO, not the caller.
     pub fn submit<R: Send + 'static>(
         &self,
         job: impl FnOnce() -> R + Send + 'static,
     ) -> Receiver<R> {
-        crate::exec::global().submit(job)
+        self.submit_with_class(self.class, job)
     }
 
-    /// Submit a batch of jobs in one queue pass; the receiver yields
-    /// `(index, result)` pairs in completion order.
+    /// [`WorkerPool::submit`] with an explicit class for this one job.
+    /// The job holds one of THIS pool's permits even while it waits in
+    /// its injector lane — see the module docs before mixing classes
+    /// in one pool (separate per-class pools isolate them).
+    pub fn submit_with_class<R: Send + 'static>(
+        &self,
+        class: JobClass,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> Receiver<R> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let admission = Arc::clone(&self.admission);
+        self.admission.admit(
+            Box::new(move || {
+                // Guard first: a panicking `job()` unwinds through it,
+                // so the permit is released on every exit path.
+                let _permit = PermitGuard(admission);
+                let _ = tx.send(job());
+            }),
+            class,
+        );
+        rx
+    }
+
+    /// Submit a batch of jobs; the receiver yields `(index, result)`
+    /// pairs in completion order. The batch shares the pool's permits
+    /// in submission order: the prefix that fits the free permits is
+    /// dispatched as ONE batched executor pass (single shard push,
+    /// single wake-up broadcast — the PR-3 entry path, not a per-job
+    /// trickle), and only the overflow waits in the pool FIFO to be
+    /// dispatched as permits free up.
     pub fn submit_many<R: Send + 'static, F: FnOnce() -> R + Send + 'static>(
         &self,
         jobs: Vec<F>,
     ) -> Receiver<(usize, R)> {
-        crate::exec::global().submit_many(jobs)
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut wrapped: Vec<Job> = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, job)| {
+                let tx = tx.clone();
+                let admission = Arc::clone(&self.admission);
+                Box::new(move || {
+                    // Guard first: a panicking `job()` unwinds through
+                    // it, releasing the permit on every exit path.
+                    let _permit = PermitGuard(admission);
+                    let _ = tx.send((i, job()));
+                }) as Job
+            })
+            .collect();
+        {
+            let mut st = self.admission.state.lock().unwrap();
+            // Invariant: available > 0 implies pending is empty (admit
+            // queues only at zero, release refills only from pending),
+            // so dispatching this prefix ahead of the queue is FIFO.
+            let fits = st.available.min(wrapped.len());
+            st.available -= fits;
+            let overflow = wrapped.split_off(fits);
+            for job in overflow {
+                st.pending.push_back((job, self.class));
+            }
+            // Dispatch UNDER the lock: once the overflow is queued, a
+            // release() on a worker could otherwise pop an overflow
+            // job and start it before this prefix reached the
+            // executor, breaking the FIFO-dispatch contract. No lock
+            // inversion: admit/release also take this lock first, and
+            // the executor's wake lock is only ever acquired after it.
+            crate::exec::global().submit_boxed_many(wrapped, self.class);
+        }
+        rx
     }
 
     /// Submit and wait.
@@ -80,6 +287,20 @@ mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+    use std::time::Duration;
+
+    /// The permit release happens on the worker AFTER the result send,
+    /// so a receiver can observe `in_flight == 1` for a moment; settle
+    /// before asserting on the permit count.
+    fn await_idle(pool: &WorkerPool) {
+        for _ in 0..1000 {
+            if pool.in_flight() == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        panic!("pool never returned its permits (in_flight {})", pool.in_flight());
+    }
 
     #[test]
     fn runs_jobs_on_workers() {
@@ -106,12 +327,77 @@ mod tests {
         drop(pool); // must not hang (the shared executor persists)
     }
 
+    /// Acceptance: a `WorkerPool::new(2)` tenant never has more than 2
+    /// jobs admitted concurrently, even under an 8-job burst — the
+    /// isolation `Config.threads` lost in PR 1, restored at job entry.
+    #[test]
+    fn admission_caps_in_flight_jobs_under_burst() {
+        let pool = WorkerPool::new(2);
+        let running = Arc::new(AtomicUsize::new(0));
+        let high_water = Arc::new(AtomicUsize::new(0));
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let running = Arc::clone(&running);
+                let high_water = Arc::clone(&high_water);
+                pool.submit(move || {
+                    let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                    high_water.fetch_max(now, Ordering::SeqCst);
+                    // Long enough that overlap WOULD happen without
+                    // admission (8 jobs, >= 4 fleet workers).
+                    std::thread::sleep(Duration::from_millis(10));
+                    running.fetch_sub(1, Ordering::SeqCst);
+                    i
+                })
+            })
+            .collect();
+        let got: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+        assert!(
+            high_water.load(Ordering::SeqCst) <= 2,
+            "admission violated: {} jobs in flight on a 2-permit pool",
+            high_water.load(Ordering::SeqCst)
+        );
+        await_idle(&pool);
+        assert_eq!(pool.queued(), 0);
+    }
+
+    /// Queued jobs are dispatched in submission order as permits free
+    /// up (the pending queue is FIFO).
+    #[test]
+    fn overflow_starts_in_submission_order() {
+        let pool = WorkerPool::new(1);
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let order = Arc::clone(&order);
+                pool.submit(move || {
+                    order.lock().unwrap().push(i);
+                })
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // size = 1: jobs are admitted strictly one at a time, so start
+        // order IS submission order.
+        assert_eq!(*order.lock().unwrap(), (0..6).collect::<Vec<_>>());
+    }
+
+    /// A panicking job must release its permit (drop-guard path) or a
+    /// 1-permit pool would wedge forever.
+    #[test]
+    fn panicking_job_releases_its_permit() {
+        let pool = WorkerPool::new(1);
+        let rx = pool.submit(|| -> usize { panic!("job boom") });
+        // The panic surfaces as a dropped sender.
+        assert!(rx.recv().is_err());
+        // The pool still has its permit: the next job runs.
+        assert_eq!(pool.run(|| 41 + 1), 42);
+        await_idle(&pool);
+    }
+
     #[test]
     fn concurrent_jobs_all_complete() {
-        // Overlap timing is asserted against a private executor in
-        // `exec::tests` (immune to sibling-test queue contention); the
-        // facade test checks completion through the shared pool.
-        use std::time::Duration;
         let pool = WorkerPool::new(4);
         let rxs: Vec<_> = (0..8)
             .map(|i| {
@@ -136,5 +422,20 @@ mod tests {
             seen[i] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    /// A background-class pool completes its work through the
+    /// background lane.
+    #[test]
+    fn background_pool_completes_jobs() {
+        let pool = WorkerPool::with_class(2, JobClass::Background);
+        assert_eq!(pool.class(), JobClass::Background);
+        let jobs: Vec<_> = (0..12).map(|i| move || i * i).collect();
+        let rx = pool.submit_many(jobs);
+        let mut got: Vec<usize> = rx.iter().map(|(_, r)| r).collect();
+        got.sort();
+        let mut want: Vec<usize> = (0..12).map(|i| i * i).collect();
+        want.sort();
+        assert_eq!(got, want);
     }
 }

@@ -1,5 +1,5 @@
 //! Lock-free sharded injector — the external entry queue of the
-//! executor.
+//! executor — with **two priority lanes per shard** (PR 4).
 //!
 //! Before this module the injector was one `Mutex<VecDeque>`: every
 //! submission from a non-worker thread and every worker drain crossed
@@ -10,29 +10,58 @@
 //! - **Submitters** pick a shard by a thread-local submitter id (one
 //!   cheap TLS read; distinct submitter threads spread over shards, so
 //!   concurrent producers rarely touch the same cache line). A push is
-//!   one `swap` on the shard's tail plus one `Release` store — no lock,
+//!   one `swap` on the lane's tail plus one `Release` store — no lock,
 //!   no CAS loop, O(1) regardless of contention.
-//! - **Workers** drain a shard in batches, round-robin from a
-//!   per-worker starting offset. A worker claims a shard with a single
-//!   CAS on its `draining` flag; a claim failure means another worker
-//!   is already moving that shard's backlog onto its deque, so the
-//!   sweep just tries the next shard — a worker never waits on a
-//!   drain in progress.
-//! - **Per-shard FIFO**: each shard is a FIFO queue and a batch
-//!   submitted by one thread lands in one shard, so jobs drain in
-//!   exactly their submission order (the property that keeps
-//!   `submit_many` job-list order — and with it the stable, index-
-//!   aligned delivery the coordinator's batched sort relies on —
-//!   intact within a shard).
+//! - **Workers** drain in batches, round-robin from a per-worker
+//!   starting offset. A worker claims a shard with a single CAS on its
+//!   `draining` flag; a claim failure means another worker is already
+//!   moving that shard's backlog onto its deque, so the sweep just
+//!   tries the next shard — a worker never waits on a drain in
+//!   progress.
+//! - **Per-shard, per-lane FIFO**: each lane of each shard is a FIFO
+//!   queue and a batch submitted by one thread lands in one lane of
+//!   one shard, so jobs drain in exactly their submission order (the
+//!   property that keeps `submit_many` job-list order — and with it
+//!   the stable, index-aligned delivery the coordinator's batched sort
+//!   relies on — intact within a shard).
 //!
-//! # Shard structure and memory ordering
+//! # Priority lanes ([`JobClass`])
 //!
-//! Each `Shard` is a Vyukov-style intrusive MPSC queue: producers
-//! link nodes at the tail with an atomic `swap`, the (single, at a
-//! time) consumer unlinks at the head. The "single consumer" is
-//! whoever holds the shard's `draining` flag, so across the whole
-//! fleet the queue is multi-producer/multi-consumer while every
-//! individual drain session sees the simple MPSC invariants:
+//! Every shard holds two lanes: **service** (latency-sensitive jobs —
+//! the default for every legacy entry point) and **background**
+//! (maintenance, rebuilds, anything that should yield to user-facing
+//! traffic). A drain sweep takes from the service lanes *strictly
+//! first*: background jobs run only when no shard has claimable
+//! service work. Two mechanisms keep that strictness safe and cheap:
+//!
+//! - **Anti-starvation escape hatch**: a fleet-wide counter of
+//!   consecutive service-class drains *performed while background
+//!   work was waiting* (a service drain with an empty background lane
+//!   resets it, so an all-service phase cannot bank a stale streak).
+//!   Once it reaches the starvation limit
+//!   (`EXEC_BG_STARVATION_LIMIT`, default
+//!   [`DEFAULT_BG_STARVATION_LIMIT`]), exactly one background batch
+//!   is *promoted* ahead of the service lanes and the counter
+//!   resets — a saturating service stream can delay background work,
+//!   never park it forever. The counter is `Relaxed` and
+//!   fleet-shared: it is a fairness heuristic, not an exact schedule.
+//! - **Shallow-backlog merging**: when the first claimed shard yields
+//!   fewer than a quarter of the batch budget, the sweep keeps going
+//!   and merges the *same lane's* backlog from further shards into one
+//!   batch — at low load a worker wakes once for the fleet's dribble
+//!   of jobs instead of once per shard. Deep backlogs keep the old
+//!   one-shard-per-sweep behavior (locality, claim fairness), and the
+//!   concatenation preserves per-shard FIFO order within the batch.
+//!
+//! # Lane structure and memory ordering
+//!
+//! Each lane is a Vyukov-style intrusive MPSC queue: producers link
+//! nodes at the tail with an atomic `swap`, the (single, at a time)
+//! consumer unlinks at the head. The "single consumer" is whoever
+//! holds the shard's `draining` flag (one flag covers both lanes), so
+//! across the whole fleet the queue is multi-producer/multi-consumer
+//! while every individual drain session sees the simple MPSC
+//! invariants:
 //!
 //! - **Push**: the node is fully initialized before the `AcqRel`
 //!   `swap` publishes it as the new tail; the `Release` store of
@@ -50,7 +79,7 @@
 //! - **Claim**: `draining` CAS `Acquire` on claim / `Release` store on
 //!   release orders consumer sessions, so `head` itself needs no
 //!   ordering beyond the flag's.
-//! - **`len`**: a published length per shard, incremented after a push
+//! - **`len`**: a published length per lane, incremented after a push
 //!   completes and decremented per pop. It is the *lock-free idleness
 //!   signal*: `Shared::is_idle` sums these instead of taking any lock.
 //!   It can transiently undercount a push in flight; the executor's
@@ -68,6 +97,58 @@ use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
 
 /// The job type stored in the injector (same shape as `exec::Job`).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Priority class of a submitted job. Every legacy entry point
+/// defaults to [`JobClass::Service`]; background work must opt in.
+/// The enum is deliberately small but extensible — adding a lane means
+/// adding a variant, bumping [`JobClass::LANES`], and giving it a slot
+/// in the drain preference order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// Latency-sensitive traffic: user-facing service jobs and every
+    /// job submitted through a class-less API.
+    #[default]
+    Service,
+    /// Yielding traffic: maintenance, rebuilds, prefetch — drained
+    /// only when no service work is claimable (plus the counted
+    /// anti-starvation promotion).
+    Background,
+}
+
+impl JobClass {
+    /// Number of lanes (enum variants).
+    pub const LANES: usize = 2;
+
+    /// This class' lane index within a shard.
+    #[inline]
+    pub(crate) fn lane(self) -> usize {
+        match self {
+            JobClass::Service => 0,
+            JobClass::Background => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            JobClass::Service => "service",
+            JobClass::Background => "background",
+        }
+    }
+}
+
+/// Consecutive service-class drains tolerated while background work
+/// waits before one background batch is promoted (overridable via
+/// `EXEC_BG_STARVATION_LIMIT`).
+pub const DEFAULT_BG_STARVATION_LIMIT: usize = 8;
+
+/// One drained batch: jobs from one lane (concatenated per-shard FIFO
+/// runs), the lane they came from, and whether an anti-starvation
+/// promotion put a background batch ahead of queued service work.
+pub struct Drained {
+    pub jobs: Vec<Job>,
+    pub class: JobClass,
+    pub promoted: bool,
+}
 
 /// Process-wide submitter-id allocator; each submitting thread gets a
 /// stable small integer on first use, which picks its shard.
@@ -107,18 +188,16 @@ impl Node {
     }
 }
 
-/// One injector shard: an intrusive FIFO queue (see module docs) plus
-/// its drain claim and published length. Padded so neighbouring
-/// shards' producers never write the same cache line.
+/// One lane of one shard: an intrusive FIFO queue (see module docs)
+/// plus its published length. Padded so the two lanes' producers never
+/// write the same cache line.
 #[repr(align(128))]
-struct Shard {
+struct Lane {
     /// Producers `swap` here; the returned previous tail is the node
     /// whose `next` the producer links.
     tail: AtomicPtr<Node>,
     /// Consumer end; the current node is the stub (job already taken).
     head: AtomicPtr<Node>,
-    /// Drain claim: exactly one worker at a time pops this shard.
-    draining: AtomicBool,
     /// Published length — the lock-free idleness/backlog signal.
     len: AtomicUsize,
 }
@@ -127,16 +206,15 @@ struct Shard {
 // the module docs — `next` has one writer, `job` is moved out by the
 // exclusive drain-claim holder, nodes are freed only after their
 // `next` link was observed (no later access can exist).
-unsafe impl Send for Shard {}
-unsafe impl Sync for Shard {}
+unsafe impl Send for Lane {}
+unsafe impl Sync for Lane {}
 
-impl Shard {
-    fn new() -> Shard {
+impl Lane {
+    fn new() -> Lane {
         let stub = Node::alloc(None);
-        Shard {
+        Lane {
             tail: AtomicPtr::new(stub),
             head: AtomicPtr::new(stub),
-            draining: AtomicBool::new(false),
             len: AtomicUsize::new(0),
         }
     }
@@ -158,7 +236,7 @@ impl Shard {
     /// Pop the oldest job.
     ///
     /// # Safety
-    /// Caller must hold this shard's `draining` claim (exclusive
+    /// Caller must hold the owning shard's `draining` claim (exclusive
     /// consumer); the `Injector::drain` sweep is the only caller.
     unsafe fn pop(&self) -> Option<Job> {
         let head = self.head.load(Ordering::Relaxed);
@@ -182,7 +260,7 @@ impl Shard {
     }
 }
 
-impl Drop for Shard {
+impl Drop for Lane {
     fn drop(&mut self) {
         // `&mut self`: workers are joined and no external submitter
         // can hold a reference (dropping the Executor requires
@@ -198,21 +276,59 @@ impl Drop for Shard {
     }
 }
 
-/// The sharded external-entry queue. See the module docs.
+/// One injector shard: one FIFO lane per [`JobClass`] plus the drain
+/// claim shared by both lanes. Padded so neighbouring shards'
+/// producers never write the same cache line.
+#[repr(align(128))]
+struct Shard {
+    lanes: [Lane; JobClass::LANES],
+    /// Drain claim: exactly one worker at a time pops this shard
+    /// (either lane).
+    draining: AtomicBool,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            lanes: [Lane::new(), Lane::new()],
+            draining: AtomicBool::new(false),
+        }
+    }
+}
+
+/// The sharded two-lane external-entry queue. See the module docs.
 pub struct Injector {
     shards: Box<[Shard]>,
     /// `shards.len() - 1`; shard count is a power of two.
     mask: usize,
+    /// Fleet-wide consecutive service-drain counter (the
+    /// anti-starvation clock). Relaxed heuristic — see module docs.
+    service_streak: AtomicUsize,
+    /// Promotion threshold for `service_streak`.
+    starvation_limit: usize,
 }
 
 impl Injector {
     /// Build an injector with at least `shards` shards (rounded up to
-    /// a power of two).
+    /// a power of two); the starvation limit comes from
+    /// `EXEC_BG_STARVATION_LIMIT` (default
+    /// [`DEFAULT_BG_STARVATION_LIMIT`]).
     pub fn new(shards: usize) -> Injector {
+        let limit = super::tunables::env_usize("EXEC_BG_STARVATION_LIMIT")
+            .unwrap_or(DEFAULT_BG_STARVATION_LIMIT)
+            .max(1);
+        Injector::with_starvation_limit(shards, limit)
+    }
+
+    /// [`Injector::new`] with an explicit starvation limit (tests pin
+    /// the promotion point deterministically).
+    pub fn with_starvation_limit(shards: usize, limit: usize) -> Injector {
         let n = shards.max(1).next_power_of_two();
         Injector {
             shards: (0..n).map(|_| Shard::new()).collect(),
             mask: n - 1,
+            service_streak: AtomicUsize::new(0),
+            starvation_limit: limit.max(1),
         }
     }
 
@@ -224,31 +340,82 @@ impl Injector {
         &self.shards[submitter_id() & self.mask]
     }
 
-    /// Push one job from any thread (lock-free).
-    pub fn push(&self, job: Job) {
-        self.home_shard().push(job);
+    /// Push one job from any thread (lock-free) into its class' lane.
+    pub fn push(&self, job: Job, class: JobClass) {
+        self.home_shard().lanes[class.lane()].push(job);
     }
 
-    /// Push a whole batch from any thread into ONE shard, preserving
-    /// its order — the per-shard FIFO guarantee `submit_many` relies
-    /// on.
-    pub fn push_batch(&self, jobs: Vec<Job>) {
-        let shard = self.home_shard();
+    /// Push a whole batch from any thread into ONE lane of ONE shard,
+    /// preserving its order — the per-shard FIFO guarantee
+    /// `submit_many` relies on.
+    pub fn push_batch(&self, jobs: Vec<Job>, class: JobClass) {
+        let lane = &self.home_shard().lanes[class.lane()];
         for job in jobs {
-            shard.push(job);
+            lane.push(job);
         }
     }
 
-    /// Drain up to `max` jobs from the first claimable non-empty
-    /// shard, sweeping round-robin from `start`. Returns in per-shard
-    /// FIFO order; an empty result means every shard was empty or
-    /// being drained by another worker.
-    pub fn drain(&self, start: usize, max: usize) -> Vec<Job> {
+    /// Drain up to `max` jobs, sweeping shards round-robin from
+    /// `start`. Service lanes are drained strictly before background
+    /// lanes, except when the anti-starvation counter promotes one
+    /// background batch (see module docs). `None` means every lane was
+    /// empty or being drained by another worker.
+    pub fn drain(&self, start: usize, max: usize) -> Option<Drained> {
+        let bg_waiting = self.lane_len(JobClass::Background) > 0;
+        let promote =
+            bg_waiting && self.service_streak.load(Ordering::Relaxed) >= self.starvation_limit;
+        let order = if promote {
+            [JobClass::Background, JobClass::Service]
+        } else {
+            [JobClass::Service, JobClass::Background]
+        };
+        for class in order {
+            let jobs = self.drain_class(start, max, class);
+            if jobs.is_empty() {
+                continue;
+            }
+            match class {
+                // Relaxed RMWs: the streak is a fairness heuristic, not
+                // an exact schedule (concurrent drains may interleave).
+                // It only accumulates while background work is actually
+                // WAITING — a service drain with an empty background
+                // lane resets it, so a background job arriving after a
+                // long all-service phase starts a fresh count instead
+                // of being promoted ahead of queued service work by a
+                // stale streak.
+                JobClass::Service => {
+                    if bg_waiting {
+                        self.service_streak.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.service_streak.store(0, Ordering::Relaxed);
+                    }
+                }
+                JobClass::Background => {
+                    self.service_streak.store(0, Ordering::Relaxed);
+                }
+            }
+            let promoted = promote && class == JobClass::Background;
+            return Some(Drained { jobs, class, promoted });
+        }
+        None
+    }
+
+    /// Sweep one class' lanes. The first claimed shard is drained up
+    /// to `max`; if its yield was shallow (under a quarter of the
+    /// budget) the sweep keeps merging further shards' backlogs of the
+    /// SAME lane into the batch — one wake-up serves the fleet's
+    /// dribble at low load. Per-shard FIFO runs concatenate in sweep
+    /// order, so order within each shard is preserved.
+    fn drain_class(&self, start: usize, max: usize, class: JobClass) -> Vec<Job> {
         let n = self.shards.len();
+        let shallow = (max / 4).max(1);
         let mut out = Vec::new();
         for k in 0..n {
+            if out.len() >= shallow {
+                break;
+            }
             let shard = &self.shards[(start + k) & self.mask];
-            if shard.len.load(Ordering::Acquire) == 0 {
+            if shard.lanes[class.lane()].len.load(Ordering::Acquire) == 0 {
                 continue;
             }
             if shard
@@ -261,28 +428,35 @@ impl Injector {
             }
             while out.len() < max {
                 // SAFETY: we hold the drain claim.
-                match unsafe { shard.pop() } {
+                match unsafe { shard.lanes[class.lane()].pop() } {
                     Some(job) => out.push(job),
                     None => break,
                 }
             }
             shard.draining.store(false, Ordering::Release);
-            if !out.is_empty() {
-                break;
-            }
         }
         out
     }
 
-    /// Published backlog across all shards — lock-free; may
-    /// transiently undercount a push in flight (see module docs).
+    /// Published backlog of one class across all shards — lock-free;
+    /// may transiently undercount a push in flight (see module docs).
+    pub fn lane_len(&self, class: JobClass) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lanes[class.lane()].len.load(Ordering::Acquire))
+            .sum()
+    }
+
+    /// Published backlog across all shards and lanes.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.len.load(Ordering::Acquire)).sum()
+        self.lane_len(JobClass::Service) + self.lane_len(JobClass::Background)
     }
 
     /// Lock-free idleness check against the published lengths.
     pub fn is_empty(&self) -> bool {
-        self.shards.iter().all(|s| s.len.load(Ordering::Acquire) == 0)
+        self.shards.iter().all(|s| {
+            s.lanes.iter().all(|l| l.len.load(Ordering::Acquire) == 0)
+        })
     }
 }
 
@@ -292,6 +466,11 @@ mod tests {
     use std::sync::atomic::AtomicUsize;
     use std::sync::{Arc, Mutex};
 
+    fn log_job(log: &Arc<Mutex<Vec<usize>>>, i: usize) -> Job {
+        let log = Arc::clone(log);
+        Box::new(move || log.lock().unwrap().push(i))
+    }
+
     #[test]
     fn single_submitter_drains_in_fifo_order() {
         // One shard so the single submitting thread and the drain see
@@ -300,18 +479,20 @@ mod tests {
         let log = Arc::new(Mutex::new(Vec::new()));
         let n = if cfg!(miri) { 40 } else { 400 };
         for i in 0..n {
-            let log = Arc::clone(&log);
-            inj.push(Box::new(move || log.lock().unwrap().push(i)));
+            inj.push(log_job(&log, i), JobClass::Service);
         }
         assert_eq!(inj.len(), n);
+        assert_eq!(inj.lane_len(JobClass::Service), n);
+        assert_eq!(inj.lane_len(JobClass::Background), 0);
         // Drain in bounded batches, running jobs in drained order.
         let mut drained = 0;
         while drained < n {
-            let batch = inj.drain(drained, 32);
-            assert!(!batch.is_empty(), "backlog of {} yielded nothing", n - drained);
-            assert!(batch.len() <= 32, "drain ignored the batch cap");
-            drained += batch.len();
-            for job in batch {
+            let batch = inj.drain(drained, 32).expect("backlog yields a batch");
+            assert_eq!(batch.class, JobClass::Service);
+            assert!(!batch.promoted);
+            assert!(batch.jobs.len() <= 32, "drain ignored the batch cap");
+            drained += batch.jobs.len();
+            for job in batch.jobs {
                 job();
             }
         }
@@ -324,28 +505,236 @@ mod tests {
         let inj = Injector::new(8);
         let log = Arc::new(Mutex::new(Vec::new()));
         let n = if cfg!(miri) { 30 } else { 300 };
-        let jobs: Vec<Job> = (0..n)
-            .map(|i| {
-                let log = Arc::clone(&log);
-                Box::new(move || log.lock().unwrap().push(i)) as Job
-            })
-            .collect();
-        inj.push_batch(jobs);
+        let jobs: Vec<Job> = (0..n).map(|i| log_job(&log, i)).collect();
+        inj.push_batch(jobs, JobClass::Service);
         // The batch went to ONE shard; a sweep from any start must
         // return it in submission order.
         let mut drained = 0;
         while drained < n {
-            let batch = inj.drain(3, n);
-            drained += batch.len();
-            for job in batch {
+            let batch = inj.drain(3, n).expect("backlog yields a batch");
+            drained += batch.jobs.len();
+            for job in batch.jobs {
                 job();
             }
         }
         assert_eq!(*log.lock().unwrap(), (0..n).collect::<Vec<_>>());
     }
 
-    /// Satellite stress: N submitter threads × M batches race the
-    /// drains; every job must execute exactly once.
+    /// Tentpole: the service lane is drained strictly before queued
+    /// background work, even when background was submitted FIRST.
+    #[test]
+    fn service_lane_drains_before_queued_background() {
+        // Promotion disabled (huge limit) so strict priority is pure
+        // regardless of any EXEC_BG_STARVATION_LIMIT in the env.
+        let inj = Injector::with_starvation_limit(1, usize::MAX);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let nb = if cfg!(miri) { 10 } else { 100 };
+        let ns = if cfg!(miri) { 6 } else { 60 };
+        for i in 0..nb {
+            inj.push(log_job(&log, 1_000 + i), JobClass::Background);
+        }
+        for i in 0..ns {
+            inj.push(log_job(&log, i), JobClass::Service);
+        }
+        let mut service_done = 0;
+        let mut background_done = 0;
+        while let Some(batch) = inj.drain(0, 16) {
+            match batch.class {
+                JobClass::Service => {
+                    // No background job may have run before the
+                    // service lane went dry.
+                    assert_eq!(background_done, 0, "background overtook service");
+                    service_done += batch.jobs.len();
+                }
+                JobClass::Background => {
+                    assert_eq!(service_done, ns, "background before service drained");
+                    background_done += batch.jobs.len();
+                }
+            }
+            for job in batch.jobs {
+                job();
+            }
+        }
+        assert_eq!((service_done, background_done), (ns, nb));
+        // Per-lane FIFO: both classes kept their own submission order.
+        let log = log.lock().unwrap();
+        let service: Vec<usize> = log.iter().copied().filter(|&i| i < 1_000).collect();
+        let background: Vec<usize> = log.iter().copied().filter(|&i| i >= 1_000).collect();
+        assert_eq!(service, (0..ns).collect::<Vec<_>>());
+        assert_eq!(background, (0..nb).map(|i| 1_000 + i).collect::<Vec<_>>());
+    }
+
+    /// Satellite: after `limit` consecutive service drains with
+    /// background queued, exactly one background batch is promoted
+    /// (flagged), then service resumes.
+    #[test]
+    fn anti_starvation_promotes_one_background_batch() {
+        let limit = 3;
+        let inj = Injector::with_starvation_limit(1, limit);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let noop = || {
+            let ran = Arc::clone(&ran);
+            Box::new(move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }) as Job
+        };
+        // Plenty of both classes; drain one job at a time so each
+        // drain is one "consecutive service drain" tick.
+        for _ in 0..limit + 4 {
+            inj.push(noop(), JobClass::Service);
+        }
+        for _ in 0..2 {
+            inj.push(noop(), JobClass::Background);
+        }
+        for i in 0..limit {
+            let batch = inj.drain(0, 1).unwrap();
+            assert_eq!(batch.class, JobClass::Service, "drain {i} before the limit");
+            assert!(!batch.promoted);
+            for j in batch.jobs {
+                j();
+            }
+        }
+        // The limit is reached: the next drain promotes background.
+        let promoted = inj.drain(0, 1).unwrap();
+        assert_eq!(promoted.class, JobClass::Background);
+        assert!(promoted.promoted, "promotion must be flagged");
+        for j in promoted.jobs {
+            j();
+        }
+        // The streak reset: service runs again immediately after.
+        let next = inj.drain(0, 1).unwrap();
+        assert_eq!(next.class, JobClass::Service);
+        assert!(!next.promoted);
+        for j in next.jobs {
+            j();
+        }
+        // Drain everything; totals must balance.
+        while let Some(batch) = inj.drain(0, 64) {
+            for j in batch.jobs {
+                j();
+            }
+        }
+        assert_eq!(ran.load(Ordering::Relaxed), limit + 4 + 2);
+        assert!(inj.is_empty());
+    }
+
+    /// Regression: a long all-service phase must NOT bank a stale
+    /// streak — a background job arriving afterwards waits a full
+    /// fresh `limit` of service drains before promotion, instead of
+    /// jumping a deep service queue immediately.
+    #[test]
+    fn stale_service_streak_does_not_promote_fresh_background() {
+        let limit = 2;
+        let inj = Injector::with_starvation_limit(1, limit);
+        // Phase 1: many service drains with NO background queued —
+        // each one must reset (not grow) the streak.
+        for _ in 0..limit * 3 {
+            inj.push(Box::new(|| {}), JobClass::Service);
+        }
+        for _ in 0..limit * 3 {
+            for j in inj.drain(0, 1).expect("service queued").jobs {
+                j();
+            }
+        }
+        // Phase 2: background arrives behind a service backlog.
+        for _ in 0..limit + 1 {
+            inj.push(Box::new(|| {}), JobClass::Service);
+        }
+        inj.push(Box::new(|| {}), JobClass::Background);
+        // A fresh count: the next `limit` drains are still service...
+        for i in 0..limit {
+            let b = inj.drain(0, 1).unwrap();
+            assert_eq!(b.class, JobClass::Service, "stale streak promoted bg at drain {i}");
+            for j in b.jobs {
+                j();
+            }
+        }
+        // ...and only then the promotion fires.
+        let b = inj.drain(0, 1).unwrap();
+        assert_eq!(b.class, JobClass::Background);
+        assert!(b.promoted);
+        for j in b.jobs {
+            j();
+        }
+        while let Some(b) = inj.drain(0, 8) {
+            for j in b.jobs {
+                j();
+            }
+        }
+        assert!(inj.is_empty());
+    }
+
+    /// Satellite: shallow per-shard backlogs merge into ONE drained
+    /// batch across shards (fewer wake-ups at low load), preserving
+    /// each shard's FIFO order within the concatenation.
+    #[test]
+    fn shallow_backlogs_merge_across_shards() {
+        let inj = Arc::new(Injector::new(4));
+        let per_thread = 2usize;
+        let threads = 4usize;
+        let log = Arc::new(Mutex::new(Vec::new()));
+        // Distinct submitter threads land in (up to) distinct shards;
+        // each pushes a tiny FIFO run.
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let inj = Arc::clone(&inj);
+                let log = Arc::clone(&log);
+                s.spawn(move || {
+                    for j in 0..per_thread {
+                        let log = Arc::clone(&log);
+                        inj.push(
+                            Box::new(move || log.lock().unwrap().push(t * 10 + j)),
+                            JobClass::Service,
+                        );
+                    }
+                });
+            }
+        });
+        let total = threads * per_thread;
+        assert_eq!(inj.len(), total);
+        // total (8) <= shallow threshold budget: ONE sweep must merge
+        // every shard's dribble into a single batch.
+        let batch = inj.drain(0, 32).expect("sweep finds the backlog");
+        assert_eq!(batch.jobs.len(), total, "shallow backlogs not merged");
+        assert!(inj.is_empty());
+        for job in batch.jobs {
+            job();
+        }
+        // Per-shard FIFO survived the merge: within each submitter's
+        // run, order is preserved.
+        let log = log.lock().unwrap();
+        for t in 0..threads {
+            let run: Vec<usize> =
+                log.iter().copied().filter(|&v| v / 10 == t).collect();
+            assert_eq!(run, (0..per_thread).map(|j| t * 10 + j).collect::<Vec<_>>());
+        }
+    }
+
+    /// A deep first shard still returns alone (the old one-shard-per-
+    /// sweep locality), capped at the batch budget.
+    #[test]
+    fn deep_backlog_keeps_batch_cap() {
+        let inj = Injector::new(1);
+        let n = if cfg!(miri) { 40 } else { 200 };
+        for _ in 0..n {
+            inj.push(Box::new(|| {}), JobClass::Service);
+        }
+        let batch = inj.drain(0, 32).unwrap();
+        assert_eq!(batch.jobs.len(), 32, "deep backlog must cap at max");
+        assert_eq!(inj.len(), n - 32);
+        for j in batch.jobs {
+            j();
+        }
+        while let Some(b) = inj.drain(0, 64) {
+            for j in b.jobs {
+                j();
+            }
+        }
+        assert!(inj.is_empty());
+    }
+
+    /// Satellite stress: N submitter threads × M batches (mixed
+    /// classes) race the drains; every job must execute exactly once.
     #[test]
     fn concurrent_submitters_and_drains_exactly_once() {
         let submitters = if cfg!(miri) { 2 } else { 8 };
@@ -371,7 +760,13 @@ mod tests {
                                 }) as Job
                             })
                             .collect();
-                        inj.push_batch(jobs);
+                        // Alternate lanes so both are stressed.
+                        let class = if b % 2 == 0 {
+                            JobClass::Service
+                        } else {
+                            JobClass::Background
+                        };
+                        inj.push_batch(jobs, class);
                     }
                 });
             }
@@ -381,19 +776,21 @@ mod tests {
                 let inj = Arc::clone(&inj);
                 let done = Arc::clone(&done);
                 s.spawn(move || loop {
-                    let batch = inj.drain(w, 16);
-                    if batch.is_empty() {
-                        if done.load(Ordering::Acquire) >= total {
-                            break;
+                    match inj.drain(w, 16) {
+                        None => {
+                            if done.load(Ordering::Acquire) >= total {
+                                break;
+                            }
+                            std::hint::spin_loop();
                         }
-                        std::hint::spin_loop();
-                        continue;
+                        Some(batch) => {
+                            let got = batch.jobs.len();
+                            for job in batch.jobs {
+                                job();
+                            }
+                            done.fetch_add(got, Ordering::AcqRel);
+                        }
                     }
-                    let got = batch.len();
-                    for job in batch {
-                        job();
-                    }
-                    done.fetch_add(got, Ordering::AcqRel);
                 });
             }
         });
@@ -414,11 +811,16 @@ mod tests {
         }
         let drops = Arc::new(AtomicUsize::new(0));
         let inj = Injector::new(4);
-        for _ in 0..10 {
+        // Both lanes hold unconsumed jobs at drop.
+        for i in 0..10 {
             let canary = Canary(Arc::clone(&drops));
-            inj.push(Box::new(move || {
-                let _keep = &canary;
-            }));
+            let class = if i % 2 == 0 { JobClass::Service } else { JobClass::Background };
+            inj.push(
+                Box::new(move || {
+                    let _keep = &canary;
+                }),
+                class,
+            );
         }
         // Drain (and drop unrun) a couple, leave the rest to Drop.
         let batch = inj.drain(0, 3);

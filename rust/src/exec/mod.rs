@@ -7,11 +7,12 @@
 //! core phases                          exec                        coordinator
 //! ───────────────                      ───────────────────────     ─────────────────
 //! partition_parallel ─┐                ┌─ worker 0: Chase–Lev ◄┐   MergeService jobs
-//! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: Chase–Lev ◄┼── WorkerPool facade
+//! run_tasks_parallel ─┼─ scope(|s|..) ─┤  worker 1: Chase–Lev ◄┼── WorkerPool (admission)
 //! sort block/rounds  ─┤                │  ...       CAS-steal ─┘   submit / submit_many
 //! k-way merge rounds ─┘                └─◄ injector shard 0..s ◄── external submitters
-//!                                           (lock-free FIFO,        (shard by thread)
-//!                                            batch drain)
+//!                                           (2 lanes per shard:     (shard by thread,
+//!                                            service ▸ background,   lane by JobClass)
+//!                                            lock-free FIFO drain)
 //!
 //!        counters ──► window ring (per-epoch deltas, rolled by the
 //!        (lifetime)   first worker to notice the interval elapse)
@@ -39,20 +40,40 @@
 //! Work enters the fleet on two paths, neither of which takes a lock:
 //!
 //! - a thread that *is* an executor worker (detected via TLS) pushes
-//!   spawned jobs straight onto its own deque, lock-free; siblings
-//!   steal them as they go idle — this is the nested-parallelism fast
-//!   path every core phase hits;
-//! - any other thread pushes into the **sharded injector**
-//!   ([`injector`]): submitters spread over per-shard lock-free FIFO
-//!   queues by thread id, so concurrent external submitters don't
-//!   serialize on one entry lock the way the old `Mutex<VecDeque>`
-//!   injector forced them to. A worker that runs dry claims a shard
-//!   with one CAS and takes a *batch*: it keeps the first job and
-//!   batch-publishes the rest on its own deque
-//!   ([`deque::Deque::push_batch`] — one fence for the whole batch),
-//!   turning external traffic into the same steal-distributed flow.
-//!   Batches stay in per-shard FIFO order end to end, which is what
-//!   keeps `submit_many` job-list order deterministic within a shard.
+//!   spawned service-class jobs straight onto its own deque,
+//!   lock-free; siblings steal them as they go idle — this is the
+//!   nested-parallelism fast path every core phase hits;
+//! - any other thread (and every background-class submission) pushes
+//!   into the **sharded injector** ([`injector`]): submitters spread
+//!   over per-shard lock-free FIFO queues by thread id, so concurrent
+//!   external submitters don't serialize on one entry lock the way
+//!   the old `Mutex<VecDeque>` injector forced them to. A worker that
+//!   runs dry claims a shard with one CAS and takes a *batch*: it
+//!   keeps the first job and batch-publishes the rest on its own
+//!   deque ([`deque::Deque::push_batch`] — one fence for the whole
+//!   batch), turning external traffic into the same steal-distributed
+//!   flow. Batches stay in per-shard FIFO order end to end, which is
+//!   what keeps `submit_many` job-list order deterministic within a
+//!   shard.
+//!
+//! # Priority lanes ([`JobClass`])
+//!
+//! Every injector shard holds a **service** lane and a **background**
+//! lane; a drain takes service work strictly first, with a counted
+//! anti-starvation escape hatch (`EXEC_BG_STARVATION_LIMIT`) that
+//! promotes one background batch after too many consecutive service
+//! drains — see [`injector`] for the exact protocol. Submission APIs
+//! come in `_with_class` variants ([`Executor::submit_with_class`],
+//! [`Executor::submit_many_with_class`],
+//! [`Executor::scope_with_class`]); the class-less originals default
+//! to [`JobClass::Service`] and stay source-compatible. Lanes exist
+//! at ADMISSION: once a job (or a drained batch) reaches a worker
+//! deque it runs and may be stolen regardless of class — priority
+//! bounds how much background work can sit AHEAD of service work, not
+//! what is already in flight. Background jobs submitted from a worker
+//! thread deliberately skip the own-deque fast path and enter the
+//! injector's background lane, so a service job can never end up
+//! queued behind sibling background spawns.
 //!
 //! Every worker keeps cache-padded counters — executed jobs, steals,
 //! steal misses (lost CAS races), injector batches, parks — exposed
@@ -103,7 +124,7 @@ pub mod telemetry;
 pub mod tunables;
 
 use deque::{Deque, Steal};
-use injector::Injector;
+use injector::{Drained, Injector};
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -116,9 +137,10 @@ use std::time::{Duration, Instant};
 use telemetry::{Counters, Telemetry, WindowRates, WindowRing};
 use tunables::env_usize;
 
+pub use injector::{JobClass, DEFAULT_BG_STARVATION_LIMIT};
 pub use tunables::{
-    recalibrate_from, recalibration_stats, tunables, tunables_class, tunables_for, KeyClass,
-    RecalibrationEvent, Tunables,
+    lane_view, recalibrate_from, recalibration_stats, tunables, tunables_class, tunables_for,
+    KeyClass, LaneView, RecalibrationEvent, Tunables,
 };
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -176,18 +198,31 @@ impl Shared {
     /// batch-publish the rest (single fence) on this worker's own
     /// deque where the siblings can steal it — external submissions
     /// thus flow through the same lock-free distribution as nested
-    /// spawns, in per-shard FIFO order.
+    /// spawns, in per-shard FIFO order. The drain is lane-aware
+    /// (service strictly first, counted anti-starvation promotion);
+    /// the per-lane counters record the class split.
     fn drain_injector(&self, id: usize, rot: &mut usize) -> Option<Job> {
         const BATCH: usize = 32;
-        let mut batch = self.injector.drain(id.wrapping_add(*rot), BATCH);
+        let drained = self.injector.drain(id.wrapping_add(*rot), BATCH);
         *rot = rot.wrapping_add(1);
-        if batch.is_empty() {
-            return None;
+        let Drained { mut jobs, class, promoted } = drained?;
+        debug_assert!(!jobs.is_empty(), "drain returned an empty batch");
+        let c = &self.counters[id];
+        c.injector_pops.fetch_add(1, Ordering::Relaxed);
+        match class {
+            JobClass::Service => {
+                c.service_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            }
+            JobClass::Background => {
+                c.bg_jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+            }
         }
-        self.counters[id].injector_pops.fetch_add(1, Ordering::Relaxed);
-        let first = batch.remove(0);
-        if !batch.is_empty() {
-            self.deques[id].push_batch(batch);
+        if promoted {
+            c.bg_promotions.fetch_add(1, Ordering::Relaxed);
+        }
+        let first = jobs.remove(0);
+        if !jobs.is_empty() {
+            self.deques[id].push_batch(jobs);
             self.notify_all();
         }
         Some(first)
@@ -381,22 +416,62 @@ impl Executor {
             .then_some(id)
     }
 
-    fn push_job(&self, job: Job) {
-        if let Some(id) = self.worker_id() {
-            // Lock-free owner push; siblings steal from the top.
-            self.shared.deques[id].push(job);
-        } else {
+    fn push_job(&self, job: Job, class: JobClass) {
+        match (self.worker_id(), class) {
+            // Lock-free owner push; siblings steal from the top. Only
+            // service jobs take the fast path — a worker-submitted
+            // background job must not cut ahead of injector-queued
+            // service work, so it enters the background lane instead.
+            (Some(id), JobClass::Service) => self.shared.deques[id].push(job),
             // Lock-free sharded entry; drained in batches by workers.
-            self.shared.injector.push(job);
+            _ => self.shared.injector.push(job, class),
         }
         self.shared.notify_one();
+    }
+
+    /// Push one pre-boxed job into the fleet under `class`. This is
+    /// the coordinator's admission-controller entry point (it wraps
+    /// jobs itself to release permits on completion); typed callers
+    /// should use [`Executor::submit_with_class`].
+    pub(crate) fn submit_boxed(&self, job: Job, class: JobClass) {
+        self.push_job(job, class);
+    }
+
+    /// Batch variant of [`Executor::submit_boxed`]: the whole list
+    /// enters one injector shard (or the submitting worker's deque)
+    /// in submission order with a single wake-up broadcast — the
+    /// admission controller's bulk-dispatch path, preserving the
+    /// one-pass entry `submit_many` is built on.
+    pub(crate) fn submit_boxed_many(&self, jobs: Vec<Job>, class: JobClass) {
+        if jobs.is_empty() {
+            return;
+        }
+        match (self.worker_id(), class) {
+            (Some(id), JobClass::Service) => self.shared.deques[id].push_batch(jobs),
+            _ => self.shared.injector.push_batch(jobs, class),
+        }
+        self.shared.notify_all();
     }
 
     /// Structured fork/join over borrowed data, like `std::thread::scope`
     /// but on the persistent workers. Does not return until every task
     /// spawned on the scope has finished; the first task panic (or a
-    /// panic of `f` itself) is resumed on the caller.
+    /// panic of `f` itself) is resumed on the caller. Tasks are
+    /// service-class; see [`Executor::scope_with_class`].
     pub fn scope<'env, F, T>(&'env self, f: F) -> T
+    where
+        F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
+    {
+        self.scope_with_class(JobClass::Service, f)
+    }
+
+    /// [`Executor::scope`] with an explicit job class: the scope's
+    /// proxy jobs enter the fleet under `class`, so a background
+    /// maintenance scope's tasks yield to queued service work (the
+    /// waiting thread still drains its own scope's tasks, so a
+    /// background scope makes progress even under a service flood —
+    /// it just stops borrowing the fleet).
+    pub fn scope_with_class<'env, F, T>(&'env self, class: JobClass, f: F) -> T
     where
         F: for<'scope> FnOnce(&'scope Scope<'scope, 'env>) -> T,
     {
@@ -404,6 +479,7 @@ impl Executor {
         let scope = Scope {
             exec: self,
             state: Arc::clone(&state),
+            class,
             _scope: PhantomData,
             _env: PhantomData,
         };
@@ -442,26 +518,58 @@ impl Executor {
         }
     }
 
-    /// Submit one owned job; the receiver yields its result. A panicking
-    /// job drops the sender, surfacing as `RecvError`.
+    /// Submit one owned service-class job; the receiver yields its
+    /// result. A panicking job drops the sender, surfacing as
+    /// `RecvError`.
     pub fn submit<R, F>(&self, job: F) -> Receiver<R>
     where
         R: Send + 'static,
         F: FnOnce() -> R + Send + 'static,
     {
+        self.submit_with_class(JobClass::Service, job)
+    }
+
+    /// [`Executor::submit`] with an explicit job class: background
+    /// jobs enter the injector's background lane and yield to queued
+    /// service work (see [`injector`] for the drain protocol).
+    pub fn submit_with_class<R, F>(&self, class: JobClass, job: F) -> Receiver<R>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
         let (tx, rx) = channel();
-        self.push_job(Box::new(move || {
-            let _ = tx.send(job());
-        }));
+        self.push_job(
+            Box::new(move || {
+                let _ = tx.send(job());
+            }),
+            class,
+        );
         rx
     }
 
-    /// Batched submission: enqueue a whole job list in one pass — all
-    /// jobs enter ONE injector shard lock-free in submission order (or
-    /// are batch-published onto the submitting worker's own deque with
-    /// a single fence) and a single wake-up broadcast follows. The
-    /// receiver yields `(index, result)` pairs in completion order.
+    /// Batched service-class submission: enqueue a whole job list in
+    /// one pass — all jobs enter ONE injector shard lock-free in
+    /// submission order (or are batch-published onto the submitting
+    /// worker's own deque with a single fence) and a single wake-up
+    /// broadcast follows. The receiver yields `(index, result)` pairs
+    /// in completion order.
     pub fn submit_many<R, F>(&self, jobs: Vec<F>) -> Receiver<(usize, R)>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        self.submit_many_with_class(JobClass::Service, jobs)
+    }
+
+    /// [`Executor::submit_many`] with an explicit job class. A
+    /// background batch always goes through the injector's background
+    /// lane (even from a worker thread) so the whole list yields to
+    /// queued service work as one per-shard FIFO run.
+    pub fn submit_many_with_class<R, F>(
+        &self,
+        class: JobClass,
+        jobs: Vec<F>,
+    ) -> Receiver<(usize, R)>
     where
         R: Send + 'static,
         F: FnOnce() -> R + Send + 'static,
@@ -478,10 +586,9 @@ impl Executor {
             })
             .collect();
         drop(tx);
-        if let Some(id) = self.worker_id() {
-            self.shared.deques[id].push_batch(boxed);
-        } else {
-            self.shared.injector.push_batch(boxed);
+        match (self.worker_id(), class) {
+            (Some(id), JobClass::Service) => self.shared.deques[id].push_batch(boxed),
+            _ => self.shared.injector.push_batch(boxed, class),
         }
         self.shared.notify_all();
         rx
@@ -527,6 +634,9 @@ impl ScopeState {
 pub struct Scope<'scope, 'env: 'scope> {
     exec: &'scope Executor,
     state: Arc<ScopeState>,
+    /// Lane the scope's proxy jobs enter the fleet under (see
+    /// [`Executor::scope_with_class`]).
+    class: JobClass,
     _scope: PhantomData<&'scope mut &'scope ()>,
     _env: PhantomData<&'env mut &'env ()>,
 }
@@ -573,12 +683,15 @@ impl<'scope, 'env> Scope<'scope, 'env> {
         // (nested scope) pushes the proxy onto its own deque lock-free;
         // idle siblings steal it from the top.
         let proxy_state = Arc::clone(&self.state);
-        self.exec.push_job(Box::new(move || {
-            let task = proxy_state.tasks.lock().unwrap().pop_front();
-            if let Some(task) = task {
-                task();
-            }
-        }));
+        self.exec.push_job(
+            Box::new(move || {
+                let task = proxy_state.tasks.lock().unwrap().pop_front();
+                if let Some(task) = task {
+                    task();
+                }
+            }),
+            self.class,
+        );
     }
 }
 
@@ -778,6 +891,36 @@ mod tests {
         for (i, r) in results.into_iter().enumerate() {
             assert_eq!(r, Some(i * 3));
         }
+    }
+
+    #[test]
+    fn background_submissions_complete_and_are_counted() {
+        // A private fleet: all traffic below is ours.
+        let exec = Executor::new(2);
+        let rx = exec.submit_with_class(JobClass::Background, || 7usize);
+        assert_eq!(rx.recv().unwrap(), 7);
+        let jobs: Vec<_> = (0..10usize).map(|i| move || i).collect();
+        let rx = exec.submit_many_with_class(JobClass::Background, jobs);
+        let mut got: Vec<usize> = rx.iter().map(|(_, r)| r).collect();
+        got.sort();
+        assert_eq!(got, (0..10usize).collect::<Vec<_>>());
+        // Every job went through the background lane; the per-class
+        // counters must agree (recv happens-after the drain-side bump).
+        let tel = exec.telemetry();
+        assert_eq!(tel.background_jobs(), 11, "telemetry {tel:?}");
+        assert_eq!(tel.service_jobs(), 0, "telemetry {tel:?}");
+    }
+
+    #[test]
+    fn background_scope_runs_borrowed_tasks() {
+        let exec = Executor::new(2);
+        let mut data = vec![0usize; 16];
+        exec.scope_with_class(JobClass::Background, |s| {
+            for (i, slot) in data.iter_mut().enumerate() {
+                s.spawn(move || *slot = i + 1);
+            }
+        });
+        assert_eq!(data, (1..=16).collect::<Vec<_>>());
     }
 
     #[test]

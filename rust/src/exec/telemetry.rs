@@ -28,6 +28,17 @@
 //!   entry path for jobs submitted from non-worker threads).
 //! - `parks` — times the worker went to sleep with nothing to run
 //!   anywhere: the idleness signal.
+//! - `service_jobs` / `bg_jobs` — JOBS (not batches) this worker
+//!   drained from the injector's service / background lane: the
+//!   per-class traffic split. Counted at drain, so jobs a sibling
+//!   later steals are attributed to the draining worker; jobs pushed
+//!   directly onto a worker's own deque (nested spawns, worker-side
+//!   service submissions) never cross the injector and are not in
+//!   either lane count.
+//! - `bg_promotions` — background batches this worker took through
+//!   the anti-starvation escape hatch (promoted ahead of queued
+//!   service work after `EXEC_BG_STARVATION_LIMIT` consecutive
+//!   service drains).
 //!
 //! # Windowed (rate-based) telemetry
 //!
@@ -63,6 +74,9 @@ pub(super) struct Counters {
     pub steal_misses: AtomicU64,
     pub injector_pops: AtomicU64,
     pub parks: AtomicU64,
+    pub service_jobs: AtomicU64,
+    pub bg_jobs: AtomicU64,
+    pub bg_promotions: AtomicU64,
 }
 
 impl Counters {
@@ -73,6 +87,9 @@ impl Counters {
             steal_misses: self.steal_misses.load(Ordering::Relaxed),
             injector_pops: self.injector_pops.load(Ordering::Relaxed),
             parks: self.parks.load(Ordering::Relaxed),
+            service_jobs: self.service_jobs.load(Ordering::Relaxed),
+            bg_jobs: self.bg_jobs.load(Ordering::Relaxed),
+            bg_promotions: self.bg_promotions.load(Ordering::Relaxed),
         }
     }
 }
@@ -86,6 +103,9 @@ pub struct WorkerTelemetry {
     pub steal_misses: u64,
     pub injector_pops: u64,
     pub parks: u64,
+    pub service_jobs: u64,
+    pub bg_jobs: u64,
+    pub bg_promotions: u64,
 }
 
 /// Whole-fleet snapshot: one entry per worker, plus summing helpers.
@@ -114,6 +134,33 @@ impl Telemetry {
     pub fn parks(&self) -> u64 {
         self.workers.iter().map(|w| w.parks).sum()
     }
+
+    /// Jobs drained from the injector's service lane, fleet-wide.
+    pub fn service_jobs(&self) -> u64 {
+        self.workers.iter().map(|w| w.service_jobs).sum()
+    }
+
+    /// Jobs drained from the injector's background lane, fleet-wide.
+    pub fn background_jobs(&self) -> u64 {
+        self.workers.iter().map(|w| w.bg_jobs).sum()
+    }
+
+    /// Anti-starvation background promotions, fleet-wide.
+    pub fn bg_promotions(&self) -> u64 {
+        self.workers.iter().map(|w| w.bg_promotions).sum()
+    }
+}
+
+/// The one service-share fold, shared by [`WindowRates::service_share`]
+/// and the tunables lane view: service fraction of the two lanes'
+/// traffic, `1.0` when both lanes are quiet (nothing to yield to).
+pub(crate) fn service_share_of(service: f64, background: f64) -> f64 {
+    let total = service + background;
+    if total > 0.0 {
+        service / total
+    } else {
+        1.0
+    }
 }
 
 /// Number of epochs the window ring holds; the rate horizon is
@@ -121,8 +168,9 @@ impl Telemetry {
 pub const WINDOW_EPOCHS: usize = 8;
 
 /// Counter fields tracked per epoch, in `Counters` declaration
-/// order: executed, steals, steal_misses, injector_pops, parks.
-const NFIELDS: usize = 5;
+/// order: executed, steals, steal_misses, injector_pops, parks,
+/// service_jobs, bg_jobs, bg_promotions.
+const NFIELDS: usize = 8;
 
 /// One epoch's fleet-wide counter deltas. All-atomic so the roll
 /// winner can write and readers can fold without locks.
@@ -199,6 +247,9 @@ impl WindowRing {
             totals[2] += c.steal_misses.load(Ordering::Relaxed);
             totals[3] += c.injector_pops.load(Ordering::Relaxed);
             totals[4] += c.parks.load(Ordering::Relaxed);
+            totals[5] += c.service_jobs.load(Ordering::Relaxed);
+            totals[6] += c.bg_jobs.load(Ordering::Relaxed);
+            totals[7] += c.bg_promotions.load(Ordering::Relaxed);
         }
         let idx = self.cursor.load(Ordering::Relaxed) % WINDOW_EPOCHS;
         let slot = &self.slots[idx];
@@ -239,6 +290,9 @@ impl WindowRing {
             steal_misses_per_sec: per_sec(sums[2]),
             injector_per_sec: per_sec(sums[3]),
             parks_per_sec: per_sec(sums[4]),
+            service_per_sec: per_sec(sums[5]),
+            background_per_sec: per_sec(sums[6]),
+            bg_promotions_per_sec: per_sec(sums[7]),
         }
     }
 
@@ -262,12 +316,27 @@ pub struct WindowRates {
     pub steal_misses_per_sec: f64,
     pub injector_per_sec: f64,
     pub parks_per_sec: f64,
+    /// Injector service-lane jobs per second (the per-class split —
+    /// worker-local deque pushes are not injector traffic and are not
+    /// counted here; see the module docs).
+    pub service_per_sec: f64,
+    /// Injector background-lane jobs per second.
+    pub background_per_sec: f64,
+    /// Anti-starvation background promotions per second.
+    pub bg_promotions_per_sec: f64,
 }
 
 impl WindowRates {
     /// `true` when the window holds at least one recorded epoch.
     pub fn has_signal(&self) -> bool {
         self.epochs > 0 && self.span_secs > 0.0
+    }
+
+    /// Service share of the windowed injector job traffic, in
+    /// `[0, 1]`; `1.0` for an all-service (or idle) window — with no
+    /// background traffic there is nothing to yield to.
+    pub fn service_share(&self) -> f64 {
+        service_share_of(self.service_per_sec, self.background_per_sec)
     }
 
     /// Windowed miss:steal ratio — the contention signal. Zero when
@@ -341,6 +410,26 @@ mod tests {
         let span = (WINDOW_EPOCHS as f64 * 100.0) / 1e9;
         assert!((rates.span_secs - span).abs() < 1e-12);
         assert!((rates.executed_per_sec - (WINDOW_EPOCHS as f64 * 10.0) / span).abs() < 1.0);
+    }
+
+    /// The two-lane counters ride the same ring: rolls record per-lane
+    /// deltas, and `service_share` folds them into the [0,1] mix.
+    #[test]
+    fn roll_records_lane_deltas_and_share() {
+        let ring = WindowRing::new(1_000);
+        let counters = one_counter(10, 0, 0);
+        counters[0].service_jobs.store(30, Ordering::Relaxed);
+        counters[0].bg_jobs.store(10, Ordering::Relaxed);
+        counters[0].bg_promotions.store(1, Ordering::Relaxed);
+        assert!(ring.maybe_roll(2_000, &counters, false));
+        let rates = ring.rates();
+        let span = 2_000.0 / 1e9;
+        assert!((rates.service_per_sec - 30.0 / span).abs() < 1e-3);
+        assert!((rates.background_per_sec - 10.0 / span).abs() < 1e-3);
+        assert!((rates.bg_promotions_per_sec - 1.0 / span).abs() < 1e-3);
+        assert!((rates.service_share() - 0.75).abs() < 1e-12);
+        // An idle window has full service share (nothing to yield to).
+        assert_eq!(WindowRates::default().service_share(), 1.0);
     }
 
     #[test]

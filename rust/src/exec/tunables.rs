@@ -24,6 +24,12 @@
 //!   it. Every applied change is a [`RecalibrationEvent`], counted and
 //!   surfaced through [`recalibration_stats`] (and `repro serve`), so
 //!   phase changes within one process are visible, not silent.
+//! - **Per-class lane view.** Each window fed to [`recalibrate_from`]
+//!   also records the injector's per-lane (service vs background)
+//!   windowed job rates and the anti-starvation promotion rate as a
+//!   [`LaneView`], readable via [`lane_view`] — the tunables-side
+//!   answer to "what traffic mix is the substrate currently tuned
+//!   against", charted by `repro serve` next to the crossovers.
 //!
 //! Values are stored in atomics: readers pay a few relaxed loads, and
 //! the recalibration path (one roll per window at most) is the only
@@ -155,10 +161,35 @@ impl ClassSlots {
     }
 }
 
+/// Windowed per-class (service vs background) traffic mix, as
+/// recorded at the last [`recalibrate_from`] call. See [`lane_view`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneView {
+    /// Injector service-lane jobs per second in the recorded window.
+    pub service_per_sec: f64,
+    /// Injector background-lane jobs per second.
+    pub background_per_sec: f64,
+    /// Anti-starvation background promotions per second.
+    pub promotions_per_sec: f64,
+}
+
+impl LaneView {
+    /// Service share of the recorded injector traffic, in `[0, 1]`
+    /// (`1.0` when the window carried no background work). Same fold
+    /// as [`WindowRates::service_share`](super::telemetry::WindowRates::service_share).
+    pub fn service_share(&self) -> f64 {
+        super::telemetry::service_share_of(self.service_per_sec, self.background_per_sec)
+    }
+}
+
 struct State {
     classes: [ClassSlots; 2],
     events: AtomicU64,
     last_event: Mutex<Option<RecalibrationEvent>>,
+    /// Last recorded [`LaneView`], stored as f64 bit patterns so
+    /// readers never take a lock ([service, background, promotions]).
+    lane: [AtomicU64; 3],
+    lane_recorded: AtomicBool,
 }
 
 fn state() -> &'static State {
@@ -167,6 +198,8 @@ fn state() -> &'static State {
         classes: [ClassSlots::new(), ClassSlots::new()],
         events: AtomicU64::new(0),
         last_event: Mutex::new(None),
+        lane: Default::default(),
+        lane_recorded: AtomicBool::new(false),
     })
 }
 
@@ -224,6 +257,21 @@ pub fn recalibration_stats() -> (u64, Option<RecalibrationEvent>) {
     (s.events.load(Ordering::Relaxed), s.last_event.lock().unwrap().clone())
 }
 
+/// The per-class traffic mix recorded by the most recent
+/// [`recalibrate_from`] window, or `None` before the first window
+/// with signal.
+pub fn lane_view() -> Option<LaneView> {
+    let s = state();
+    if !s.lane_recorded.load(Ordering::Acquire) {
+        return None;
+    }
+    Some(LaneView {
+        service_per_sec: f64::from_bits(s.lane[0].load(Ordering::Relaxed)),
+        background_per_sec: f64::from_bits(s.lane[1].load(Ordering::Relaxed)),
+        promotions_per_sec: f64::from_bits(s.lane[2].load(Ordering::Relaxed)),
+    })
+}
+
 /// Re-anchor the current tunables from a windowed rate snapshot.
 /// Returns the number of field adjustments applied (0 when the window
 /// has no signal, everything is pinned, or every proposal lands
@@ -245,6 +293,13 @@ pub fn recalibrate_from(rates: &WindowRates) -> usize {
     if SEED_STATE.load(Ordering::Acquire) != 2 || !rates.has_signal() {
         return 0;
     }
+    // Record the window's per-class mix (the lane view) even when no
+    // crossover moves: observability must not depend on the deadband.
+    let s = state();
+    s.lane[0].store(rates.service_per_sec.to_bits(), Ordering::Relaxed);
+    s.lane[1].store(rates.background_per_sec.to_bits(), Ordering::Relaxed);
+    s.lane[2].store(rates.bg_promotions_per_sec.to_bits(), Ordering::Relaxed);
+    s.lane_recorded.store(true, Ordering::Release);
     let ratio = rates.miss_ratio();
     let active = rates.steals_per_sec + rates.injector_per_sec > 0.0;
     let mut applied = 0;
@@ -429,7 +484,7 @@ mod tests {
             steals_per_sec: steals,
             steal_misses_per_sec: misses,
             injector_per_sec: injector,
-            parks_per_sec: 0.0,
+            ..WindowRates::default()
         }
     }
 
@@ -510,5 +565,25 @@ mod tests {
     fn empty_window_is_a_no_op() {
         let _ = tunables();
         assert_eq!(recalibrate_from(&WindowRates::default()), 0);
+    }
+
+    /// The lane view records the window's per-class mix regardless of
+    /// whether any crossover moved (it must survive the deadband).
+    #[test]
+    fn lane_view_records_class_mix() {
+        let _ = tunables(); // seed
+        let mut r = rates(0.0, 0.0, 0.0);
+        r.service_per_sec = 300.0;
+        r.background_per_sec = 100.0;
+        r.bg_promotions_per_sec = 2.0;
+        let _ = recalibrate_from(&r);
+        let view = lane_view().expect("window with signal records a view");
+        // The global executor's periodic recalibration shares this
+        // state and can overwrite the view between our store and this
+        // read; only assert the race-robust invariants.
+        assert!(view.service_per_sec >= 0.0 && view.background_per_sec >= 0.0);
+        assert!((0.0..=1.0).contains(&view.service_share()));
+        // An idle mix reads as all-service (nothing to yield to).
+        assert_eq!(LaneView::default().service_share(), 1.0);
     }
 }

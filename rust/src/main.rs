@@ -12,6 +12,7 @@
 use traff_merge::cli::Args;
 use traff_merge::coordinator::{Config, Engine, MergeService};
 use traff_merge::core::{parallel_merge_instrumented, parallel_merge_sort, Partition};
+use traff_merge::exec::JobClass;
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
 use traff_merge::pram::{pram_merge, Variant};
 use traff_merge::runtime::{KeyedBlock, XlaRuntime};
@@ -59,7 +60,7 @@ fn print_help() {
          \x20 sort   --n N --p P --dist D --seed S [--verify]\n\
          \x20 pram   --n N --m M --p P [--crew]\n\
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
-         \x20 serve  --jobs J --n N [--engine rust|hybrid]\n\
+         \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
          distributions: uniform dupK zipf allequal organpipe presorted\n\
          \x20                reversed runsR advskew"
@@ -245,75 +246,136 @@ fn cmd_bsp(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
-    args.expect_known(&["jobs", "n", "engine", "threads", "seed"])?;
-    let jobs = args.get_usize("jobs", 16)?;
-    let n = args.get_usize("n", 100_000)?;
-    let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
-    let seed = args.get_u64("seed", 42)?;
-    let engine = match args.get("engine").unwrap_or("rust") {
-        "rust" => Engine::Rust,
-        "hybrid" => Engine::Hybrid,
-        other => return Err(format!("unknown engine '{other}'")),
-    };
-    let svc = MergeService::new(Config { threads, engine, leaf_block: 1024 })
-        .map_err(|e| e.to_string())?;
-    println!("service up: engine={engine:?} threads={threads}");
-    let mut rng = traff_merge::util::Rng::new(seed);
-    let blocks: Vec<KeyedBlock> = (0..jobs)
-        .map(|_| KeyedBlock {
-            keys: (0..n).map(|_| rng.range(0, 1 << 20) as f32).collect(),
-            vals: (0..n as i32).collect(),
-        })
-        .collect();
-    // Batched submission: the whole job list enters the executor in
-    // one pass (`MergeService::submit_sort_batch`) instead of one
-    // blocking `svc.sort` per job; per-job latency is measured from
-    // the batch submit to each job's completion, so it includes queue
-    // wait — the number a caller of the service actually sees.
-    let t0 = std::time::Instant::now();
-    let rx = svc.submit_sort_batch(blocks);
-    // Drain first, stamping each job's latency the moment it arrives;
-    // the O(n) invariant sweeps run AFTER the drain so consumer-side
-    // validation cost cannot inflate later jobs' recorded latency.
-    let mut completed: Vec<(f64, KeyedBlock)> = Vec::with_capacity(jobs);
+/// Drain one batch receiver, stamping each job's latency the moment
+/// it arrives. The O(n) invariant sweeps run AFTER the drain so
+/// consumer-side validation cost cannot inflate later jobs' recorded
+/// latency — these p50/p99 numbers are the QoS headline, so the
+/// stamping path must do nothing but stamp. Returns the
+/// completion-stamped latencies.
+fn drain_batch(
+    rx: std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)>,
+    expect: usize,
+    t0: std::time::Instant,
+    label: &str,
+) -> Result<Vec<f64>, String> {
+    let mut completed: Vec<(f64, Result<KeyedBlock, String>)> = Vec::with_capacity(expect);
     for (_idx, result) in rx.iter() {
-        completed.push((t0.elapsed().as_secs_f64(), result?));
+        completed.push((t0.elapsed().as_secs_f64(), result));
     }
-    let secs = t0.elapsed().as_secs_f64();
     // A job that panicked on a worker drops its result sender without
     // sending; the drain above would just end early. Partial results
     // must be an error, not a rosy report over the survivors.
-    if completed.len() != jobs {
-        return Err(format!("only {} of {jobs} jobs reported back", completed.len()));
+    if completed.len() != expect {
+        return Err(format!("only {} of {expect} {label} jobs reported back", completed.len()));
     }
-    let mut latencies: Vec<f64> = Vec::with_capacity(completed.len());
-    for (i, (latency, out)) in completed.iter().enumerate() {
+    let mut latencies: Vec<f64> = Vec::with_capacity(expect);
+    for (latency, result) in completed {
+        let out = result?;
         // NaN-safe invariant check: keys ordered under f32::total_cmp.
         if !out.is_key_sorted() {
-            return Err("service returned a block unsorted under total order".into());
+            return Err(format!("{label} job returned a block unsorted under total order"));
         }
-        if i == 0 {
-            println!("first job done ({} records)", out.len());
-        }
-        latencies.push(*latency);
+        latencies.push(latency);
     }
-    let (jobs_done, elems, xla_calls, busy) = svc.stats.snapshot();
+    Ok(latencies)
+}
+
+fn print_latency(label: &str, latencies: &mut [f64]) {
+    if latencies.is_empty() {
+        return;
+    }
+    latencies.sort_by(f64::total_cmp);
     println!(
-        "{jobs_done} jobs, {elems} records in {} — {:.2} Melem/s, {xla_calls} XLA calls, busy {:.2}s",
-        fmt_duration(secs),
-        melems_per_sec(elems, secs),
-        busy
+        "{label} latency: p50 {} | p99 {} | max {}",
+        fmt_duration(percentile(latencies, 50.0)),
+        fmt_duration(percentile(latencies, 99.0)),
+        fmt_duration(latencies[latencies.len() - 1]),
     );
-    if !latencies.is_empty() {
-        latencies.sort_by(f64::total_cmp);
-        println!(
-            "job latency (batched submission): p50 {} | p99 {} | max {}",
-            fmt_duration(percentile(&latencies, 50.0)),
-            fmt_duration(percentile(&latencies, 99.0)),
-            fmt_duration(latencies[latencies.len() - 1]),
-        );
-    }
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.expect_known(&["jobs", "n", "engine", "threads", "seed", "background"])?;
+    let jobs = args.get_usize("jobs", 16)?;
+    let background = args.get_usize("background", 0)?;
+    let n = args.get_usize("n", 100_000)?;
+    let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
+    let seed = args.get_u64("seed", 42)?;
+    let engine = match args.get_choice("engine", &["rust", "hybrid"], "rust")? {
+        "hybrid" => Engine::Hybrid,
+        _ => Engine::Rust,
+    };
+    // Two tenants on the shared executor: a service-class tenant and
+    // (with --background > 0) a background-class tenant, each behind
+    // its own admission pool of `threads` permits. Mixed-class traffic
+    // end to end: the background tenant's jobs enter the injector's
+    // background lane and yield to the service tenant's.
+    let svc = MergeService::new(Config { threads, engine, leaf_block: 1024, ..Config::default() })
+        .map_err(|e| e.to_string())?;
+    let bg_svc = if background > 0 {
+        Some(
+            MergeService::new(Config {
+                threads,
+                engine,
+                leaf_block: 1024,
+                class: JobClass::Background,
+            })
+            .map_err(|e| e.to_string())?,
+        )
+    } else {
+        None
+    };
+    println!(
+        "service up: engine={engine:?} admission={threads} permits/tenant \
+         ({jobs} service + {background} background jobs)"
+    );
+    let mut rng = traff_merge::util::Rng::new(seed);
+    let mut make_blocks = |count: usize| -> Vec<KeyedBlock> {
+        (0..count)
+            .map(|_| KeyedBlock {
+                keys: (0..n).map(|_| rng.range(0, 1 << 20) as f32).collect(),
+                vals: (0..n as i32).collect(),
+            })
+            .collect()
+    };
+    let service_blocks = make_blocks(jobs);
+    let bg_blocks = make_blocks(background);
+    // Batched submission; per-job latency is measured from the batch
+    // submit to each job's completion, so it includes queue wait — the
+    // number a caller of the service actually sees. The background
+    // flood is submitted FIRST: with the QoS lanes the service batch
+    // still overtakes whatever of it is queued.
+    let t0 = std::time::Instant::now();
+    let bg_rx = bg_svc.as_ref().map(|s| s.submit_sort_batch(bg_blocks));
+    let rx = svc.submit_sort_batch(service_blocks);
+    // Drain both classes concurrently, stamping arrivals per class.
+    let (service_lat, bg_lat) = std::thread::scope(|s| {
+        let bg_handle = bg_rx.map(|rx| {
+            s.spawn(move || drain_batch(rx, background, t0, "background"))
+        });
+        let service = drain_batch(rx, jobs, t0, "service");
+        let bg = bg_handle
+            .map(|h| h.join().expect("background drain thread"))
+            .unwrap_or_else(|| Ok(Vec::new()));
+        (service, bg)
+    });
+    let mut service_lat = service_lat?;
+    let mut bg_lat = bg_lat?;
+    let secs = t0.elapsed().as_secs_f64();
+    let (jobs_done, elems, xla_calls, busy) = svc.stats.snapshot();
+    let (bg_done, bg_elems, bg_xla, bg_busy) =
+        bg_svc.as_ref().map(|s| s.stats.snapshot()).unwrap_or_default();
+    println!(
+        "{} jobs ({jobs_done} service + {bg_done} background), {} records in {} — \
+         {:.2} Melem/s, {} XLA calls, busy {:.2}s (both tenants)",
+        jobs_done + bg_done,
+        elems + bg_elems,
+        fmt_duration(secs),
+        melems_per_sec(elems + bg_elems, secs),
+        xla_calls + bg_xla,
+        busy + bg_busy,
+    );
+    print_latency("service", &mut service_lat);
+    print_latency("background", &mut bg_lat);
     let tel = svc.pool.telemetry();
     println!(
         "executor: {} jobs executed, {} steals ({} misses), {} injector batches, {} parks",
@@ -322,6 +384,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         tel.steal_misses(),
         tel.injector_pops(),
         tel.parks()
+    );
+    println!(
+        "lanes: {} service / {} background jobs drained, {} anti-starvation promotions",
+        tel.service_jobs(),
+        tel.background_jobs(),
+        tel.bg_promotions()
     );
     // Windowed view + recalibration checkpoint: roll the epoch over
     // this batch's activity and let the tunables react to it, so the
@@ -339,6 +407,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         rates.injector_per_sec,
         rates.parks_per_sec,
     );
+    println!(
+        "windowed lanes: {:.0} service jobs/s | {:.0} background jobs/s \
+         (service share {:.2}) | {:.2} promotions/s",
+        rates.service_per_sec,
+        rates.background_per_sec,
+        rates.service_share(),
+        rates.bg_promotions_per_sec,
+    );
+    if let Some(view) = traff_merge::exec::lane_view() {
+        println!(
+            "tunables lane view: service share {:.2} over the last recalibration window",
+            view.service_share()
+        );
+    }
     let (events, last) = traff_merge::exec::recalibration_stats();
     match last {
         Some(event) => println!(

@@ -6,7 +6,7 @@ use traff_merge::core::merge::{carve_output, chunk_tasks, partition_parallel_wit
 use traff_merge::core::seqmerge::merge_into;
 use traff_merge::core::sort::merge_round;
 use traff_merge::core::{parallel_merge, parallel_merge_sort, Blocks, Partition, Record};
-use traff_merge::exec::{global, Executor};
+use traff_merge::exec::{global, Executor, JobClass};
 use traff_merge::testing::qcheck;
 use traff_merge::util::Rng;
 use traff_merge::{prop_assert, prop_assert_eq};
@@ -347,6 +347,67 @@ fn injector_multi_submitter_batches_exactly_once() {
     let (rates, _) = exec.recalibrate_now();
     assert!(rates.has_signal());
     assert!(rates.executed_per_sec > 0.0);
+}
+
+/// QoS lanes through the full executor (satellite): a background
+/// flood larger than the drain batch is submitted FIRST, then a small
+/// service batch. Strict service-lane priority means every service
+/// job must run while a substantial part of the flood is still
+/// queued — service jobs overtake queued background batches.
+#[test]
+fn service_jobs_overtake_queued_background_flood() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+    // A private 2-worker fleet: drains pull at most 32 jobs onto the
+    // deques at a time, so most of the 200-job flood is still in the
+    // injector's background lane when the service batch arrives.
+    let exec = Executor::new(2);
+    const BG: usize = 200;
+    const SERVICE: usize = 8;
+    let bg_done = Arc::new(AtomicUsize::new(0));
+    let bg_jobs: Vec<_> = (0..BG)
+        .map(|_| {
+            let bg_done = Arc::clone(&bg_done);
+            move || {
+                std::thread::sleep(Duration::from_millis(1));
+                bg_done.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .collect();
+    let bg_rx = exec.submit_many_with_class(JobClass::Background, bg_jobs);
+    // Service batch lands AFTER the whole flood is queued.
+    let service_jobs: Vec<_> = (0..SERVICE)
+        .map(|_| {
+            let bg_done = Arc::clone(&bg_done);
+            move || bg_done.load(Ordering::SeqCst)
+        })
+        .collect();
+    let service_rx = exec.submit_many(service_jobs);
+    let seen: Vec<usize> = service_rx.iter().map(|(_, b)| b).collect();
+    assert_eq!(seen.len(), SERVICE);
+    // Every service job ran with a large share of the flood still
+    // pending. The two initial drains put <= ~64 background jobs on
+    // the deques before any worker ran dry; 150 is a generous bound —
+    // without lanes (FIFO behind the flood) every value would be 200.
+    for (i, &bg_before) in seen.iter().enumerate() {
+        assert!(
+            bg_before < 150,
+            "service job {i} ran after {bg_before}/{BG} background jobs — \
+             the service lane did not overtake the queued flood"
+        );
+    }
+    assert_eq!(bg_rx.iter().count(), BG, "flood still completes");
+    assert_eq!(bg_done.load(Ordering::SeqCst), BG);
+    // Per-lane telemetry saw the split (all entries via the injector).
+    let tel = exec.telemetry();
+    assert_eq!(tel.service_jobs(), SERVICE as u64, "telemetry {tel:?}");
+    assert_eq!(tel.background_jobs(), BG as u64, "telemetry {tel:?}");
+    // The forced roll surfaces the per-lane rates.
+    let (rates, _) = exec.recalibrate_now();
+    assert!(rates.has_signal());
+    assert!(rates.background_per_sec > 0.0, "rates {rates:?}");
+    assert!(rates.service_share() < 1.0, "rates {rates:?}");
 }
 
 /// `prop_assert` smoke so the macro import is exercised from an

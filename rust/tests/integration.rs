@@ -107,8 +107,13 @@ fn bsp_round_savings() {
 /// pool with correct, stable results.
 #[test]
 fn service_concurrent_jobs() {
-    let svc =
-        MergeService::new(Config { threads: 4, engine: Engine::Rust, leaf_block: 1024 }).unwrap();
+    let svc = MergeService::new(Config {
+        threads: 4,
+        engine: Engine::Rust,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .unwrap();
     let mut rng = Rng::new(77);
     let blocks: Vec<KeyedBlock> = (0..8)
         .map(|_| {

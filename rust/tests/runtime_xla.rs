@@ -148,8 +148,13 @@ fn batched_merge_matches_per_pair() {
 #[test]
 fn service_merge_many_batches() {
     let Some(_) = runtime() else { return };
-    let svc =
-        MergeService::new(Config { threads: 2, engine: Engine::Hybrid, leaf_block: 1024 }).unwrap();
+    let svc = MergeService::new(Config {
+        threads: 2,
+        engine: Engine::Hybrid,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .unwrap();
     let mut rng = Rng::new(213);
     let jobs: Vec<_> = (0..20)
         .map(|_| {
@@ -170,8 +175,13 @@ fn service_merge_many_batches() {
     assert!(xla_calls <= 4, "20 small jobs must batch into few calls, got {xla_calls}");
 
     // Rust engine gives identical results.
-    let rsvc =
-        MergeService::new(Config { threads: 2, engine: Engine::Rust, leaf_block: 1024 }).unwrap();
+    let rsvc = MergeService::new(Config {
+        threads: 2,
+        engine: Engine::Rust,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .unwrap();
     let routs = rsvc.merge_many(&jobs).unwrap();
     for (x, y) in outs.iter().zip(&routs) {
         assert_eq!(x.keys, y.keys);
@@ -182,8 +192,13 @@ fn service_merge_many_batches() {
 #[test]
 fn hybrid_service_end_to_end() {
     let Some(_) = runtime() else { return };
-    let svc =
-        MergeService::new(Config { threads: 4, engine: Engine::Hybrid, leaf_block: 1024 }).unwrap();
+    let svc = MergeService::new(Config {
+        threads: 4,
+        engine: Engine::Hybrid,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .unwrap();
     let mut rng = Rng::new(109);
     let n = 20_000;
     let data = KeyedBlock {
