@@ -1,0 +1,150 @@
+//! E10 — the streaming run-merge subsystem:
+//!
+//! - **E10a** compaction throughput: the paper's co-rank parallel
+//!   compactor (segment merges on the executor's background lane) vs
+//!   the classical sequential loser-tree compactor over the same two
+//!   overlapping sorted runs.
+//! - **E10b** QoS under compaction: service-lane sort p99 with a
+//!   background compaction flood running vs compaction off — the
+//!   acceptance target is p99(on) within 2x of p99(off), i.e. the
+//!   injector's priority lanes actually shield the service tenant
+//!   from maintenance work.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+use traff_merge::coordinator::{Config, Engine, MergeService};
+use traff_merge::core::record::Record;
+use traff_merge::harness::{quick_mode, section, Bench};
+use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, Table};
+use traff_merge::runtime::KeyedBlock;
+use traff_merge::stream::{merge_runs_parallel, merge_runs_sequential};
+use traff_merge::util::Rng;
+
+fn sorted_run(rng: &mut Rng, n: usize, key_range: i64, tag0: u64) -> Vec<Record> {
+    let mut keys: Vec<i64> = (0..n).map(|_| rng.range(0, key_range)).collect();
+    keys.sort();
+    keys.iter().enumerate().map(|(i, &k)| Record::new(k, tag0 + i as u64)).collect()
+}
+
+/// Submit one sorted batch and collect per-job completion latencies
+/// (measured from batch submission, i.e. including queue wait — the
+/// number a service caller sees). Returns `(p50, p99)`.
+fn sort_batch_p99(svc: &MergeService, blocks: Vec<KeyedBlock>) -> (f64, f64) {
+    let expect = blocks.len();
+    let t0 = Instant::now();
+    let rx = svc.submit_sort_batch(blocks);
+    let mut lat: Vec<f64> = Vec::with_capacity(expect);
+    for (_i, result) in rx.iter() {
+        let out = result.expect("sort job succeeds");
+        assert!(out.is_key_sorted());
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    assert_eq!(lat.len(), expect, "every job reports back");
+    lat.sort_by(f64::total_cmp);
+    (percentile(&lat, 50.0), percentile(&lat, 99.0))
+}
+
+fn main() {
+    let quick = quick_mode();
+    let p = traff_merge::util::num_cpus();
+    let mut rng = Rng::new(0xE10);
+
+    // ---- E10a: compaction throughput --------------------------------
+    section("E10a: compaction throughput — co-rank parallel vs sequential loser tree");
+    let run_len = if quick { 200_000 } else { 1_000_000 };
+    let a = sorted_run(&mut rng, run_len, 1 << 30, 0);
+    let b = sorted_run(&mut rng, run_len, 1 << 30, 1 << 40);
+    // Correctness pin before timing: both compactors agree.
+    {
+        let par = merge_runs_parallel(&a, &b, p);
+        let seq = merge_runs_sequential(&a, &b);
+        assert_eq!(par.len(), seq.len());
+        assert!(par
+            .iter()
+            .zip(&seq)
+            .all(|(x, y)| x.key == y.key && x.tag == y.tag));
+    }
+    let total = (2 * run_len) as u64;
+    let r_par = Bench::new(format!("co-rank parallel compactor (p={p}, background lane)"))
+        .run(|| merge_runs_parallel(&a, &b, p));
+    let r_seq =
+        Bench::new("sequential loser-tree compactor").run(|| merge_runs_sequential(&a, &b));
+    let mut t = Table::new(vec!["compactor", "median", "Melem/s", "speedup"]);
+    for r in [&r_par, &r_seq] {
+        t.row(vec![
+            r.name.clone(),
+            fmt_duration(r.median()),
+            format!("{:.1}", melems_per_sec(total, r.median())),
+            format!("{:.2}x", r_seq.median() / r.median()),
+        ]);
+    }
+    t.print();
+
+    // ---- E10b: service p99 with compaction on vs off ----------------
+    section("E10b: service-lane sort p99 — background compaction on vs off");
+    let jobs = if quick { 8 } else { 16 };
+    let job_n = if quick { 50_000 } else { 100_000 };
+    let make_blocks = |rng: &mut Rng| -> Vec<KeyedBlock> {
+        (0..jobs)
+            .map(|_| KeyedBlock {
+                keys: (0..job_n).map(|_| rng.range(0, 1 << 20) as f32).collect(),
+                vals: (0..job_n as i32).collect(),
+            })
+            .collect()
+    };
+    let svc = MergeService::new(Config {
+        threads: p,
+        engine: Engine::Rust,
+        leaf_block: 1024,
+        ..Config::default()
+    })
+    .expect("rust-engine service");
+    // Warm the executor + tunables off the record.
+    sort_batch_p99(&svc, make_blocks(&mut rng));
+
+    // Compaction OFF: the baseline.
+    let (off_p50, off_p99) = sort_batch_p99(&svc, make_blocks(&mut rng));
+
+    // Compaction ON: two flood threads re-merging a big run pair on
+    // the background lane for the whole batch.
+    let stop = Arc::new(AtomicBool::new(false));
+    let ca = Arc::new(sorted_run(&mut rng, run_len, 1 << 30, 0));
+    let cb = Arc::new(sorted_run(&mut rng, run_len, 1 << 30, 1 << 40));
+    let floods: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = Arc::clone(&stop);
+            let ca = Arc::clone(&ca);
+            let cb = Arc::clone(&cb);
+            std::thread::spawn(move || {
+                let mut rounds = 0usize;
+                while !stop.load(Ordering::Acquire) {
+                    std::hint::black_box(merge_runs_parallel(&ca, &cb, p));
+                    rounds += 1;
+                }
+                rounds
+            })
+        })
+        .collect();
+    let (on_p50, on_p99) = sort_batch_p99(&svc, make_blocks(&mut rng));
+    stop.store(true, Ordering::Release);
+    let compactions: usize = floods.into_iter().map(|h| h.join().expect("flood thread")).sum();
+
+    let mut t = Table::new(vec!["mode", "p50", "p99"]);
+    t.row(vec![
+        "compaction off".to_string(),
+        fmt_duration(off_p50),
+        fmt_duration(off_p99),
+    ]);
+    t.row(vec![
+        format!("compaction on ({compactions} background merges)"),
+        fmt_duration(on_p50),
+        fmt_duration(on_p99),
+    ]);
+    t.print();
+    let ratio = on_p99 / off_p99.max(1e-9);
+    println!(
+        "\nservice p99 with compaction on = {ratio:.2}x the compaction-off baseline \
+         (acceptance target <= 2x)"
+    );
+}

@@ -30,13 +30,14 @@
 
 pub mod pool;
 
-use crate::core::record::F32Key;
+use crate::core::record::{F32Key, Record};
 use crate::core::{parallel_merge, parallel_merge_sort};
 use crate::exec::JobClass;
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
+use crate::stream::{self, Ingestor, RunStore, StreamConfig};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 pub use pool::WorkerPool;
@@ -201,12 +202,169 @@ impl ServiceStats {
     }
 }
 
+/// Total-order-preserving map from an `f32` service key to the `i64`
+/// stream key: exactly the key transform `f32::total_cmp` applies
+/// before its integer compare, so `f32_ordered(a) <= f32_ordered(b)`
+/// iff `a.total_cmp(&b) != Greater` — for EVERY bit pattern, NaN and
+/// ±0.0 included. Bijective (the XOR mask never touches the sign bit
+/// it is derived from), so [`f32_unordered`] recovers the exact key.
+fn f32_ordered(key: f32) -> i64 {
+    total_order_xform(key.to_bits() as i32) as i64
+}
+
+/// Inverse of [`f32_ordered`].
+fn f32_unordered(code: i64) -> f32 {
+    f32::from_bits(total_order_xform(code as i32) as u32)
+}
+
+/// The sign-extension XOR both codec directions share: flips the
+/// magnitude bits of negative values (mask `0x7FFF_FFFF`), leaves the
+/// sign bit alone — which is exactly why it is an involution (the
+/// mask is derived from the bit it never touches), so one function
+/// serves as both map and inverse.
+fn total_order_xform(mut bits: i32) -> i32 {
+    bits ^= (((bits >> 31) as u32) >> 1) as i32;
+    bits
+}
+
+/// Stream tag layout for service records: ingest sequence number in
+/// the high 32 bits (strictly increasing in arrival order — the
+/// stability observation), the record's `i32` payload in the low 32.
+/// Caps one tenant's stream at 2^32 records; the seal path never
+/// reads the payload bits.
+fn pack_tag(seq: u64, val: i32) -> u64 {
+    (seq << 32) | (val as u32 as u64)
+}
+
+/// Payload half of [`pack_tag`].
+fn unpack_val(tag: u64) -> i32 {
+    tag as u32 as i32
+}
+
+/// Clears the compaction-scheduled flag on every exit path of the
+/// drain job (including a panic), so a wedged drain cannot block all
+/// future scheduling.
+struct ClearOnDrop(Arc<AtomicBool>);
+
+impl Drop for ClearOnDrop {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+/// One service's streaming state: the run store, its (mutex-guarded)
+/// ingest buffer, and a one-permit background pool that drains the
+/// compaction backlog. The service entry points
+/// ([`MergeService::ingest`] / [`MergeService::flush_stream`] /
+/// [`MergeService::scan`]) reach this through the service's admission
+/// pool; compaction never does — it rides the executor's background
+/// lane under its own single permit, so maintenance cannot consume
+/// the tenant's service permits.
+struct StreamTenant {
+    store: Arc<RunStore>,
+    ingest: Mutex<Ingestor>,
+    compact_pool: WorkerPool,
+    /// Dedup flag: each backlog burst schedules at most one drain job.
+    /// A seal racing the drain's empty-check can go unscheduled for a
+    /// moment — the next seal (or flush) re-triggers, and the policy
+    /// drain loops until the backlog is below fanout anyway.
+    compact_scheduled: Arc<AtomicBool>,
+    threads: usize,
+}
+
+impl StreamTenant {
+    fn new(cfg: StreamConfig) -> Result<Arc<StreamTenant>, String> {
+        let threads = cfg.threads.max(1);
+        let store = Arc::new(RunStore::new(cfg)?);
+        Ok(Arc::new(StreamTenant {
+            ingest: Mutex::new(Ingestor::new(Arc::clone(&store))),
+            store,
+            compact_pool: WorkerPool::with_class(1, JobClass::Background),
+            compact_scheduled: Arc::new(AtomicBool::new(false)),
+            threads,
+        }))
+    }
+
+    fn ingest_block(&self, block: &KeyedBlock) -> Result<usize, String> {
+        let mut ing = self.ingest.lock().unwrap();
+        let mut sealed = 0usize;
+        for (k, v) in block.keys.iter().zip(&block.vals) {
+            let tag = pack_tag(ing.seq(), *v);
+            if ing.push(Record::new(f32_ordered(*k), tag))?.is_some() {
+                sealed += 1;
+            }
+        }
+        drop(ing);
+        if sealed > 0 {
+            self.maybe_schedule_compaction();
+        }
+        Ok(sealed)
+    }
+
+    fn flush(&self) -> Result<Option<u64>, String> {
+        let sealed = self.ingest.lock().unwrap().flush()?;
+        if sealed.is_some() {
+            self.maybe_schedule_compaction();
+        }
+        Ok(sealed)
+    }
+
+    fn scan_block(&self) -> Result<KeyedBlock, String> {
+        let records = stream::scan(&self.store)?;
+        Ok(KeyedBlock {
+            keys: records.iter().map(|r| f32_unordered(r.key)).collect(),
+            vals: records.iter().map(|r| unpack_val(r.tag)).collect(),
+        })
+    }
+
+    /// Schedule one background compaction drain if the backlog asks
+    /// for it and none is already scheduled. Fire-and-forget: the
+    /// result receiver is dropped; the job still runs.
+    fn maybe_schedule_compaction(&self) {
+        if !self.store.needs_compaction() {
+            return;
+        }
+        if self
+            .compact_scheduled
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return;
+        }
+        let store = Arc::clone(&self.store);
+        let flag = Arc::clone(&self.compact_scheduled);
+        let threads = self.threads;
+        let _ = self.compact_pool.submit(move || {
+            let _clear = ClearOnDrop(flag);
+            // Drain until the policy is satisfied; claim losers exit
+            // immediately (another drain is already on it). A failure
+            // (e.g. spill I/O) must NOT vanish: it is counted on the
+            // store (`StoreStats::compaction_failures`) and logged —
+            // the backlog it leaves behind makes the next seal retry.
+            loop {
+                match stream::compact_once(&store, threads) {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => break,
+                    Err(e) => {
+                        store.note_compaction_failure();
+                        eprintln!("background compaction failed (will retry on next seal): {e}");
+                        break;
+                    }
+                }
+            }
+        });
+    }
+}
+
 /// The merge/sort service.
 pub struct MergeService {
     pub config: Config,
     pub pool: WorkerPool,
     pub stats: Arc<ServiceStats>,
     runtime: Option<Arc<XlaRuntime>>,
+    /// Lazily (or explicitly, [`MergeService::init_stream`]) created
+    /// streaming tenant.
+    stream: OnceLock<Arc<StreamTenant>>,
 }
 
 impl MergeService {
@@ -222,6 +380,7 @@ impl MergeService {
             config,
             stats: Arc::new(ServiceStats::default()),
             runtime,
+            stream: OnceLock::new(),
         })
     }
 
@@ -579,6 +738,98 @@ impl MergeService {
         self.stats.record(elems, t0);
     }
 
+    /// Create this service's streaming tenant with an explicit
+    /// [`StreamConfig`]. Optional — the first [`MergeService::ingest`]
+    /// or [`MergeService::scan`] lazily creates an in-memory tenant
+    /// with default capacity otherwise — but must come first when
+    /// used: fails if the tenant already exists.
+    pub fn init_stream(&self, cfg: StreamConfig) -> Result<()> {
+        let tenant = StreamTenant::new(cfg).map_err(|e| anyhow!("{e}"))?;
+        self.stream
+            .set(tenant)
+            .map_err(|_| anyhow!("stream already initialized for this service"))
+    }
+
+    fn stream_tenant(&self) -> &Arc<StreamTenant> {
+        self.stream.get_or_init(|| {
+            StreamTenant::new(StreamConfig {
+                threads: self.config.threads.max(1),
+                ..StreamConfig::default()
+            })
+            .expect("in-memory stream tenant construction cannot fail")
+        })
+    }
+
+    /// Streaming ingest: append a keyed block to this service's
+    /// stream. Records buffer into bounded runs; full runs seal (a
+    /// stable parallel sort) and, past the configured fanout, trigger
+    /// a background-lane compaction. Admission-controlled like every
+    /// submitted job — the call occupies one of the tenant's permits
+    /// while it runs. Returns the number of runs this block sealed.
+    ///
+    /// The stream path is engine-independent (always the rust
+    /// total-order path): non-finite keys are accepted and ordered by
+    /// `f32::total_cmp`, exactly like [`Engine::Rust`] sorts.
+    pub fn ingest(&self, block: KeyedBlock) -> Result<usize> {
+        let tenant = Arc::clone(self.stream_tenant());
+        let stats = Arc::clone(&self.stats);
+        let rx = self.pool.submit(move || {
+            let t0 = Instant::now();
+            let r = tenant.ingest_block(&block);
+            if r.is_ok() {
+                stats.record(block.len(), t0);
+            }
+            r
+        });
+        rx.recv().map_err(|_| anyhow!("ingest job panicked"))?.map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Seal the stream's partially filled buffer (if any) so its
+    /// records become scan-visible. Returns the sealed generation.
+    pub fn flush_stream(&self) -> Result<Option<u64>> {
+        let tenant = Arc::clone(self.stream_tenant());
+        let rx = self.pool.submit(move || tenant.flush());
+        rx.recv().map_err(|_| anyhow!("flush job panicked"))?.map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Stable merged scan of the stream's sealed data: globally
+    /// key-sorted (under `f32::total_cmp`), duplicate keys in exact
+    /// ingest order. Runs against a snapshot, so a concurrent
+    /// compaction neither blocks nor disturbs it. Admission-controlled.
+    pub fn scan(&self) -> Result<KeyedBlock> {
+        let tenant = Arc::clone(self.stream_tenant());
+        let stats = Arc::clone(&self.stats);
+        let rx = self.pool.submit(move || {
+            let t0 = Instant::now();
+            let r = tenant.scan_block();
+            if let Ok(out) = &r {
+                stats.record(out.len(), t0);
+            }
+            r
+        });
+        rx.recv().map_err(|_| anyhow!("scan job panicked"))?.map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Store statistics of this service's stream, if one exists.
+    pub fn stream_stats(&self) -> Option<stream::StoreStats> {
+        self.stream.get().map(|t| t.store.stats())
+    }
+
+    /// Wait (bounded, ~5s) for any scheduled background compaction
+    /// drain to go idle — a reporting convenience so the CLI's final
+    /// stats describe a settled store; correctness never needs it.
+    pub fn stream_quiesce(&self) {
+        let Some(tenant) = self.stream.get() else { return };
+        for _ in 0..5_000 {
+            if !tenant.compact_scheduled.load(Ordering::Acquire)
+                && !tenant.store.is_compacting()
+            {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
     /// End-of-batch telemetry checkpoint: force a window roll on the
     /// shared executor and run the tunables recalibration against the
     /// freshly recorded rates, so a phase shift this batch caused (a
@@ -814,6 +1065,122 @@ mod tests {
         // after completion) and the stats counted them.
         let (jobs, _, _, _) = svc.stats.snapshot();
         assert_eq!(jobs, 6);
+    }
+
+    /// The stream codec is exact: `f32_ordered` is a total-order
+    /// isomorphism onto `i64` (agrees with `total_cmp` on every pair,
+    /// NaN and signed zero included) and `f32_unordered` inverts it
+    /// bit-for-bit.
+    #[test]
+    fn stream_key_codec_preserves_total_order() {
+        let samples = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -2.0,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            0.5,
+            1.0,
+            1e30,
+            f32::INFINITY,
+            f32::NAN,
+            -f32::NAN,
+        ];
+        for &x in &samples {
+            // Bit-exact round trip (== would fail for NaN).
+            assert_eq!(f32_unordered(f32_ordered(x)).to_bits(), x.to_bits(), "{x}");
+            for &y in &samples {
+                assert_eq!(
+                    f32_ordered(x).cmp(&f32_ordered(y)),
+                    x.total_cmp(&y),
+                    "order mismatch at {x} vs {y}"
+                );
+            }
+        }
+        assert_eq!(unpack_val(pack_tag(7, -3)), -3);
+        assert_eq!(unpack_val(pack_tag(7, i32::MAX)), i32::MAX);
+        assert_eq!(pack_tag(7, -1) >> 32, 7, "sequence rides the high bits");
+    }
+
+    /// Tentpole: the streaming facade end to end — ingest across many
+    /// runs, background compaction, flush, scan. The scan is globally
+    /// sorted and duplicate keys come back in exact ingest order.
+    #[test]
+    fn stream_ingest_compact_scan_is_sorted_and_stable() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        svc.init_stream(StreamConfig {
+            run_capacity: 64,
+            fanout: 2,
+            threads: 2,
+            spill: None,
+        })
+        .unwrap();
+        let blocks = 5usize;
+        let per_block = 50usize;
+        for b in 0..blocks {
+            let block = KeyedBlock {
+                // Heavy duplication across blocks: 13 distinct keys.
+                keys: (0..per_block).map(|i| ((b * per_block + i) * 7 % 13) as f32).collect(),
+                vals: (0..per_block).map(|i| (b * per_block + i) as i32).collect(),
+            };
+            svc.ingest(block).unwrap();
+        }
+        svc.flush_stream().unwrap();
+        svc.stream_quiesce();
+        let out = svc.scan().unwrap();
+        let n = blocks * per_block;
+        assert_eq!(out.len(), n);
+        assert!(out.is_key_sorted());
+        // Stability: vals are the global ingest index, so equal keys
+        // must carry strictly increasing vals.
+        for i in 1..n {
+            if out.keys[i - 1] == out.keys[i] {
+                assert!(
+                    out.vals[i - 1] < out.vals[i],
+                    "ingest order lost at scan index {i}"
+                );
+            }
+        }
+        let stats = svc.stream_stats().expect("stream exists");
+        assert_eq!(stats.records, n as u64);
+        assert!(stats.sealed_runs >= 3, "capacity 64 over 250 records seals >= 3 runs");
+        assert!(stats.compactions >= 1, "fanout 2 must have compacted");
+        assert!(stats.runs <= 3, "drained to (near) the fanout");
+        // Admission/stat bookkeeping: 5 ingests + 1 scan recorded.
+        let (jobs, _, _, _) = svc.stats.snapshot();
+        assert_eq!(jobs, 6);
+        // The tenant exists now; re-initializing must fail.
+        assert!(svc.init_stream(StreamConfig::default()).is_err());
+    }
+
+    /// The stream path accepts non-finite keys end to end (it is the
+    /// rust total-order path regardless of engine).
+    #[test]
+    fn stream_orders_non_finite_keys_like_total_cmp() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let keys = vec![2.0, f32::NAN, f32::NEG_INFINITY, 0.5, f32::INFINITY];
+        svc.ingest(KeyedBlock { keys, vals: (0..5).collect() }).unwrap();
+        svc.flush_stream().unwrap();
+        let out = svc.scan().unwrap();
+        assert!(out.is_key_sorted());
+        assert_eq!(out.keys[0], f32::NEG_INFINITY);
+        assert_eq!(&out.keys[1..3], &[0.5, 2.0]);
+        assert_eq!(out.keys[3], f32::INFINITY);
+        assert!(out.keys[4].is_nan());
+        assert_eq!(out.vals, vec![2, 3, 0, 4, 1]);
     }
 
     #[test]

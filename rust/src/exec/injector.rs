@@ -45,6 +45,21 @@
 //!   resets — a saturating service stream can delay background work,
 //!   never park it forever. The counter is `Relaxed` and
 //!   fleet-shared: it is a fairness heuristic, not an exact schedule.
+//! - **Time-based promotion bound** (`EXEC_BG_MAX_DELAY_MS`, off by
+//!   default): with a bound set, a background batch is also promoted
+//!   once the oldest waiting background job has queued past the bound
+//!   — an actual queueing-delay guarantee, not just a drain-count
+//!   fairness heuristic; the counted limit stays as the fallback
+//!   trigger. The clock is a fleet-wide "oldest waiting arrival"
+//!   timestamp: armed by the first background push into an idle lane
+//!   set (*after* the job is visible, so a racing drain's reset can
+//!   never erase the arm of a job that is actually waiting — the
+//!   residual stale-arm race only promotes early, which is safe),
+//!   re-armed (to *now*, an undercount — deliberately conservative)
+//!   by a background drain that leaves backlog behind, cleared when
+//!   the background lanes go empty. Like the streak it is `Relaxed`
+//!   and approximate; promotion latency, not exact ordering, is what
+//!   it bounds.
 //! - **Shallow-backlog merging**: when the first claimed shard yields
 //!   fewer than a quarter of the batch budget, the sweep keeps going
 //!   and merges the *same lane's* backlog from further shards into one
@@ -93,7 +108,8 @@
 
 use std::cell::{Cell, UnsafeCell};
 use std::ptr;
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
 
 /// The job type stored in the injector (same shape as `exec::Job`).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -143,7 +159,8 @@ pub const DEFAULT_BG_STARVATION_LIMIT: usize = 8;
 
 /// One drained batch: jobs from one lane (concatenated per-shard FIFO
 /// runs), the lane they came from, and whether an anti-starvation
-/// promotion put a background batch ahead of queued service work.
+/// promotion (counted-limit or time-bound trigger) put a background
+/// batch ahead of queued service work.
 pub struct Drained {
     pub jobs: Vec<Job>,
     pub class: JobClass,
@@ -296,6 +313,13 @@ impl Shard {
     }
 }
 
+/// Sentinel for "no background job waiting" in the delay clock.
+const BG_CLOCK_IDLE: u64 = u64::MAX;
+
+/// Sentinel for "time-based promotion disabled" in `bg_max_delay_ns`
+/// (a zero bound is valid: promote any waiting background batch).
+const BG_DELAY_DISABLED: u64 = u64::MAX;
+
 /// The sharded two-lane external-entry queue. See the module docs.
 pub struct Injector {
     shards: Box<[Shard]>,
@@ -306,29 +330,127 @@ pub struct Injector {
     service_streak: AtomicUsize,
     /// Promotion threshold for `service_streak`.
     starvation_limit: usize,
+    /// Maximum background queueing delay before promotion, in
+    /// nanoseconds; [`BG_DELAY_DISABLED`] turns the time-based
+    /// trigger off.
+    bg_max_delay_ns: u64,
+    /// Monotone origin for the delay clock.
+    t0: Instant,
+    /// Nanoseconds (since `t0`) when the oldest currently-waiting
+    /// background job was observed enqueued; [`BG_CLOCK_IDLE`] when
+    /// the background lanes are believed empty. Relaxed heuristic —
+    /// see module docs.
+    bg_oldest_ns: AtomicU64,
 }
 
 impl Injector {
     /// Build an injector with at least `shards` shards (rounded up to
     /// a power of two); the starvation limit comes from
     /// `EXEC_BG_STARVATION_LIMIT` (default
-    /// [`DEFAULT_BG_STARVATION_LIMIT`]).
+    /// [`DEFAULT_BG_STARVATION_LIMIT`]) and the time bound from
+    /// `EXEC_BG_MAX_DELAY_MS` (default: disabled).
     pub fn new(shards: usize) -> Injector {
         let limit = super::tunables::env_usize("EXEC_BG_STARVATION_LIMIT")
             .unwrap_or(DEFAULT_BG_STARVATION_LIMIT)
             .max(1);
-        Injector::with_starvation_limit(shards, limit)
+        let delay = super::tunables::env_usize("EXEC_BG_MAX_DELAY_MS")
+            .filter(|&ms| ms > 0)
+            .map(|ms| Duration::from_millis(ms as u64));
+        Injector::with_promotion_bounds(shards, limit, delay)
     }
 
-    /// [`Injector::new`] with an explicit starvation limit (tests pin
-    /// the promotion point deterministically).
+    /// [`Injector::new`] with an explicit starvation limit and the
+    /// time bound disabled (tests pin the counted promotion point
+    /// deterministically).
     pub fn with_starvation_limit(shards: usize, limit: usize) -> Injector {
+        Injector::with_promotion_bounds(shards, limit, None)
+    }
+
+    /// [`Injector::new`] with both promotion triggers explicit: the
+    /// counted fallback `limit` and the optional max background
+    /// queueing delay.
+    pub fn with_promotion_bounds(
+        shards: usize,
+        limit: usize,
+        max_delay: Option<Duration>,
+    ) -> Injector {
         let n = shards.max(1).next_power_of_two();
         Injector {
             shards: (0..n).map(|_| Shard::new()).collect(),
             mask: n - 1,
             service_streak: AtomicUsize::new(0),
             starvation_limit: limit.max(1),
+            bg_max_delay_ns: max_delay
+                .map_or(BG_DELAY_DISABLED, |d| {
+                    d.as_nanos().min((BG_DELAY_DISABLED - 1) as u128) as u64
+                }),
+            t0: Instant::now(),
+            bg_oldest_ns: AtomicU64::new(BG_CLOCK_IDLE),
+        }
+    }
+
+    /// Nanoseconds on the injector's monotone delay clock.
+    fn now_ns(&self) -> u64 {
+        self.t0.elapsed().as_nanos() as u64
+    }
+
+    /// Arm the delay clock for a background arrival (first waiter
+    /// only — the clock tracks the OLDEST waiting job). No-op with the
+    /// time bound disabled.
+    fn note_bg_arrival(&self) {
+        if self.bg_max_delay_ns == BG_DELAY_DISABLED {
+            return;
+        }
+        let now = self.now_ns();
+        let _ = self.bg_oldest_ns.compare_exchange(
+            BG_CLOCK_IDLE,
+            now,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// Whether the oldest waiting background job has queued past the
+    /// time bound.
+    fn bg_overdue(&self) -> bool {
+        if self.bg_max_delay_ns == BG_DELAY_DISABLED {
+            return false;
+        }
+        let armed = self.bg_oldest_ns.load(Ordering::Relaxed);
+        if armed == BG_CLOCK_IDLE {
+            return false;
+        }
+        self.now_ns().saturating_sub(armed) >= self.bg_max_delay_ns
+    }
+
+    /// Re-arm (or clear) the delay clock after a background drain:
+    /// remaining backlog restarts the clock at *now* (conservative —
+    /// the true head may be older), an empty lane set clears it.
+    fn reset_bg_clock(&self) {
+        if self.bg_max_delay_ns == BG_DELAY_DISABLED {
+            return;
+        }
+        if self.lane_len(JobClass::Background) > 0 {
+            self.bg_oldest_ns.store(self.now_ns(), Ordering::Relaxed);
+            return;
+        }
+        self.bg_oldest_ns.store(BG_CLOCK_IDLE, Ordering::Relaxed);
+        // Close the reset/arm race: a job pushed between the emptiness
+        // check above and the IDLE store had its arm CAS fail against
+        // the stale pre-reset value and would be left unarmed (bound
+        // silently voided). Re-check and re-arm through the same
+        // IDLE-only CAS: if the re-check sees the job, it gets an arm
+        // from us; if the push happens after this re-check, its own
+        // CAS sees the IDLE we just stored and arms itself. Either
+        // way a waiting job always holds an arm; the CAS (not a plain
+        // store) keeps us from clobbering a fresher pusher's arm.
+        if self.lane_len(JobClass::Background) > 0 {
+            let _ = self.bg_oldest_ns.compare_exchange(
+                BG_CLOCK_IDLE,
+                self.now_ns(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
         }
     }
 
@@ -343,27 +465,45 @@ impl Injector {
     /// Push one job from any thread (lock-free) into its class' lane.
     pub fn push(&self, job: Job, class: JobClass) {
         self.home_shard().lanes[class.lane()].push(job);
+        // Arm AFTER the push: if a concurrent drain emptied the lanes
+        // and reset the clock between our push and this arm, the job
+        // is already visible to its `lane_len` re-arm; arming first
+        // would let that reset erase the arm for a job still in
+        // flight, silently voiding its delay bound. The residual race
+        // (a stale arm surviving for an already-drained job) only
+        // promotes EARLY, which is safe.
+        if class == JobClass::Background {
+            self.note_bg_arrival();
+        }
     }
 
     /// Push a whole batch from any thread into ONE lane of ONE shard,
     /// preserving its order — the per-shard FIFO guarantee
     /// `submit_many` relies on.
     pub fn push_batch(&self, jobs: Vec<Job>, class: JobClass) {
+        let pushed = !jobs.is_empty();
         let lane = &self.home_shard().lanes[class.lane()];
         for job in jobs {
             lane.push(job);
+        }
+        // Arm after the batch is visible — see `push` for the race
+        // direction argument.
+        if class == JobClass::Background && pushed {
+            self.note_bg_arrival();
         }
     }
 
     /// Drain up to `max` jobs, sweeping shards round-robin from
     /// `start`. Service lanes are drained strictly before background
-    /// lanes, except when the anti-starvation counter promotes one
-    /// background batch (see module docs). `None` means every lane was
-    /// empty or being drained by another worker.
+    /// lanes, except when the anti-starvation counter — or, with
+    /// `EXEC_BG_MAX_DELAY_MS` set, the head-wait time bound —
+    /// promotes one background batch (see module docs). `None` means
+    /// every lane was empty or being drained by another worker.
     pub fn drain(&self, start: usize, max: usize) -> Option<Drained> {
         let bg_waiting = self.lane_len(JobClass::Background) > 0;
-        let promote =
-            bg_waiting && self.service_streak.load(Ordering::Relaxed) >= self.starvation_limit;
+        let promote = bg_waiting
+            && (self.service_streak.load(Ordering::Relaxed) >= self.starvation_limit
+                || self.bg_overdue());
         let order = if promote {
             [JobClass::Background, JobClass::Service]
         } else {
@@ -392,6 +532,7 @@ impl Injector {
                 }
                 JobClass::Background => {
                     self.service_streak.store(0, Ordering::Relaxed);
+                    self.reset_bg_clock();
                 }
             }
             let promoted = promote && class == JobClass::Background;
@@ -652,6 +793,122 @@ mod tests {
         // ...and only then the promotion fires.
         let b = inj.drain(0, 1).unwrap();
         assert_eq!(b.class, JobClass::Background);
+        assert!(b.promoted);
+        for j in b.jobs {
+            j();
+        }
+        while let Some(b) = inj.drain(0, 8) {
+            for j in b.jobs {
+                j();
+            }
+        }
+        assert!(inj.is_empty());
+    }
+
+    /// Satellite: the TIME trigger. With a zero max-delay bound any
+    /// waiting background job is overdue, so the very next drain
+    /// promotes it — no service streak required (the counted limit
+    /// here is effectively infinite). Once the background lane
+    /// empties, the clock clears and service drains cleanly again.
+    #[test]
+    fn time_bound_promotes_waiting_background_without_streak() {
+        let inj =
+            Injector::with_promotion_bounds(1, usize::MAX, Some(Duration::ZERO));
+        let ran = Arc::new(AtomicUsize::new(0));
+        let noop = || {
+            let ran = Arc::clone(&ran);
+            Box::new(move || {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }) as Job
+        };
+        for _ in 0..4 {
+            inj.push(noop(), JobClass::Service);
+        }
+        inj.push(noop(), JobClass::Background);
+        // Drain 1: the background job is already overdue -> promoted.
+        let batch = inj.drain(0, 1).unwrap();
+        assert_eq!(batch.class, JobClass::Background);
+        assert!(batch.promoted, "time-bound promotion must be flagged");
+        for j in batch.jobs {
+            j();
+        }
+        // The lane is empty again: service drains with no promotion.
+        for i in 0..4 {
+            let b = inj.drain(0, 1).unwrap();
+            assert_eq!(b.class, JobClass::Service, "drain {i} after the lane emptied");
+            assert!(!b.promoted);
+            for j in b.jobs {
+                j();
+            }
+        }
+        assert_eq!(ran.load(Ordering::Relaxed), 5);
+        assert!(inj.is_empty());
+    }
+
+    /// The time trigger respects a non-zero bound: not overdue right
+    /// after the push, overdue once the bound has really elapsed.
+    /// (Wall-clock sleep — skipped under Miri.)
+    #[test]
+    #[cfg(not(miri))]
+    fn time_bound_waits_for_the_bound_to_elapse() {
+        // A generous bound: the pre-sleep drain would only see an
+        // overdue job if this thread stalled 500ms between two
+        // adjacent statements.
+        let inj = Injector::with_promotion_bounds(
+            1,
+            usize::MAX,
+            Some(Duration::from_millis(500)),
+        );
+        inj.push(Box::new(|| {}), JobClass::Background);
+        inj.push(Box::new(|| {}), JobClass::Service);
+        inj.push(Box::new(|| {}), JobClass::Service);
+        // Immediately: within the bound -> strict priority holds.
+        let b = inj.drain(0, 1).unwrap();
+        assert_eq!(b.class, JobClass::Service);
+        assert!(!b.promoted);
+        for j in b.jobs {
+            j();
+        }
+        std::thread::sleep(Duration::from_millis(600));
+        // Past the bound: the background head is promoted.
+        let b = inj.drain(0, 1).unwrap();
+        assert_eq!(b.class, JobClass::Background);
+        assert!(b.promoted);
+        for j in b.jobs {
+            j();
+        }
+        while let Some(b) = inj.drain(0, 8) {
+            for j in b.jobs {
+                j();
+            }
+        }
+        assert!(inj.is_empty());
+    }
+
+    /// The counted limit stays live as the fallback when the time
+    /// bound is set but far away: promotion still fires after `limit`
+    /// consecutive service drains.
+    #[test]
+    fn counted_limit_remains_fallback_with_time_bound_set() {
+        let limit = 2;
+        let inj = Injector::with_promotion_bounds(
+            1,
+            limit,
+            Some(Duration::from_secs(3600)),
+        );
+        for _ in 0..limit + 2 {
+            inj.push(Box::new(|| {}), JobClass::Service);
+        }
+        inj.push(Box::new(|| {}), JobClass::Background);
+        for i in 0..limit {
+            let b = inj.drain(0, 1).unwrap();
+            assert_eq!(b.class, JobClass::Service, "drain {i} under the limit");
+            for j in b.jobs {
+                j();
+            }
+        }
+        let b = inj.drain(0, 1).unwrap();
+        assert_eq!(b.class, JobClass::Background, "counted fallback fired");
         assert!(b.promoted);
         for j in b.jobs {
             j();

@@ -59,10 +59,14 @@
 //! # Priority lanes ([`JobClass`])
 //!
 //! Every injector shard holds a **service** lane and a **background**
-//! lane; a drain takes service work strictly first, with a counted
-//! anti-starvation escape hatch (`EXEC_BG_STARVATION_LIMIT`) that
-//! promotes one background batch after too many consecutive service
-//! drains — see [`injector`] for the exact protocol. Submission APIs
+//! lane; a drain takes service work strictly first, with two
+//! anti-starvation escape hatches: a counted one
+//! (`EXEC_BG_STARVATION_LIMIT`) that promotes one background batch
+//! after too many consecutive service drains, and an optional
+//! time-based one (`EXEC_BG_MAX_DELAY_MS`) that promotes once the
+//! oldest waiting background job has queued past the bound — an
+//! actual queueing-delay guarantee; see [`injector`] for the exact
+//! protocol. Submission APIs
 //! come in `_with_class` variants ([`Executor::submit_with_class`],
 //! [`Executor::submit_many_with_class`],
 //! [`Executor::scope_with_class`]); the class-less originals default
@@ -139,8 +143,8 @@ use tunables::env_usize;
 
 pub use injector::{JobClass, DEFAULT_BG_STARVATION_LIMIT};
 pub use tunables::{
-    lane_view, recalibrate_from, recalibration_stats, tunables, tunables_class, tunables_for,
-    KeyClass, LaneView, RecalibrationEvent, Tunables,
+    lane_bias_factor, lane_view, recalibrate_from, recalibration_stats, tunables,
+    tunables_class, tunables_for, KeyClass, LaneView, RecalibrationEvent, Tunables,
 };
 
 type Job = Box<dyn FnOnce() + Send + 'static>;

@@ -36,9 +36,10 @@
 //!   service submissions) never cross the injector and are not in
 //!   either lane count.
 //! - `bg_promotions` — background batches this worker took through
-//!   the anti-starvation escape hatch (promoted ahead of queued
+//!   the anti-starvation escape hatches (promoted ahead of queued
 //!   service work after `EXEC_BG_STARVATION_LIMIT` consecutive
-//!   service drains).
+//!   service drains, or once the head waited past
+//!   `EXEC_BG_MAX_DELAY_MS` when that bound is set).
 //!
 //! # Windowed (rate-based) telemetry
 //!

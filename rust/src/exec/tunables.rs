@@ -30,6 +30,14 @@
 //!   [`LaneView`], readable via [`lane_view`] — the tunables-side
 //!   answer to "what traffic mix is the substrate currently tuned
 //!   against", charted by `repro serve` next to the crossovers.
+//!   With `EXEC_LANE_BIAS=1` the view is also *acted on*: the
+//!   fine-chunk floor proposal is multiplied by
+//!   [`lane_bias_factor`] — service-heavy windows get a LOWER floor
+//!   (finer groups, so latency-sensitive phases rebalance
+//!   aggressively), background-heavy windows a HIGHER one (coarser
+//!   groups: bulk maintenance amortizes dispatch instead of
+//!   shredding the deques). Off by default; the bias only scales the
+//!   proposal, so env pins and the per-class clamp bands still win.
 //!
 //! Values are stored in atomics: readers pay a few relaxed loads, and
 //! the recalibration path (one roll per window at most) is the only
@@ -272,6 +280,22 @@ pub fn lane_view() -> Option<LaneView> {
     })
 }
 
+/// Windowed-lane-mix multiplier for the fine-chunk floor proposal
+/// (the `EXEC_LANE_BIAS=1` policy; pure math, unit-tested):
+/// linear in the window's service share, `0.5` for an all-service
+/// window (floor halves — finer groups for latency-sensitive
+/// rebalancing), `1.0` at an even mix, `1.5` for an all-background
+/// window (floor grows — bulk work amortizes dispatch). Input is
+/// clamped to `[0, 1]`, output always lands in `[0.5, 1.5]`.
+pub fn lane_bias_factor(service_share: f64) -> f64 {
+    1.5 - service_share.clamp(0.0, 1.0)
+}
+
+/// Whether the lane-mix bias is enabled (`EXEC_LANE_BIAS=1`).
+fn lane_bias_enabled() -> bool {
+    env_usize("EXEC_LANE_BIAS") == Some(1)
+}
+
 /// Re-anchor the current tunables from a windowed rate snapshot.
 /// Returns the number of field adjustments applied (0 when the window
 /// has no signal, everything is pinned, or every proposal lands
@@ -281,6 +305,9 @@ pub fn lane_view() -> Option<LaneView> {
 /// - `fine_chunk_min <- base x (1 + min(miss_ratio, 8))`: steal
 ///   contention makes each rebalancing steal more expensive, so fine
 ///   groups must carry more work; a clean window returns to base.
+///   With `EXEC_LANE_BIAS=1` the proposal is further scaled by
+///   [`lane_bias_factor`] of the window's service share (only when
+///   the window actually carried injector traffic).
 /// - `parallel_merge_cutoff <- base x 0.75` when the fleet is
 ///   actively rebalancing (steals or injector traffic in the window)
 ///   with a low miss ratio — dispatch is demonstrably being absorbed,
@@ -302,9 +329,20 @@ pub fn recalibrate_from(rates: &WindowRates) -> usize {
     s.lane_recorded.store(true, Ordering::Release);
     let ratio = rates.miss_ratio();
     let active = rates.steals_per_sec + rates.injector_per_sec > 0.0;
+    // Lane-mix bias (env-gated): scale the fine-chunk proposal by the
+    // window's service share — only when the window actually carried
+    // injector traffic, so an idle window cannot masquerade as
+    // "all-service" and halve the floor.
+    let lane_bias = if lane_bias_enabled()
+        && rates.service_per_sec + rates.background_per_sec > 0.0
+    {
+        lane_bias_factor(rates.service_share())
+    } else {
+        1.0
+    };
     let mut applied = 0;
     for class in [KeyClass::Narrow, KeyClass::Wide] {
-        let fine_factor = 1.0 + ratio.min(8.0);
+        let fine_factor = (1.0 + ratio.min(8.0)) * lane_bias;
         applied += retune(class, FINE, fine_factor, ratio);
         let merge_factor = if ratio > 2.0 {
             1.25
@@ -565,6 +603,29 @@ mod tests {
     fn empty_window_is_a_no_op() {
         let _ = tunables();
         assert_eq!(recalibrate_from(&WindowRates::default()), 0);
+    }
+
+    /// Satellite: the lane-bias math. Service-heavy windows lower the
+    /// fine-chunk floor (finer), background-heavy windows raise it
+    /// (coarser), an even mix is neutral, and the factor is bounded
+    /// and monotone — the contract `recalibrate_from` applies under
+    /// `EXEC_LANE_BIAS=1`.
+    #[test]
+    fn lane_bias_factor_math() {
+        assert!((lane_bias_factor(1.0) - 0.5).abs() < 1e-12, "all-service: finer");
+        assert!((lane_bias_factor(0.5) - 1.0).abs() < 1e-12, "even mix: neutral");
+        assert!((lane_bias_factor(0.0) - 1.5).abs() < 1e-12, "all-background: coarser");
+        // Monotone decreasing in service share, bounded in [0.5, 1.5]
+        // even for out-of-range inputs.
+        let mut prev = f64::INFINITY;
+        for i in 0..=10 {
+            let f = lane_bias_factor(i as f64 / 10.0);
+            assert!((0.5..=1.5).contains(&f));
+            assert!(f <= prev, "bias must fall as service share rises");
+            prev = f;
+        }
+        assert_eq!(lane_bias_factor(-3.0), 1.5, "input clamped from below");
+        assert_eq!(lane_bias_factor(7.0), 0.5, "input clamped from above");
     }
 
     /// The lane view records the window's per-class mix regardless of

@@ -8,8 +8,9 @@
 //!   it: the five-case partitioner ([`core`]), parallel merge/sort
 //!   drivers on a persistent work-stealing executor ([`exec`]), PRAM
 //!   and BSP model simulators ([`pram`], [`bsp`]), classical baselines
-//!   ([`baseline`]), a coordinator service ([`coordinator`]) and the
-//!   PJRT runtime bridge ([`runtime`]).
+//!   ([`baseline`]), a coordinator service ([`coordinator`]), a
+//!   streaming run-merge store with background compaction ([`stream`])
+//!   and the PJRT runtime bridge ([`runtime`]).
 //! - **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels
 //!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed from
 //!   rust via the `xla` crate. Python never runs on the request path.
@@ -37,6 +38,7 @@ pub mod harness;
 pub mod metrics;
 pub mod pram;
 pub mod runtime;
+pub mod stream;
 pub mod testing;
 pub mod util;
 pub mod workload;

@@ -7,6 +7,8 @@
 //! - `pram`      — the merge on the audited EREW PRAM simulator.
 //! - `bsp`       — superstep comparison: simplified vs baseline.
 //! - `serve`     — coordinator service demo over the worker pool.
+//! - `stream`    — streaming run-merge workload: ingest + background
+//!   compaction + scans over the out-of-core run store.
 //! - `artifacts` — list loaded XLA artifacts (requires `make artifacts`).
 
 use traff_merge::cli::Args;
@@ -16,6 +18,7 @@ use traff_merge::exec::JobClass;
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
 use traff_merge::pram::{pram_merge, Variant};
 use traff_merge::runtime::{KeyedBlock, XlaRuntime};
+use traff_merge::stream::StreamConfig;
 use traff_merge::workload::{self, Dist};
 
 fn main() {
@@ -33,6 +36,7 @@ fn main() {
         "pram" => cmd_pram(&args),
         "bsp" => cmd_bsp(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "artifacts" => cmd_artifacts(),
         "" | "help" | "--help" => {
             print_help();
@@ -61,6 +65,7 @@ fn print_help() {
          \x20 pram   --n N --m M --p P [--crew]\n\
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
          \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
+         \x20 stream --n N --runs R [--block B] [--scans S] [--dist D] [--spill]\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
          distributions: uniform dupK zipf allequal organpipe presorted\n\
          \x20                reversed runsR advskew"
@@ -428,6 +433,139 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         ),
         None => println!("tunables: no recalibration events (window saw no phase shift)"),
     }
+    Ok(())
+}
+
+/// `repro stream` — the streaming run-merge workload: ingest an
+/// unbounded-style record stream in bounded blocks through
+/// `MergeService::ingest` (runs seal at `--n / --runs` records and
+/// compact on the executor's background lane), interleave stable
+/// scans, then flush and verify the final scan is globally sorted and
+/// stable (equal keys in ingest order). Total ingested data exceeds
+/// the per-run buffer by the `--runs` factor — the first workload
+/// whose data size is decoupled from job size.
+fn cmd_stream(args: &Args) -> Result<(), String> {
+    args.expect_known(&["n", "runs", "block", "scans", "dist", "seed", "threads", "spill"])?;
+    let n = args.get_usize("n", 200_000)?.max(1);
+    let runs = args.get_usize("runs", 8)?.max(1);
+    let capacity = traff_merge::util::div_ceil(n, runs).max(1);
+    let block = args.get_usize("block", (capacity / 4).max(1))?.max(1);
+    let scans = args.get_usize("scans", 3)?;
+    let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
+    let seed = args.get_u64("seed", 42)?;
+    let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
+        .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
+    let spill = args
+        .get_flag("spill")
+        .then(|| std::env::temp_dir().join(format!("repro-stream-{}", std::process::id())));
+    let svc = MergeService::new(Config { threads, engine: Engine::Rust, leaf_block: 1024, ..Config::default() })
+        .map_err(|e| e.to_string())?;
+    svc.init_stream(StreamConfig {
+        run_capacity: capacity,
+        fanout: 4,
+        threads,
+        spill: spill.clone(),
+    })
+    .map_err(|e| e.to_string())?;
+    println!(
+        "stream up: {n} records ({}) in blocks of {block}, run capacity {capacity} \
+         (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {}",
+        dist.name(),
+        n as f64 / capacity as f64,
+        match &spill {
+            Some(dir) => format!("spilling to {}", dir.display()),
+            None => "in-memory runs".to_string(),
+        }
+    );
+    // Keys: the workload distribution folded into exact-in-f32 range;
+    // vals: the global ingest index (the stability oracle the final
+    // verification reads back).
+    let raw = workload::raw_keys(dist, n, seed);
+    let keys: Vec<f32> = raw.iter().map(|k| k.rem_euclid(1 << 20) as f32).collect();
+    let t0 = std::time::Instant::now();
+    let mut ingest_lat: Vec<f64> = Vec::new();
+    let mut scan_lat: Vec<f64> = Vec::new();
+    let scan_every = (n / (scans + 1)).max(1);
+    let mut next_scan = scan_every;
+    let mut ingested = 0usize;
+    while ingested < n {
+        let hi = (ingested + block).min(n);
+        let kb = KeyedBlock {
+            keys: keys[ingested..hi].to_vec(),
+            vals: (ingested as i32..hi as i32).collect(),
+        };
+        let b0 = std::time::Instant::now();
+        svc.ingest(kb).map_err(|e| e.to_string())?;
+        ingest_lat.push(b0.elapsed().as_secs_f64());
+        ingested = hi;
+        if ingested >= next_scan && ingested < n {
+            let s0 = std::time::Instant::now();
+            let out = svc.scan().map_err(|e| e.to_string())?;
+            scan_lat.push(s0.elapsed().as_secs_f64());
+            if !out.is_key_sorted() {
+                return Err("interleaved scan returned unsorted data".into());
+            }
+            next_scan += scan_every;
+        }
+    }
+    svc.flush_stream().map_err(|e| e.to_string())?;
+    svc.stream_quiesce();
+    let s0 = std::time::Instant::now();
+    let fin = svc.scan().map_err(|e| e.to_string())?;
+    scan_lat.push(s0.elapsed().as_secs_f64());
+    let secs = t0.elapsed().as_secs_f64();
+    // Verification: complete, globally sorted, stable.
+    if fin.len() != n {
+        return Err(format!("final scan returned {} of {n} records", fin.len()));
+    }
+    if !fin.is_key_sorted() {
+        return Err("final scan is not globally sorted".into());
+    }
+    for i in 1..fin.len() {
+        if fin.keys[i - 1] == fin.keys[i] && fin.vals[i - 1] >= fin.vals[i] {
+            return Err(format!(
+                "stability violated at scan index {i}: equal keys out of ingest order"
+            ));
+        }
+    }
+    println!(
+        "ingested {n} records + {} scans in {} — {:.2} Melem/s end to end; \
+         final scan sorted and stable ✓",
+        scan_lat.len(),
+        fmt_duration(secs),
+        melems_per_sec(n as u64, secs),
+    );
+    print_latency("ingest", &mut ingest_lat);
+    print_latency("scan", &mut scan_lat);
+    if let Some(stats) = svc.stream_stats() {
+        println!(
+            "store: {} live runs ({} records, max level {}), {} sealed, \
+             {} compactions ({} failed), {} spilled",
+            stats.runs,
+            stats.records,
+            stats.max_level,
+            stats.sealed_runs,
+            stats.compactions,
+            stats.compaction_failures,
+            stats.spilled_runs,
+        );
+    }
+    let tel = svc.pool.telemetry();
+    println!(
+        "lanes: {} service / {} background jobs drained, {} anti-starvation promotions",
+        tel.service_jobs(),
+        tel.background_jobs(),
+        tel.bg_promotions()
+    );
+    let (rates, _) = svc.recalibration_checkpoint();
+    println!(
+        "windowed lanes: {:.0} service jobs/s | {:.0} background jobs/s \
+         (service share {:.2}) | {:.2} promotions/s",
+        rates.service_per_sec,
+        rates.background_per_sec,
+        rates.service_share(),
+        rates.bg_promotions_per_sec,
+    );
     Ok(())
 }
 

@@ -1,0 +1,261 @@
+//! Background compaction: merge adjacent run pairs with the paper's
+//! co-rank partition, executing the segment merges on the executor's
+//! **background lane**.
+//!
+//! This is the paper's §2 primitive doing LSM work: the two runs are
+//! split by [`Partition::compute`] — `2(p+1)` co-rank binary searches
+//! ([`crate::core::ranks`]) — into disjoint, independently mergeable
+//! segments, which then run as one parallel phase under
+//! [`JobClass::Background`]
+//! ([`Executor::scope_with_class`](crate::exec::Executor::scope_with_class)).
+//! Queued service-lane traffic (`MergeService` merge/sort jobs)
+//! therefore drains strictly ahead of a compaction's segment work at
+//! the injector, which is what keeps the service p99 flat while
+//! compaction proceeds (measured in bench E10); the anti-starvation
+//! bounds (`EXEC_BG_STARVATION_LIMIT`, `EXEC_BG_MAX_DELAY_MS`) keep
+//! the compaction itself from parking forever under a service flood.
+//!
+//! Stability: the pair comes from the store's adjacent-pair picker
+//! with the OLDER run as the merge's `a` side, and the stable two-way
+//! merge puts `a`'s records first on ties — so arrival order for
+//! duplicate keys survives any compaction schedule (property-tested
+//! in [`crate::stream`]).
+//!
+//! Concurrency: one compaction at a time, claimed via the store's CAS
+//! flag; losers skip (`Ok(None)`) instead of queueing, so any number
+//! of triggers can fire the compactor idempotently.
+
+use super::store::{CompactionStats, RunStore};
+use crate::core::cases::Partition;
+use crate::core::merge::{carve_output, chunk_tasks};
+use crate::core::multiway::loser_tree_merge;
+use crate::core::record::Record;
+use crate::core::seqmerge::merge_into;
+use crate::exec::JobClass;
+
+/// Releases the store's compaction claim on every exit path (including
+/// a panicking segment merge).
+struct ClaimGuard<'a>(&'a RunStore);
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        self.0.release_compaction();
+    }
+}
+
+/// Stable merge of two sorted runs (`a` older, first on ties) with the
+/// co-rank partition, segment merges on the background lane. Public
+/// for the E10 bench; the store paths go through [`compact_once`].
+pub fn merge_runs_parallel(a: &[Record], b: &[Record], p: usize) -> Vec<Record> {
+    let n = a.len() + b.len();
+    let mut out = vec![Record::new(0, 0); n];
+    if a.is_empty() {
+        out.copy_from_slice(b);
+        return out;
+    }
+    if b.is_empty() {
+        out.copy_from_slice(a);
+        return out;
+    }
+    let p = p.max(1);
+    if p == 1 || n < crate::exec::tunables_for::<Record>().parallel_merge_cutoff {
+        merge_into(a, b, &mut out);
+        return out;
+    }
+    // Same fine-chunking policy as the service merge path: partition
+    // granularity is decided once, from the windowed steal telemetry.
+    let lanes = crate::exec::chunk_groups_for::<Record>(n, p);
+    let part = Partition::compute(a, b, lanes);
+    let tasks = part.tasks();
+    let pairs = carve_output(&tasks, &mut out).expect("classifier produced non-tiling tasks");
+    let groups = chunk_tasks(pairs, lanes);
+    crate::exec::global().scope_with_class(JobClass::Background, |s| {
+        for group in groups {
+            s.spawn(move || {
+                for (t, slice) in group {
+                    merge_into(&a[t.a.clone()], &b[t.b.clone()], slice);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// The sequential baseline compactor: one-pass two-run loser-tree
+/// merge (`ties -> lower run index`, i.e. the older run — the same
+/// stability contract). Bench E10 measures [`merge_runs_parallel`]
+/// against this.
+pub fn merge_runs_sequential(a: &[Record], b: &[Record]) -> Vec<Record> {
+    loser_tree_merge(&[a, b])
+}
+
+/// Run one policy-driven compaction if the store's backlog asks for
+/// one and the claim is free. Returns `Ok(None)` when there is
+/// nothing to do (backlog under fanout, fewer than two runs, or
+/// another compactor holds the claim) — safe to call from any number
+/// of concurrent triggers.
+pub fn compact_once(store: &RunStore, p: usize) -> Result<Option<CompactionStats>, String> {
+    if !store.needs_compaction() {
+        return Ok(None);
+    }
+    if !store.try_claim_compaction() {
+        return Ok(None);
+    }
+    let _claim = ClaimGuard(store);
+    let Some((a, b)) = store.pick_adjacent_pair() else {
+        return Ok(None);
+    };
+    // Borrow memory-resident runs directly; only spilled runs are
+    // read into temporaries (`Run::data`).
+    let da = a.data()?;
+    let db = b.data()?;
+    let merged = merge_runs_parallel(&da, &db, p);
+    store.commit_compaction(&a, &b, merged).map(Some)
+}
+
+/// Compact the whole store down to (at most) one run, ignoring the
+/// fanout policy — the "major compaction" used by tests and the CLI's
+/// final consolidation. Spins on the claim (yielding) if a concurrent
+/// compactor holds it. Returns the number of compactions performed.
+pub fn compact_to_one(store: &RunStore, p: usize) -> Result<usize, String> {
+    let mut done = 0usize;
+    loop {
+        while !store.try_claim_compaction() {
+            std::thread::yield_now();
+        }
+        let _claim = ClaimGuard(store);
+        let Some((a, b)) = store.pick_adjacent_pair() else {
+            return Ok(done);
+        };
+        let da = a.data()?;
+        let db = b.data()?;
+        let merged = merge_runs_parallel(&da, &db, p);
+        store.commit_compaction(&a, &b, merged)?;
+        done += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{Ingestor, StreamConfig};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn sorted_records(rng: &mut Rng, n: usize, key_range: i64, tag0: u64) -> Vec<Record> {
+        let mut keys: Vec<i64> = (0..n).map(|_| rng.range(0, key_range)).collect();
+        keys.sort();
+        keys.iter().enumerate().map(|(i, &k)| Record::new(k, tag0 + i as u64)).collect()
+    }
+
+    fn as_pairs(v: &[Record]) -> Vec<(i64, u64)> {
+        v.iter().map(|r| (r.key, r.tag)).collect()
+    }
+
+    #[test]
+    fn parallel_sequential_and_oracle_agree() {
+        let mut rng = Rng::new(41);
+        for &(n, m) in &[(0usize, 5usize), (7, 0), (40, 60), (333, 200)] {
+            let a = sorted_records(&mut rng, n, 20, 0);
+            let b = sorted_records(&mut rng, m, 20, 1000);
+            let mut oracle = vec![Record::new(0, 0); n + m];
+            if n + m > 0 {
+                merge_into(&a, &b, &mut oracle);
+            }
+            assert_eq!(as_pairs(&merge_runs_parallel(&a, &b, 4)), as_pairs(&oracle));
+            assert_eq!(as_pairs(&merge_runs_sequential(&a, &b)), as_pairs(&oracle));
+        }
+    }
+
+    /// Large enough to cross the wide-class merge cutoff, so the
+    /// background-lane scope path actually executes.
+    #[test]
+    #[cfg(not(miri))]
+    fn background_lane_merge_matches_oracle_at_scale() {
+        let mut rng = Rng::new(42);
+        let a = sorted_records(&mut rng, 150_000, 5_000, 0);
+        let b = sorted_records(&mut rng, 130_000, 5_000, 1_000_000);
+        let mut oracle = vec![Record::new(0, 0); a.len() + b.len()];
+        merge_into(&a, &b, &mut oracle);
+        let got = merge_runs_parallel(&a, &b, crate::util::num_cpus());
+        assert_eq!(as_pairs(&got), as_pairs(&oracle));
+    }
+
+    #[test]
+    fn compact_once_reduces_backlog_and_preserves_records() {
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 50,
+                fanout: 2,
+                threads: 2,
+                spill: None,
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            ing.push_key(rng.range(0, 30)).unwrap();
+        }
+        assert_eq!(store.run_count(), 4);
+        let st = compact_once(&store, 2).unwrap().expect("backlog over fanout compacts");
+        assert_eq!(st.merged_records, 100);
+        assert_eq!(store.run_count(), 3);
+        assert_eq!(store.record_count(), 200);
+        // Backlog now exceeds fanout by one more; compact again then stop.
+        assert!(compact_once(&store, 2).unwrap().is_some());
+        assert!(compact_once(&store, 2).unwrap().is_none(), "under fanout: no-op");
+        assert_eq!(store.run_count(), 2);
+    }
+
+    #[test]
+    fn compact_once_skips_when_claim_held() {
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 4,
+                fanout: 1,
+                threads: 1,
+                spill: None,
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        for k in 0..8i64 {
+            ing.push_key(k).unwrap();
+        }
+        assert!(store.try_claim_compaction());
+        assert!(compact_once(&store, 1).unwrap().is_none(), "claim held: skip");
+        store.release_compaction();
+        assert!(compact_once(&store, 1).unwrap().is_some());
+    }
+
+    #[test]
+    fn compact_to_one_consolidates_fully() {
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 10,
+                fanout: 64,
+                threads: 2,
+                spill: None,
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(11);
+        for _ in 0..55 {
+            ing.push_key(rng.range(0, 9)).unwrap();
+        }
+        ing.flush().unwrap();
+        assert_eq!(store.run_count(), 6);
+        let done = compact_to_one(&store, 2).unwrap();
+        assert_eq!(done, 5);
+        assert_eq!(store.run_count(), 1);
+        assert_eq!(store.record_count(), 55);
+        let data = store.snapshot()[0].load().unwrap();
+        assert!(data.windows(2).all(|w| w[0].key <= w[1].key));
+        // Full-store stability: equal keys keep ingest (tag) order.
+        assert!(data
+            .windows(2)
+            .all(|w| w[0].key < w[1].key || w[0].tag < w[1].tag));
+    }
+}

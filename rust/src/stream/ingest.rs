@@ -1,0 +1,144 @@
+//! Stream ingestion: buffer unbounded record arrivals into bounded
+//! in-memory runs and seal full runs into the [`RunStore`].
+//!
+//! An [`Ingestor`] owns the one mutable piece of the pipeline — the
+//! current unsorted buffer. Records accumulate until the configured
+//! `run_capacity`, then the buffer is **sorted stably** (the paper's
+//! [`parallel_merge_sort`], so duplicate keys keep their arrival
+//! order) and sealed as a level-0 run; [`Ingestor::flush`] seals a
+//! partial buffer. The generation the store stamps on each seal is
+//! what lets readers and the compactor preserve arrival order for
+//! duplicates *across* runs (see [`super::store`]).
+//!
+//! Buffered (unsealed) records are not yet visible to
+//! [`super::reader`] scans — the stream's visibility unit is the
+//! sealed run. Callers wanting read-your-writes flush first.
+
+use super::store::RunStore;
+use crate::core::record::Record;
+use crate::core::sort::parallel_merge_sort;
+use std::sync::Arc;
+
+/// Buffering front end of one ingest stream. See the module docs.
+pub struct Ingestor {
+    store: Arc<RunStore>,
+    buf: Vec<Record>,
+    /// Records pushed over this ingestor's lifetime — the auto-tag
+    /// sequence ([`Ingestor::push_key`]) and the caller-visible ingest
+    /// order oracle.
+    seq: u64,
+}
+
+impl Ingestor {
+    /// A fresh ingestor over `store` (capacity and sort parallelism
+    /// come from the store's [`super::StreamConfig`]).
+    pub fn new(store: Arc<RunStore>) -> Ingestor {
+        let cap = store.config().run_capacity.max(1);
+        Ingestor { store, buf: Vec::with_capacity(cap), seq: 0 }
+    }
+
+    /// Records pushed so far (== the next auto-assigned tag).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Records currently buffered (not yet sealed).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Ingest one record with an explicit tag. Returns the sealed
+    /// run's generation when this push filled the buffer.
+    pub fn push(&mut self, rec: Record) -> Result<Option<u64>, String> {
+        self.buf.push(rec);
+        self.seq += 1;
+        if self.buf.len() >= self.store.config().run_capacity.max(1) {
+            return self.seal();
+        }
+        Ok(None)
+    }
+
+    /// Ingest one key with an auto-assigned tag (the ingest sequence
+    /// number — the stability observation convention). Returns the
+    /// tag, plus the sealed generation if the buffer filled.
+    pub fn push_key(&mut self, key: i64) -> Result<(u64, Option<u64>), String> {
+        let tag = self.seq;
+        let sealed = self.push(Record::new(key, tag))?;
+        Ok((tag, sealed))
+    }
+
+    /// Seal whatever is buffered (possibly a partial run). `None` when
+    /// the buffer was empty.
+    pub fn flush(&mut self) -> Result<Option<u64>, String> {
+        if self.buf.is_empty() {
+            return Ok(None);
+        }
+        self.seal()
+    }
+
+    fn seal(&mut self) -> Result<Option<u64>, String> {
+        let cap = self.store.config().run_capacity.max(1);
+        let mut records = std::mem::replace(&mut self.buf, Vec::with_capacity(cap));
+        // Stable sort: duplicate keys keep their arrival order inside
+        // the run; the generation stamp orders them across runs.
+        parallel_merge_sort(&mut records, self.store.config().threads.max(1));
+        self.store.seal(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::StreamConfig;
+
+    fn store(cap: usize) -> Arc<RunStore> {
+        Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: cap,
+                fanout: 64,
+                threads: 2,
+                spill: None,
+            })
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn seals_exactly_at_capacity() {
+        let store = store(4);
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut sealed = Vec::new();
+        for key in [5i64, 1, 5, 2, 9, 0, 3] {
+            let (_, gen) = ing.push_key(key).unwrap();
+            if let Some(g) = gen {
+                sealed.push(g);
+            }
+        }
+        assert_eq!(sealed.len(), 1, "one full run of 4 sealed");
+        assert_eq!(ing.pending(), 3);
+        assert_eq!(ing.seq(), 7);
+        assert_eq!(store.record_count(), 4);
+        let g = ing.flush().unwrap().expect("partial run seals");
+        assert!(g > sealed[0]);
+        assert_eq!(ing.pending(), 0);
+        assert_eq!(store.record_count(), 7);
+        assert_eq!(ing.flush().unwrap(), None, "empty flush is a no-op");
+    }
+
+    #[test]
+    fn sealed_runs_are_sorted_and_stable() {
+        let store = store(6);
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        // Duplicates inside one run: tags must stay in arrival order.
+        for key in [3i64, 1, 3, 3, 1, 2] {
+            ing.push_key(key).unwrap();
+        }
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 1);
+        let data = snap[0].load().unwrap();
+        let keys: Vec<i64> = data.iter().map(|r| r.key).collect();
+        assert_eq!(keys, vec![1, 1, 2, 3, 3, 3]);
+        let tags: Vec<u64> = data.iter().map(|r| r.tag).collect();
+        assert_eq!(tags, vec![1, 4, 5, 0, 2, 3], "stable: arrival order within equal keys");
+    }
+}

@@ -1,0 +1,216 @@
+//! `stream` — the streaming run-merge subsystem: an out-of-core
+//! sorted-run store with background compaction on the executor's QoS
+//! lanes.
+//!
+//! Everything below this module used to be batch-shaped: a job's data
+//! had to fit in memory and arrive whole before `MergeService::sort`
+//! touched it. This layer decouples **total data size from job size**:
+//! unbounded record streams buffer into bounded runs, and every heavy
+//! operation — run sort, pairwise compaction — is a bounded job on the
+//! shared executor.
+//!
+//! ```text
+//!            push/push_key             seal (sorted, gen-stamped)
+//! records ──► [ingest::Ingestor] ─────► [store::RunStore]  ◄─ snapshot ─ [reader]
+//!              bounded buffer           leveled Arc<Run> list              scan /
+//!              (core::sort seals        lock-free gen clock + stats        scan_iter
+//!               stably in parallel)        │ claim (CAS)                  (loser-tree
+//!                                          ▼                               heads)
+//!                                    [compact] co-rank partition
+//!                                      (core::ranks, §2) ──► segment merges as
+//!                                                            JobClass::Background
+//!                                                            on crate::exec
+//! ```
+//!
+//! The paper connection: [`compact`] is the §2 co-rank split doing
+//! LSM-compaction work — each run pair is carved into independent,
+//! stably mergeable segments by `2(p+1)` binary searches, and the
+//! segments run as one background-lane parallel phase, so service
+//! traffic keeps its latency while the store compacts (bench E10).
+//!
+//! Stability end to end (property-tested below): the seal sort is
+//! stable, the store's generation clock orders runs by arrival, the
+//! compactor only merges generation-adjacent pairs (older run first on
+//! ties), and readers resolve ties to the older generation — so
+//! duplicate keys emerge from any seal/compact/scan schedule in exact
+//! ingest order.
+//!
+//! Spill: with [`StreamConfig::spill`] set, sealed and compacted runs
+//! live as fixed-width binary files under the configured temp dir and
+//! are loaded on demand (see [`run`]); without it the store is purely
+//! in-memory. The service facade is
+//! [`MergeService::ingest`](crate::coordinator::MergeService::ingest) /
+//! [`flush_stream`](crate::coordinator::MergeService::flush_stream) /
+//! [`scan`](crate::coordinator::MergeService::scan), and `repro
+//! stream` drives the mixed ingest + scan + compaction workload.
+
+pub mod compact;
+pub mod ingest;
+pub mod reader;
+pub mod run;
+pub mod store;
+
+pub use compact::{compact_once, compact_to_one, merge_runs_parallel, merge_runs_sequential};
+pub use ingest::Ingestor;
+pub use reader::{scan, scan_iter, ScanIter};
+pub use run::Run;
+pub use store::{CompactionStats, RunStore, StoreStats};
+
+use std::path::PathBuf;
+
+/// Configuration of one stream (store + its ingestors/compactors).
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Records buffered before a run seals (the bounded in-memory
+    /// working set per ingest stream).
+    pub run_capacity: usize,
+    /// Live-run backlog tolerated before the compaction policy
+    /// triggers ([`RunStore::needs_compaction`]).
+    pub fanout: usize,
+    /// Parallelism granularity for seal sorts and compaction merges
+    /// (the `p` handed to the paper's algorithms; the process-wide
+    /// executor still bounds real concurrency).
+    pub threads: usize,
+    /// Spill directory: `Some(dir)` stores runs as binary files under
+    /// `dir` (created on demand, cleaned up on drop), `None` keeps
+    /// them in memory.
+    pub spill: Option<PathBuf>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            run_capacity: 1 << 16,
+            fanout: 4,
+            threads: crate::util::num_cpus(),
+            spill: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gen::{raw_keys, Dist};
+    use std::sync::Arc;
+
+    fn oracle(keys: &[i64]) -> Vec<(i64, u64)> {
+        let mut expect: Vec<(i64, u64)> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        expect.sort_by_key(|&(k, _)| k); // stable: ingest order within equal keys
+        expect
+    }
+
+    fn pairs(records: &[crate::core::record::Record]) -> Vec<(i64, u64)> {
+        records.iter().map(|r| (r.key, r.tag)).collect()
+    }
+
+    /// Satellite: cross-run stability. Duplicate keys ingested across
+    /// runs keep ingest order through seal -> compact -> scan, over
+    /// every workload distribution, at three compaction depths (none,
+    /// policy-driven, full). Sizes shrink under Miri.
+    #[test]
+    fn cross_run_stability_over_all_distributions() {
+        let (n, cap) = if cfg!(miri) { (60, 8) } else { (6_000, 256) };
+        for dist in Dist::all() {
+            let keys = raw_keys(dist, n, 0xD15);
+            let expect = oracle(&keys);
+            let store = Arc::new(
+                RunStore::new(StreamConfig {
+                    run_capacity: cap,
+                    fanout: 4,
+                    threads: 2,
+                    spill: None,
+                })
+                .unwrap(),
+            );
+            let mut ing = Ingestor::new(Arc::clone(&store));
+            for &k in &keys {
+                ing.push_key(k).unwrap();
+            }
+            ing.flush().unwrap();
+            let name = dist.name();
+            // Depth 0: no compaction.
+            assert_eq!(pairs(&scan(&store).unwrap()), expect, "{name}: uncompacted");
+            // Depth 1: policy-driven compactions until the backlog is
+            // back under fanout.
+            while compact_once(&store, 2).unwrap().is_some() {}
+            assert_eq!(pairs(&scan(&store).unwrap()), expect, "{name}: policy-compacted");
+            // Depth 2: full consolidation to a single run.
+            compact_to_one(&store, 2).unwrap();
+            assert!(store.run_count() <= 1);
+            assert_eq!(pairs(&scan(&store).unwrap()), expect, "{name}: fully compacted");
+        }
+    }
+
+    /// The acceptance shape end to end at the library layer: total
+    /// ingested data exceeds the per-run buffer by >= 8x, compaction
+    /// runs concurrently with scans, and the final scan is globally
+    /// sorted and stable.
+    #[test]
+    #[cfg(not(miri))]
+    fn ingest_exceeds_buffer_8x_with_interleaved_scans() {
+        let cap = 512usize;
+        let n = cap * 10; // > 8x the per-run buffer
+        let keys = raw_keys(Dist::Zipf, n, 77);
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: cap,
+                fanout: 3,
+                threads: 2,
+                spill: None,
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        for (i, &k) in keys.iter().enumerate() {
+            let (_, sealed) = ing.push_key(k).unwrap();
+            if sealed.is_some() {
+                // Interleave: compact on the policy, then scan the
+                // sealed prefix — must always be sorted and complete.
+                while compact_once(&store, 2).unwrap().is_some() {}
+                let seen = scan(&store).unwrap();
+                assert_eq!(seen.len() as u64, store.record_count());
+                assert_eq!(seen.len(), i + 1 - ing.pending());
+                assert!(seen.windows(2).all(|w| w[0].key <= w[1].key));
+            }
+        }
+        ing.flush().unwrap();
+        assert_eq!(pairs(&scan(&store).unwrap()), oracle(&keys));
+        assert!(store.stats().compactions > 0, "compaction must have run");
+    }
+
+    /// Spill-to-disk round trip: the same pipeline with runs on disk.
+    #[test]
+    #[cfg(not(miri))]
+    fn spilled_pipeline_matches_memory_pipeline() {
+        let dir = std::env::temp_dir()
+            .join(format!("traff-stream-test-{}", std::process::id()));
+        let keys = raw_keys(Dist::DupHeavy(16), 2_000, 5);
+        let expect = oracle(&keys);
+        {
+            let store = Arc::new(
+                RunStore::new(StreamConfig {
+                    run_capacity: 128,
+                    fanout: 3,
+                    threads: 2,
+                    spill: Some(dir.clone()),
+                })
+                .unwrap(),
+            );
+            let mut ing = Ingestor::new(Arc::clone(&store));
+            for &k in &keys {
+                ing.push_key(k).unwrap();
+            }
+            ing.flush().unwrap();
+            assert!(store.stats().spilled_runs > 0, "runs must spill");
+            while compact_once(&store, 2).unwrap().is_some() {}
+            assert_eq!(pairs(&scan(&store).unwrap()), expect);
+            compact_to_one(&store, 2).unwrap();
+            assert_eq!(pairs(&scan(&store).unwrap()), expect);
+        }
+        // Store drop removed the spill files and (best effort) the dir.
+        assert!(!dir.exists() || std::fs::read_dir(&dir).map(|mut d| d.next().is_none()).unwrap_or(true));
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,162 @@
+//! Stable merged reads over the live runs — reads-before-compaction.
+//!
+//! A scan takes a [`RunStore::snapshot`] (the `Arc`s pin the runs, so
+//! a compaction committing mid-scan cannot pull data out from under
+//! it), loads each run's records, and merges the runs' heads with the
+//! k-way machinery from [`crate::core::multiway`]:
+//!
+//! - [`scan`] materializes the full merge via
+//!   [`loser_tree_merge`] — the one-pass tournament over run heads;
+//! - [`scan_iter`] yields the same sequence lazily ([`ScanIter`]), for
+//!   consumers that stop early or process incrementally.
+//!
+//! Both are **stable across runs**: the snapshot is ordered by
+//! `gen_lo` and ties resolve to the lower run index — i.e. the older
+//! generation — which, combined with the store's adjacency invariant
+//! and the stable seal sort, yields duplicate keys in exact ingest
+//! order. Buffered-but-unsealed records are not visible (see
+//! [`super::ingest`]).
+
+use super::store::RunStore;
+use crate::core::multiway::loser_tree_merge;
+use crate::core::record::Record;
+
+/// Materialized stable merged view of the store's live runs. Memory
+/// runs are merged in place (borrowed via [`Run::data`](super::Run::data) —
+/// no per-run clone); only spilled runs are read into temporaries.
+pub fn scan(store: &RunStore) -> Result<Vec<Record>, String> {
+    let snap = store.snapshot();
+    let data: Vec<std::borrow::Cow<'_, [Record]>> =
+        snap.iter().map(|r| r.data()).collect::<Result<_, _>>()?;
+    let refs: Vec<&[Record]> = data.iter().map(|d| d.as_ref()).collect();
+    Ok(loser_tree_merge(&refs))
+}
+
+/// Lazy stable merged view of the store's live runs. The iterator
+/// must own its data (it outlives the snapshot it was built from), so
+/// this path pays the per-run copy [`scan`] avoids; prefer [`scan`]
+/// when the whole merge is consumed anyway.
+pub fn scan_iter(store: &RunStore) -> Result<ScanIter, String> {
+    let snap = store.snapshot();
+    let runs: Vec<Vec<Record>> = snap.iter().map(|r| r.load()).collect::<Result<_, _>>()?;
+    let pos = vec![0usize; runs.len()];
+    Ok(ScanIter { runs, pos })
+}
+
+/// Incremental k-way merge over a loaded snapshot: each `next` takes
+/// the minimum head, ties to the lowest run index (the older
+/// generation). `O(k)` per element — the runs-per-scan `k` is bounded
+/// by the compaction fanout, so a heap buys nothing at this shape.
+pub struct ScanIter {
+    runs: Vec<Vec<Record>>,
+    pos: Vec<usize>,
+}
+
+impl ScanIter {
+    /// Records remaining to be yielded.
+    pub fn remaining(&self) -> usize {
+        self.runs.iter().zip(&self.pos).map(|(r, &p)| r.len() - p).sum()
+    }
+}
+
+impl Iterator for ScanIter {
+    type Item = Record;
+
+    fn next(&mut self) -> Option<Record> {
+        let mut best: Option<usize> = None;
+        for r in 0..self.runs.len() {
+            let i = self.pos[r];
+            if i >= self.runs[r].len() {
+                continue;
+            }
+            best = match best {
+                None => Some(r),
+                // Strict `<` on keys keeps the lowest run index (the
+                // older generation) on ties — the stability order.
+                Some(br) if self.runs[r][i].key < self.runs[br][self.pos[br]].key => Some(r),
+                other => other,
+            };
+        }
+        let r = best?;
+        let rec = self.runs[r][self.pos[r]];
+        self.pos[r] += 1;
+        Some(rec)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.remaining();
+        (n, Some(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{Ingestor, StreamConfig};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    fn store(cap: usize) -> Arc<RunStore> {
+        Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: cap,
+                fanout: 64,
+                threads: 2,
+                spill: None,
+            })
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn empty_store_scans_empty() {
+        let store = store(4);
+        assert!(scan(&store).unwrap().is_empty());
+        assert_eq!(scan_iter(&store).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn scan_and_iter_agree_with_stable_oracle() {
+        let store = store(16);
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(23);
+        let n = 100;
+        let keys: Vec<i64> = (0..n).map(|_| rng.range(0, 12)).collect();
+        for &k in &keys {
+            ing.push_key(k).unwrap();
+        }
+        ing.flush().unwrap();
+        assert!(store.run_count() > 1, "multiple runs exercise the k-way path");
+        // Oracle: stable sort of the ingest-ordered (key, tag) stream.
+        let mut expect: Vec<(i64, u64)> =
+            keys.iter().enumerate().map(|(i, &k)| (k, i as u64)).collect();
+        expect.sort_by_key(|&(k, _)| k); // Vec sort is stable
+        let got: Vec<(i64, u64)> =
+            scan(&store).unwrap().iter().map(|r| (r.key, r.tag)).collect();
+        assert_eq!(got, expect);
+        let it = scan_iter(&store).unwrap();
+        assert_eq!(it.size_hint(), (n, Some(n)));
+        let lazy: Vec<(i64, u64)> = it.map(|r| (r.key, r.tag)).collect();
+        assert_eq!(lazy, expect);
+    }
+
+    /// Reads-before-compaction: a snapshot taken before a compaction
+    /// commit still drains its original runs and yields the same
+    /// stable sequence as a post-compaction scan.
+    #[test]
+    fn snapshot_survives_concurrent_compaction() {
+        let store = store(8);
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(29);
+        for _ in 0..32 {
+            ing.push_key(rng.range(0, 6)).unwrap();
+        }
+        let before = scan_iter(&store).unwrap(); // snapshot pinned
+        let done = crate::stream::compact_to_one(&store, 2).unwrap();
+        assert!(done > 0);
+        let after: Vec<(i64, u64)> =
+            scan(&store).unwrap().iter().map(|r| (r.key, r.tag)).collect();
+        let pinned: Vec<(i64, u64)> = before.map(|r| (r.key, r.tag)).collect();
+        assert_eq!(pinned, after, "pre-compaction snapshot reads the same data");
+    }
+}

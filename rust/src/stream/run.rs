@@ -1,0 +1,326 @@
+//! One sealed, immutable sorted run — the unit the [`super::store`]
+//! levels and the [`super::compact`] merger operate on.
+//!
+//! A run is born from one seal: a sorted batch of [`Record`]s, stamped
+//! with a **generation range** `[gen_lo, gen_hi]` (seal sequence
+//! numbers from the store's lock-free generation clock). A freshly
+//! sealed run has `gen_lo == gen_hi`; a compacted run covers the union
+//! of its inputs' ranges. The generation range is the stability
+//! anchor: readers order runs by `gen_lo`, and the compactor only ever
+//! merges runs whose ranges are adjacent in that order, so "older
+//! generation" remains a total order over equal keys end to end (see
+//! [`super::store`] for the adjacency invariant).
+//!
+//! Storage is either in-memory or **spilled** to a fixed-width binary
+//! file under the store's temp dir (16 bytes per record: `key` i64 LE,
+//! `tag` u64 LE). Spilled runs keep only their metadata (length,
+//! generation range, level, key span) resident; [`Run::load`] reads
+//! the records back on demand. A disk run deletes its file on drop.
+
+use crate::core::record::Record;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bytes per record in the spill encoding (i64 key + u64 tag, LE).
+pub const RECORD_BYTES: usize = 16;
+
+/// Encode records into the fixed-width spill representation.
+pub(crate) fn encode_records(records: &[Record]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(records.len() * RECORD_BYTES);
+    for r in records {
+        out.extend_from_slice(&r.key.to_le_bytes());
+        out.extend_from_slice(&r.tag.to_le_bytes());
+    }
+    out
+}
+
+/// Decode the fixed-width spill representation.
+pub(crate) fn decode_records(bytes: &[u8]) -> Result<Vec<Record>, String> {
+    if bytes.len() % RECORD_BYTES != 0 {
+        return Err(format!(
+            "spill file corrupt: {} bytes is not a multiple of {RECORD_BYTES}",
+            bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / RECORD_BYTES);
+    for chunk in bytes.chunks_exact(RECORD_BYTES) {
+        let mut k = [0u8; 8];
+        let mut t = [0u8; 8];
+        k.copy_from_slice(&chunk[..8]);
+        t.copy_from_slice(&chunk[8..]);
+        out.push(Record::new(i64::from_le_bytes(k), u64::from_le_bytes(t)));
+    }
+    Ok(out)
+}
+
+/// Process-wide spill-file name allocator (distinct from the store's
+/// generation clock so re-compacted ranges never collide on a name).
+static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+enum Storage {
+    /// Records resident in memory.
+    Mem(Vec<Record>),
+    /// Records spilled to `path`; only metadata stays resident.
+    Disk(PathBuf),
+}
+
+/// One immutable sorted run. See the module docs.
+pub struct Run {
+    gen_lo: u64,
+    gen_hi: u64,
+    level: u32,
+    len: usize,
+    min_key: i64,
+    max_key: i64,
+    storage: Storage,
+}
+
+/// A run with its storage materialized (spill write already done) but
+/// no generation assigned yet. Lets the store do the I/O-heavy part
+/// OUTSIDE its list lock and then allocate the generation + insert
+/// atomically under it — a stalled seal can therefore never interleave
+/// an old generation into a list a compaction has since rewritten
+/// (the disjoint-generation-range invariant, see [`super::store`]).
+pub(crate) struct PreparedRun {
+    len: usize,
+    min_key: i64,
+    max_key: i64,
+    storage: Storage,
+}
+
+impl PreparedRun {
+    /// Stamp the generation range and level, completing the run.
+    pub(crate) fn into_run(self, gen_lo: u64, gen_hi: u64, level: u32) -> Run {
+        Run {
+            gen_lo,
+            gen_hi,
+            level,
+            len: self.len,
+            min_key: self.min_key,
+            max_key: self.max_key,
+            storage: self.storage,
+        }
+    }
+
+    /// Whether the prepared storage is spilled to disk.
+    pub(crate) fn is_spilled(&self) -> bool {
+        matches!(self.storage, Storage::Disk(_))
+    }
+}
+
+impl Run {
+    /// Materialize storage for sorted records, spilling to `spill_dir`
+    /// when one is configured. `records` must be non-empty and
+    /// key-sorted (the seal path sorts; compaction merges sorted
+    /// inputs).
+    pub(crate) fn prepare(
+        records: Vec<Record>,
+        spill_dir: Option<&Path>,
+    ) -> Result<PreparedRun, String> {
+        assert!(!records.is_empty(), "a run is never empty");
+        debug_assert!(
+            records.windows(2).all(|w| w[0].key <= w[1].key),
+            "runs hold key-sorted records"
+        );
+        let len = records.len();
+        let min_key = records[0].key;
+        let max_key = records[len - 1].key;
+        let storage = match spill_dir {
+            None => Storage::Mem(records),
+            Some(dir) => {
+                let id = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+                let path = dir.join(format!("run-{id}.bin"));
+                std::fs::write(&path, encode_records(&records))
+                    .map_err(|e| format!("spill write {}: {e}", path.display()))?;
+                Storage::Disk(path)
+            }
+        };
+        Ok(PreparedRun { len, min_key, max_key, storage })
+    }
+
+    /// [`Run::prepare`] + [`PreparedRun::into_run`] in one step, for
+    /// callers whose generation range is already fixed (compaction
+    /// commits, tests).
+    pub(crate) fn create(
+        records: Vec<Record>,
+        gen_lo: u64,
+        gen_hi: u64,
+        level: u32,
+        spill_dir: Option<&Path>,
+    ) -> Result<Run, String> {
+        Ok(Run::prepare(records, spill_dir)?.into_run(gen_lo, gen_hi, level))
+    }
+
+    /// Oldest seal generation this run covers (the reader's sort key).
+    pub fn gen_lo(&self) -> u64 {
+        self.gen_lo
+    }
+
+    /// Newest seal generation this run covers.
+    pub fn gen_hi(&self) -> u64 {
+        self.gen_hi
+    }
+
+    /// Compaction depth: 0 for a freshly sealed run, `max + 1` of its
+    /// inputs after a compaction.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Number of records in the run.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Runs are never empty; kept for API completeness.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Smallest key in the run.
+    pub fn min_key(&self) -> i64 {
+        self.min_key
+    }
+
+    /// Largest key in the run.
+    pub fn max_key(&self) -> i64 {
+        self.max_key
+    }
+
+    /// Whether this run is spilled to disk.
+    pub fn is_spilled(&self) -> bool {
+        matches!(self.storage, Storage::Disk(_))
+    }
+
+    /// Key-range overlap test — the compactor prefers overlapping
+    /// pairs (merging disjoint runs is legal but pure copying).
+    pub fn overlaps(&self, other: &Run) -> bool {
+        self.min_key <= other.max_key && other.min_key <= self.max_key
+    }
+
+    /// The run's records without copying, borrowed for memory runs
+    /// and read + decoded for spilled ones. This is what [`scan`]
+    /// (`super::reader`) and the compactor use — an in-memory store
+    /// never pays a per-run clone on the read/compact path. Callers
+    /// that must OWN the data (e.g. [`super::reader::ScanIter`])
+    /// use [`Run::load`].
+    ///
+    /// [`scan`]: super::reader::scan
+    pub fn data(&self) -> Result<std::borrow::Cow<'_, [Record]>, String> {
+        match &self.storage {
+            Storage::Mem(records) => Ok(std::borrow::Cow::Borrowed(records.as_slice())),
+            Storage::Disk(_) => Ok(std::borrow::Cow::Owned(self.load()?)),
+        }
+    }
+
+    /// Materialize an owned copy of the run's records (clone for
+    /// memory runs, read + decode for spilled runs). Prefer
+    /// [`Run::data`] wherever a borrow suffices.
+    pub fn load(&self) -> Result<Vec<Record>, String> {
+        match &self.storage {
+            Storage::Mem(records) => Ok(records.clone()),
+            Storage::Disk(path) => {
+                let bytes = std::fs::read(path)
+                    .map_err(|e| format!("spill read {}: {e}", path.display()))?;
+                let records = decode_records(&bytes)?;
+                if records.len() != self.len {
+                    return Err(format!(
+                        "spill file {} holds {} records, expected {}",
+                        path.display(),
+                        records.len(),
+                        self.len
+                    ));
+                }
+                Ok(records)
+            }
+        }
+    }
+}
+
+impl Drop for Run {
+    fn drop(&mut self) {
+        if let Storage::Disk(path) = &self.storage {
+            // Best effort: a leaked spill file is a disk-space leak,
+            // not a correctness problem.
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl std::fmt::Debug for Run {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Run")
+            .field("gen", &(self.gen_lo..=self.gen_hi))
+            .field("level", &self.level)
+            .field("len", &self.len)
+            .field("keys", &(self.min_key..=self.max_key))
+            .field("spilled", &self.is_spilled())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(keys: &[i64]) -> Vec<Record> {
+        keys.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let records = recs(&[-5, 0, 3, 3, i64::MAX]);
+        let bytes = encode_records(&records);
+        assert_eq!(bytes.len(), records.len() * RECORD_BYTES);
+        let back = decode_records(&bytes).unwrap();
+        let pairs: Vec<(i64, u64)> = back.iter().map(|r| (r.key, r.tag)).collect();
+        let expect: Vec<(i64, u64)> = records.iter().map(|r| (r.key, r.tag)).collect();
+        assert_eq!(pairs, expect);
+        assert!(decode_records(&bytes[..RECORD_BYTES + 1]).is_err());
+    }
+
+    #[test]
+    fn mem_run_metadata_and_load() {
+        let run = Run::create(recs(&[1, 2, 2, 9]), 4, 4, 0, None).unwrap();
+        assert_eq!((run.gen_lo(), run.gen_hi(), run.level(), run.len()), (4, 4, 0, 4));
+        assert_eq!((run.min_key(), run.max_key()), (1, 9));
+        assert!(!run.is_spilled());
+        let data = run.load().unwrap();
+        assert_eq!(data.iter().map(|r| r.key).collect::<Vec<_>>(), vec![1, 2, 2, 9]);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = Run::create(recs(&[0, 10]), 0, 0, 0, None).unwrap();
+        let b = Run::create(recs(&[5, 20]), 1, 1, 0, None).unwrap();
+        let c = Run::create(recs(&[11, 30]), 2, 2, 0, None).unwrap();
+        assert!(a.overlaps(&b));
+        assert!(b.overlaps(&a));
+        assert!(!a.overlaps(&c));
+        assert!(b.overlaps(&c));
+    }
+
+    #[test]
+    #[cfg(not(miri))] // touches the real filesystem
+    fn spilled_run_loads_and_cleans_up() {
+        let dir = std::env::temp_dir().join(format!("traff-run-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let records = recs(&[3, 4, 4, 4, 7]);
+        let path;
+        {
+            let run = Run::create(records.clone(), 0, 2, 1, Some(&dir)).unwrap();
+            assert!(run.is_spilled());
+            path = match &run.storage {
+                Storage::Disk(p) => p.clone(),
+                Storage::Mem(_) => unreachable!(),
+            };
+            assert!(path.exists());
+            let back = run.load().unwrap();
+            assert_eq!(back.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                       records.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>());
+        }
+        // Drop removed the spill file.
+        assert!(!path.exists());
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,452 @@
+//! The leveled run store: live [`Run`]s plus the lock-free bookkeeping
+//! around them.
+//!
+//! # Structure
+//!
+//! The store holds the live runs in one `Mutex<Vec<Arc<Run>>>` kept
+//! **sorted by `gen_lo`** — the short-held lock covers only list
+//! surgery (a seal's insert, a compaction's two-out-one-in swap) and
+//! snapshot clones; record data never moves under it. Everything a
+//! concurrent reader or telemetry probe needs is published in
+//! **lock-free state** next to the list:
+//!
+//! - the **generation clock** (`next_gen`, a fetch-add): every seal
+//!   takes a unique, monotone generation number — the stability order
+//!   across runs. Allocation happens *inside* the seal's list-lock
+//!   critical section (insertion and numbering are atomic together;
+//!   see [`RunStore::seal`]), but the counter stays an atomic so
+//!   telemetry can read it lock-free;
+//! - published counters (`live_runs`, `live_records`, `sealed_runs`,
+//!   `compactions`, `spilled_runs`): the backlog/progress signals the
+//!   compaction trigger and the CLI read without taking the list lock;
+//! - the **compaction claim** (`compacting`, a CAS flag): at most one
+//!   compaction plans/commits at a time, claimed and released without
+//!   blocking anyone (losers simply skip — the same try-flag shape as
+//!   the executor's window roll).
+//!
+//! # The adjacency invariant (stability)
+//!
+//! Scans order runs by `gen_lo` and resolve equal keys to the earlier
+//! run. For that order to equal ingest order, the generation ranges of
+//! live runs must stay **pairwise disjoint and totally ordered** —
+//! which holds inductively: seals append fresh maximal generations,
+//! and the pair picker (`pick_adjacent_pair`) only offers runs
+//! *adjacent in the `gen_lo`-sorted list* for compaction (no third
+//! run's range can sit between the pair's), so the merged run's union range slots back
+//! into the same total order. Merging a NON-adjacent pair would break
+//! this: a key duplicated in runs `g0`, `g1`, `g2` with `g0`+`g2`
+//! merged (range `[g0, g2]`, sorted before `g1`) would put `g2`'s copy
+//! ahead of `g1`'s on scan.
+//!
+//! Readers take [`RunStore::snapshot`] clones of the `Arc` list;
+//! a compaction commits by swapping the list under the lock, so an
+//! in-flight scan keeps its pre-compaction runs alive and sees a
+//! consistent (if slightly stale) view — reads-before-compaction
+//! semantics.
+
+use super::run::Run;
+use super::StreamConfig;
+use crate::core::record::Record;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Point-in-time store statistics (folded from the published atomics
+/// plus one short lock for the level map).
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    /// Live runs right now.
+    pub runs: usize,
+    /// Live records right now (invariant under compaction).
+    pub records: u64,
+    /// Runs sealed over the store's lifetime.
+    pub sealed_runs: u64,
+    /// Compactions committed over the store's lifetime.
+    pub compactions: u64,
+    /// Compaction attempts that failed (e.g. spill I/O errors) — a
+    /// growing value with a growing `runs` backlog means the store
+    /// can no longer compact and needs operator attention.
+    pub compaction_failures: u64,
+    /// Live runs currently spilled to disk.
+    pub spilled_runs: u64,
+    /// Deepest live compaction level.
+    pub max_level: u32,
+}
+
+/// Outcome of one committed compaction (see [`super::compact`]).
+#[derive(Clone, Debug)]
+pub struct CompactionStats {
+    /// Records in the merged output run.
+    pub merged_records: usize,
+    /// Level of the merged run (`max(inputs) + 1`).
+    pub level: u32,
+    /// Generation range the merged run covers.
+    pub gen_lo: u64,
+    /// Generation range the merged run covers.
+    pub gen_hi: u64,
+}
+
+/// The leveled run store. See the module docs.
+pub struct RunStore {
+    config: StreamConfig,
+    /// Live runs, sorted by `gen_lo`. Short-held lock; see module docs.
+    runs: Mutex<Vec<Arc<Run>>>,
+    /// Generation clock (unique, monotone seal numbers); bumped only
+    /// inside [`RunStore::seal`]'s critical section, read lock-free.
+    next_gen: AtomicU64,
+    live_runs: AtomicU64,
+    live_records: AtomicU64,
+    sealed_runs: AtomicU64,
+    compactions: AtomicU64,
+    compaction_failures: AtomicU64,
+    spilled_runs: AtomicU64,
+    /// Compaction claim: CAS-held by at most one compactor at a time.
+    compacting: AtomicBool,
+}
+
+impl RunStore {
+    /// Build a store; creates the spill directory when one is
+    /// configured.
+    pub fn new(config: StreamConfig) -> Result<RunStore, String> {
+        if let Some(dir) = &config.spill {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
+        }
+        Ok(RunStore {
+            config,
+            runs: Mutex::new(Vec::new()),
+            next_gen: AtomicU64::new(0),
+            live_runs: AtomicU64::new(0),
+            live_records: AtomicU64::new(0),
+            sealed_runs: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            compaction_failures: AtomicU64::new(0),
+            spilled_runs: AtomicU64::new(0),
+            compacting: AtomicBool::new(false),
+        })
+    }
+
+    /// The configuration the store (and its tenant ingestors /
+    /// compactors) runs under.
+    pub fn config(&self) -> &StreamConfig {
+        &self.config
+    }
+
+    /// Seal a sorted record batch into a fresh level-0 run; returns
+    /// its generation, or `None` for an empty batch. Spills when the
+    /// store has a spill dir.
+    ///
+    /// The spill write (the slow part) happens BEFORE the list lock;
+    /// the generation is allocated and the run inserted *under* it.
+    /// Allocating the generation first (outside the lock) would let a
+    /// stalled seal insert an old generation after a compaction
+    /// merged past it — overlapping ranges, stability broken — so
+    /// generation allocation and insertion are one critical section.
+    /// Fresh generations are therefore maximal and the list stays
+    /// `gen_lo`-sorted by construction.
+    pub fn seal(&self, records: Vec<Record>) -> Result<Option<u64>, String> {
+        if records.is_empty() {
+            return Ok(None);
+        }
+        let len = records.len() as u64;
+        let prepared = Run::prepare(records, self.config.spill.as_deref())?;
+        if prepared.is_spilled() {
+            self.spilled_runs.fetch_add(1, Ordering::Relaxed);
+        }
+        let gen = {
+            let mut runs = self.runs.lock().unwrap();
+            let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
+            runs.push(Arc::new(prepared.into_run(gen, gen, 0)));
+            gen
+        };
+        self.live_runs.fetch_add(1, Ordering::Relaxed);
+        self.live_records.fetch_add(len, Ordering::Relaxed);
+        self.sealed_runs.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(gen))
+    }
+
+    /// Clone the live run list (sorted by `gen_lo`). The `Arc`s keep
+    /// the snapshot's runs alive across concurrent compactions.
+    pub fn snapshot(&self) -> Vec<Arc<Run>> {
+        self.runs.lock().unwrap().clone()
+    }
+
+    /// Live run count, from the published counter (lock-free).
+    pub fn run_count(&self) -> usize {
+        self.live_runs.load(Ordering::Relaxed) as usize
+    }
+
+    /// Live record count, from the published counter (lock-free).
+    pub fn record_count(&self) -> u64 {
+        self.live_records.load(Ordering::Relaxed)
+    }
+
+    /// Whether the backlog exceeds the configured fanout — the
+    /// compaction trigger, readable without the list lock.
+    pub fn needs_compaction(&self) -> bool {
+        self.run_count() > self.config.fanout.max(1)
+    }
+
+    /// Fold the published counters (plus one short lock for the level
+    /// scan) into a [`StoreStats`].
+    pub fn stats(&self) -> StoreStats {
+        let max_level =
+            self.runs.lock().unwrap().iter().map(|r| r.level()).max().unwrap_or(0);
+        StoreStats {
+            runs: self.run_count(),
+            records: self.record_count(),
+            sealed_runs: self.sealed_runs.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            compaction_failures: self.compaction_failures.load(Ordering::Relaxed),
+            spilled_runs: self.spilled_runs.load(Ordering::Relaxed),
+            max_level,
+        }
+    }
+
+    /// Record a failed compaction attempt (surfaced via
+    /// [`StoreStats::compaction_failures`]); the backlog the failure
+    /// left behind is what the next trigger retries.
+    pub fn note_compaction_failure(&self) {
+        self.compaction_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Try to claim the (single) compaction slot. Non-blocking: `false`
+    /// means another compactor holds it — skip, don't wait.
+    pub(crate) fn try_claim_compaction(&self) -> bool {
+        self.compacting
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Release the compaction claim.
+    pub(crate) fn release_compaction(&self) {
+        self.compacting.store(false, Ordering::Release);
+    }
+
+    /// Whether a compaction currently holds the claim.
+    pub fn is_compacting(&self) -> bool {
+        self.compacting.load(Ordering::Relaxed)
+    }
+
+    /// Pick the compaction pair: among the ADJACENT pairs of the
+    /// `gen_lo`-sorted live list (the only stability-safe candidates —
+    /// see the module docs), prefer the smallest-combined-length pair
+    /// whose key ranges overlap; with no overlapping pair, the
+    /// smallest pair outright (still correct, it just degenerates to
+    /// concatenation-by-merge). `None` with fewer than two runs.
+    ///
+    /// Caller must hold the compaction claim: the returned runs stay
+    /// adjacent because only the claim holder removes runs and seals
+    /// only append maximal generations.
+    pub(crate) fn pick_adjacent_pair(&self) -> Option<(Arc<Run>, Arc<Run>)> {
+        let runs = self.runs.lock().unwrap();
+        if runs.len() < 2 {
+            return None;
+        }
+        let mut best: Option<(usize, usize, bool)> = None; // (index, combined, overlaps)
+        for i in 0..runs.len() - 1 {
+            let combined = runs[i].len() + runs[i + 1].len();
+            let overlaps = runs[i].overlaps(&runs[i + 1]);
+            let better = match best {
+                None => true,
+                // Overlap beats no-overlap; then smaller combined size.
+                Some((_, bc, bo)) => (overlaps, std::cmp::Reverse(combined))
+                    > (bo, std::cmp::Reverse(bc)),
+            };
+            if better {
+                best = Some((i, combined, overlaps));
+            }
+        }
+        let (i, _, _) = best?;
+        Some((Arc::clone(&runs[i]), Arc::clone(&runs[i + 1])))
+    }
+
+    /// Commit a compaction: replace the adjacent pair `(a, b)` with
+    /// the merged run (level `max + 1`, generation range
+    /// `[a.gen_lo, b.gen_hi]`). Caller must hold the compaction claim
+    /// and `merged` must be the stable merge of the pair (older run's
+    /// records first on ties).
+    pub(crate) fn commit_compaction(
+        &self,
+        a: &Arc<Run>,
+        b: &Arc<Run>,
+        merged: Vec<Record>,
+    ) -> Result<CompactionStats, String> {
+        debug_assert_eq!(merged.len(), a.len() + b.len());
+        let level = a.level().max(b.level()) + 1;
+        let (gen_lo, gen_hi) = (a.gen_lo(), b.gen_hi());
+        let merged_records = merged.len();
+        let run =
+            Arc::new(Run::create(merged, gen_lo, gen_hi, level, self.config.spill.as_deref())?);
+        let spilled_delta: i64 = run.is_spilled() as i64
+            - a.is_spilled() as i64
+            - b.is_spilled() as i64;
+        {
+            let mut runs = self.runs.lock().unwrap();
+            let pos = runs
+                .iter()
+                .position(|r| Arc::ptr_eq(r, a))
+                .ok_or_else(|| "compaction input vanished from the store".to_string())?;
+            if pos + 1 >= runs.len() || !Arc::ptr_eq(&runs[pos + 1], b) {
+                return Err("compaction pair no longer adjacent".to_string());
+            }
+            runs[pos] = run;
+            runs.remove(pos + 1);
+        }
+        self.live_runs.fetch_sub(1, Ordering::Relaxed);
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        if spilled_delta > 0 {
+            self.spilled_runs.fetch_add(spilled_delta as u64, Ordering::Relaxed);
+        } else if spilled_delta < 0 {
+            self.spilled_runs.fetch_sub((-spilled_delta) as u64, Ordering::Relaxed);
+        }
+        Ok(CompactionStats { merged_records, level, gen_lo, gen_hi })
+    }
+}
+
+impl Drop for RunStore {
+    fn drop(&mut self) {
+        if let Some(dir) = &self.config.spill {
+            // Drop the runs first (each deletes its spill file), then
+            // best-effort remove the now-empty dir. Outstanding
+            // snapshot Arcs may keep files alive; the remove simply
+            // fails then.
+            self.runs.lock().unwrap().clear();
+            let _ = std::fs::remove_dir(dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(keys: &[i64], tag0: u64) -> Vec<Record> {
+        keys.iter().enumerate().map(|(i, &k)| Record::new(k, tag0 + i as u64)).collect()
+    }
+
+    fn mem_store() -> RunStore {
+        RunStore::new(StreamConfig {
+            run_capacity: 16,
+            fanout: 2,
+            threads: 1,
+            spill: None,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn seal_assigns_monotone_generations_and_counts() {
+        let store = mem_store();
+        assert_eq!(store.seal(Vec::new()).unwrap(), None, "empty batch seals nothing");
+        let g0 = store.seal(recs(&[1, 3], 0)).unwrap().unwrap();
+        let g1 = store.seal(recs(&[2, 2, 4], 10)).unwrap().unwrap();
+        assert!(g1 > g0);
+        assert_eq!(store.run_count(), 2);
+        assert_eq!(store.record_count(), 5);
+        let stats = store.stats();
+        assert_eq!((stats.runs, stats.records, stats.sealed_runs), (2, 5, 2));
+        assert_eq!((stats.compactions, stats.spilled_runs, stats.max_level), (0, 0, 0));
+        // Snapshot is gen-sorted.
+        let snap = store.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].gen_lo() < snap[1].gen_lo());
+    }
+
+    /// The lock-free generation clock hands out unique generations
+    /// under concurrent seals, and the published counters converge
+    /// (the Miri target: this is the store's lock-free state).
+    #[test]
+    fn concurrent_seals_get_unique_generations() {
+        let store = std::sync::Arc::new(mem_store());
+        let per_thread = if cfg!(miri) { 4 } else { 64 };
+        let threads = 2;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let store = std::sync::Arc::clone(&store);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        let key = (t * per_thread + i) as i64;
+                        store.seal(recs(&[key], 0)).unwrap().unwrap();
+                    }
+                });
+            }
+        });
+        let total = threads * per_thread;
+        assert_eq!(store.run_count(), total);
+        assert_eq!(store.record_count(), total as u64);
+        let snap = store.snapshot();
+        let mut gens: Vec<u64> = snap.iter().map(|r| r.gen_lo()).collect();
+        let sorted = gens.clone();
+        gens.sort_unstable();
+        gens.dedup();
+        assert_eq!(gens.len(), total, "generations must be unique");
+        assert_eq!(sorted, gens, "snapshot must be gen-sorted");
+    }
+
+    /// The compaction claim is exclusive and releasable — the CAS
+    /// protocol the compactor relies on.
+    #[test]
+    fn compaction_claim_is_exclusive() {
+        let store = mem_store();
+        assert!(!store.is_compacting());
+        assert!(store.try_claim_compaction());
+        assert!(store.is_compacting());
+        assert!(!store.try_claim_compaction(), "second claim must lose");
+        store.release_compaction();
+        assert!(store.try_claim_compaction());
+        store.release_compaction();
+    }
+
+    #[test]
+    fn pick_prefers_overlapping_adjacent_pair() {
+        let store = mem_store();
+        // Runs 0 and 1 are disjoint; runs 1 and 2 overlap.
+        store.seal(recs(&[0, 5], 0)).unwrap();
+        store.seal(recs(&[10, 20], 0)).unwrap();
+        store.seal(recs(&[15, 30], 0)).unwrap();
+        assert!(store.try_claim_compaction());
+        let (a, b) = store.pick_adjacent_pair().expect("three runs yield a pair");
+        assert_eq!((a.gen_lo(), b.gen_lo()), (1, 2), "overlapping pair preferred");
+        store.release_compaction();
+    }
+
+    #[test]
+    fn commit_replaces_adjacent_pair_and_keeps_records() {
+        let store = mem_store();
+        store.seal(recs(&[1, 4], 0)).unwrap();
+        store.seal(recs(&[2, 3], 10)).unwrap();
+        store.seal(recs(&[9], 20)).unwrap();
+        assert!(store.try_claim_compaction());
+        let snap = store.snapshot();
+        let (a, b) = (std::sync::Arc::clone(&snap[0]), std::sync::Arc::clone(&snap[1]));
+        // Stable merge of the pair by hand.
+        let merged = recs(&[1, 2, 3, 4], 0)
+            .into_iter()
+            .zip([0u64, 10, 11, 1])
+            .map(|(r, tag)| Record::new(r.key, tag))
+            .collect();
+        let st = store.commit_compaction(&a, &b, merged).unwrap();
+        store.release_compaction();
+        assert_eq!((st.merged_records, st.level), (4, 1));
+        assert_eq!((st.gen_lo, st.gen_hi), (0, 1));
+        assert_eq!(store.run_count(), 2);
+        assert_eq!(store.record_count(), 5, "compaction preserves record count");
+        let snap = store.snapshot();
+        assert_eq!(snap[0].gen_lo(), 0);
+        assert_eq!(snap[0].gen_hi(), 1);
+        assert_eq!(snap[0].level(), 1);
+        assert_eq!(snap[1].gen_lo(), 2);
+        let stats = store.stats();
+        assert_eq!((stats.compactions, stats.max_level), (1, 1));
+    }
+
+    #[test]
+    fn needs_compaction_tracks_fanout() {
+        let store = mem_store(); // fanout 2
+        store.seal(recs(&[1], 0)).unwrap();
+        store.seal(recs(&[2], 0)).unwrap();
+        assert!(!store.needs_compaction());
+        store.seal(recs(&[3], 0)).unwrap();
+        assert!(store.needs_compaction());
+    }
+}
