@@ -21,8 +21,8 @@ use traff_merge::workload::{adversarial_pair, sorted_keys, Dist};
 /// with lock-free Chase–Lev deques.
 mod mutex_pool {
     use std::collections::VecDeque;
-    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::mpsc::{channel, Receiver};
+    use traff_merge::model::sync::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::{Arc, Condvar, Mutex};
     use std::thread::JoinHandle;
     use std::time::Duration;
@@ -457,8 +457,8 @@ fn main() {
         // Service — the pre-PR-4 behavior). The lanes must cut the
         // service tenant's p99 while total throughput stays within
         // noise (the same jobs run either way; only who waits moves).
-        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
         use std::time::{Duration, Instant};
+        use traff_merge::model::sync::{AtomicBool, AtomicUsize, Ordering};
         let threads = traff_merge::util::num_cpus();
         const FLOODERS: usize = 8;
         let service_batches = if quick_mode() { 10 } else { 40 };

@@ -10,8 +10,8 @@
 //!   injector's priority lanes actually shield the service tenant
 //!   from maintenance work.
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use traff_merge::model::sync::{AtomicBool, Ordering};
 use std::time::Instant;
 use traff_merge::coordinator::{Config, Engine, MergeService};
 use traff_merge::core::record::Record;

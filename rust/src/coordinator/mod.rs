@@ -36,7 +36,7 @@ use crate::exec::JobClass;
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
 use crate::stream::{self, Ingestor, RunStore, StreamConfig};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::model::sync::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 

@@ -285,7 +285,7 @@ impl WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::model::sync::{AtomicUsize, Ordering};
     use std::sync::Arc;
     use std::time::Duration;
 

@@ -55,8 +55,7 @@
 //! materialized back into a `Box` only by the unique claimant.
 
 use std::ptr;
-use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
-use std::sync::Mutex;
+use crate::model::sync::{fence, AtomicIsize, AtomicPtr, Mutex, Ordering};
 
 /// The job type stored in the deque (same shape as `exec::Job`).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -292,7 +291,7 @@ impl Drop for Deque {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use crate::model::sync::{AtomicBool, AtomicUsize, Ordering};
     use std::sync::Arc;
 
     #[test]

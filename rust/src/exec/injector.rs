@@ -108,7 +108,7 @@
 
 use std::cell::{Cell, UnsafeCell};
 use std::ptr;
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use crate::model::sync::{fence, AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 /// The job type stored in the injector (same shape as `exec::Job`).
@@ -257,21 +257,23 @@ impl Lane {
     /// consumer); the `Injector::drain` sweep is the only caller.
     unsafe fn pop(&self) -> Option<Job> {
         let head = self.head.load(Ordering::Relaxed);
-        let next = (*head).next.load(Ordering::Acquire);
+        // SAFETY: the claim holder is the only thread that frees
+        // nodes, so the current head is a live allocation.
+        let next = unsafe { (*head).next.load(Ordering::Acquire) };
         if next.is_null() {
             // Empty, or a producer is mid-push: nothing takeable now.
             return None;
         }
-        // The Acquire above makes `next`'s contents visible; the node
-        // becomes the new stub once its job is moved out. Only the
-        // claim holder touches `job`, so the &mut through the
+        // SAFETY: the Acquire above makes `next`'s contents visible;
+        // the node becomes the new stub once its job is moved out.
+        // Only the claim holder touches `job`, so the &mut through the
         // UnsafeCell cannot alias another access.
-        let job = (*(*next).job.get()).take();
+        let job = unsafe { (*(*next).job.get()).take() };
         debug_assert!(job.is_some(), "non-stub node without a job");
         self.head.store(next, Ordering::Relaxed);
-        // The old stub's `next` was observed non-null: its one writer
-        // is done and no other thread holds it — safe to free.
-        drop(Box::from_raw(head));
+        // SAFETY: the old stub's `next` was observed non-null: its one
+        // writer is done and no other thread holds it — safe to free.
+        drop(unsafe { Box::from_raw(head) });
         self.len.fetch_sub(1, Ordering::Release);
         job
     }
@@ -401,6 +403,18 @@ impl Injector {
         if self.bg_max_delay_ns == BG_DELAY_DISABLED {
             return;
         }
+        // SeqCst fence, paired with the one in `reset_bg_clock`: the
+        // caller stored our job's `len` increment before this fence,
+        // and the resetter stores IDLE before ITS fence. Whichever
+        // fence comes first in the SC order, the other side's
+        // subsequent read sees the store — so either our CAS below
+        // observes the resetter's IDLE (and arms), or the resetter's
+        // re-check observes our `len` (and re-arms for us). Without
+        // the fences both reads may be stale (the classic store-buffer
+        // outcome) and a waiting job is left unarmed, silently voiding
+        // its delay bound — `exec::model_tests::model_injector_bg_arm_vs_reset`
+        // catches exactly that if either fence is dropped.
+        fence(Ordering::SeqCst);
         let now = self.now_ns();
         let _ = self.bg_oldest_ns.compare_exchange(
             BG_CLOCK_IDLE,
@@ -444,6 +458,15 @@ impl Injector {
         // CAS sees the IDLE we just stored and arms itself. Either
         // way a waiting job always holds an arm; the CAS (not a plain
         // store) keeps us from clobbering a fresher pusher's arm.
+        //
+        // The SeqCst fence (paired with `note_bg_arrival`'s) is what
+        // makes "either way" airtight: it orders our IDLE store before
+        // the `len` re-check in the SC order, so our re-check and the
+        // pusher's arm CAS cannot BOTH read stale values — without it
+        // the store-buffer outcome (we miss the pushed job, the pusher
+        // misses our IDLE) loses the arm. See the model test
+        // `exec::model_tests::model_injector_bg_arm_vs_reset`.
+        fence(Ordering::SeqCst);
         if self.lane_len(JobClass::Background) > 0 {
             let _ = self.bg_oldest_ns.compare_exchange(
                 BG_CLOCK_IDLE,
@@ -604,7 +627,7 @@ impl Injector {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use crate::model::sync::AtomicUsize;
     use std::sync::{Arc, Mutex};
 
     fn log_job(log: &Arc<Mutex<Vec<usize>>>, i: usize) -> Job {

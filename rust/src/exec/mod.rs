@@ -124,6 +124,8 @@
 
 pub mod deque;
 pub mod injector;
+#[cfg(all(test, feature = "model"))]
+mod model_tests;
 pub mod telemetry;
 pub mod tunables;
 
@@ -133,7 +135,7 @@ use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::model::sync::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -817,7 +819,7 @@ mod tests {
 
     #[test]
     fn scope_joins_before_returning() {
-        use std::sync::atomic::AtomicUsize;
+        use crate::model::sync::AtomicUsize;
         let exec = Executor::new(2);
         let count = AtomicUsize::new(0);
         exec.scope(|s| {

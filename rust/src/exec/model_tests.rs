@@ -1,0 +1,363 @@
+//! Model-checked protocol tests for the `exec` lock-free substrate —
+//! compiled only under `--features model` (see [`crate::model`]).
+//!
+//! Each test wraps a tiny, fully-deterministic instance of one real
+//! protocol in [`model::check`]: the checker re-runs the closure under
+//! every schedule (and every weak-memory read choice) it can reach, so
+//! the assertions at the end of the closure hold for **all** explored
+//! interleavings, not just the ones a stress test happens to hit.
+//! State must be built INSIDE the closure — it is reconstructed fresh
+//! for every schedule.
+//!
+//! The suite covers the three core exec protocols named in the
+//! ARCHITECTURE SAFETY catalog — Chase–Lev steal-vs-pop, the injector
+//! shard drain claim + background promotion arm/reset, and the
+//! telemetry window-epoch roll — plus the mutation gate that proves
+//! the checker actually detects a weakened ordering.
+
+use super::deque::{Deque, Steal};
+use super::injector::{Injector, JobClass};
+use super::telemetry::{Counters, WindowRing};
+use crate::model::sync::{AtomicBool, AtomicUsize, Ordering};
+use crate::model::thread;
+use crate::model::{check, check_with, Config};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Chase–Lev deque, the core race: one job left, the owner's `pop`
+/// and a thief's `steal` race the last-element `top` CAS. Exactly one
+/// of them may get the job, in every schedule.
+#[test]
+fn model_deque_last_element_pop_vs_steal() {
+    let schedules = check(|| {
+        let dq = Arc::new(Deque::new());
+        let hits = Arc::new(AtomicUsize::new(0));
+
+        let h = Arc::clone(&hits);
+        dq.push(Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+
+        let thief_dq = Arc::clone(&dq);
+        let thief = thread::spawn(move || {
+            loop {
+                match thief_dq.steal() {
+                    Steal::Success(job) => {
+                        job();
+                        return true;
+                    }
+                    Steal::Empty => return false,
+                    // Lost the CAS to the owner: with one element the
+                    // next probe terminates (Empty), so this cannot
+                    // spin unboundedly.
+                    Steal::Retry => {}
+                }
+            }
+        });
+
+        let popped = match dq.pop() {
+            Some(job) => {
+                job();
+                true
+            }
+            None => false,
+        };
+        let stolen = thief.join().unwrap();
+
+        // The one job ran exactly once, on exactly one side.
+        assert_eq!(
+            hits.load(Ordering::Relaxed),
+            1,
+            "job must run exactly once (popped={popped}, stolen={stolen})"
+        );
+        assert!(popped ^ stolen, "exactly one side wins the last element");
+        assert!(dq.is_empty());
+    });
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Chase–Lev with two jobs: the thief takes from the top while the
+/// owner pops from the bottom — both may succeed, but each job still
+/// runs exactly once and nothing is lost. This exercises the
+/// steal-side publication chain (Release fence in `push`, Acquire
+/// loads + slot read in `steal`): a too-weak publication would hand
+/// the thief a stale slot pointer and double-run or segfault.
+#[test]
+fn model_deque_two_jobs_disjoint_delivery() {
+    let schedules = check_with(
+        Config { name: "deque-two-jobs", ..Config::default() },
+        || {
+            let dq = Arc::new(Deque::new());
+            let ran = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+            for i in 0..2 {
+                let r = Arc::clone(&ran);
+                dq.push(Box::new(move || {
+                    r[i].fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+
+            let thief_dq = Arc::clone(&dq);
+            let thief = thread::spawn(move || {
+                let mut got = 0usize;
+                loop {
+                    match thief_dq.steal() {
+                        Steal::Success(job) => {
+                            job();
+                            got += 1;
+                        }
+                        Steal::Empty => return got,
+                        Steal::Retry => {}
+                    }
+                }
+            });
+
+            let mut popped = 0usize;
+            while let Some(job) = dq.pop() {
+                job();
+                popped += 1;
+            }
+            let stolen = thief.join().unwrap();
+
+            assert_eq!(popped + stolen, 2, "no job lost, none duplicated");
+            for (i, r) in ran.iter().enumerate() {
+                assert_eq!(r.load(Ordering::Relaxed), 1, "job {i} ran exactly once");
+            }
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Injector shard drain claim: two workers race `drain` on a
+/// single-shard injector holding two service jobs. The `draining` CAS
+/// admits at most one drainer at a time, so every job is delivered to
+/// exactly one batch; a loser observes `None` rather than a torn pop.
+#[test]
+fn model_injector_drain_claim_exclusive() {
+    let schedules = check_with(
+        Config { name: "injector-claim", ..Config::default() },
+        || {
+            let inj = Arc::new(Injector::with_starvation_limit(1, 8));
+            let ran = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+            for i in 0..2 {
+                let r = Arc::clone(&ran);
+                inj.push(
+                    Box::new(move || {
+                        r[i].fetch_add(1, Ordering::Relaxed);
+                    }),
+                    JobClass::Service,
+                );
+            }
+
+            let worker = |inj: Arc<Injector>| {
+                move || match inj.drain(0, 1) {
+                    Some(d) => {
+                        let n = d.jobs.len();
+                        for job in d.jobs {
+                            job();
+                        }
+                        n
+                    }
+                    None => 0,
+                }
+            };
+            let w1 = thread::spawn(worker(Arc::clone(&inj)));
+            let w2 = thread::spawn(worker(Arc::clone(&inj)));
+            let mut delivered = w1.join().unwrap() + w2.join().unwrap();
+
+            // Whatever the claim race left behind, the owner can
+            // always finish the backlog once the workers are done.
+            while let Some(d) = inj.drain(0, 16) {
+                for job in d.jobs {
+                    job();
+                    delivered += 1;
+                }
+            }
+            assert_eq!(delivered, 2, "claim race must not lose or duplicate jobs");
+            for (i, r) in ran.iter().enumerate() {
+                assert_eq!(r.load(Ordering::Relaxed), 1, "job {i} ran exactly once");
+            }
+            assert!(inj.is_empty());
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Injector background-promotion arm/reset protocol: with a zero time
+/// bound, ANY waiting background job is overdue — so "a waiting job
+/// always holds an arm" (the invariant `reset_bg_clock`'s re-check
+/// closes) becomes observable: if a background job is still queued
+/// after the racing drain finishes, the next drain MUST report it
+/// promoted. Losing the arm in the push-vs-reset race would surface
+/// here as `promoted == false`.
+#[test]
+fn model_injector_bg_arm_vs_reset() {
+    let schedules = check_with(
+        Config { name: "injector-bg-arm", ..Config::default() },
+        || {
+            // Single shard; counted trigger effectively off (huge
+            // limit) so promotion can only come from the time bound.
+            let inj =
+                Arc::new(Injector::with_promotion_bounds(1, usize::MAX, Some(Duration::ZERO)));
+            let ran = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+
+            let r = Arc::clone(&ran);
+            inj.push(
+                Box::new(move || {
+                    r[0].fetch_add(1, Ordering::Relaxed);
+                }),
+                JobClass::Background,
+            );
+
+            // T1 drains the armed job (and runs reset_bg_clock)...
+            let inj1 = Arc::clone(&inj);
+            let drainer = thread::spawn(move || {
+                match inj1.drain(0, 4) {
+                    Some(d) => {
+                        assert_eq!(d.class, JobClass::Background);
+                        assert!(d.promoted, "a waiting bg job under a zero bound is overdue");
+                        let n = d.jobs.len();
+                        for job in d.jobs {
+                            job();
+                        }
+                        n
+                    }
+                    None => 0,
+                }
+            });
+            // ...while T2 pushes a second background job into the
+            // reset window (push first, arm after — the protocol under
+            // test).
+            let inj2 = Arc::clone(&inj);
+            let ran2 = Arc::clone(&ran);
+            let pusher = thread::spawn(move || {
+                inj2.push(
+                    Box::new(move || {
+                        ran2[1].fetch_add(1, Ordering::Relaxed);
+                    }),
+                    JobClass::Background,
+                );
+            });
+
+            let mut delivered = drainer.join().unwrap();
+            pusher.join().unwrap();
+
+            // THE invariant: any still-queued background job must hold
+            // an arm, i.e. drain sees it as promoted (bound == 0).
+            while inj.lane_len(JobClass::Background) > 0 {
+                let d = inj.drain(0, 16).expect("queued job must be drainable");
+                assert_eq!(d.class, JobClass::Background);
+                assert!(
+                    d.promoted,
+                    "arm lost in the push-vs-reset race: waiting bg job not promoted"
+                );
+                for job in d.jobs {
+                    job();
+                    delivered += 1;
+                }
+            }
+            assert_eq!(delivered, 2);
+            for (i, r) in ran.iter().enumerate() {
+                assert_eq!(r.load(Ordering::Relaxed), 1, "job {i} ran exactly once");
+            }
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Telemetry window-epoch roll: two threads force a roll at the same
+/// clock reading. The `rolling` try-flag plus the re-check under it
+/// admit exactly one winner — a double roll would double-count the
+/// epoch (two slots for one delta), zero winners would stall the
+/// window.
+#[test]
+fn model_telemetry_single_roll_winner() {
+    let schedules = check_with(
+        Config { name: "telemetry-roll", ..Config::default() },
+        || {
+            let shared = Arc::new((WindowRing::new(1), vec![Counters::default()]));
+            shared.1[0].executed.store(7, Ordering::Relaxed);
+
+            let s1 = Arc::clone(&shared);
+            let t1 = thread::spawn(move || s1.0.maybe_roll(100, &s1.1, true));
+            let here = shared.0.maybe_roll(100, &shared.1, true);
+            let there = t1.join().unwrap();
+
+            assert!(
+                here ^ there,
+                "exactly one roller may win an epoch (here={here}, there={there})"
+            );
+            assert_eq!(shared.0.rolls(), 1, "one epoch, one slot");
+            let rates = shared.0.rates();
+            assert_eq!(rates.epochs, 1);
+            // The single slot holds the whole delta exactly once.
+            assert!((rates.executed_per_sec * rates.span_secs - 7.0).abs() < 1e-9);
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+// ---------------------------------------------------------------------------
+// Mutation gate: prove the checker has teeth.
+// ---------------------------------------------------------------------------
+
+/// Test-only copy of the publication idiom every protocol above leans
+/// on (deque `push` fence→bottom, injector `push` next-link→len):
+/// write the payload, then publish a flag. The flag store's ordering
+/// is the mutation point.
+fn publish_consume(flag_order: Ordering) {
+    let data = Arc::new(AtomicUsize::new(0));
+    let flag = Arc::new(AtomicBool::new(false));
+
+    let d = Arc::clone(&data);
+    let f = Arc::clone(&flag);
+    let producer = thread::spawn(move || {
+        d.store(42, Ordering::Relaxed);
+        f.store(true, flag_order);
+    });
+
+    if flag.load(Ordering::Acquire) {
+        // With a Release publish this read is forced to 42; with the
+        // Relaxed mutation the store-buffer simulation lets it read
+        // the stale 0 in some schedule.
+        assert_eq!(data.load(Ordering::Relaxed), 42, "stale read through the flag");
+    }
+    producer.join().unwrap();
+}
+
+/// The correct protocol (Release publish) survives full exploration.
+#[test]
+fn model_mutation_gate_release_passes() {
+    let schedules = check_with(
+        Config { name: "gate-release", ..Config::default() },
+        || publish_consume(Ordering::Release),
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// The mutation (Release → Relaxed on the flag publish) MUST be
+/// caught: the checker panics with a replayable schedule. If this
+/// test fails, the model checker has lost its teeth — fix the checker
+/// before trusting any green model run.
+#[test]
+fn model_mutation_gate_relaxed_is_caught() {
+    let err = std::panic::catch_unwind(|| {
+        check_with(
+            Config { name: "gate-relaxed", ..Config::default() },
+            || publish_consume(Ordering::Relaxed),
+        )
+    })
+    .expect_err("weakened publish must be reported");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(
+        msg.contains("gate-relaxed") && msg.contains("stale read"),
+        "failure must name the model and the assertion: {msg}"
+    );
+    assert!(
+        msg.contains("replay: MODEL_SCHEDULE="),
+        "failure must carry a replay seed: {msg}"
+    );
+}

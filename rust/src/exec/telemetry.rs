@@ -63,7 +63,7 @@
 //! snapshots, window rates steer heuristics — they are not exact
 //! accounting.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::model::sync::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// One worker's live counters, padded to (at least) a cache line so
 /// neighbouring workers never write the same line.

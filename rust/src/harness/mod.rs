@@ -6,6 +6,10 @@
 //! with this. A quick mode (`BENCH_QUICK=1`) trims samples so `cargo
 //! bench` stays minutes, not hours, on CI-class machines.
 
+pub mod report;
+
+pub use report::{BenchReport, DiffReport, Scenario};
+
 use crate::metrics::{fmt_duration, Stats};
 use std::time::Instant;
 

@@ -1,0 +1,265 @@
+//! Machine-readable bench reports — `BENCH_<pr>.json` emit and diff
+//! (ROADMAP open item: regression tracking for the paper tables).
+//!
+//! One report = one run of the `repro bench-json` scenario suite:
+//! per scenario, throughput in Melem/s (from the median per-op time)
+//! plus the p50/p99 per-op latency in seconds. The file is written
+//! with stable field order so diffs stay readable, and parsed back
+//! with [`crate::util::json`] (the offline registry has no
+//! `serde_json`).
+//!
+//! The diff side ([`BenchReport::diff`]) compares scenarios by name:
+//! a scenario whose throughput drops more than `tolerance` relative
+//! to the baseline is a regression. Tolerance is deliberately coarse —
+//! the checked-in baseline and the CI runner are different machines,
+//! so the gate catches collapses (a lost parallel path, an accidental
+//! O(n^2)), not percent-level noise; same-host comparisons can pass a
+//! tighter tolerance explicitly.
+
+use crate::harness::BenchResult;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// One measured scenario in a report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Elements processed by ONE logical operation of the scenario.
+    pub elems: u64,
+    /// Throughput at the median per-op time.
+    pub melems_per_sec: f64,
+    /// Median per-op seconds.
+    pub p50_secs: f64,
+    /// 99th-percentile per-op seconds.
+    pub p99_secs: f64,
+    pub samples: usize,
+    pub iters: usize,
+}
+
+/// A full `BENCH_<pr>.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// PR tag the file is named after ("6" -> `BENCH_6.json`).
+    pub pr: String,
+    /// Worker threads the suite ran with (context for the numbers).
+    pub threads: usize,
+    /// Whether `BENCH_QUICK` trimmed sampling.
+    pub quick: bool,
+    pub scenarios: Vec<Scenario>,
+}
+
+impl BenchReport {
+    pub fn new(pr: &str, threads: usize) -> BenchReport {
+        BenchReport {
+            pr: pr.to_string(),
+            threads,
+            quick: crate::harness::quick_mode(),
+            scenarios: Vec::new(),
+        }
+    }
+
+    /// Fold one harness result in, deriving throughput from the
+    /// median per-op time over `elems` elements.
+    pub fn add(&mut self, elems: u64, r: &BenchResult) {
+        self.scenarios.push(Scenario {
+            name: r.name.clone(),
+            elems,
+            melems_per_sec: crate::metrics::melems_per_sec(elems, r.stats.median),
+            p50_secs: r.stats.median,
+            p99_secs: r.stats.p99,
+            samples: r.stats.n,
+            iters: r.iters,
+        });
+    }
+
+    /// Serialize with stable key order and one scenario per line.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{{");
+        let _ = writeln!(s, "  \"pr\": \"{}\",", escape(&self.pr));
+        let _ = writeln!(s, "  \"threads\": {},", self.threads);
+        let _ = writeln!(s, "  \"quick\": {},", self.quick);
+        let _ = writeln!(s, "  \"scenarios\": [");
+        for (i, sc) in self.scenarios.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"name\": \"{}\", \"elems\": {}, \"melems_per_sec\": {:.3}, \
+                 \"p50_secs\": {:.9}, \"p99_secs\": {:.9}, \"samples\": {}, \"iters\": {}}}",
+                escape(&sc.name),
+                sc.elems,
+                sc.melems_per_sec,
+                sc.p50_secs,
+                sc.p99_secs,
+                sc.samples,
+                sc.iters
+            );
+            let _ = writeln!(s, "{}", if i + 1 < self.scenarios.len() { "," } else { "" });
+        }
+        let _ = writeln!(s, "  ]");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Parse a report previously written by [`Self::to_json`] (or any
+    /// JSON with the same shape).
+    pub fn parse(src: &str) -> Result<BenchReport, String> {
+        let v = Json::parse(src).map_err(|e| e.to_string())?;
+        let field = |j: &Json, k: &str| -> Result<Json, String> {
+            j.get(k).cloned().ok_or_else(|| format!("missing field '{k}'"))
+        };
+        let mut scenarios = Vec::new();
+        for sc in field(&v, "scenarios")?.as_arr().ok_or("'scenarios' not an array")? {
+            scenarios.push(Scenario {
+                name: field(sc, "name")?.as_str().ok_or("'name' not a string")?.to_string(),
+                elems: field(sc, "elems")?.as_f64().ok_or("'elems' not a number")? as u64,
+                melems_per_sec: field(sc, "melems_per_sec")?
+                    .as_f64()
+                    .ok_or("'melems_per_sec' not a number")?,
+                p50_secs: field(sc, "p50_secs")?.as_f64().ok_or("'p50_secs' not a number")?,
+                p99_secs: field(sc, "p99_secs")?.as_f64().ok_or("'p99_secs' not a number")?,
+                samples: field(sc, "samples")?.as_usize().ok_or("'samples' not a number")?,
+                iters: field(sc, "iters")?.as_usize().ok_or("'iters' not a number")?,
+            });
+        }
+        Ok(BenchReport {
+            pr: field(&v, "pr")?.as_str().ok_or("'pr' not a string")?.to_string(),
+            threads: field(&v, "threads")?.as_usize().ok_or("'threads' not a number")?,
+            quick: matches!(field(&v, "quick")?, Json::Bool(true)),
+            scenarios,
+        })
+    }
+
+    /// Compare `new` against the `self` baseline. Returns one line per
+    /// common scenario plus a list of regressions (throughput drop
+    /// beyond `tolerance`, e.g. `0.6` = new must reach 40% of the
+    /// baseline). Scenarios present on only one side are reported but
+    /// never fail the diff — the suite is allowed to grow.
+    pub fn diff(&self, new: &BenchReport, tolerance: f64) -> DiffReport {
+        let mut lines = Vec::new();
+        let mut regressions = Vec::new();
+        for base in &self.scenarios {
+            let Some(cur) = new.scenarios.iter().find(|s| s.name == base.name) else {
+                lines.push(format!("~ {}: missing from new report", base.name));
+                continue;
+            };
+            let ratio = if base.melems_per_sec > 0.0 {
+                cur.melems_per_sec / base.melems_per_sec
+            } else {
+                1.0
+            };
+            let line = format!(
+                "{} {}: {:.1} -> {:.1} Melem/s ({:+.1}%), p99 {:.3}ms -> {:.3}ms",
+                if ratio < 1.0 - tolerance { "✗" } else { "✓" },
+                base.name,
+                base.melems_per_sec,
+                cur.melems_per_sec,
+                (ratio - 1.0) * 100.0,
+                base.p99_secs * 1e3,
+                cur.p99_secs * 1e3,
+            );
+            if ratio < 1.0 - tolerance {
+                regressions.push(format!(
+                    "{}: {:.1} -> {:.1} Melem/s is below {:.0}% of baseline",
+                    base.name,
+                    base.melems_per_sec,
+                    cur.melems_per_sec,
+                    (1.0 - tolerance) * 100.0
+                ));
+            }
+            lines.push(line);
+        }
+        for cur in &new.scenarios {
+            if !self.scenarios.iter().any(|s| s.name == cur.name) {
+                lines.push(format!("+ {}: {:.1} Melem/s (new scenario)", cur.name, cur.melems_per_sec));
+            }
+        }
+        DiffReport { lines, regressions }
+    }
+}
+
+/// Outcome of a baseline comparison.
+pub struct DiffReport {
+    pub lines: Vec<String>,
+    pub regressions: Vec<String>,
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(pairs: &[(&str, f64)]) -> BenchReport {
+        BenchReport {
+            pr: "6".into(),
+            threads: 8,
+            quick: false,
+            scenarios: pairs
+                .iter()
+                .map(|&(name, melems)| Scenario {
+                    name: name.into(),
+                    elems: 1_000_000,
+                    melems_per_sec: melems,
+                    p50_secs: 1.0 / melems * 1e-6 * 1_000_000.0,
+                    p99_secs: 1.2 / melems * 1e-6 * 1_000_000.0,
+                    samples: 15,
+                    iters: 1,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = report(&[("merge_uniform", 450.5), ("sort_uniform", 95.25)]);
+        let parsed = BenchReport::parse(&r.to_json()).unwrap();
+        assert_eq!(parsed.pr, "6");
+        assert_eq!(parsed.threads, 8);
+        assert!(!parsed.quick);
+        assert_eq!(parsed.scenarios.len(), 2);
+        assert_eq!(parsed.scenarios[0].name, "merge_uniform");
+        assert!((parsed.scenarios[0].melems_per_sec - 450.5).abs() < 1e-3);
+        assert!((parsed.scenarios[1].p99_secs - r.scenarios[1].p99_secs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_derives_throughput_from_median() {
+        let mut r = BenchReport::new("7", 4);
+        let br = crate::harness::Bench::new("case").samples(3).warmup(0).run(|| ());
+        r.add(1_000, &br);
+        assert_eq!(r.scenarios[0].name, "case");
+        assert_eq!(r.scenarios[0].elems, 1_000);
+        assert!(r.scenarios[0].p99_secs >= r.scenarios[0].p50_secs);
+    }
+
+    #[test]
+    fn diff_flags_collapse_not_noise() {
+        let base = report(&[("merge", 400.0), ("sort", 100.0)]);
+        // 10% down: within tolerance. 80% down: regression.
+        let new = report(&[("merge", 360.0), ("sort", 20.0)]);
+        let d = base.diff(&new, 0.5);
+        assert_eq!(d.regressions.len(), 1);
+        assert!(d.regressions[0].contains("sort"), "{:?}", d.regressions);
+        assert!(d.lines.iter().any(|l| l.starts_with("✓ merge")));
+        assert!(d.lines.iter().any(|l| l.starts_with("✗ sort")));
+    }
+
+    #[test]
+    fn diff_tolerates_suite_growth() {
+        let base = report(&[("merge", 400.0), ("gone", 50.0)]);
+        let new = report(&[("merge", 400.0), ("added", 10.0)]);
+        let d = base.diff(&new, 0.5);
+        assert!(d.regressions.is_empty());
+        assert!(d.lines.iter().any(|l| l.contains("gone") && l.contains("missing")));
+        assert!(d.lines.iter().any(|l| l.contains("added") && l.contains("new scenario")));
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(BenchReport::parse("{}").is_err());
+        assert!(BenchReport::parse("not json").is_err());
+        assert!(BenchReport::parse(r#"{"pr": "6", "threads": 8, "quick": false, "scenarios": [{}]}"#).is_err());
+    }
+}

@@ -28,6 +28,8 @@
 //! See DESIGN.md for the full system inventory and experiment index,
 //! and EXPERIMENTS.md for reproduction results.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baseline;
 pub mod bsp;
 pub mod cli;
@@ -36,6 +38,7 @@ pub mod core;
 pub mod exec;
 pub mod harness;
 pub mod metrics;
+pub mod model;
 pub mod pram;
 pub mod runtime;
 pub mod stream;

@@ -11,9 +11,12 @@
 //!   compaction + scans over the out-of-core run store.
 //! - `artifacts` — list loaded XLA artifacts (requires `make artifacts`).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use traff_merge::cli::Args;
 use traff_merge::coordinator::{Config, Engine, MergeService};
-use traff_merge::core::{parallel_merge_instrumented, parallel_merge_sort, Partition};
+use traff_merge::core::{parallel_merge, parallel_merge_instrumented, parallel_merge_sort, Partition, Record};
+use traff_merge::harness::{Bench, BenchReport};
 use traff_merge::exec::JobClass;
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
 use traff_merge::pram::{pram_merge, Variant};
@@ -37,6 +40,8 @@ fn main() {
         "bsp" => cmd_bsp(&args),
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
+        "bench-json" => cmd_bench_json(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "artifacts" => cmd_artifacts(),
         "" | "help" | "--help" => {
             print_help();
@@ -66,6 +71,8 @@ fn print_help() {
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
          \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
          \x20 stream --n N --runs R [--block B] [--scans S] [--dist D] [--spill]\n\
+         \x20 bench-json [--out F] [--pr TAG] [--n N] [--p P]  emit BENCH_<pr>.json\n\
+         \x20 bench-diff --old F --new F [--tolerance-pct T]   compare two reports\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
          distributions: uniform dupK zipf allequal organpipe presorted\n\
          \x20                reversed runsR advskew"
@@ -567,6 +574,113 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
         rates.bg_promotions_per_sec,
     );
     Ok(())
+}
+
+/// `repro bench-json` — run the fixed regression-tracking scenario
+/// suite and write `BENCH_<pr>.json` (throughput in Melem/s plus
+/// p50/p99 per-op latency per scenario). `BENCH_QUICK=1` trims
+/// sampling the same way it does for `cargo bench`; `--n` scales the
+/// problem so CI can run a fast, smaller-but-same-shape suite.
+fn cmd_bench_json(args: &Args) -> Result<(), String> {
+    args.expect_known(&["out", "pr", "n", "p"])?;
+    let pr = args.get("pr").unwrap_or("6").to_string();
+    let n = args.get_usize("n", 1_000_000)?.max(16);
+    let p = args.get_usize("p", traff_merge::util::num_cpus())?.max(1);
+    let default_out = format!("BENCH_{pr}.json");
+    let out_path = args.get("out").unwrap_or(&default_out).to_string();
+    let mut report = BenchReport::new(&pr, p);
+    println!("bench-json: n={n} p={p} quick={}", traff_merge::harness::quick_mode());
+
+    // Scenario 1/2: the paper's §2 merge, friendly and adversarial
+    // key distributions (the dup-heavy case stresses the equal-key
+    // block cases of the partition).
+    for (name, dist) in [("merge_uniform", Dist::Uniform), ("merge_dupheavy", Dist::DupHeavy(16))] {
+        let a = workload::sorted_keys(dist, n / 2, 42);
+        let b = workload::sorted_keys(dist, n - n / 2, 43);
+        let mut out = vec![0i64; n];
+        let r = Bench::new(name).run(|| parallel_merge(&a, &b, &mut out, p));
+        println!("  {}", r.summary());
+        report.add(n as u64, &r);
+    }
+
+    // Scenario 3: the §3 merge sort (includes the per-op clone; the
+    // clone is O(n) against the sort's O(n log n), and every op must
+    // start from the same unsorted input).
+    {
+        let base = workload::raw_keys(Dist::Uniform, n, 42);
+        let r = Bench::new("sort_uniform").run(|| {
+            let mut v = base.clone();
+            parallel_merge_sort(&mut v, p);
+            v
+        });
+        println!("  {}", r.summary());
+        report.add(n as u64, &r);
+    }
+
+    // Scenario 4: the streaming compactor's pairwise run merge on the
+    // background lane — records (key + stability tag), dup-heavy keys.
+    {
+        let mk = |seed: u64, tag0: u64| -> Vec<Record> {
+            let mut keys = workload::raw_keys(Dist::DupHeavy(16), n / 2, seed);
+            keys.sort();
+            keys.iter().enumerate().map(|(i, &k)| Record::new(k, tag0 + i as u64)).collect()
+        };
+        let a = mk(7, 0);
+        let b = mk(8, (n / 2) as u64);
+        let r = Bench::new("stream_compact").run(|| traff_merge::stream::merge_runs_parallel(&a, &b, p));
+        println!("  {}", r.summary());
+        report.add((a.len() + b.len()) as u64, &r);
+    }
+
+    std::fs::write(&out_path, report.to_json())
+        .map_err(|e| format!("writing {out_path}: {e}"))?;
+    println!("wrote {out_path} ({} scenarios)", report.scenarios.len());
+    Ok(())
+}
+
+/// `repro bench-diff` — compare two `BENCH_*.json` reports, failing
+/// (exit 1) on any scenario whose throughput collapsed past the
+/// tolerance. The default 60% tolerance is the cross-machine gate:
+/// the checked-in baseline and the CI runner differ, so only
+/// catastrophic drops (a lost parallel path, an accidental quadratic)
+/// should trip it.
+fn cmd_bench_diff(args: &Args) -> Result<(), String> {
+    args.expect_known(&["old", "new", "tolerance-pct"])?;
+    let old_path = args.get("old").ok_or("--old <BENCH_x.json> is required")?;
+    let new_path = args.get("new").ok_or("--new <BENCH_y.json> is required")?;
+    let tol_pct = args.get_usize("tolerance-pct", 60)?;
+    if tol_pct >= 100 {
+        return Err(format!("--tolerance-pct {tol_pct}: must be < 100"));
+    }
+    let read = |path: &str| -> Result<BenchReport, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        BenchReport::parse(&src).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let old = read(old_path)?;
+    let new = read(new_path)?;
+    println!(
+        "bench diff: {old_path} (pr {}, {} threads{}) -> {new_path} (pr {}, {} threads{}), tolerance {tol_pct}%",
+        old.pr,
+        old.threads,
+        if old.quick { ", quick" } else { "" },
+        new.pr,
+        new.threads,
+        if new.quick { ", quick" } else { "" },
+    );
+    let d = old.diff(&new, tol_pct as f64 / 100.0);
+    for line in &d.lines {
+        println!("  {line}");
+    }
+    if d.regressions.is_empty() {
+        println!("no regressions past the {tol_pct}% gate");
+        Ok(())
+    } else {
+        Err(format!(
+            "{} bench regression(s):\n  {}",
+            d.regressions.len(),
+            d.regressions.join("\n  ")
+        ))
+    }
 }
 
 fn cmd_artifacts() -> Result<(), String> {

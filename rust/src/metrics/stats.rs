@@ -9,6 +9,7 @@ pub struct Stats {
     pub mean: f64,
     pub median: f64,
     pub p95: f64,
+    pub p99: f64,
     pub stddev: f64,
 }
 
@@ -27,6 +28,7 @@ impl Stats {
             mean,
             median: percentile(&sorted, 50.0),
             p95: percentile(&sorted, 95.0),
+            p99: percentile(&sorted, 99.0),
             stddev: var.sqrt(),
         }
     }

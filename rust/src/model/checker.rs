@@ -1,0 +1,1163 @@
+//! The model-build core: a token-passing cooperative scheduler over
+//! real OS threads, depth-first schedule exploration with sleep-set
+//! (DPOR-family) pruning, and a vector-clock weak-memory simulation
+//! with per-location store histories. Compiled only under
+//! `--features model`.
+//!
+//! ## Exploration
+//!
+//! Exactly one thread runs at a time. Before every *visible* operation
+//! (atomic op, mutex op, spawn/join/yield) a thread announces the
+//! operation and blocks; the scheduler picks the next thread to run
+//! from the enabled set. Whenever more than one thread is enabled, the
+//! decision is a branch in the schedule tree; [`check_with`] re-runs
+//! the closure, advancing the last undecided branch depth-first until
+//! the tree is exhausted (or `max_schedules` hits). Sleep sets prune
+//! redundant interleavings: after exploring thread `t` at a branch,
+//! `t` stays "asleep" in sibling subtrees until some executed
+//! operation conflicts with the operation `t` performed — schedules in
+//! which `t` runs later but nothing conflicting intervened are
+//! permutations of already-explored ones. A state whose every enabled
+//! thread is asleep is abandoned (`SleepBlocked`) — every completion
+//! of it is equivalent to an explored schedule.
+//!
+//! ## Weak memory
+//!
+//! Each atomic location keeps its full modification order as a list of
+//! stores, each stamped with `(writer, per-writer event counter)` and
+//! a *message* vector clock (the writer's clock for `Release`-or-
+//! stronger stores, its release-fence clock for `Relaxed` ones). A
+//! load may read **any** store not superseded by one the reader
+//! already happens-after (plus per-thread coherence floors); when
+//! several stores are readable, the choice is itself a schedule
+//! branch, so a too-weak ordering genuinely produces stale values in
+//! some explored schedule. `Acquire` loads join the message clock;
+//! `Relaxed` loads park it in a pending clock that only an acquire
+//! fence merges. RMWs always read the newest store (atomicity) and
+//! continue its release sequence. `SeqCst` operations additionally
+//! join a global clock both ways, which orders them by schedule
+//! position — a valid single total order `S`.
+//!
+//! ## Failure replay
+//!
+//! A failure panics with the decision string of the current schedule;
+//! `MODEL_SCHEDULE=<string>` re-runs exactly that execution.
+
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+
+/// Hard cap on threads per execution (vector clocks are fixed-width).
+pub const MAX_THREADS: usize = 4;
+
+/// Exploration bounds. `..Default::default()` the fields you keep.
+#[derive(Clone)]
+pub struct Config {
+    /// Name printed in failure / truncation messages.
+    pub name: &'static str,
+    /// Visible-operation bound per execution; exceeding it is reported
+    /// as a failure (livelock suspicion), not silently truncated.
+    pub max_steps: u64,
+    /// Total executions bound; exceeding it stops exploration with a
+    /// stderr note (the explored prefix remains a sound result).
+    pub max_schedules: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { name: "model", max_steps: 20_000, max_schedules: 500_000 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector clocks, operations, schedule tree.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Default, PartialEq, Eq, Debug)]
+struct VClock([u64; MAX_THREADS]);
+
+impl VClock {
+    fn join(&mut self, o: &VClock) {
+        for i in 0..MAX_THREADS {
+            if o.0[i] > self.0[i] {
+                self.0[i] = o.0[i];
+            }
+        }
+    }
+    fn bump(&mut self, tid: usize) {
+        self.0[tid] += 1;
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum OpKind {
+    Read,
+    Write,
+    Rmw,
+    Fence,
+    MutexOp,
+    Spawn,
+    Join,
+    /// Thread start / explicit yield: a pure no-op transition,
+    /// independent of everything.
+    Yield,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct Op {
+    loc: usize,
+    kind: OpKind,
+}
+
+/// Sound over-approximation of dependence between two transitions.
+/// Keeping a thread asleep requires its pending op to be independent
+/// of everything executed, so unknown/global kinds conflict with all.
+fn conflicts(a: &Op, b: &Op) -> bool {
+    use OpKind::*;
+    match (a.kind, b.kind) {
+        (Yield, _) | (_, Yield) => false,
+        (Fence, _) | (_, Fence) => true,
+        (Spawn, _) | (_, Spawn) => true,
+        (Join, _) | (_, Join) => true,
+        (MutexOp, MutexOp) => a.loc == b.loc,
+        (MutexOp, _) | (_, MutexOp) => false,
+        _ => {
+            a.loc == b.loc
+                && (matches!(a.kind, Write | Rmw) || matches!(b.kind, Write | Rmw))
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BranchKind {
+    /// Choice of which enabled thread runs; options are thread ids.
+    Thread,
+    /// Choice of which visible store a load reads; option `j` is the
+    /// `j`-newest readable store.
+    Load,
+}
+
+#[derive(Clone, Debug)]
+struct Branch {
+    kind: BranchKind,
+    options: Vec<usize>,
+    /// Index into `options` taken by the current execution.
+    taken: usize,
+    /// For `Thread` branches: the op each previously-explored option
+    /// performed when chosen (feeds the sleep set in siblings).
+    ops: Vec<Option<Op>>,
+}
+
+#[derive(Default)]
+struct Path {
+    branches: Vec<Branch>,
+    /// Cursor of the next branch to traverse in this execution.
+    pos: usize,
+}
+
+/// Depth-first advance: bump the deepest branch with an untried
+/// option, dropping everything below it. False when fully explored.
+fn advance(path: &mut Path) -> bool {
+    while let Some(b) = path.branches.last_mut() {
+        if b.taken + 1 < b.options.len() {
+            b.taken += 1;
+            return true;
+        }
+        path.branches.pop();
+    }
+    false
+}
+
+fn format_schedule(path: &Path) -> String {
+    let parts: Vec<String> = path.branches.iter().map(|b| b.taken.to_string()).collect();
+    if parts.is_empty() {
+        "-".to_string()
+    } else {
+        parts.join(".")
+    }
+}
+
+fn parse_schedule(s: &str) -> Vec<usize> {
+    s.split('.').filter_map(|p| p.trim().parse().ok()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Execution state.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct StoreElem {
+    val: u64,
+    by: usize,
+    /// The writer's event counter at the store (visibility floor key).
+    stamp: u64,
+    /// Clock a reader synchronizes with when it acquires this store.
+    msg: VClock,
+}
+
+struct LocState {
+    stores: Vec<StoreElem>,
+    /// Per-thread coherence floor: lowest store index each thread may
+    /// still read (monotone under read-read / read-own-write).
+    read_floor: [usize; MAX_THREADS],
+}
+
+#[derive(Default)]
+struct MutexSt {
+    locked_by: Option<usize>,
+    /// Clock released by the last unlock; joined on the next lock.
+    clock: VClock,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BlockOn {
+    Mutex(usize),
+    Join(usize),
+}
+
+#[derive(Default)]
+struct ThreadRec {
+    clock: VClock,
+    /// Clock at the last release fence (message of later relaxed stores).
+    fence_rel: VClock,
+    /// Messages of relaxed loads, merged into `clock` by acquire fences.
+    acq_pending: VClock,
+    /// Some ⇒ parked at a schedule point and pickable.
+    next_op: Option<Op>,
+    blocked_on: Option<BlockOn>,
+    finished: bool,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Abort {
+    /// Assertion/panic/step-limit/deadlock: reported to the caller.
+    Failure,
+    Deadlock,
+    /// Benign: subtree proven redundant by the sleep set.
+    SleepBlocked,
+}
+
+struct ExecState {
+    cfg: Config,
+    path: Path,
+    /// `MODEL_SCHEDULE` replay decisions (single-execution mode).
+    replay: Option<Vec<usize>>,
+    active: usize,
+    threads: Vec<ThreadRec>,
+    locs: HashMap<usize, LocState>,
+    mutexes: HashMap<usize, MutexSt>,
+    sc_clock: VClock,
+    /// Sleeping (thread, its pending op) pairs; cleared on conflict.
+    sleep: Vec<(usize, Op)>,
+    steps: u64,
+    abort: Option<Abort>,
+    failure: Option<String>,
+    finished_count: usize,
+    /// Thread branch awaiting the chosen thread's op (for `ops`).
+    record_for: Option<usize>,
+}
+
+struct Execution {
+    st: StdMutex<ExecState>,
+    cv: Condvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(Arc<Execution>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+impl ExecState {
+    fn fail(&mut self, kind: Abort, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        if self.abort.is_none() {
+            self.abort = Some(kind);
+        }
+    }
+
+    /// Execute the visible-op bookkeeping common to every effect:
+    /// event-clock bump, branch op recording, sleep-set wakeups.
+    fn exec_op(&mut self, tid: usize, op: Op) {
+        self.threads[tid].clock.bump(tid);
+        if let Some(bi) = self.record_for.take() {
+            let b = &mut self.path.branches[bi];
+            let k = b.taken;
+            if b.ops.len() <= k {
+                b.ops.resize(k + 1, None);
+            }
+            b.ops[k] = Some(op);
+        }
+        self.sleep.retain(|(_, o)| !conflicts(o, &op));
+    }
+
+    /// Hand the token to the next thread. Called with the caller
+    /// either parked (next_op set), blocked, or finished.
+    fn pick_next(&mut self) {
+        if self.abort.is_some() {
+            return;
+        }
+        let cands: Vec<usize> = (0..self.threads.len())
+            .filter(|&t| {
+                let th = &self.threads[t];
+                !th.finished && th.blocked_on.is_none() && th.next_op.is_some()
+            })
+            .collect();
+        if cands.is_empty() {
+            if self.finished_count < self.threads.len() {
+                let blocked: Vec<usize> = (0..self.threads.len())
+                    .filter(|&t| self.threads[t].blocked_on.is_some())
+                    .collect();
+                let sched = format_schedule(&self.path);
+                self.fail(
+                    Abort::Deadlock,
+                    format!("deadlock: threads {blocked:?} blocked, none runnable (schedule {sched})"),
+                );
+            }
+            return;
+        }
+        let free: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|t| !self.sleep.iter().any(|(s, _)| s == t))
+            .collect();
+        if free.is_empty() {
+            self.abort = Some(Abort::SleepBlocked);
+            return;
+        }
+        let chosen = if free.len() == 1 { free[0] } else { self.branch_thread(free) };
+        self.active = chosen;
+    }
+
+    fn replay_at(&self, pos: usize) -> Option<usize> {
+        self.replay.as_ref().and_then(|r| r.get(pos).copied())
+    }
+
+    fn branch_thread(&mut self, options: Vec<usize>) -> usize {
+        let pos = self.path.pos;
+        if pos < self.path.branches.len() {
+            debug_assert_eq!(self.path.branches[pos].kind, BranchKind::Thread);
+            debug_assert_eq!(self.path.branches[pos].options, options);
+            let b = &mut self.path.branches[pos];
+            b.taken = b.taken.min(b.options.len() - 1);
+            let taken = b.taken;
+            let chosen = b.options[taken];
+            // Previously-explored siblings sleep until something
+            // conflicting with their recorded op executes.
+            for j in 0..taken {
+                let opt = self.path.branches[pos].options[j];
+                if let Some(op) = self.path.branches[pos].ops.get(j).copied().flatten() {
+                    self.sleep.push((opt, op));
+                }
+            }
+            self.path.pos += 1;
+            self.record_for = Some(pos);
+            chosen
+        } else {
+            let taken = self.replay_at(pos).unwrap_or(0).min(options.len() - 1);
+            let chosen = options[taken];
+            self.path.branches.push(Branch {
+                kind: BranchKind::Thread,
+                options,
+                taken,
+                ops: Vec::new(),
+            });
+            self.path.pos += 1;
+            self.record_for = Some(pos);
+            chosen
+        }
+    }
+
+    /// Pick among `n` readable stores; returns 0..n where 0 = newest.
+    fn branch_load(&mut self, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        let pos = self.path.pos;
+        if pos < self.path.branches.len() {
+            debug_assert_eq!(self.path.branches[pos].kind, BranchKind::Load);
+            let b = &mut self.path.branches[pos];
+            b.taken = b.taken.min(n - 1);
+            self.path.pos += 1;
+            b.taken
+        } else {
+            let taken = self.replay_at(pos).unwrap_or(0).min(n - 1);
+            self.path.branches.push(Branch {
+                kind: BranchKind::Load,
+                options: (0..n).collect(),
+                taken,
+                ops: Vec::new(),
+            });
+            self.path.pos += 1;
+            taken
+        }
+    }
+
+    fn register(&mut self, addr: usize, seed: u64) {
+        self.locs.entry(addr).or_insert_with(|| LocState {
+            stores: vec![StoreElem { val: seed, by: 0, stamp: 0, msg: VClock::default() }],
+            read_floor: [0; MAX_THREADS],
+        });
+    }
+
+    fn do_load(&mut self, tid: usize, addr: usize, seed: u64, order: Ordering) -> u64 {
+        self.register(addr, seed);
+        if order == Ordering::SeqCst {
+            let sc = self.sc_clock;
+            self.threads[tid].clock.join(&sc);
+        }
+        let clock = self.threads[tid].clock;
+        let (floor, latest) = {
+            let loc = &self.locs[&addr];
+            let mut floor = loc.read_floor[tid];
+            for (i, s) in loc.stores.iter().enumerate() {
+                if i > floor && s.stamp <= clock.0[s.by] {
+                    floor = i;
+                }
+            }
+            (floor, loc.stores.len() - 1)
+        };
+        let pick = self.branch_load(latest - floor + 1);
+        let idx = latest - pick;
+        let loc = self.locs.get_mut(&addr).unwrap();
+        loc.read_floor[tid] = idx;
+        let val = loc.stores[idx].val;
+        let msg = loc.stores[idx].msg;
+        match order {
+            Ordering::SeqCst | Ordering::Acquire | Ordering::AcqRel => {
+                self.threads[tid].clock.join(&msg)
+            }
+            _ => self.threads[tid].acq_pending.join(&msg),
+        }
+        if order == Ordering::SeqCst {
+            let c = self.threads[tid].clock;
+            self.sc_clock.join(&c);
+        }
+        val
+    }
+
+    fn do_store(&mut self, tid: usize, addr: usize, seed: u64, val: u64, order: Ordering) {
+        self.register(addr, seed);
+        if order == Ordering::SeqCst {
+            let sc = self.sc_clock;
+            self.threads[tid].clock.join(&sc);
+        }
+        let th = &self.threads[tid];
+        let msg = match order {
+            Ordering::Release | Ordering::AcqRel | Ordering::SeqCst => th.clock,
+            _ => th.fence_rel,
+        };
+        let stamp = th.clock.0[tid];
+        let loc = self.locs.get_mut(&addr).unwrap();
+        loc.stores.push(StoreElem { val, by: tid, stamp, msg });
+        loc.read_floor[tid] = loc.stores.len() - 1;
+        if order == Ordering::SeqCst {
+            let c = self.threads[tid].clock;
+            self.sc_clock.join(&c);
+        }
+    }
+
+    /// RMWs read the newest store (atomicity) and continue its release
+    /// sequence: the new message includes the replaced store's.
+    fn do_rmw(&mut self, tid: usize, addr: usize, seed: u64, order: Ordering, f: &dyn Fn(u64) -> u64) -> u64 {
+        self.register(addr, seed);
+        if order == Ordering::SeqCst {
+            let sc = self.sc_clock;
+            self.threads[tid].clock.join(&sc);
+        }
+        let (old, prev_msg) = {
+            let loc = &self.locs[&addr];
+            let s = loc.stores[loc.stores.len() - 1];
+            (s.val, s.msg)
+        };
+        match order {
+            Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst => {
+                self.threads[tid].clock.join(&prev_msg)
+            }
+            _ => self.threads[tid].acq_pending.join(&prev_msg),
+        }
+        let th = &self.threads[tid];
+        let mut msg = prev_msg;
+        match order {
+            Ordering::Release | Ordering::AcqRel | Ordering::SeqCst => msg.join(&th.clock),
+            _ => msg.join(&th.fence_rel),
+        }
+        let stamp = th.clock.0[tid];
+        let newv = f(old);
+        let loc = self.locs.get_mut(&addr).unwrap();
+        loc.stores.push(StoreElem { val: newv, by: tid, stamp, msg });
+        loc.read_floor[tid] = loc.stores.len() - 1;
+        if order == Ordering::SeqCst {
+            let c = self.threads[tid].clock;
+            self.sc_clock.join(&c);
+        }
+        old
+    }
+
+    /// Failed CAS = a load of the newest store with the failure
+    /// ordering (modification-order atomicity: no stale compares).
+    #[allow(clippy::too_many_arguments)]
+    fn do_cas(
+        &mut self,
+        tid: usize,
+        addr: usize,
+        seed: u64,
+        cur: u64,
+        new: u64,
+        ok: Ordering,
+        err: Ordering,
+    ) -> Result<u64, u64> {
+        self.register(addr, seed);
+        let latest_val = {
+            let loc = &self.locs[&addr];
+            loc.stores[loc.stores.len() - 1].val
+        };
+        if latest_val == cur {
+            return Ok(self.do_rmw(tid, addr, seed, ok, &|_| new));
+        }
+        if err == Ordering::SeqCst {
+            let sc = self.sc_clock;
+            self.threads[tid].clock.join(&sc);
+        }
+        let loc = self.locs.get_mut(&addr).unwrap();
+        let idx = loc.stores.len() - 1;
+        loc.read_floor[tid] = idx;
+        let msg = loc.stores[idx].msg;
+        match err {
+            Ordering::SeqCst | Ordering::Acquire => self.threads[tid].clock.join(&msg),
+            _ => self.threads[tid].acq_pending.join(&msg),
+        }
+        if err == Ordering::SeqCst {
+            let c = self.threads[tid].clock;
+            self.sc_clock.join(&c);
+        }
+        Err(latest_val)
+    }
+
+    fn do_fence(&mut self, tid: usize, order: Ordering) {
+        if matches!(order, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst) {
+            let p = self.threads[tid].acq_pending;
+            self.threads[tid].clock.join(&p);
+        }
+        if order == Ordering::SeqCst {
+            let sc = self.sc_clock;
+            self.threads[tid].clock.join(&sc);
+        }
+        if matches!(order, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst) {
+            let c = self.threads[tid].clock;
+            self.threads[tid].fence_rel = c;
+        }
+        if order == Ordering::SeqCst {
+            let c = self.threads[tid].clock;
+            self.sc_clock.join(&c);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scheduling protocol.
+// ---------------------------------------------------------------------------
+
+impl Execution {
+    fn new(cfg: Config, mut path: Path, replay: Option<Vec<usize>>) -> Execution {
+        path.pos = 0;
+        Execution {
+            st: StdMutex::new(ExecState {
+                cfg,
+                path,
+                replay,
+                active: usize::MAX,
+                threads: vec![ThreadRec::default()],
+                locs: HashMap::new(),
+                mutexes: HashMap::new(),
+                sc_clock: VClock::default(),
+                sleep: Vec::new(),
+                steps: 0,
+                abort: None,
+                failure: None,
+                finished_count: 0,
+                record_for: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Announce `op`, let the scheduler pick, block until picked.
+    /// False ⇒ the execution is aborting and the caller should fall
+    /// back to the real (free-run) operation.
+    fn schedule(&self, tid: usize, op: Op) -> bool {
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return false;
+        }
+        st.steps += 1;
+        if st.steps > st.cfg.max_steps {
+            let n = st.cfg.max_steps;
+            st.fail(Abort::Failure, format!("exceeded max_steps={n} (livelock under this schedule?)"));
+            self.cv.notify_all();
+            return false;
+        }
+        st.threads[tid].next_op = Some(op);
+        st.pick_next();
+        self.cv.notify_all();
+        loop {
+            if st.abort.is_some() {
+                return false;
+            }
+            if st.active == tid {
+                break;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        st.threads[tid].next_op = None;
+        true
+    }
+
+    fn load(&self, tid: usize, addr: usize, seed: u64, order: Ordering) -> Option<u64> {
+        let op = Op { loc: addr, kind: OpKind::Read };
+        if !self.schedule(tid, op) {
+            return None;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return None;
+        }
+        st.exec_op(tid, op);
+        Some(st.do_load(tid, addr, seed, order))
+    }
+
+    fn store(&self, tid: usize, addr: usize, seed: u64, val: u64, order: Ordering) -> bool {
+        let op = Op { loc: addr, kind: OpKind::Write };
+        if !self.schedule(tid, op) {
+            return false;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return false;
+        }
+        st.exec_op(tid, op);
+        st.do_store(tid, addr, seed, val, order);
+        true
+    }
+
+    fn rmw(&self, tid: usize, addr: usize, seed: u64, order: Ordering, f: &dyn Fn(u64) -> u64) -> Option<u64> {
+        let op = Op { loc: addr, kind: OpKind::Rmw };
+        if !self.schedule(tid, op) {
+            return None;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return None;
+        }
+        st.exec_op(tid, op);
+        Some(st.do_rmw(tid, addr, seed, order, f))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn cas(
+        &self,
+        tid: usize,
+        addr: usize,
+        seed: u64,
+        cur: u64,
+        new: u64,
+        ok: Ordering,
+        err: Ordering,
+    ) -> Option<Result<u64, u64>> {
+        let op = Op { loc: addr, kind: OpKind::Rmw };
+        if !self.schedule(tid, op) {
+            return None;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return None;
+        }
+        st.exec_op(tid, op);
+        Some(st.do_cas(tid, addr, seed, cur, new, ok, err))
+    }
+
+    fn fence_op(&self, tid: usize, order: Ordering) -> bool {
+        let op = Op { loc: 0, kind: OpKind::Fence };
+        if !self.schedule(tid, op) {
+            return false;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return false;
+        }
+        st.exec_op(tid, op);
+        st.do_fence(tid, order);
+        true
+    }
+
+    /// Model-level mutex acquisition. False ⇒ aborting; the caller
+    /// falls back to the real inner lock.
+    fn mutex_lock(&self, tid: usize, addr: usize) -> bool {
+        let op = Op { loc: addr, kind: OpKind::MutexOp };
+        if !self.schedule(tid, op) {
+            if self.is_deadlock() {
+                panic!("model: deadlock (mutex)");
+            }
+            return false;
+        }
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.abort.is_some() {
+                if st.abort == Some(Abort::Deadlock) {
+                    drop(st);
+                    panic!("model: deadlock (mutex)");
+                }
+                return false;
+            }
+            st.exec_op(tid, op);
+            let locked = {
+                let m = st.mutexes.entry(addr).or_default();
+                m.locked_by
+            };
+            if locked.is_none() {
+                let mclock = {
+                    let m = st.mutexes.get_mut(&addr).unwrap();
+                    m.locked_by = Some(tid);
+                    m.clock
+                };
+                st.threads[tid].clock.join(&mclock);
+                return true;
+            }
+            st.threads[tid].blocked_on = Some(BlockOn::Mutex(addr));
+            st.pick_next();
+            self.cv.notify_all();
+            loop {
+                if st.abort.is_some() {
+                    break;
+                }
+                if st.active == tid && st.threads[tid].next_op.is_some() {
+                    st.threads[tid].next_op = None;
+                    break;
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    fn mutex_unlock(&self, tid: usize, addr: usize) {
+        let op = Op { loc: addr, kind: OpKind::MutexOp };
+        if !self.schedule(tid, op) {
+            return;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_some() {
+            return;
+        }
+        st.exec_op(tid, op);
+        let c = st.threads[tid].clock;
+        {
+            let m = st.mutexes.entry(addr).or_default();
+            m.locked_by = None;
+            m.clock.join(&c);
+        }
+        for i in 0..st.threads.len() {
+            if st.threads[i].blocked_on == Some(BlockOn::Mutex(addr)) {
+                st.threads[i].blocked_on = None;
+                st.threads[i].next_op = Some(op);
+            }
+        }
+    }
+
+    fn is_deadlock(&self) -> bool {
+        self.st.lock().unwrap().abort == Some(Abort::Deadlock)
+    }
+
+    /// Register a child thread; the spawn itself is a visible op.
+    fn spawn_thread(&self, parent: usize) -> usize {
+        let op = Op { loc: 0, kind: OpKind::Spawn };
+        let proceed = self.schedule(parent, op);
+        let mut st = self.st.lock().unwrap();
+        if proceed && st.abort.is_none() {
+            st.exec_op(parent, op);
+        }
+        let tid = st.threads.len();
+        assert!(tid < MAX_THREADS, "model: more than {MAX_THREADS} threads");
+        let rec = ThreadRec { clock: st.threads[parent].clock, ..ThreadRec::default() };
+        st.threads.push(rec);
+        tid
+    }
+
+    /// Park a freshly spawned thread until first picked. The start
+    /// transition is a no-op, independent of everything.
+    fn thread_started(&self, tid: usize) {
+        let op = Op { loc: 0, kind: OpKind::Yield };
+        if self.schedule(tid, op) {
+            let mut st = self.st.lock().unwrap();
+            if st.abort.is_none() {
+                st.exec_op(tid, op);
+            }
+        }
+    }
+
+    fn yield_op(&self, tid: usize) -> bool {
+        let op = Op { loc: 0, kind: OpKind::Yield };
+        if !self.schedule(tid, op) {
+            return false;
+        }
+        let mut st = self.st.lock().unwrap();
+        if st.abort.is_none() {
+            st.exec_op(tid, op);
+        }
+        true
+    }
+
+    /// Block until `target` finishes (join is a visible op).
+    fn join_wait(&self, tid: usize, target: usize) {
+        let op = Op { loc: target, kind: OpKind::Join };
+        if !self.schedule(tid, op) {
+            return;
+        }
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.abort.is_some() {
+                if st.abort == Some(Abort::Deadlock) {
+                    drop(st);
+                    panic!("model: deadlock (join)");
+                }
+                return;
+            }
+            st.exec_op(tid, op);
+            if st.threads[target].finished {
+                let c = st.threads[target].clock;
+                st.threads[tid].clock.join(&c);
+                return;
+            }
+            st.threads[tid].blocked_on = Some(BlockOn::Join(target));
+            st.pick_next();
+            self.cv.notify_all();
+            loop {
+                if st.abort.is_some() {
+                    break;
+                }
+                if st.active == tid && st.threads[tid].next_op.is_some() {
+                    st.threads[tid].next_op = None;
+                    break;
+                }
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    fn record_panic(&self, tid: usize, msg: String) {
+        let mut st = self.st.lock().unwrap();
+        if st.abort != Some(Abort::SleepBlocked) {
+            let sched = format_schedule(&st.path);
+            st.fail(Abort::Failure, format!("thread {tid} panicked: {msg} (schedule {sched})"));
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark finished, wake joiners, and pass the token on.
+    fn thread_finished(&self, tid: usize) {
+        let mut st = self.st.lock().unwrap();
+        st.threads[tid].finished = true;
+        st.threads[tid].next_op = None;
+        st.finished_count += 1;
+        let op = Op { loc: tid, kind: OpKind::Join };
+        for i in 0..st.threads.len() {
+            if st.threads[i].blocked_on == Some(BlockOn::Join(tid)) {
+                st.threads[i].blocked_on = None;
+                st.threads[i].next_op = Some(op);
+            }
+        }
+        if st.finished_count < st.threads.len() {
+            st.pick_next();
+        }
+        self.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shim hooks (used by model::sync; None/false ⇒ use the real op).
+// ---------------------------------------------------------------------------
+
+pub(crate) fn atomic_load(addr: usize, seed: u64, order: Ordering) -> Option<u64> {
+    current().and_then(|(ex, tid)| ex.load(tid, addr, seed, order))
+}
+
+pub(crate) fn atomic_store(addr: usize, seed: u64, val: u64, order: Ordering) -> bool {
+    match current() {
+        Some((ex, tid)) => ex.store(tid, addr, seed, val, order),
+        None => false,
+    }
+}
+
+pub(crate) fn atomic_rmw(addr: usize, seed: u64, order: Ordering, f: impl Fn(u64) -> u64) -> Option<u64> {
+    current().and_then(|(ex, tid)| ex.rmw(tid, addr, seed, order, &f))
+}
+
+pub(crate) fn atomic_cas(
+    addr: usize,
+    seed: u64,
+    cur: u64,
+    new: u64,
+    ok: Ordering,
+    err: Ordering,
+) -> Option<Result<u64, u64>> {
+    current().and_then(|(ex, tid)| ex.cas(tid, addr, seed, cur, new, ok, err))
+}
+
+pub(crate) fn fence(order: Ordering) -> bool {
+    match current() {
+        Some((ex, tid)) => ex.fence_op(tid, order),
+        None => false,
+    }
+}
+
+/// Drop hook: a freed atomic's address must not leak its history to a
+/// later atomic allocated at the same address.
+pub(crate) fn forget_location(addr: usize) {
+    if let Some((ex, _)) = current() {
+        let mut st = ex.st.lock().unwrap();
+        st.locs.remove(&addr);
+        st.mutexes.remove(&addr);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mutex shim (model build).
+// ---------------------------------------------------------------------------
+
+/// Scheduler-aware mutex: admission is decided at the model level (so
+/// a thread can yield *inside* a critical section without deadlocking
+/// the token), then the uncontended inner lock carries the data.
+pub struct Mutex<T> {
+    inner: StdMutex<T>,
+}
+
+pub struct MutexGuard<'a, T> {
+    route: Option<(Arc<Execution>, usize, usize)>,
+    inner: StdMutexGuard<'a, T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+        let addr = self as *const Mutex<T> as usize;
+        let route = current().and_then(|(ex, tid)| {
+            if ex.mutex_lock(tid, addr) {
+                Some((ex, tid, addr))
+            } else {
+                None
+            }
+        });
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { route, inner: g }),
+            Err(_) => panic!("model mutex poisoned"),
+        }
+    }
+
+    pub fn get_mut(&mut self) -> std::sync::LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T> Drop for Mutex<T> {
+    fn drop(&mut self) {
+        forget_location(self as *const Mutex<T> as usize);
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((ex, tid, addr)) = self.route.take() {
+            ex.mutex_unlock(tid, addr);
+        }
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threads.
+// ---------------------------------------------------------------------------
+
+pub struct JoinHandle<T>(Handle<T>);
+
+enum Handle<T> {
+    Real(std::thread::JoinHandle<T>),
+    Model {
+        ex: Arc<Execution>,
+        tid: usize,
+        real: Option<std::thread::JoinHandle<()>>,
+        res: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+    },
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Handle::Real(h) => h.join(),
+            Handle::Model { ex, tid, mut real, res } => {
+                if let Some((_, me)) = current() {
+                    ex.join_wait(me, tid);
+                }
+                let h = real.take().expect("model thread joined twice");
+                let joined = h.join();
+                let out = res.lock().unwrap().take();
+                match out {
+                    Some(r) => r,
+                    None => Err(joined.err().unwrap_or_else(|| Box::new("model thread lost"))),
+                }
+            }
+        }
+    }
+}
+
+fn panic_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match current() {
+        None => JoinHandle(Handle::Real(std::thread::spawn(f))),
+        Some((ex, parent)) => {
+            let tid = ex.spawn_thread(parent);
+            let ex2 = Arc::clone(&ex);
+            let res: Arc<StdMutex<Option<std::thread::Result<T>>>> = Arc::new(StdMutex::new(None));
+            let res2 = Arc::clone(&res);
+            let real = std::thread::spawn(move || {
+                CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&ex2), tid)));
+                ex2.thread_started(tid);
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                if let Err(e) = &r {
+                    ex2.record_panic(tid, panic_msg(&**e));
+                }
+                *res2.lock().unwrap() = Some(r);
+                ex2.thread_finished(tid);
+                CURRENT.with(|c| *c.borrow_mut() = None);
+            });
+            JoinHandle(Handle::Model { ex, tid, real: Some(real), res })
+        }
+    }
+}
+
+pub fn yield_now() {
+    match current() {
+        None => std::thread::yield_now(),
+        Some((ex, tid)) => {
+            if !ex.yield_op(tid) {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The exploration driver.
+// ---------------------------------------------------------------------------
+
+fn run_one(ex: &Arc<Execution>, f: Arc<dyn Fn() + Send + Sync>) {
+    let ex2 = Arc::clone(ex);
+    let root = std::thread::spawn(move || {
+        CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&ex2), 0)));
+        ex2.thread_started(0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f()));
+        if let Err(e) = &r {
+            ex2.record_panic(0, panic_msg(&**e));
+        }
+        ex2.thread_finished(0);
+        CURRENT.with(|c| *c.borrow_mut() = None);
+    });
+    {
+        let mut st = ex.st.lock().unwrap();
+        while st.finished_count < st.threads.len() {
+            st = ex.cv.wait(st).unwrap();
+        }
+    }
+    let _ = root.join();
+}
+
+/// Explore every schedule of `f` (bounded by `cfg`); panics on the
+/// first failing one with its replay string. Returns the number of
+/// schedules executed.
+pub fn check_with<F>(cfg: Config, f: F) -> u64
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let replay = std::env::var("MODEL_SCHEDULE").ok().map(|s| parse_schedule(&s));
+    let mut path = Path::default();
+    let mut schedules: u64 = 0;
+    loop {
+        let ex = Arc::new(Execution::new(cfg.clone(), path, replay.clone()));
+        run_one(&ex, Arc::clone(&f));
+        schedules += 1;
+        let mut st = ex.st.lock().unwrap();
+        if matches!(st.abort, Some(Abort::Failure) | Some(Abort::Deadlock)) {
+            let msg = st.failure.take().unwrap_or_else(|| "failure".to_string());
+            let sched = format_schedule(&st.path);
+            panic!(
+                "model '{}' failed after {} schedule(s): {}\n  replay: MODEL_SCHEDULE={}",
+                cfg.name, schedules, msg, sched
+            );
+        }
+        path = std::mem::take(&mut st.path);
+        drop(st);
+        if replay.is_some() {
+            break;
+        }
+        if schedules >= cfg.max_schedules {
+            eprintln!(
+                "model '{}': exploration truncated at {} schedules (max_schedules)",
+                cfg.name, schedules
+            );
+            break;
+        }
+        path.pos = 0;
+        if !advance(&mut path) {
+            break;
+        }
+    }
+    schedules
+}
+
+/// [`check_with`] under the default bounds.
+pub fn check<F>(f: F) -> u64
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    check_with(Config::default(), f)
+}

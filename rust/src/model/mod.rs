@@ -1,0 +1,63 @@
+//! `model` — a vendored, loom-style deterministic concurrency model
+//! checker for the lock-free substrate (ISSUE 6; in the spirit of the
+//! repo's minimal vendored `anyhow`).
+//!
+//! The crate's concurrent modules import their atomics from
+//! [`sync`] instead of `std::sync::atomic` (enforced by
+//! `clippy.toml`'s `disallowed-types`). In a normal build the types
+//! are `#[repr(transparent)]` zero-cost wrappers over the `std`
+//! atomics — every method is an `#[inline]` one-liner, so release
+//! codegen is identical (acceptance: benches within noise). Under
+//! `--features model` the same names route every load/store/RMW
+//! through a cooperative scheduler that
+//!
+//! 1. **enumerates thread interleavings**: real OS threads run under a
+//!    token-passing scheduler that context-switches only at visible
+//!    operations (atomic ops, mutex ops, spawn/join/yield) and
+//!    explores the schedule tree depth-first with sleep-set (DPOR
+//!    family) pruning, up to configurable depth/schedule bounds;
+//! 2. **simulates release/acquire visibility**: each atomic location
+//!    keeps its full store history with vector-clock message stamps,
+//!    and a load may read *any* store not yet ordered before the
+//!    reader by happens-before — so an `Ordering` that is too weak
+//!    actually produces stale values instead of merely "passing on the
+//!    interleaving Miri happened to pick";
+//! 3. **replays deterministically**: a failing schedule is printed as
+//!    a dotted decision string; re-running the test with
+//!    `MODEL_SCHEDULE=<string>` replays exactly that execution.
+//!
+//! Entry point: [`check`] (or [`check_with`] for custom bounds) runs a
+//! closure to completion under every explored schedule:
+//!
+//! ```ignore
+//! model::check(|| {
+//!     let flag = Arc::new(AtomicBool::new(false));
+//!     // ... spawn model::thread threads, assert invariants ...
+//! });
+//! ```
+//!
+//! The four protocol suites live next to the code they check:
+//! `exec::model_tests` (Chase–Lev steal-vs-pop, injector drain claim +
+//! promotion arm/reset, telemetry window-epoch roll) and
+//! `stream::model_tests` (compaction claim vs snapshot pin), each
+//! `#[cfg(all(test, feature = "model"))]`. The mutation gate there
+//! weakens one `Release` to `Relaxed` in a test-only protocol copy and
+//! asserts this checker reports the resulting stale read.
+
+pub mod sync;
+pub mod thread;
+
+#[cfg(feature = "model")]
+mod checker;
+
+#[cfg(feature = "model")]
+pub use checker::{check, check_with, Config};
+
+/// Normal-build stand-in so `model::check` exists in both cfgs: runs
+/// the closure once on the current thread and reports one "schedule".
+/// The real exploration requires `--features model`.
+#[cfg(not(feature = "model"))]
+pub fn check<F: Fn() + Send + Sync + 'static>(f: F) -> u64 {
+    f();
+    1
+}

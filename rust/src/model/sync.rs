@@ -1,0 +1,564 @@
+//! Drop-in atomics (+ `Mutex`) for the crate's concurrent modules.
+//!
+//! Normal builds: `#[repr(transparent)]` newtype wrappers over
+//! `std::sync::atomic` with `#[inline]` forwarding — zero cost, same
+//! codegen. (Wrappers rather than re-exports so clippy's
+//! `disallowed-types` ban on the raw `std` atomics cannot be satisfied
+//! by accident: the only def-ids allowed in `exec/` and `stream/` are
+//! these.)
+//!
+//! `--features model` builds: the same names route through the
+//! cooperative scheduler in [`crate::model::checker`] whenever a model
+//! execution is active on the current thread, and fall back to the
+//! real inner atomic otherwise (so ordinary tests still pass in a
+//! `--features model` test run). Every model-routed store is also
+//! written through to the inner `std` atomic — threads are serialized
+//! under the scheduler, so the inner value always equals the newest
+//! store in the model history, which lets teardown free-run on the
+//! real atomics after a failure is recorded.
+//!
+//! `Mutex` is re-exported from `std` in normal builds and
+//! scheduler-aware under `model` — required because `RunStore::seal`
+//! performs atomic RMWs *inside* its list-lock critical section, which
+//! would deadlock a cooperative scheduler running over a real blocking
+//! lock.
+
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
+pub use std::sync::atomic::Ordering;
+
+// ---------------------------------------------------------------------------
+// Normal build: transparent zero-cost wrappers.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "model"))]
+mod imp {
+    use super::Ordering;
+
+    pub use std::sync::{Mutex, MutexGuard};
+
+    /// Identical to [`std::sync::atomic::fence`].
+    #[inline(always)]
+    pub fn fence(order: Ordering) {
+        std::sync::atomic::fence(order);
+    }
+
+    macro_rules! int_atomic {
+        ($name:ident, $std:ident, $prim:ty) => {
+            #[repr(transparent)]
+            #[derive(Default)]
+            pub struct $name(std::sync::atomic::$std);
+
+            impl $name {
+                #[inline(always)]
+                pub const fn new(v: $prim) -> Self {
+                    Self(std::sync::atomic::$std::new(v))
+                }
+                #[inline(always)]
+                pub fn load(&self, order: Ordering) -> $prim {
+                    self.0.load(order)
+                }
+                #[inline(always)]
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    self.0.store(v, order)
+                }
+                #[inline(always)]
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    self.0.swap(v, order)
+                }
+                #[inline(always)]
+                pub fn compare_exchange(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    self.0.compare_exchange(cur, new, ok, err)
+                }
+                #[inline(always)]
+                pub fn compare_exchange_weak(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    self.0.compare_exchange_weak(cur, new, ok, err)
+                }
+                #[inline(always)]
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    self.0.fetch_add(v, order)
+                }
+                #[inline(always)]
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    self.0.fetch_sub(v, order)
+                }
+                #[inline(always)]
+                pub fn fetch_max(&self, v: $prim, order: Ordering) -> $prim {
+                    self.0.fetch_max(v, order)
+                }
+                #[inline(always)]
+                pub fn fetch_min(&self, v: $prim, order: Ordering) -> $prim {
+                    self.0.fetch_min(v, order)
+                }
+                #[inline(always)]
+                pub fn get_mut(&mut self) -> &mut $prim {
+                    self.0.get_mut()
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.0.fmt(f)
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU64, AtomicU64, u64);
+    int_atomic!(AtomicUsize, AtomicUsize, usize);
+    int_atomic!(AtomicIsize, AtomicIsize, isize);
+
+    #[repr(transparent)]
+    #[derive(Default)]
+    pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+    impl AtomicBool {
+        #[inline(always)]
+        pub const fn new(v: bool) -> Self {
+            Self(std::sync::atomic::AtomicBool::new(v))
+        }
+        #[inline(always)]
+        pub fn load(&self, order: Ordering) -> bool {
+            self.0.load(order)
+        }
+        #[inline(always)]
+        pub fn store(&self, v: bool, order: Ordering) {
+            self.0.store(v, order)
+        }
+        #[inline(always)]
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            self.0.swap(v, order)
+        }
+        #[inline(always)]
+        pub fn compare_exchange(
+            &self,
+            cur: bool,
+            new: bool,
+            ok: Ordering,
+            err: Ordering,
+        ) -> Result<bool, bool> {
+            self.0.compare_exchange(cur, new, ok, err)
+        }
+        #[inline(always)]
+        pub fn get_mut(&mut self) -> &mut bool {
+            self.0.get_mut()
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.0.fmt(f)
+        }
+    }
+
+    #[repr(transparent)]
+    pub struct AtomicPtr<T>(std::sync::atomic::AtomicPtr<T>);
+
+    impl<T> AtomicPtr<T> {
+        #[inline(always)]
+        pub const fn new(p: *mut T) -> Self {
+            Self(std::sync::atomic::AtomicPtr::new(p))
+        }
+        #[inline(always)]
+        pub fn load(&self, order: Ordering) -> *mut T {
+            self.0.load(order)
+        }
+        #[inline(always)]
+        pub fn store(&self, p: *mut T, order: Ordering) {
+            self.0.store(p, order)
+        }
+        #[inline(always)]
+        pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+            self.0.swap(p, order)
+        }
+        #[inline(always)]
+        pub fn compare_exchange(
+            &self,
+            cur: *mut T,
+            new: *mut T,
+            ok: Ordering,
+            err: Ordering,
+        ) -> Result<*mut T, *mut T> {
+            self.0.compare_exchange(cur, new, ok, err)
+        }
+        #[inline(always)]
+        pub fn get_mut(&mut self) -> &mut *mut T {
+            self.0.get_mut()
+        }
+    }
+
+    impl<T> Default for AtomicPtr<T> {
+        fn default() -> Self {
+            Self::new(std::ptr::null_mut())
+        }
+    }
+
+    impl<T> std::fmt::Debug for AtomicPtr<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.0.fmt(f)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model build: scheduler-routed atomics.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "model")]
+mod imp {
+    use super::Ordering;
+    use crate::model::checker;
+
+    /// Under an active model execution this is a visible fence event
+    /// (release fences publish the thread clock to later relaxed
+    /// stores; acquire fences pull in the clocks of earlier relaxed
+    /// loads); otherwise a real fence.
+    pub fn fence(order: Ordering) {
+        if !checker::fence(order) {
+            std::sync::atomic::fence(order);
+        }
+    }
+
+    macro_rules! model_atomic {
+        ($name:ident, $std:ident, $prim:ty, $to:expr, $from:expr) => {
+            pub struct $name(std::sync::atomic::$std);
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    Self(std::sync::atomic::$std::new(v))
+                }
+
+                fn addr(&self) -> usize {
+                    self as *const Self as usize
+                }
+
+                /// Current inner value, used to seed the model store
+                /// history on first touch.
+                fn seed(&self) -> u64 {
+                    ($to)(self.0.load(Ordering::Relaxed))
+                }
+
+                pub fn load(&self, order: Ordering) -> $prim {
+                    match checker::atomic_load(self.addr(), self.seed(), order) {
+                        Some(v) => ($from)(v),
+                        None => self.0.load(order),
+                    }
+                }
+
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    if checker::atomic_store(self.addr(), self.seed(), ($to)(v), order) {
+                        // Write-through: threads are serialized under
+                        // the scheduler, so inner == newest store.
+                        self.0.store(v, Ordering::SeqCst);
+                    } else {
+                        self.0.store(v, order);
+                    }
+                }
+
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    let new = ($to)(v);
+                    match checker::atomic_rmw(self.addr(), self.seed(), order, |_| new) {
+                        Some(old) => {
+                            self.0.store(v, Ordering::SeqCst);
+                            ($from)(old)
+                        }
+                        None => self.0.swap(v, order),
+                    }
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    match checker::atomic_cas(self.addr(), self.seed(), ($to)(cur), ($to)(new), ok, err)
+                    {
+                        Some(Ok(old)) => {
+                            self.0.store(new, Ordering::SeqCst);
+                            Ok(($from)(old))
+                        }
+                        Some(Err(old)) => Err(($from)(old)),
+                        None => self.0.compare_exchange(cur, new, ok, err),
+                    }
+                }
+
+                /// The model explores no spurious failures: `weak` is
+                /// checked as the strong CAS (a sound subset of its
+                /// behaviours — spurious failure only adds retries).
+                pub fn compare_exchange_weak(
+                    &self,
+                    cur: $prim,
+                    new: $prim,
+                    ok: Ordering,
+                    err: Ordering,
+                ) -> Result<$prim, $prim> {
+                    self.compare_exchange(cur, new, ok, err)
+                }
+
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    self.rmw(order, |old| old.wrapping_add(v))
+                }
+
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    self.rmw(order, |old| old.wrapping_sub(v))
+                }
+
+                pub fn fetch_max(&self, v: $prim, order: Ordering) -> $prim {
+                    self.rmw(order, |old| if v > old { v } else { old })
+                }
+
+                pub fn fetch_min(&self, v: $prim, order: Ordering) -> $prim {
+                    self.rmw(order, |old| if v < old { v } else { old })
+                }
+
+                fn rmw(&self, order: Ordering, f: impl Fn($prim) -> $prim) -> $prim {
+                    match checker::atomic_rmw(self.addr(), self.seed(), order, |old| {
+                        ($to)(f(($from)(old)))
+                    }) {
+                        Some(old) => {
+                            let old = ($from)(old);
+                            self.0.store(f(old), Ordering::SeqCst);
+                            old
+                        }
+                        None => {
+                            // No active execution: run the RMW on the
+                            // real atomic via a CAS loop (covers every
+                            // f uniformly).
+                            let mut cur = self.0.load(Ordering::Relaxed);
+                            loop {
+                                match self.0.compare_exchange_weak(cur, f(cur), order, Ordering::Relaxed)
+                                {
+                                    Ok(old) => return old,
+                                    Err(now) => cur = now,
+                                }
+                            }
+                        }
+                    }
+                }
+
+                /// `&mut self` access bypasses the scheduler (exclusive
+                /// access means no concurrency to model). Only sound
+                /// for *reads* during an execution; the migrated code
+                /// uses it solely in `Drop` paths.
+                pub fn get_mut(&mut self) -> &mut $prim {
+                    self.0.get_mut()
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(Default::default())
+                }
+            }
+
+            impl Drop for $name {
+                fn drop(&mut self) {
+                    // Address reuse safety: a later atomic allocated at
+                    // this address must not inherit this history.
+                    checker::forget_location(self as *const Self as usize);
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    self.0.fmt(f)
+                }
+            }
+        };
+    }
+
+    model_atomic!(AtomicU64, AtomicU64, u64, |v: u64| v, |v: u64| v);
+    model_atomic!(AtomicUsize, AtomicUsize, usize, |v: usize| v as u64, |v: u64| v as usize);
+    model_atomic!(
+        AtomicIsize,
+        AtomicIsize,
+        isize,
+        |v: isize| v as i64 as u64,
+        |v: u64| v as i64 as isize
+    );
+
+    pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self(std::sync::atomic::AtomicBool::new(v))
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as usize
+        }
+
+        fn seed(&self) -> u64 {
+            self.0.load(Ordering::Relaxed) as u64
+        }
+
+        pub fn load(&self, order: Ordering) -> bool {
+            match checker::atomic_load(self.addr(), self.seed(), order) {
+                Some(v) => v != 0,
+                None => self.0.load(order),
+            }
+        }
+
+        pub fn store(&self, v: bool, order: Ordering) {
+            if checker::atomic_store(self.addr(), self.seed(), v as u64, order) {
+                self.0.store(v, Ordering::SeqCst);
+            } else {
+                self.0.store(v, order);
+            }
+        }
+
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            match checker::atomic_rmw(self.addr(), self.seed(), order, |_| v as u64) {
+                Some(old) => {
+                    self.0.store(v, Ordering::SeqCst);
+                    old != 0
+                }
+                None => self.0.swap(v, order),
+            }
+        }
+
+        pub fn compare_exchange(
+            &self,
+            cur: bool,
+            new: bool,
+            ok: Ordering,
+            err: Ordering,
+        ) -> Result<bool, bool> {
+            match checker::atomic_cas(self.addr(), self.seed(), cur as u64, new as u64, ok, err) {
+                Some(Ok(old)) => {
+                    self.0.store(new, Ordering::SeqCst);
+                    Ok(old != 0)
+                }
+                Some(Err(old)) => Err(old != 0),
+                None => self.0.compare_exchange(cur, new, ok, err),
+            }
+        }
+
+        pub fn get_mut(&mut self) -> &mut bool {
+            self.0.get_mut()
+        }
+    }
+
+    impl Default for AtomicBool {
+        fn default() -> Self {
+            Self::new(false)
+        }
+    }
+
+    impl Drop for AtomicBool {
+        fn drop(&mut self) {
+            checker::forget_location(self as *const Self as usize);
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.0.fmt(f)
+        }
+    }
+
+    pub struct AtomicPtr<T>(std::sync::atomic::AtomicPtr<T>);
+
+    impl<T> AtomicPtr<T> {
+        pub const fn new(p: *mut T) -> Self {
+            Self(std::sync::atomic::AtomicPtr::new(p))
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as usize
+        }
+
+        fn seed(&self) -> u64 {
+            self.0.load(Ordering::Relaxed) as usize as u64
+        }
+
+        pub fn load(&self, order: Ordering) -> *mut T {
+            match checker::atomic_load(self.addr(), self.seed(), order) {
+                Some(v) => v as usize as *mut T,
+                None => self.0.load(order),
+            }
+        }
+
+        pub fn store(&self, p: *mut T, order: Ordering) {
+            if checker::atomic_store(self.addr(), self.seed(), p as usize as u64, order) {
+                self.0.store(p, Ordering::SeqCst);
+            } else {
+                self.0.store(p, order);
+            }
+        }
+
+        pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+            match checker::atomic_rmw(self.addr(), self.seed(), order, |_| p as usize as u64) {
+                Some(old) => {
+                    self.0.store(p, Ordering::SeqCst);
+                    old as usize as *mut T
+                }
+                None => self.0.swap(p, order),
+            }
+        }
+
+        pub fn compare_exchange(
+            &self,
+            cur: *mut T,
+            new: *mut T,
+            ok: Ordering,
+            err: Ordering,
+        ) -> Result<*mut T, *mut T> {
+            match checker::atomic_cas(
+                self.addr(),
+                self.seed(),
+                cur as usize as u64,
+                new as usize as u64,
+                ok,
+                err,
+            ) {
+                Some(Ok(old)) => {
+                    self.0.store(new, Ordering::SeqCst);
+                    Ok(old as usize as *mut T)
+                }
+                Some(Err(old)) => Err(old as usize as *mut T),
+                None => self.0.compare_exchange(cur, new, ok, err),
+            }
+        }
+
+        pub fn get_mut(&mut self) -> &mut *mut T {
+            self.0.get_mut()
+        }
+    }
+
+    impl<T> Default for AtomicPtr<T> {
+        fn default() -> Self {
+            Self::new(std::ptr::null_mut())
+        }
+    }
+
+    impl<T> Drop for AtomicPtr<T> {
+        fn drop(&mut self) {
+            checker::forget_location(self as *const Self as usize);
+        }
+    }
+
+    impl<T> std::fmt::Debug for AtomicPtr<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            self.0.fmt(f)
+        }
+    }
+
+    pub use checker::{Mutex, MutexGuard};
+}
+
+pub use imp::{fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, AtomicUsize, Mutex, MutexGuard};

@@ -1,0 +1,10 @@
+//! Thread spawn/join for model tests. Normal builds re-export
+//! `std::thread`; model builds route spawn, join, and yield through
+//! the cooperative scheduler so they become visible scheduling events
+//! (and so a spawned closure inherits the active execution).
+
+#[cfg(not(feature = "model"))]
+pub use std::thread::{spawn, yield_now, JoinHandle};
+
+#[cfg(feature = "model")]
+pub use crate::model::checker::{spawn, yield_now, JoinHandle};

@@ -155,7 +155,14 @@ mod tests {
     #[test]
     fn parallel_sequential_and_oracle_agree() {
         let mut rng = Rng::new(41);
-        for &(n, m) in &[(0usize, 5usize), (7, 0), (40, 60), (333, 200)] {
+        // Miri runs the same shapes minus the largest (interpreter
+        // cost), keeping the empty-side and odd-size cases.
+        let shapes: &[(usize, usize)] = if cfg!(miri) {
+            &[(0, 5), (7, 0), (40, 60)]
+        } else {
+            &[(0, 5), (7, 0), (40, 60), (333, 200)]
+        };
+        for &(n, m) in shapes {
             let a = sorted_records(&mut rng, n, 20, 0);
             let b = sorted_records(&mut rng, m, 20, 1000);
             let mut oracle = vec![Record::new(0, 0); n + m];
@@ -183,9 +190,12 @@ mod tests {
 
     #[test]
     fn compact_once_reduces_backlog_and_preserves_records() {
+        // Four full runs; Miri shrinks the run size, not the shape.
+        let cap = if cfg!(miri) { 8 } else { 50 };
+        let n = 4 * cap;
         let store = Arc::new(
             RunStore::new(StreamConfig {
-                run_capacity: 50,
+                run_capacity: cap,
                 fanout: 2,
                 threads: 2,
                 spill: None,
@@ -194,14 +204,14 @@ mod tests {
         );
         let mut ing = Ingestor::new(Arc::clone(&store));
         let mut rng = Rng::new(7);
-        for _ in 0..200 {
+        for _ in 0..n {
             ing.push_key(rng.range(0, 30)).unwrap();
         }
         assert_eq!(store.run_count(), 4);
         let st = compact_once(&store, 2).unwrap().expect("backlog over fanout compacts");
-        assert_eq!(st.merged_records, 100);
+        assert_eq!(st.merged_records, 2 * cap);
         assert_eq!(store.run_count(), 3);
-        assert_eq!(store.record_count(), 200);
+        assert_eq!(store.record_count(), n as u64);
         // Backlog now exceeds fanout by one more; compact again then stop.
         assert!(compact_once(&store, 2).unwrap().is_some());
         assert!(compact_once(&store, 2).unwrap().is_none(), "under fanout: no-op");

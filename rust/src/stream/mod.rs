@@ -46,6 +46,8 @@
 
 pub mod compact;
 pub mod ingest;
+#[cfg(all(test, feature = "model"))]
+mod model_tests;
 pub mod reader;
 pub mod run;
 pub mod store;
@@ -140,6 +142,15 @@ mod tests {
             compact_to_one(&store, 2).unwrap();
             assert!(store.run_count() <= 1);
             assert_eq!(pairs(&scan(&store).unwrap()), expect, "{name}: fully compacted");
+            // The exact-permutation form of the same claim: the fully
+            // compacted scan is THE stable sort of the ingest stream.
+            let ingested: Vec<crate::core::record::Record> = keys
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| crate::core::record::Record::new(k, i as u64))
+                .collect();
+            crate::testing::assert_stable_permutation(&[&ingested], &scan(&store).unwrap())
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
         }
     }
 

@@ -1,0 +1,128 @@
+//! Model-checked protocol tests for the stream store — compiled only
+//! under `--features model` (see [`crate::model`] and the exec-side
+//! suite in `exec::model_tests` for the conventions).
+//!
+//! The store's concurrency surface is small by design: one list lock,
+//! one compaction-claim CAS, and lock-free stat counters. The tests
+//! here check the two protocol-level promises the rest of the stream
+//! layer leans on: the claim admits at most one compactor, and a
+//! snapshot taken at ANY point of a racing compaction pins a
+//! consistent, stable view (all records exactly once, equal keys in
+//! generation order).
+
+use super::store::RunStore;
+use super::StreamConfig;
+use crate::core::record::Record;
+use crate::model::thread;
+use crate::model::{check_with, Config};
+use std::sync::Arc;
+
+fn mem_config() -> StreamConfig {
+    StreamConfig { run_capacity: 16, fanout: 1, threads: 1, spill: None }
+}
+
+/// Equal-key records tagged `tag0..tag0+n`: with every key identical,
+/// stable order IS tag order, so stability violations are visible as
+/// tag inversions.
+fn recs(tag0: u64, n: u64) -> Vec<Record> {
+    (tag0..tag0 + n).map(|t| Record::new(0, t)).collect()
+}
+
+/// The compaction claim: two racing claimers, at most one may win;
+/// after a release the slot is claimable again.
+#[test]
+fn model_store_claim_exclusive() {
+    let schedules = check_with(
+        Config { name: "store-claim", ..Config::default() },
+        || {
+            let store = Arc::new(RunStore::new(mem_config()).unwrap());
+
+            // Neither side releases until both tried: exactly one of
+            // the two racing claims may succeed, in every schedule.
+            let s1 = Arc::clone(&store);
+            let t1 = thread::spawn(move || s1.try_claim_compaction());
+            let here = store.try_claim_compaction();
+            let there = t1.join().unwrap();
+
+            assert!(here ^ there, "claim must admit exactly one (here={here}, there={there})");
+            store.release_compaction();
+            // The slot always comes back.
+            assert!(store.try_claim_compaction());
+            assert!(store.is_compacting());
+            store.release_compaction();
+            assert!(!store.is_compacting());
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Compaction claim vs snapshot pin: a compactor merges the first
+/// adjacent pair while a reader snapshots at an arbitrary point. The
+/// snapshot must always be one of the two consistent states (pre- or
+/// post-commit): every record exactly once, equal-key order = seal
+/// order (ascending tags across the `gen_lo`-sorted runs), and the
+/// pinned `Arc<Run>`s stay fully readable even after the commit has
+/// swapped them out of the live list.
+#[test]
+fn model_store_compaction_vs_snapshot() {
+    let schedules = check_with(
+        Config { name: "store-compact-snapshot", ..Config::default() },
+        || {
+            let store = Arc::new(RunStore::new(mem_config()).unwrap());
+            // Three equal-key runs, gens 0/1/2, tags 0..3, 3..6, 6..9.
+            for i in 0..3u64 {
+                store.seal(recs(i * 3, 3)).unwrap();
+            }
+
+            let cs = Arc::clone(&store);
+            let compactor = thread::spawn(move || {
+                assert!(cs.try_claim_compaction(), "claim is uncontended here");
+                let (a, b) = cs.pick_adjacent_pair().expect("three runs, one pair");
+                // Stable merge of two equal-key runs = older first.
+                let mut merged = a.data().unwrap().to_vec();
+                merged.extend(b.data().unwrap().iter().copied());
+                let stats = cs.commit_compaction(&a, &b, merged).unwrap();
+                cs.release_compaction();
+                assert_eq!((stats.gen_lo, stats.gen_hi, stats.level), (0, 1, 1));
+                // The inputs we still hold are pinned: fully readable
+                // after the commit removed them from the live list.
+                assert_eq!(a.load().unwrap().len() + b.load().unwrap().len(), 6);
+            });
+
+            let ss = Arc::clone(&store);
+            let snapshotter = thread::spawn(move || {
+                let snap = ss.snapshot();
+                // Pre-commit (3 runs) or post-commit (2 runs) — never
+                // a torn in-between.
+                assert!(
+                    snap.len() == 2 || snap.len() == 3,
+                    "snapshot saw {} runs",
+                    snap.len()
+                );
+                // gen_lo-sorted, generation ranges disjoint + contiguous.
+                let mut next_gen = 0;
+                let mut tags = Vec::new();
+                for run in &snap {
+                    assert_eq!(run.gen_lo(), next_gen, "gen-sorted, gap-free");
+                    next_gen = run.gen_hi() + 1;
+                    tags.extend(run.data().unwrap().iter().map(|r| r.tag));
+                }
+                assert_eq!(next_gen, 3, "snapshot covers every sealed generation");
+                // All nine records exactly once, in stable (seal) order.
+                assert_eq!(tags, (0..9).collect::<Vec<u64>>(), "stability broken");
+            });
+
+            compactor.join().unwrap();
+            snapshotter.join().unwrap();
+
+            // Post-join: committed state, and the claim is free again.
+            let snap = store.snapshot();
+            assert_eq!(snap.len(), 2);
+            assert_eq!(store.run_count(), 2);
+            assert_eq!(store.record_count(), 9);
+            assert!(store.try_claim_compaction());
+            store.release_compaction();
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}

@@ -19,7 +19,7 @@
 
 use crate::core::record::Record;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::model::sync::{AtomicU64, Ordering};
 
 /// Bytes per record in the spill encoding (i64 key + u64 tag, LE).
 pub const RECORD_BYTES: usize = 16;

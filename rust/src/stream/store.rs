@@ -47,8 +47,8 @@
 use super::run::Run;
 use super::StreamConfig;
 use crate::core::record::Record;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::model::sync::{AtomicBool, AtomicU64, Mutex, Ordering};
+use std::sync::Arc;
 
 /// Point-in-time store statistics (folded from the published atomics
 /// plus one short lock for the level map).

@@ -18,8 +18,46 @@
 //! property uses `g.shrinkable_vec_i64` (vectors are the dominant input
 //! shape in this crate).
 
+use crate::core::Record;
 use crate::util::Rng;
 use std::ops::Range;
+
+/// Check that `output` is the **stable permutation** of `inputs`: the
+/// same record multiset, key-sorted, with equal keys ordered first by
+/// input slice, then by position within their slice — the paper's
+/// stability contract, verified exactly against a reference stable
+/// sort of the concatenation (Rust's `sort_by_key` is stable).
+///
+/// Returns `Err` in the qcheck property style so bodies can `?` it;
+/// non-property callers `.unwrap()`. Pass a single input slice to
+/// check a stable sort, several to check a stable merge.
+pub fn assert_stable_permutation(
+    inputs: &[&[Record]],
+    output: &[Record],
+) -> Result<(), String> {
+    let total: usize = inputs.iter().map(|s| s.len()).sum();
+    if total != output.len() {
+        return Err(format!(
+            "not a permutation: {} input records, {} output records",
+            total,
+            output.len()
+        ));
+    }
+    let mut expect: Vec<Record> = Vec::with_capacity(total);
+    for input in inputs {
+        expect.extend_from_slice(input);
+    }
+    expect.sort_by_key(|r| r.key);
+    for (i, (got, want)) in output.iter().zip(&expect).enumerate() {
+        if (got.key, got.tag) != (want.key, want.tag) {
+            return Err(format!(
+                "stable permutation broken at output[{i}]: got (key {}, tag {}), want (key {}, tag {})",
+                got.key, got.tag, want.key, want.tag
+            ));
+        }
+    }
+    Ok(())
+}
 
 /// The per-case random value source handed to properties.
 pub struct Gen {
@@ -161,6 +199,26 @@ mod tests {
             prop_assert!(v.len() < 5, "too long: {}", v.len());
             Ok(())
         });
+    }
+
+    #[test]
+    fn stable_permutation_accepts_stable_and_rejects_swaps() {
+        let a = [Record::new(1, 0), Record::new(3, 1)];
+        let b = [Record::new(1, 10), Record::new(2, 11)];
+        // Stable merge: a's key-1 record precedes b's.
+        let ok = [Record::new(1, 0), Record::new(1, 10), Record::new(2, 11), Record::new(3, 1)];
+        assert_stable_permutation(&[&a, &b], &ok).unwrap();
+        // Same multiset, equal keys swapped: content-correct but
+        // unstable — must be rejected.
+        let swapped =
+            [Record::new(1, 10), Record::new(1, 0), Record::new(2, 11), Record::new(3, 1)];
+        assert!(assert_stable_permutation(&[&a, &b], &swapped).is_err());
+        // Wrong cardinality.
+        assert!(assert_stable_permutation(&[&a], &ok).is_err());
+        // Single input = stable sort check.
+        let v = [Record::new(2, 0), Record::new(1, 1), Record::new(2, 2)];
+        let sorted = [Record::new(1, 1), Record::new(2, 0), Record::new(2, 2)];
+        assert_stable_permutation(&[&v], &sorted).unwrap();
     }
 
     #[test]

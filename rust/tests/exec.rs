@@ -46,7 +46,10 @@ fn sort_rounds_stable_duplicate_heavy_non_pow2_p() {
         let got: Vec<(i64, u64)> = result.iter().map(|r| (r.key, r.tag)).collect();
         let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
         prop_assert_eq!(got, want);
-        Ok(())
+        // The same claim via the shared helper: tags are the original
+        // positions, so the rounds' output must be THE stable sort.
+        traff_merge::testing::assert_stable_permutation(&[&expect], result)
+            .map_err(|e| format!("n={n} p={p}: {e}"))
     });
 }
 
@@ -296,8 +299,8 @@ fn stolen_merge_tasks_keep_stable_output() {
 /// through the fleet is intentionally unordered.)
 #[test]
 fn injector_multi_submitter_batches_exactly_once() {
-    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+    use traff_merge::model::sync::{AtomicUsize, Ordering};
     let exec = Executor::new(4);
     const SUBMITTERS: usize = 8;
     const BATCHES: usize = 25;
@@ -356,8 +359,8 @@ fn injector_multi_submitter_batches_exactly_once() {
 /// queued — service jobs overtake queued background batches.
 #[test]
 fn service_jobs_overtake_queued_background_flood() {
-    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
+    use traff_merge::model::sync::{AtomicUsize, Ordering};
     use std::time::Duration;
     // A private 2-worker fleet: drains pull at most 32 jobs onto the
     // deques at a time, so most of the 200-job flood is still in the

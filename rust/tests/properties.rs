@@ -2,7 +2,7 @@
 //! in-crate `qcheck` framework (proptest substitute).
 
 use traff_merge::core::{parallel_merge, Blocks, Partition, Record};
-use traff_merge::testing::qcheck;
+use traff_merge::testing::{assert_stable_permutation, qcheck};
 use traff_merge::workload::{check_stable_merge, tag_a, tag_b, B_TAG_BASE};
 use traff_merge::{prop_assert, prop_assert_eq};
 
@@ -63,7 +63,10 @@ fn merge_stability_property() {
         let b = tag_b(&kb);
         let mut out = vec![Record::new(0, 0); a.len() + b.len()];
         parallel_merge(&a, &b, &mut out, p);
-        check_stable_merge(&out, B_TAG_BASE).map_err(|e| format!("p={p}: {e}"))
+        check_stable_merge(&out, B_TAG_BASE).map_err(|e| format!("p={p}: {e}"))?;
+        // The exact-permutation form of the same claim: out must be
+        // THE stable merge of (a, b), record for record.
+        assert_stable_permutation(&[&a, &b], &out).map_err(|e| format!("p={p}: {e}"))
     });
 }
 
@@ -180,10 +183,11 @@ fn sort_stability_property() {
             .collect();
         let mut expect = v.clone();
         expect.sort_by_key(|r| r.key);
+        let orig = v.clone();
         traff_merge::core::parallel_merge_sort(&mut v, p);
         let got: Vec<(i64, u64)> = v.iter().map(|r| (r.key, r.tag)).collect();
         let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
         prop_assert_eq!(got, want);
-        Ok(())
+        assert_stable_permutation(&[&orig], &v).map_err(|e| format!("p={p}: {e}"))
     });
 }
