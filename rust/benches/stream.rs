@@ -9,6 +9,9 @@
 //!   acceptance target is p99(on) within 2x of p99(off), i.e. the
 //!   injector's priority lanes actually shield the service tenant
 //!   from maintenance work.
+//! - **E10c** k-way major compaction: the paged cursor driver merging
+//!   a whole run backlog in one pass vs the pairwise cascade it
+//!   replaces (fold of E10a's compactor, k−1 rewrites).
 
 use std::sync::Arc;
 use traff_merge::model::sync::{AtomicBool, Ordering};
@@ -18,7 +21,10 @@ use traff_merge::core::record::Record;
 use traff_merge::harness::{quick_mode, section, Bench};
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, Table};
 use traff_merge::runtime::KeyedBlock;
-use traff_merge::stream::{merge_runs_parallel, merge_runs_sequential};
+use traff_merge::stream::{
+    kway_merge_to_vec, merge_runs_parallel, merge_runs_sequential, Ingestor, RunStore,
+    StreamConfig,
+};
 use traff_merge::util::Rng;
 
 fn sorted_run(rng: &mut Rng, n: usize, key_range: i64, tag0: u64) -> Vec<Record> {
@@ -147,4 +153,55 @@ fn main() {
         "\nservice p99 with compaction on = {ratio:.2}x the compaction-off baseline \
          (acceptance target <= 2x)"
     );
+
+    // ---- E10c: k-way major compaction vs pairwise cascade -----------
+    section("E10c: k-way major compaction — one paged pass vs pairwise cascade");
+    let k = 8usize;
+    let n_total = if quick { 400_000 } else { 2_000_000 };
+    let store = Arc::new(
+        RunStore::new(StreamConfig {
+            run_capacity: n_total / k,
+            fanout: 64, // never auto-triggers: the bench drives merging
+            threads: p,
+            ..StreamConfig::default()
+        })
+        .expect("in-memory store"),
+    );
+    let mut ing = Ingestor::new(Arc::clone(&store));
+    for _ in 0..n_total {
+        ing.push_key(rng.range(0, 1 << 16)).expect("ingest"); // dup-heavy
+    }
+    ing.flush().expect("flush");
+    let snap = store.snapshot();
+    assert_eq!(snap.len(), k, "bench shape: exactly k runs");
+    // The pairwise cascade the k-way driver replaces: fold E10a's
+    // compactor left to right (k−1 full rewrites, as the old
+    // adjacent-pair-only store had to).
+    let cascade = || {
+        let mut acc = snap[0].load().expect("run data");
+        for run in &snap[1..] {
+            acc = merge_runs_parallel(&acc, &run.load().expect("run data"), p);
+        }
+        acc
+    };
+    // Correctness pin before timing: identical stable output.
+    {
+        let pair = cascade();
+        let kway = kway_merge_to_vec(&snap, p).expect("k-way merge");
+        assert_eq!(pair.len(), kway.len());
+        assert!(pair.iter().zip(&kway).all(|(x, y)| x.key == y.key && x.tag == y.tag));
+    }
+    let r_kway = Bench::new(format!("k-way cursor driver (k={k}, one pass)"))
+        .run(|| kway_merge_to_vec(&snap, p).expect("k-way merge"));
+    let r_cascade = Bench::new(format!("pairwise cascade ({} rewrites)", k - 1)).run(cascade);
+    let mut t = Table::new(vec!["major compaction", "median", "Melem/s", "speedup"]);
+    for r in [&r_kway, &r_cascade] {
+        t.row(vec![
+            r.name.clone(),
+            fmt_duration(r.median()),
+            format!("{:.1}", melems_per_sec(n_total as u64, r.median())),
+            format!("{:.2}x", r_cascade.median() / r.median()),
+        ]);
+    }
+    t.print();
 }

@@ -227,17 +227,49 @@ fn total_order_xform(mut bits: i32) -> i32 {
     bits
 }
 
+/// One tenant's stream holds at most this many records: the packed
+/// tag ([`pack_tag`]) stores the ingest sequence number in 32 bits, so
+/// sequence `2^32` would collide with sequence 0 and silently corrupt
+/// the stability order. Ingest fails typed at the boundary instead.
+pub const STREAM_RECORD_CAP: u64 = 1 << 32;
+
+/// Typed ingest-refused error: the tenant's stream hit
+/// [`STREAM_RECORD_CAP`] records. Carries the sequence number that
+/// would have overflowed the packed tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecordCapExceeded {
+    /// The ingest sequence number that did not fit.
+    pub seq: u64,
+}
+
+impl std::fmt::Display for RecordCapExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "stream record cap exceeded: ingest sequence {} does not fit the packed \
+             tag's 32 sequence bits (cap {} records per tenant stream)",
+            self.seq, STREAM_RECORD_CAP
+        )
+    }
+}
+
+impl std::error::Error for RecordCapExceeded {}
+
 /// Stream tag layout for service records: ingest sequence number in
 /// the high 32 bits (strictly increasing in arrival order — the
 /// stability observation), the record's `i32` payload in the low 32.
-/// Caps one tenant's stream at 2^32 records; the seal path never
-/// reads the payload bits.
-fn pack_tag(seq: u64, val: i32) -> u64 {
-    (seq << 32) | (val as u32 as u64)
+/// Fails with [`RecordCapExceeded`] once `seq` no longer fits —
+/// 2^32 records per tenant stream; the seal path never reads the
+/// payload bits.
+pub fn pack_tag(seq: u64, val: i32) -> Result<u64, RecordCapExceeded> {
+    if seq >= STREAM_RECORD_CAP {
+        return Err(RecordCapExceeded { seq });
+    }
+    Ok((seq << 32) | (val as u32 as u64))
 }
 
 /// Payload half of [`pack_tag`].
-fn unpack_val(tag: u64) -> i32 {
+pub fn unpack_val(tag: u64) -> i32 {
     tag as u32 as i32
 }
 
@@ -276,20 +308,33 @@ impl StreamTenant {
     fn new(cfg: StreamConfig) -> Result<Arc<StreamTenant>, String> {
         let threads = cfg.threads.max(1);
         let store = Arc::new(RunStore::new(cfg)?);
-        Ok(Arc::new(StreamTenant {
+        Ok(StreamTenant::from_store(store, threads))
+    }
+
+    /// Restart path: rebuild the tenant from a spill directory's
+    /// manifest ([`RunStore::recover`]) — sealed runs reappear, only
+    /// unsealed buffered records are lost.
+    fn recover(cfg: StreamConfig) -> Result<Arc<StreamTenant>, String> {
+        let threads = cfg.threads.max(1);
+        let store = Arc::new(RunStore::recover(cfg)?);
+        Ok(StreamTenant::from_store(store, threads))
+    }
+
+    fn from_store(store: Arc<RunStore>, threads: usize) -> Arc<StreamTenant> {
+        Arc::new(StreamTenant {
             ingest: Mutex::new(Ingestor::new(Arc::clone(&store))),
             store,
             compact_pool: WorkerPool::with_class(1, JobClass::Background),
             compact_scheduled: Arc::new(AtomicBool::new(false)),
             threads,
-        }))
+        })
     }
 
     fn ingest_block(&self, block: &KeyedBlock) -> Result<usize, String> {
         let mut ing = self.ingest.lock().unwrap();
         let mut sealed = 0usize;
         for (k, v) in block.keys.iter().zip(&block.vals) {
-            let tag = pack_tag(ing.seq(), *v);
+            let tag = pack_tag(ing.seq(), *v).map_err(|e| e.to_string())?;
             if ing.push(Record::new(f32_ordered(*k), tag))?.is_some() {
                 sealed += 1;
             }
@@ -750,6 +795,18 @@ impl MergeService {
             .map_err(|_| anyhow!("stream already initialized for this service"))
     }
 
+    /// Restart this service's streaming tenant from the spill
+    /// directory named in `cfg` ([`RunStore::recover`]): the manifest
+    /// is replayed, orphaned run files are swept, and every sealed run
+    /// becomes scan-visible again. Like [`MergeService::init_stream`],
+    /// must come before any lazy tenant creation.
+    pub fn recover_stream(&self, cfg: StreamConfig) -> Result<()> {
+        let tenant = StreamTenant::recover(cfg).map_err(|e| anyhow!("{e}"))?;
+        self.stream
+            .set(tenant)
+            .map_err(|_| anyhow!("stream already initialized for this service"))
+    }
+
     fn stream_tenant(&self) -> &Arc<StreamTenant> {
         self.stream.get_or_init(|| {
             StreamTenant::new(StreamConfig {
@@ -1098,9 +1155,31 @@ mod tests {
                 );
             }
         }
-        assert_eq!(unpack_val(pack_tag(7, -3)), -3);
-        assert_eq!(unpack_val(pack_tag(7, i32::MAX)), i32::MAX);
-        assert_eq!(pack_tag(7, -1) >> 32, 7, "sequence rides the high bits");
+        assert_eq!(unpack_val(pack_tag(7, -3).unwrap()), -3);
+        assert_eq!(unpack_val(pack_tag(7, i32::MAX).unwrap()), i32::MAX);
+        assert_eq!(pack_tag(7, -1).unwrap() >> 32, 7, "sequence rides the high bits");
+    }
+
+    /// Satellite: the 2^32-record stream cap fails typed at the exact
+    /// boundary instead of silently wrapping the packed tag's sequence
+    /// bits (which would corrupt the stability order).
+    #[test]
+    fn stream_record_cap_is_a_typed_boundary_error() {
+        // The last admissible sequence packs fine at both payload
+        // extremes, and round-trips the payload.
+        let last = STREAM_RECORD_CAP - 1;
+        for val in [i32::MIN, -1, 0, i32::MAX] {
+            let tag = pack_tag(last, val).unwrap();
+            assert_eq!(unpack_val(tag), val);
+            assert_eq!(tag >> 32, last);
+        }
+        // The first inadmissible sequence is refused, typed.
+        let err = pack_tag(STREAM_RECORD_CAP, 0).unwrap_err();
+        assert_eq!(err, RecordCapExceeded { seq: STREAM_RECORD_CAP });
+        assert_eq!(err.seq, STREAM_RECORD_CAP);
+        let msg = err.to_string();
+        assert!(msg.contains(&STREAM_RECORD_CAP.to_string()), "message names the cap: {msg}");
+        assert!(pack_tag(STREAM_RECORD_CAP + 123, 5).is_err());
     }
 
     /// Tentpole: the streaming facade end to end — ingest across many
@@ -1119,7 +1198,7 @@ mod tests {
             run_capacity: 64,
             fanout: 2,
             threads: 2,
-            spill: None,
+            ..StreamConfig::default()
         })
         .unwrap();
         let blocks = 5usize;
@@ -1158,6 +1237,60 @@ mod tests {
         assert_eq!(jobs, 6);
         // The tenant exists now; re-initializing must fail.
         assert!(svc.init_stream(StreamConfig::default()).is_err());
+    }
+
+    /// Tentpole: the restart facade. A service that spilled its stream
+    /// durably can be rebuilt with [`MergeService::recover_stream`] and
+    /// serves the identical stable scan.
+    #[test]
+    #[cfg(not(miri))]
+    fn recover_stream_restores_the_scan() {
+        let dir = std::env::temp_dir().join(format!("traff-svc-recover-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StreamConfig {
+            run_capacity: 32,
+            fanout: 2,
+            threads: 2,
+            spill: Some(dir.clone()),
+            page_records: 16,
+            ..StreamConfig::default()
+        };
+        let before;
+        {
+            let svc = MergeService::new(Config {
+                threads: 2,
+                engine: Engine::Rust,
+                leaf_block: 1024,
+                ..Config::default()
+            })
+            .unwrap();
+            svc.init_stream(cfg.clone()).unwrap();
+            let mut rng = Rng::new(47);
+            for _ in 0..4 {
+                let block = KeyedBlock {
+                    keys: (0..40).map(|_| rng.range(0, 9) as f32).collect(),
+                    vals: (0..40).collect(),
+                };
+                svc.ingest(block).unwrap();
+            }
+            svc.flush_stream().unwrap();
+            svc.stream_quiesce();
+            before = svc.scan().unwrap();
+        }
+        let svc2 = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        svc2.recover_stream(cfg).unwrap();
+        let after = svc2.scan().unwrap();
+        assert_eq!(after.keys, before.keys);
+        assert_eq!(after.vals, before.vals);
+        assert!(svc2.init_stream(StreamConfig::default()).is_err(), "tenant already exists");
+        drop(svc2);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     /// The stream path accepts non-finite keys end to end (it is the

@@ -12,11 +12,24 @@
 //!
 //! Both are stable across runs: ties favour the earlier run.
 
-use super::sort::merge_round;
+use super::sort::merge_round_with_class;
+use crate::exec::JobClass;
 
 /// Stable k-way merge of `runs` (each individually sorted) using the
-/// paper's two-way parallel merge per tree level, `p` threads total.
+/// paper's two-way parallel merge per tree level, `p` threads total,
+/// on the [`JobClass::Service`] lane.
 pub fn parallel_kway_merge<T: Copy + Ord + Send + Sync>(runs: &[&[T]], p: usize) -> Vec<T> {
+    parallel_kway_merge_with_class(runs, p, JobClass::Service)
+}
+
+/// [`parallel_kway_merge`] with an explicit QoS lane — the stream
+/// layer's major compaction runs its merge levels on
+/// [`JobClass::Background`].
+pub fn parallel_kway_merge_with_class<T: Copy + Ord + Send + Sync>(
+    runs: &[&[T]],
+    p: usize,
+    class: JobClass,
+) -> Vec<T> {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     let mut src: Vec<T> = Vec::with_capacity(total);
     let mut bounds = vec![0usize];
@@ -30,7 +43,7 @@ pub fn parallel_kway_merge<T: Copy + Ord + Send + Sync>(runs: &[&[T]], p: usize)
     let mut dst = src.clone();
     let mut runs_b = bounds;
     while runs_b.len() > 2 {
-        runs_b = merge_round(&src, &mut dst, &runs_b, p);
+        runs_b = merge_round_with_class(&src, &mut dst, &runs_b, p, class);
         std::mem::swap(&mut src, &mut dst);
     }
     src

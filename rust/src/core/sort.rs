@@ -87,12 +87,25 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
 /// from `src` into `dst`; an odd trailing run is copied. Returns the
 /// new run boundary vector. All pairs' tasks execute in ONE parallel
 /// phase on the persistent executor (the paper's modified multi-pair
-/// merge).
+/// merge), submitted on the [`crate::exec::JobClass::Service`] lane.
 pub fn merge_round<T: Copy + Ord + Send + Sync>(
     src: &[T],
     dst: &mut [T],
     runs: &[usize],
     p: usize,
+) -> Vec<usize> {
+    merge_round_with_class(src, dst, runs, p, crate::exec::JobClass::Service)
+}
+
+/// [`merge_round`] with an explicit QoS lane — the stream compactor
+/// runs its rounds on [`crate::exec::JobClass::Background`] so major
+/// compactions never starve service merges.
+pub fn merge_round_with_class<T: Copy + Ord + Send + Sync>(
+    src: &[T],
+    dst: &mut [T],
+    runs: &[usize],
+    p: usize,
+    class: crate::exec::JobClass,
 ) -> Vec<usize> {
     let nruns = runs.len() - 1;
     debug_assert!(nruns >= 2);
@@ -170,7 +183,7 @@ pub fn merge_round<T: Copy + Ord + Send + Sync>(
     // Same lane budget for the grouping: `lanes` groups over ~2·lanes
     // tasks realizes the fine granularity the partition produced.
     let groups = chunk_tasks(pairs, lanes);
-    crate::exec::global().scope(|s| {
+    crate::exec::global().scope_with_class(class, |s| {
         for group in groups {
             s.spawn(move || {
                 for (t, slice) in group {

@@ -21,7 +21,7 @@ use traff_merge::exec::JobClass;
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
 use traff_merge::pram::{pram_merge, Variant};
 use traff_merge::runtime::{KeyedBlock, XlaRuntime};
-use traff_merge::stream::StreamConfig;
+use traff_merge::stream::{PolicyKind, StreamConfig};
 use traff_merge::workload::{self, Dist};
 
 fn main() {
@@ -71,6 +71,7 @@ fn print_help() {
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
          \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
          \x20 stream --n N --runs R [--block B] [--scans S] [--dist D] [--spill]\n\
+         \x20        [--dir PATH] [--recover] [--policy adjacent|tiered|overlap] [--page K]\n\
          \x20 bench-json [--out F] [--pr TAG] [--n N] [--p P]  emit BENCH_<pr>.json\n\
          \x20 bench-diff --old F --new F [--tolerance-pct T]   compare two reports\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
@@ -452,7 +453,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// the per-run buffer by the `--runs` factor — the first workload
 /// whose data size is decoupled from job size.
 fn cmd_stream(args: &Args) -> Result<(), String> {
-    args.expect_known(&["n", "runs", "block", "scans", "dist", "seed", "threads", "spill"])?;
+    args.expect_known(&[
+        "n", "runs", "block", "scans", "dist", "seed", "threads", "spill", "dir", "recover",
+        "policy", "page",
+    ])?;
     let n = args.get_usize("n", 200_000)?.max(1);
     let runs = args.get_usize("runs", 8)?.max(1);
     let capacity = traff_merge::util::div_ceil(n, runs).max(1);
@@ -462,25 +466,70 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let seed = args.get_u64("seed", 42)?;
     let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
         .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
-    let spill = args
-        .get_flag("spill")
+    let policy = PolicyKind::parse(args.get_choice(
+        "policy",
+        &["adjacent", "tiered", "overlap"],
+        "adjacent",
+    )?)
+    .expect("choice already validated");
+    let page = args.get_usize("page", 1024)?.max(1);
+    let recover = args.get_flag("recover");
+    // --dir names a persistent spill directory (survives this process:
+    // the durable/restartable mode); --spill uses a throwaway temp dir.
+    let dir = args.get("dir").map(std::path::PathBuf::from);
+    if recover && dir.is_none() {
+        return Err("--recover requires --dir <spill dir> (the directory to replay)".into());
+    }
+    let temp_spill = (dir.is_none() && args.get_flag("spill"))
         .then(|| std::env::temp_dir().join(format!("repro-stream-{}", std::process::id())));
+    let spill = dir.clone().or_else(|| temp_spill.clone());
     let svc = MergeService::new(Config { threads, engine: Engine::Rust, leaf_block: 1024, ..Config::default() })
         .map_err(|e| e.to_string())?;
-    svc.init_stream(StreamConfig {
+    let cfg = StreamConfig {
         run_capacity: capacity,
         fanout: 4,
         threads,
         spill: spill.clone(),
-    })
-    .map_err(|e| e.to_string())?;
+        page_records: page,
+        policy,
+    };
+    // Records recovered from a previous process's spill dir carry vals
+    // below this base; new ingests start above it, so the stability
+    // check spans the restart.
+    let mut val_base = 0i32;
+    if recover {
+        svc.recover_stream(cfg).map_err(|e| e.to_string())?;
+        let recovered = svc.scan().map_err(|e| e.to_string())?;
+        if !recovered.is_key_sorted() {
+            return Err("recovered scan is not globally sorted".into());
+        }
+        for i in 1..recovered.len() {
+            if recovered.keys[i - 1] == recovered.keys[i]
+                && recovered.vals[i - 1] >= recovered.vals[i]
+            {
+                return Err(format!(
+                    "recovered stability violated at scan index {i}: equal keys out of \
+                     ingest order"
+                ));
+            }
+        }
+        val_base = recovered.len() as i32;
+        println!(
+            "recovered {} records from {} — scan sorted and stable ✓",
+            recovered.len(),
+            dir.as_ref().expect("--recover requires --dir").display()
+        );
+    } else {
+        svc.init_stream(cfg).map_err(|e| e.to_string())?;
+    }
     println!(
         "stream up: {n} records ({}) in blocks of {block}, run capacity {capacity} \
-         (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {}",
+         (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {} policy, {}",
         dist.name(),
         n as f64 / capacity as f64,
+        policy.name(),
         match &spill {
-            Some(dir) => format!("spilling to {}", dir.display()),
+            Some(dir) => format!("spilling to {} (pages of {page})", dir.display()),
             None => "in-memory runs".to_string(),
         }
     );
@@ -499,7 +548,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
         let hi = (ingested + block).min(n);
         let kb = KeyedBlock {
             keys: keys[ingested..hi].to_vec(),
-            vals: (ingested as i32..hi as i32).collect(),
+            vals: (val_base + ingested as i32..val_base + hi as i32).collect(),
         };
         let b0 = std::time::Instant::now();
         svc.ingest(kb).map_err(|e| e.to_string())?;
@@ -521,9 +570,10 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let fin = svc.scan().map_err(|e| e.to_string())?;
     scan_lat.push(s0.elapsed().as_secs_f64());
     let secs = t0.elapsed().as_secs_f64();
-    // Verification: complete, globally sorted, stable.
-    if fin.len() != n {
-        return Err(format!("final scan returned {} of {n} records", fin.len()));
+    // Verification: complete (recovered + new), globally sorted, stable.
+    let expect_len = n + val_base as usize;
+    if fin.len() != expect_len {
+        return Err(format!("final scan returned {} of {expect_len} records", fin.len()));
     }
     if !fin.is_key_sorted() {
         return Err("final scan is not globally sorted".into());
@@ -573,6 +623,12 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
         rates.service_share(),
         rates.bg_promotions_per_sec,
     );
+    // Throwaway --spill dirs are this process's to clean; --dir spill
+    // dirs are durable state and stay for a later --recover.
+    if let Some(dir) = temp_spill {
+        drop(svc);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     Ok(())
 }
 
@@ -583,7 +639,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
 /// problem so CI can run a fast, smaller-but-same-shape suite.
 fn cmd_bench_json(args: &Args) -> Result<(), String> {
     args.expect_known(&["out", "pr", "n", "p"])?;
-    let pr = args.get("pr").unwrap_or("6").to_string();
+    let pr = args.get("pr").unwrap_or("7").to_string();
     let n = args.get_usize("n", 1_000_000)?.max(16);
     let p = args.get_usize("p", traff_merge::util::num_cpus())?.max(1);
     let default_out = format!("BENCH_{pr}.json");
@@ -630,6 +686,31 @@ fn cmd_bench_json(args: &Args) -> Result<(), String> {
         let r = Bench::new("stream_compact").run(|| traff_merge::stream::merge_runs_parallel(&a, &b, p));
         println!("  {}", r.summary());
         report.add((a.len() + b.len()) as u64, &r);
+    }
+
+    // Scenario 5: k-way major compaction — the paged cursor driver
+    // merging a whole backlog of runs in one pass (vs scenario 4's
+    // single pair), dup-heavy keys, in-memory store.
+    {
+        let store = std::sync::Arc::new(
+            traff_merge::stream::RunStore::new(StreamConfig {
+                run_capacity: (n / 8).max(1),
+                fanout: 64,
+                threads: p,
+                ..StreamConfig::default()
+            })
+            .map_err(|e| e.to_string())?,
+        );
+        let mut ing = traff_merge::stream::Ingestor::new(std::sync::Arc::clone(&store));
+        for &k in &workload::raw_keys(Dist::DupHeavy(16), n, 9) {
+            ing.push_key(k).map_err(|e| e.to_string())?;
+        }
+        ing.flush().map_err(|e| e.to_string())?;
+        let snap = store.snapshot();
+        let r = Bench::new("stream_kway_compact")
+            .run(|| traff_merge::stream::kway_merge_to_vec(&snap, p).expect("in-memory k-way merge"));
+        println!("  {}", r.summary());
+        report.add(n as u64, &r);
     }
 
     std::fs::write(&out_path, report.to_json())

@@ -1,37 +1,52 @@
-//! Background compaction: merge adjacent run pairs with the paper's
-//! co-rank partition, executing the segment merges on the executor's
-//! **background lane**.
+//! Background compaction: merge a generation-contiguous window of
+//! runs with the paper's co-rank partition, executing the segment
+//! merges on the executor's **background lane** — streaming pages in
+//! and out, never materializing a whole run.
 //!
-//! This is the paper's §2 primitive doing LSM work: the two runs are
-//! split by [`Partition::compute`] — `2(p+1)` co-rank binary searches
-//! ([`crate::core::ranks`]) — into disjoint, independently mergeable
-//! segments, which then run as one parallel phase under
-//! [`JobClass::Background`]
-//! ([`Executor::scope_with_class`](crate::exec::Executor::scope_with_class)).
-//! Queued service-lane traffic (`MergeService` merge/sort jobs)
-//! therefore drains strictly ahead of a compaction's segment work at
-//! the injector, which is what keeps the service p99 flat while
-//! compaction proceeds (measured in bench E10); the anti-starvation
-//! bounds (`EXEC_BG_STARVATION_LIMIT`, `EXEC_BG_MAX_DELAY_MS`) keep
-//! the compaction itself from parking forever under a service flood.
+//! This is the paper's §2 primitive doing LSM work. The driver
+//! ([`merge_cursors_into`]) advances one [`RunCursor`] per input run
+//! (one resident page each) and alternates two phases per iteration:
 //!
-//! Stability: the pair comes from the store's adjacent-pair picker
-//! with the OLDER run as the merge's `a` side, and the stable two-way
-//! merge puts `a`'s records first on ties — so arrival order for
-//! duplicate keys survives any compaction schedule (property-tested
-//! in [`crate::stream`]).
+//! - **Phase A** — compute the *safe horizon*: the smallest
+//!   last-buffered key among cursors that still have unloaded pages.
+//!   Every record with key strictly below the horizon is provably
+//!   resident (its cursor's buffered max is ≥ the horizon), so those
+//!   prefixes are merged in one shot with
+//!   [`parallel_kway_merge_with_class`] — `ceil(log2 k)` levels of §3
+//!   merge rounds, each level one parallel phase of co-rank tasks
+//!   under [`JobClass::Background`] — and streamed to the output
+//!   [`RunWriter`] (which pages straight to disk for spilled stores).
+//! - **Phase B** — the duplicate group *at* the horizon is drained
+//!   cursor-by-cursor in generation order, crossing page boundaries
+//!   one page at a time, so even a duplicate group larger than RAM
+//!   keeps the resident set at O(k × page_records).
+//!
+//! Queued service-lane traffic (`MergeService` merge/sort jobs) drains
+//! strictly ahead of a compaction's segment work at the injector,
+//! which is what keeps the service p99 flat while compaction proceeds
+//! (measured in bench E10); the anti-starvation bounds
+//! (`EXEC_BG_STARVATION_LIMIT`, `EXEC_BG_MAX_DELAY_MS`) keep the
+//! compaction itself from parking forever under a service flood.
+//!
+//! Stability: the window comes from the store's policy picker oldest
+//! generation first, Phase A's k-way merge favours the earlier
+//! (older) run on ties, and Phase B emits the horizon group in cursor
+//! order — so arrival order for duplicate keys survives any
+//! compaction schedule (property-tested in [`crate::stream`]).
 //!
 //! Concurrency: one compaction at a time, claimed via the store's CAS
 //! flag; losers skip (`Ok(None)`) instead of queueing, so any number
 //! of triggers can fire the compactor idempotently.
 
+use super::run::{Run, RunCursor, RunWriter};
 use super::store::{CompactionStats, RunStore};
 use crate::core::cases::Partition;
 use crate::core::merge::{carve_output, chunk_tasks};
-use crate::core::multiway::loser_tree_merge;
+use crate::core::multiway::{loser_tree_merge, parallel_kway_merge_with_class};
 use crate::core::record::Record;
 use crate::core::seqmerge::merge_into;
 use crate::exec::JobClass;
+use std::sync::Arc;
 
 /// Releases the store's compaction claim on every exit path (including
 /// a panicking segment merge).
@@ -45,7 +60,8 @@ impl Drop for ClaimGuard<'_> {
 
 /// Stable merge of two sorted runs (`a` older, first on ties) with the
 /// co-rank partition, segment merges on the background lane. Public
-/// for the E10 bench; the store paths go through [`compact_once`].
+/// for the E10 bench (the pairwise baseline the k-way driver is
+/// measured against); the store paths go through [`compact_once`].
 pub fn merge_runs_parallel(a: &[Record], b: &[Record], p: usize) -> Vec<Record> {
     let n = a.len() + b.len();
     let mut out = vec![Record::new(0, 0); n];
@@ -89,9 +105,103 @@ pub fn merge_runs_sequential(a: &[Record], b: &[Record]) -> Vec<Record> {
     loser_tree_merge(&[a, b])
 }
 
+/// The streaming k-way merge driver — see the module docs for the
+/// safe-horizon / duplicate-group phase structure. `cursors` must be
+/// ordered oldest generation first; the output receives the exact
+/// stable merge.
+fn merge_cursors_into(
+    cursors: &mut [RunCursor],
+    p: usize,
+    out: &mut RunWriter,
+) -> Result<(), String> {
+    loop {
+        // Safe horizon: min last-buffered key among cursors with
+        // unloaded pages. Records below it are fully resident.
+        let mut safe: Option<i64> = None;
+        for c in cursors.iter() {
+            if c.has_unloaded() {
+                let last = c.buffered().last().expect("eager refill keeps live cursors non-empty");
+                safe = Some(match safe {
+                    None => last.key,
+                    Some(s) => s.min(last.key),
+                });
+            }
+        }
+        let Some(safe_key) = safe else {
+            // Everything left is resident: one final k-way merge.
+            let slices: Vec<&[Record]> = cursors.iter().map(|c| c.buffered()).collect();
+            let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+            out.extend(&merged)?;
+            let counts: Vec<usize> = cursors.iter().map(|c| c.buffered().len()).collect();
+            for (c, k) in cursors.iter_mut().zip(counts) {
+                c.advance_buffered(k)?;
+            }
+            return Ok(());
+        };
+        // Phase A: stable k-way merge of the strictly-below-horizon
+        // prefixes. A cursor with unloaded pages never drains here
+        // (its buffered max is >= the horizon), so no refill races the
+        // borrowed slices.
+        let cuts: Vec<usize> =
+            cursors.iter().map(|c| c.buffered().partition_point(|r| r.key < safe_key)).collect();
+        let slices: Vec<&[Record]> =
+            cursors.iter().zip(&cuts).map(|(c, &k)| &c.buffered()[..k]).collect();
+        let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+        out.extend(&merged)?;
+        for (c, k) in cursors.iter_mut().zip(cuts) {
+            c.advance_buffered(k)?;
+        }
+        // Phase B: the duplicate group AT the horizon, in generation
+        // order, page by page. The horizon-defining cursor drains its
+        // page here and refills — that per-iteration page load is the
+        // progress guarantee.
+        for c in cursors.iter_mut() {
+            while c.peek().map_or(false, |r| r.key == safe_key) {
+                let r = c.next_record()?.expect("peeked record");
+                out.push(r)?;
+            }
+        }
+    }
+}
+
+/// Stable k-way merge of a window of runs (oldest generation first)
+/// into an in-memory `Vec`, streaming input pages through cursors.
+/// Non-mutating — the benches and tests use this to measure/verify the
+/// k-way driver against the pairwise baseline without a store commit.
+pub fn kway_merge_to_vec(inputs: &[Arc<Run>], p: usize) -> Result<Vec<Record>, String> {
+    let mut cursors = inputs
+        .iter()
+        .map(|r| RunCursor::new(Arc::clone(r)))
+        .collect::<Result<Vec<_>, String>>()?;
+    let total = inputs.iter().map(|r| r.len()).sum();
+    let mut out = RunWriter::mem(total);
+    merge_cursors_into(&mut cursors, p, &mut out)?;
+    Ok(out.into_records())
+}
+
+/// Merge one picked window and commit it: cursors in, paged run out
+/// (spilled stores never hold the merged run in RAM), manifest-logged
+/// swap. Caller holds the compaction claim.
+fn compact_window(
+    store: &RunStore,
+    inputs: Vec<Arc<Run>>,
+    p: usize,
+) -> Result<CompactionStats, String> {
+    debug_assert!(inputs.len() >= 2);
+    let total: usize = inputs.iter().map(|r| r.len()).sum();
+    let mut cursors = inputs
+        .iter()
+        .map(|r| RunCursor::new(Arc::clone(r)))
+        .collect::<Result<Vec<_>, String>>()?;
+    let mut out = RunWriter::new(store.spill_dir(), store.config().page_records, total)?;
+    merge_cursors_into(&mut cursors, p, &mut out)?;
+    let prepared = out.finish()?;
+    store.commit_compaction(&inputs, prepared)
+}
+
 /// Run one policy-driven compaction if the store's backlog asks for
 /// one and the claim is free. Returns `Ok(None)` when there is
-/// nothing to do (backlog under fanout, fewer than two runs, or
+/// nothing to do (backlog under fanout, no window worth merging, or
 /// another compactor holds the claim) — safe to call from any number
 /// of concurrent triggers.
 pub fn compact_once(store: &RunStore, p: usize) -> Result<Option<CompactionStats>, String> {
@@ -102,21 +212,18 @@ pub fn compact_once(store: &RunStore, p: usize) -> Result<Option<CompactionStats
         return Ok(None);
     }
     let _claim = ClaimGuard(store);
-    let Some((a, b)) = store.pick_adjacent_pair() else {
+    let Some(window) = store.pick_window() else {
         return Ok(None);
     };
-    // Borrow memory-resident runs directly; only spilled runs are
-    // read into temporaries (`Run::data`).
-    let da = a.data()?;
-    let db = b.data()?;
-    let merged = merge_runs_parallel(&da, &db, p);
-    store.commit_compaction(&a, &b, merged).map(Some)
+    compact_window(store, window, p).map(Some)
 }
 
-/// Compact the whole store down to (at most) one run, ignoring the
-/// fanout policy — the "major compaction" used by tests and the CLI's
-/// final consolidation. Spins on the claim (yielding) if a concurrent
-/// compactor holds it. Returns the number of compactions performed.
+/// Major compaction: merge the WHOLE store down to one run in a single
+/// k-way pass, ignoring the fanout policy — the final consolidation
+/// used by tests and the CLI. Spins on the claim (yielding) if a
+/// concurrent compactor holds it. Returns the number of compactions
+/// performed (1 for a multi-run store, 0 if already consolidated;
+/// >1 only if concurrent seals land between passes).
 pub fn compact_to_one(store: &RunStore, p: usize) -> Result<usize, String> {
     let mut done = 0usize;
     loop {
@@ -124,13 +231,10 @@ pub fn compact_to_one(store: &RunStore, p: usize) -> Result<usize, String> {
             std::thread::yield_now();
         }
         let _claim = ClaimGuard(store);
-        let Some((a, b)) = store.pick_adjacent_pair() else {
+        let Some(window) = store.pick_all() else {
             return Ok(done);
         };
-        let da = a.data()?;
-        let db = b.data()?;
-        let merged = merge_runs_parallel(&da, &db, p);
-        store.commit_compaction(&a, &b, merged)?;
+        compact_window(store, window, p)?;
         done += 1;
     }
 }
@@ -140,7 +244,6 @@ mod tests {
     use super::*;
     use crate::stream::{Ingestor, StreamConfig};
     use crate::util::Rng;
-    use std::sync::Arc;
 
     fn sorted_records(rng: &mut Rng, n: usize, key_range: i64, tag0: u64) -> Vec<Record> {
         let mut keys: Vec<i64> = (0..n).map(|_| rng.range(0, key_range)).collect();
@@ -188,6 +291,33 @@ mod tests {
         assert_eq!(as_pairs(&got), as_pairs(&oracle));
     }
 
+    /// The streaming cursor driver is an exact stable k-way merge
+    /// (loser tree over materialized runs as the oracle; ties favour
+    /// the earlier run).
+    #[test]
+    fn kway_cursor_merge_matches_loser_tree_oracle() {
+        let mut rng = Rng::new(43);
+        let sizes: &[usize] = if cfg!(miri) { &[5, 0, 9, 3] } else { &[40, 0, 77, 15, 120, 1] };
+        let mut runs = Vec::new();
+        let mut tag0 = 0u64;
+        for (g, &n) in sizes.iter().enumerate() {
+            if n == 0 {
+                continue; // runs are never empty; the shape just skips
+            }
+            let records = sorted_records(&mut rng, n, 7, tag0); // heavy duplicates
+            tag0 += n as u64;
+            runs.push(Arc::new(
+                Run::create(records, g as u64, g as u64, 0, None, 1024).unwrap(),
+            ));
+        }
+        let loaded: Vec<Vec<Record>> = runs.iter().map(|r| r.load().unwrap()).collect();
+        let refs: Vec<&[Record]> = loaded.iter().map(|v| v.as_slice()).collect();
+        let oracle = loser_tree_merge(&refs);
+        let got = kway_merge_to_vec(&runs, 2).unwrap();
+        assert_eq!(as_pairs(&got), as_pairs(&oracle));
+        assert!(kway_merge_to_vec(&[], 2).unwrap().is_empty());
+    }
+
     #[test]
     fn compact_once_reduces_backlog_and_preserves_records() {
         // Four full runs; Miri shrinks the run size, not the shape.
@@ -198,7 +328,7 @@ mod tests {
                 run_capacity: cap,
                 fanout: 2,
                 threads: 2,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         );
@@ -210,6 +340,7 @@ mod tests {
         assert_eq!(store.run_count(), 4);
         let st = compact_once(&store, 2).unwrap().expect("backlog over fanout compacts");
         assert_eq!(st.merged_records, 2 * cap);
+        assert_eq!(st.inputs, 2, "adjacent-pair policy merges a pair");
         assert_eq!(store.run_count(), 3);
         assert_eq!(store.record_count(), n as u64);
         // Backlog now exceeds fanout by one more; compact again then stop.
@@ -225,7 +356,7 @@ mod tests {
                 run_capacity: 4,
                 fanout: 1,
                 threads: 1,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         );
@@ -240,13 +371,13 @@ mod tests {
     }
 
     #[test]
-    fn compact_to_one_consolidates_fully() {
+    fn compact_to_one_consolidates_in_a_single_kway_pass() {
         let store = Arc::new(
             RunStore::new(StreamConfig {
                 run_capacity: 10,
                 fanout: 64,
                 threads: 2,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         );
@@ -258,7 +389,7 @@ mod tests {
         ing.flush().unwrap();
         assert_eq!(store.run_count(), 6);
         let done = compact_to_one(&store, 2).unwrap();
-        assert_eq!(done, 5);
+        assert_eq!(done, 1, "major compaction merges the whole store in one k-way pass");
         assert_eq!(store.run_count(), 1);
         assert_eq!(store.record_count(), 55);
         let data = store.snapshot()[0].load().unwrap();
@@ -267,5 +398,50 @@ mod tests {
         assert!(data
             .windows(2)
             .all(|w| w[0].key < w[1].key || w[0].tag < w[1].tag));
+    }
+
+    /// Spilled k-way major compaction: pages stream through cursors
+    /// (tiny pages force many refills and horizon-group drains) and
+    /// the result is exact, sorted, stable, and durable.
+    #[test]
+    #[cfg(not(miri))]
+    fn spilled_kway_compaction_streams_pages() {
+        let dir =
+            std::env::temp_dir().join(format!("traff-compact-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 100,
+                fanout: 64,
+                threads: 2,
+                spill: Some(dir.clone()),
+                page_records: 16, // many pages per run, giant dup groups
+                ..StreamConfig::default()
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(13);
+        let n = 700;
+        for _ in 0..n {
+            ing.push_key(rng.range(0, 3)).unwrap(); // keys in {0, 1, 2}
+        }
+        ing.flush().unwrap();
+        assert_eq!(store.run_count(), 7);
+        assert_eq!(compact_to_one(&store, 2).unwrap(), 1);
+        assert_eq!((store.run_count(), store.record_count()), (1, n as u64));
+        let run = Arc::clone(&store.snapshot()[0]);
+        assert!(run.is_spilled());
+        let data = run.load().unwrap();
+        assert_eq!(data.len(), n);
+        assert!(data.windows(2).all(|w| w[0].key <= w[1].key));
+        assert!(
+            data.windows(2).all(|w| w[0].key < w[1].key || w[0].tag < w[1].tag),
+            "duplicate keys must keep exact ingest order through the paged k-way merge"
+        );
+        drop(run);
+        drop(ing);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

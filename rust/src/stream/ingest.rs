@@ -97,7 +97,7 @@ mod tests {
                 run_capacity: cap,
                 fanout: 64,
                 threads: 2,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         )

@@ -1,0 +1,418 @@
+//! Append-only, checksummed store manifest — the durability spine of
+//! the stream layer.
+//!
+//! The manifest (`MANIFEST.log` in the spill dir) is the single source
+//! of truth for which run files are live. Every mutation of the run
+//! list lands here **before** it is published to readers:
+//!
+//! - a seal appends [`ManifestRecord::AddRun`] and fsyncs, *then*
+//!   inserts the run into the in-memory list;
+//! - a compaction commit appends [`ManifestRecord::Replace`] (inputs
+//!   removed, output added) and fsyncs, *then* swaps the window.
+//!
+//! Run files themselves are written and fsynced before their manifest
+//! record, so a record never references bytes that might not survive a
+//! crash. The converse — a run file with no manifest record — is an
+//! **orphan** that recovery deletes.
+//!
+//! # Frame format
+//!
+//! ```text
+//! file   = header frames*
+//! header = magic "TMMANIF1" (8 B)
+//! frame  = payload_len u32 LE ·· payload ·· fnv1a64(payload) u64 LE
+//! ```
+//!
+//! A crash mid-append leaves a torn tail: a short frame, or a frame
+//! whose checksum does not match. [`read_manifest`] stops at the first
+//! such frame and returns everything before it — the torn record was
+//! never published (publication happens after fsync), so dropping it
+//! is exactly correct. Recovery then rewrites a compact manifest via
+//! temp-file + rename.
+
+use crate::util::fnv1a64;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Manifest header magic.
+pub const MANIFEST_MAGIC: &[u8; 8] = b"TMMANIF1";
+/// Manifest file name within a store's spill dir.
+pub const MANIFEST_NAME: &str = "MANIFEST.log";
+
+/// Everything recovery needs to reopen a run without touching its
+/// record pages: identity, generation range, level, and the metadata
+/// that is cross-checked against the run file itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunMeta {
+    /// Spill-file id: the run lives at `run-{id}.bin`.
+    pub id: u64,
+    /// Oldest seal generation covered.
+    pub gen_lo: u64,
+    /// Newest seal generation covered.
+    pub gen_hi: u64,
+    /// Compaction depth.
+    pub level: u32,
+    /// Record count.
+    pub len: u64,
+    /// Smallest key.
+    pub min_key: i64,
+    /// Largest key.
+    pub max_key: i64,
+}
+
+/// Bytes of an encoded [`RunMeta`].
+pub const RUN_META_BYTES: usize = 52;
+
+fn encode_run_meta(m: &RunMeta, out: &mut Vec<u8>) {
+    out.extend_from_slice(&m.id.to_le_bytes());
+    out.extend_from_slice(&m.gen_lo.to_le_bytes());
+    out.extend_from_slice(&m.gen_hi.to_le_bytes());
+    out.extend_from_slice(&m.level.to_le_bytes());
+    out.extend_from_slice(&m.len.to_le_bytes());
+    out.extend_from_slice(&m.min_key.to_le_bytes());
+    out.extend_from_slice(&m.max_key.to_le_bytes());
+}
+
+fn decode_run_meta(bytes: &[u8]) -> Result<RunMeta, String> {
+    if bytes.len() < RUN_META_BYTES {
+        return Err(format!("run meta is {} bytes, expected {RUN_META_BYTES}", bytes.len()));
+    }
+    let u64_at = |o: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[o..o + 8]);
+        u64::from_le_bytes(b)
+    };
+    let mut l = [0u8; 4];
+    l.copy_from_slice(&bytes[24..28]);
+    Ok(RunMeta {
+        id: u64_at(0),
+        gen_lo: u64_at(8),
+        gen_hi: u64_at(16),
+        level: u32::from_le_bytes(l),
+        len: u64_at(28),
+        min_key: u64_at(36) as i64,
+        max_key: u64_at(44) as i64,
+    })
+}
+
+/// One manifest mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ManifestRecord {
+    /// A freshly sealed run joined the store.
+    AddRun(RunMeta),
+    /// A compaction replaced `removed` (run ids, oldest first) with
+    /// `added`.
+    Replace { removed: Vec<u64>, added: RunMeta },
+}
+
+const TAG_ADD: u8 = 1;
+const TAG_REPLACE: u8 = 2;
+
+/// Encode one record's frame payload (no length/checksum). Pure —
+/// unit-tested under Miri.
+pub fn encode_record(rec: &ManifestRecord) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + RUN_META_BYTES);
+    match rec {
+        ManifestRecord::AddRun(meta) => {
+            out.push(TAG_ADD);
+            encode_run_meta(meta, &mut out);
+        }
+        ManifestRecord::Replace { removed, added } => {
+            out.push(TAG_REPLACE);
+            out.extend_from_slice(&(removed.len() as u32).to_le_bytes());
+            for id in removed {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+            encode_run_meta(added, &mut out);
+        }
+    }
+    out
+}
+
+/// Decode one frame payload. Pure.
+pub fn decode_record(bytes: &[u8]) -> Result<ManifestRecord, String> {
+    match bytes.first() {
+        Some(&TAG_ADD) => {
+            if bytes.len() != 1 + RUN_META_BYTES {
+                return Err(format!("add-run payload is {} bytes", bytes.len()));
+            }
+            Ok(ManifestRecord::AddRun(decode_run_meta(&bytes[1..])?))
+        }
+        Some(&TAG_REPLACE) => {
+            if bytes.len() < 5 {
+                return Err("replace payload truncated".to_string());
+            }
+            let mut c = [0u8; 4];
+            c.copy_from_slice(&bytes[1..5]);
+            let count = u32::from_le_bytes(c) as usize;
+            let need = 5 + count * 8 + RUN_META_BYTES;
+            if bytes.len() != need {
+                return Err(format!(
+                    "replace payload is {} bytes, {count} removed ids imply {need}",
+                    bytes.len()
+                ));
+            }
+            let mut removed = Vec::with_capacity(count);
+            for i in 0..count {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&bytes[5 + i * 8..5 + (i + 1) * 8]);
+                removed.push(u64::from_le_bytes(b));
+            }
+            let added = decode_run_meta(&bytes[5 + count * 8..])?;
+            Ok(ManifestRecord::Replace { removed, added })
+        }
+        Some(&t) => Err(format!("unknown manifest record tag {t}")),
+        None => Err("empty manifest payload".to_string()),
+    }
+}
+
+/// Frame a payload: `len u32 ·· payload ·· fnv1a64(payload)`. Pure.
+pub fn encode_frame(rec: &ManifestRecord) -> Vec<u8> {
+    let payload = encode_record(rec);
+    let mut out = Vec::with_capacity(12 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    out
+}
+
+/// Decode a sequence of frames, stopping silently at the first torn
+/// one (short frame or checksum mismatch). Returns the records and how
+/// many bytes of `bytes` were consumed by intact frames. Pure.
+pub fn decode_frames(bytes: &[u8]) -> (Vec<ManifestRecord>, usize) {
+    let mut records = Vec::new();
+    let mut pos = 0;
+    loop {
+        if bytes.len() - pos < 4 {
+            break;
+        }
+        let mut l = [0u8; 4];
+        l.copy_from_slice(&bytes[pos..pos + 4]);
+        let payload_len = u32::from_le_bytes(l) as usize;
+        if bytes.len() - pos < 4 + payload_len + 8 {
+            break; // torn tail: frame extends past EOF
+        }
+        let payload = &bytes[pos + 4..pos + 4 + payload_len];
+        let mut c = [0u8; 8];
+        c.copy_from_slice(&bytes[pos + 4 + payload_len..pos + 12 + payload_len]);
+        if fnv1a64(payload) != u64::from_le_bytes(c) {
+            break; // torn tail: partially written payload
+        }
+        match decode_record(payload) {
+            Ok(rec) => records.push(rec),
+            Err(_) => break, // checksummed but unparseable: stop, don't guess
+        }
+        pos += 12 + payload_len;
+    }
+    (records, pos)
+}
+
+/// Read a manifest file, tolerating a torn tail. A missing header is
+/// an error (the file is not a manifest); a torn or trailing-garbage
+/// tail is not (the crash case this format exists for).
+pub fn read_manifest(path: &Path) -> Result<Vec<ManifestRecord>, String> {
+    let mut file =
+        std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    if bytes.len() < 8 || &bytes[..8] != MANIFEST_MAGIC {
+        return Err(format!("{}: not a manifest (bad magic)", path.display()));
+    }
+    Ok(decode_frames(&bytes[8..]).0)
+}
+
+/// Fold a record log into the list of live runs, in log order: adds
+/// append, replaces remove-by-id then append.
+pub fn replay(records: &[ManifestRecord]) -> Vec<RunMeta> {
+    let mut live: Vec<RunMeta> = Vec::new();
+    for rec in records {
+        match rec {
+            ManifestRecord::AddRun(meta) => live.push(*meta),
+            ManifestRecord::Replace { removed, added } => {
+                live.retain(|m| !removed.contains(&m.id));
+                live.push(*added);
+            }
+        }
+    }
+    live
+}
+
+/// Appender over an open manifest. Every append is fsynced before it
+/// returns — callers publish the mutation to readers only afterwards.
+pub struct ManifestWriter {
+    file: std::fs::File,
+}
+
+impl ManifestWriter {
+    /// Create (truncate) a fresh manifest: header only, fsynced.
+    pub fn create(path: &Path) -> Result<ManifestWriter, String> {
+        let mut file =
+            std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+        file.write_all(MANIFEST_MAGIC)
+            .map_err(|e| format!("write header {}: {e}", path.display()))?;
+        file.sync_all().map_err(|e| format!("fsync {}: {e}", path.display()))?;
+        Ok(ManifestWriter { file })
+    }
+
+    /// Open an existing manifest for appending (recovery path; the
+    /// caller has already validated/rewritten the contents).
+    pub fn open_append(path: &Path) -> Result<ManifestWriter, String> {
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        Ok(ManifestWriter { file })
+    }
+
+    /// Append one record and fsync it.
+    pub fn append(&mut self, rec: &ManifestRecord) -> Result<(), String> {
+        self.file
+            .write_all(&encode_frame(rec))
+            .map_err(|e| format!("manifest append: {e}"))?;
+        self.file.sync_data().map_err(|e| format!("manifest fsync: {e}"))?;
+        Ok(())
+    }
+}
+
+/// Atomically replace the manifest with a compact one holding exactly
+/// `live` (recovery's post-replay rewrite): write `MANIFEST.tmp`,
+/// fsync, rename over the old file, best-effort fsync the directory.
+pub fn rewrite(path: &Path, live: &[RunMeta]) -> Result<(), String> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = ManifestWriter::create(&tmp)?;
+        for meta in live {
+            w.append(&ManifestRecord::AddRun(*meta))?;
+        }
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64) -> RunMeta {
+        RunMeta {
+            id,
+            gen_lo: id * 2,
+            gen_hi: id * 2 + 1,
+            level: id as u32 % 3,
+            len: 100 + id,
+            min_key: -(id as i64),
+            max_key: id as i64 * 10,
+        }
+    }
+
+    // ---- pure codec tests (run under Miri) --------------------------
+
+    #[test]
+    fn record_roundtrip() {
+        let add = ManifestRecord::AddRun(meta(7));
+        assert_eq!(decode_record(&encode_record(&add)).unwrap(), add);
+        let rep = ManifestRecord::Replace { removed: vec![1, 2, 5], added: meta(9) };
+        assert_eq!(decode_record(&encode_record(&rep)).unwrap(), rep);
+        let none = ManifestRecord::Replace { removed: vec![], added: meta(0) };
+        assert_eq!(decode_record(&encode_record(&none)).unwrap(), none);
+        assert!(decode_record(&[]).is_err());
+        assert!(decode_record(&[99, 0, 0]).is_err());
+        let mut short = encode_record(&add);
+        short.pop();
+        assert!(decode_record(&short).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_tolerate_torn_tail() {
+        let recs = vec![
+            ManifestRecord::AddRun(meta(0)),
+            ManifestRecord::AddRun(meta(1)),
+            ManifestRecord::Replace { removed: vec![0, 1], added: meta(2) },
+        ];
+        let mut bytes = Vec::new();
+        for r in &recs {
+            bytes.extend_from_slice(&encode_frame(r));
+        }
+        let intact = bytes.len();
+        let (back, used) = decode_frames(&bytes);
+        assert_eq!(back, recs);
+        assert_eq!(used, intact);
+
+        // Torn tail: a partially written fourth frame is dropped.
+        let mut torn = bytes.clone();
+        let frame = encode_frame(&ManifestRecord::AddRun(meta(3)));
+        torn.extend_from_slice(&frame[..frame.len() - 5]);
+        let (back, used) = decode_frames(&torn);
+        assert_eq!(back, recs);
+        assert_eq!(used, intact);
+
+        // Corrupt payload byte in the tail frame: checksum rejects it.
+        let mut corrupt = bytes.clone();
+        corrupt.extend_from_slice(&frame);
+        let flip = intact + 6; // inside the fourth frame's payload
+        corrupt[flip] ^= 0x10;
+        let (back, _) = decode_frames(&corrupt);
+        assert_eq!(back, recs);
+
+        // Garbage tail that cannot even frame.
+        let mut junk = bytes;
+        junk.extend_from_slice(&[0xFF, 0xFF]);
+        let (back, used) = decode_frames(&junk);
+        assert_eq!(back, recs);
+        assert_eq!(used, intact);
+    }
+
+    #[test]
+    fn replay_folds_adds_and_replaces() {
+        let live = replay(&[
+            ManifestRecord::AddRun(meta(0)),
+            ManifestRecord::AddRun(meta(1)),
+            ManifestRecord::AddRun(meta(2)),
+            ManifestRecord::Replace { removed: vec![0, 1], added: meta(3) },
+        ]);
+        let ids: Vec<u64> = live.iter().map(|m| m.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    // ---- filesystem tests -------------------------------------------
+
+    #[test]
+    #[cfg(not(miri))]
+    fn write_read_append_rewrite() {
+        let dir = std::env::temp_dir().join(format!("traff-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(MANIFEST_NAME);
+        {
+            let mut w = ManifestWriter::create(&path).unwrap();
+            w.append(&ManifestRecord::AddRun(meta(0))).unwrap();
+            w.append(&ManifestRecord::AddRun(meta(1))).unwrap();
+        }
+        {
+            let mut w = ManifestWriter::open_append(&path).unwrap();
+            w.append(&ManifestRecord::Replace { removed: vec![0, 1], added: meta(2) }).unwrap();
+        }
+        let recs = read_manifest(&path).unwrap();
+        assert_eq!(recs.len(), 3);
+        let live = replay(&recs);
+        assert_eq!(live, vec![meta(2)]);
+
+        // Rewrite compacts to the live set only.
+        rewrite(&path, &live).unwrap();
+        let recs = read_manifest(&path).unwrap();
+        assert_eq!(recs, vec![ManifestRecord::AddRun(meta(2))]);
+        assert!(!path.with_extension("tmp").exists());
+
+        // A non-manifest file is an error, not an empty log.
+        let bogus = dir.join("bogus");
+        std::fs::write(&bogus, b"what even is this").unwrap();
+        assert!(read_manifest(&bogus).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,61 +1,81 @@
-//! `stream` — the streaming run-merge subsystem: an out-of-core
-//! sorted-run store with background compaction on the executor's QoS
-//! lanes.
+//! `stream` — the streaming run-merge subsystem: a durable, paged,
+//! restartable sorted-run store with k-way background compaction on
+//! the executor's QoS lanes.
 //!
 //! Everything below this module used to be batch-shaped: a job's data
 //! had to fit in memory and arrive whole before `MergeService::sort`
-//! touched it. This layer decouples **total data size from job size**:
-//! unbounded record streams buffer into bounded runs, and every heavy
-//! operation — run sort, pairwise compaction — is a bounded job on the
-//! shared executor.
+//! touched it. This layer decouples **total data size from job size**
+//! twice over: unbounded record streams buffer into bounded runs, and
+//! every heavy operation — run sort, k-way compaction, scan — streams
+//! fixed-size pages, so no run is ever whole in memory.
 //!
 //! ```text
 //!            push/push_key             seal (sorted, gen-stamped)
-//! records ──► [ingest::Ingestor] ─────► [store::RunStore]  ◄─ snapshot ─ [reader]
-//!              bounded buffer           leveled Arc<Run> list              scan /
-//!              (core::sort seals        lock-free gen clock + stats        scan_iter
-//!               stably in parallel)        │ claim (CAS)                  (loser-tree
-//!                                          ▼                               heads)
-//!                                    [compact] co-rank partition
-//!                                      (core::ranks, §2) ──► segment merges as
-//!                                                            JobClass::Background
-//!                                                            on crate::exec
+//! records ──► [ingest::Ingestor] ─────► [store::RunStore] ◄─ snapshot ── [reader]
+//!              bounded buffer            leveled Arc<Run> list            scan /
+//!              (core::sort seals         gen clock · CAS claim            scan_iter
+//!               stably in parallel)         │         │                  (1 page/run
+//!                                           │         ▼                   resident)
+//!                    [page] fixed pages     │   [policy] picks a
+//!                    + min/max index        │   gen-contiguous window
+//!                    [manifest] append-only │         │
+//!                    fsync'd log — recovery │         ▼
+//!                    replays it on restart  └──► [compact] streaming k-way
+//!                    ([`RunStore::recover`])     merge: co-rank rounds (§2/§3)
+//!                                                as JobClass::Background jobs
 //! ```
 //!
 //! The paper connection: [`compact`] is the §2 co-rank split doing
-//! LSM-compaction work — each run pair is carved into independent,
-//! stably mergeable segments by `2(p+1)` binary searches, and the
-//! segments run as one background-lane parallel phase, so service
-//! traffic keeps its latency while the store compacts (bench E10).
+//! LSM-compaction work. A picked window of k runs is merged in ONE
+//! pass — `ceil(log2 k)` levels of the simplified two-way merge, each
+//! level a single background-lane parallel phase
+//! ([`crate::core::multiway`]) — instead of k−1 pairwise rewrites, and
+//! the driver streams input/output pages so the merge runs out-of-core
+//! (bench E10). Service traffic keeps its latency while the store
+//! compacts.
+//!
+//! Durability (spilled stores): run files are page-formatted
+//! ([`page`]) and published in two fsync'd steps — the run file is
+//! synced before its manifest record is appended, and the manifest
+//! record is synced before the run becomes visible in memory. The
+//! [`manifest`] is an append-only checksummed log of `AddRun`/`Replace`
+//! records; [`RunStore::recover`] replays it, tolerates a torn tail,
+//! deletes orphaned run files, and restores the exact leveled run
+//! list — a SIGKILL at any point loses only unsealed buffered records.
 //!
 //! Stability end to end (property-tested below): the seal sort is
 //! stable, the store's generation clock orders runs by arrival, the
-//! compactor only merges generation-adjacent pairs (older run first on
-//! ties), and readers resolve ties to the older generation — so
-//! duplicate keys emerge from any seal/compact/scan schedule in exact
-//! ingest order.
+//! compactor only merges generation-contiguous windows (older run
+//! first on ties), and readers resolve ties to the older generation —
+//! so duplicate keys emerge from any seal/compact/scan/recover
+//! schedule in exact ingest order.
 //!
-//! Spill: with [`StreamConfig::spill`] set, sealed and compacted runs
-//! live as fixed-width binary files under the configured temp dir and
-//! are loaded on demand (see [`run`]); without it the store is purely
-//! in-memory. The service facade is
+//! The service facade is
 //! [`MergeService::ingest`](crate::coordinator::MergeService::ingest) /
 //! [`flush_stream`](crate::coordinator::MergeService::flush_stream) /
 //! [`scan`](crate::coordinator::MergeService::scan), and `repro
-//! stream` drives the mixed ingest + scan + compaction workload.
+//! stream` drives the mixed ingest + scan + compaction workload
+//! (`--recover` restarts from a previous run's spill dir).
 
 pub mod compact;
 pub mod ingest;
+pub mod manifest;
 #[cfg(all(test, feature = "model"))]
 mod model_tests;
+pub mod page;
+pub mod policy;
 pub mod reader;
 pub mod run;
 pub mod store;
 
-pub use compact::{compact_once, compact_to_one, merge_runs_parallel, merge_runs_sequential};
+pub use compact::{
+    compact_once, compact_to_one, kway_merge_to_vec, merge_runs_parallel, merge_runs_sequential,
+};
 pub use ingest::Ingestor;
+pub use manifest::RunMeta;
+pub use policy::{CompactionPolicy, PolicyKind};
 pub use reader::{scan, scan_iter, ScanIter};
-pub use run::Run;
+pub use run::{Run, RunCursor};
 pub use store::{CompactionStats, RunStore, StoreStats};
 
 use std::path::PathBuf;
@@ -67,16 +87,25 @@ pub struct StreamConfig {
     /// working set per ingest stream).
     pub run_capacity: usize,
     /// Live-run backlog tolerated before the compaction policy
-    /// triggers ([`RunStore::needs_compaction`]).
+    /// triggers ([`RunStore::needs_compaction`]); also the width cap
+    /// for a policy-picked k-way window.
     pub fanout: usize,
     /// Parallelism granularity for seal sorts and compaction merges
     /// (the `p` handed to the paper's algorithms; the process-wide
     /// executor still bounds real concurrency).
     pub threads: usize,
-    /// Spill directory: `Some(dir)` stores runs as binary files under
-    /// `dir` (created on demand, cleaned up on drop), `None` keeps
-    /// them in memory.
+    /// Spill directory: `Some(dir)` stores runs as paged binary files
+    /// under `dir` with an fsync'd manifest (durable — survives
+    /// restart via [`RunStore::recover`]), `None` keeps them in
+    /// memory.
     pub spill: Option<PathBuf>,
+    /// Records per page in spilled run files — the granularity of
+    /// cursor reads and the per-run resident bound for scans and
+    /// compactions.
+    pub page_records: usize,
+    /// Which compaction policy picks the next window
+    /// ([`policy::PolicyKind`]).
+    pub policy: PolicyKind,
 }
 
 impl Default for StreamConfig {
@@ -86,6 +115,8 @@ impl Default for StreamConfig {
             fanout: 4,
             threads: crate::util::num_cpus(),
             spill: None,
+            page_records: 1024,
+            policy: PolicyKind::AdjacentPair,
         }
     }
 }
@@ -122,7 +153,7 @@ mod tests {
                     run_capacity: cap,
                     fanout: 4,
                     threads: 2,
-                    spill: None,
+                    ..StreamConfig::default()
                 })
                 .unwrap(),
             );
@@ -154,6 +185,44 @@ mod tests {
         }
     }
 
+    /// Every policy preserves the stable-scan contract at every
+    /// compaction depth (the window *choice* differs; the merge result
+    /// must not).
+    #[test]
+    fn all_policies_preserve_the_stable_scan() {
+        let (n, cap) = if cfg!(miri) { (48, 6) } else { (3_000, 128) };
+        let keys = raw_keys(Dist::DupHeavy(8), n, 0xB0B);
+        let expect = oracle(&keys);
+        for kind in
+            [PolicyKind::AdjacentPair, PolicyKind::SizeTiered, PolicyKind::OverlapAware]
+        {
+            let store = Arc::new(
+                RunStore::new(StreamConfig {
+                    run_capacity: cap,
+                    fanout: 4,
+                    threads: 2,
+                    policy: kind,
+                    ..StreamConfig::default()
+                })
+                .unwrap(),
+            );
+            let mut ing = Ingestor::new(Arc::clone(&store));
+            for &k in &keys {
+                ing.push_key(k).unwrap();
+            }
+            ing.flush().unwrap();
+            while compact_once(&store, 2).unwrap().is_some() {}
+            assert_eq!(pairs(&scan(&store).unwrap()), expect, "policy {}", kind.name());
+            compact_to_one(&store, 2).unwrap();
+            assert_eq!(
+                pairs(&scan(&store).unwrap()),
+                expect,
+                "policy {} fully compacted",
+                kind.name()
+            );
+        }
+    }
+
     /// The acceptance shape end to end at the library layer: total
     /// ingested data exceeds the per-run buffer by >= 8x, compaction
     /// runs concurrently with scans, and the final scan is globally
@@ -169,7 +238,7 @@ mod tests {
                 run_capacity: cap,
                 fanout: 3,
                 threads: 2,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         );
@@ -191,24 +260,28 @@ mod tests {
         assert!(store.stats().compactions > 0, "compaction must have run");
     }
 
-    /// Spill-to-disk round trip: the same pipeline with runs on disk.
+    /// Spill-to-disk round trip with durable restart: the paged
+    /// pipeline matches the in-memory oracle, the files survive the
+    /// store's drop, and [`RunStore::recover`] restores the identical
+    /// stable view.
     #[test]
     #[cfg(not(miri))]
-    fn spilled_pipeline_matches_memory_pipeline() {
+    fn spilled_pipeline_is_durable_across_restart() {
         let dir = std::env::temp_dir()
             .join(format!("traff-stream-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let keys = raw_keys(Dist::DupHeavy(16), 2_000, 5);
         let expect = oracle(&keys);
+        let cfg = StreamConfig {
+            run_capacity: 128,
+            fanout: 3,
+            threads: 2,
+            spill: Some(dir.clone()),
+            page_records: 64,
+            ..StreamConfig::default()
+        };
         {
-            let store = Arc::new(
-                RunStore::new(StreamConfig {
-                    run_capacity: 128,
-                    fanout: 3,
-                    threads: 2,
-                    spill: Some(dir.clone()),
-                })
-                .unwrap(),
-            );
+            let store = Arc::new(RunStore::new(cfg.clone()).unwrap());
             let mut ing = Ingestor::new(Arc::clone(&store));
             for &k in &keys {
                 ing.push_key(k).unwrap();
@@ -220,8 +293,12 @@ mod tests {
             compact_to_one(&store, 2).unwrap();
             assert_eq!(pairs(&scan(&store).unwrap()), expect);
         }
-        // Store drop removed the spill files and (best effort) the dir.
-        assert!(!dir.exists() || std::fs::read_dir(&dir).map(|mut d| d.next().is_none()).unwrap_or(true));
-        let _ = std::fs::remove_dir(&dir);
+        // Durable: the run files and manifest survive the drop.
+        assert!(dir.join(manifest::MANIFEST_NAME).exists());
+        let recovered = Arc::new(RunStore::recover(cfg).unwrap());
+        assert_eq!(recovered.record_count(), keys.len() as u64);
+        assert_eq!(pairs(&scan(&recovered).unwrap()), expect, "recovered view is identical");
+        drop(recovered);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -10,6 +10,7 @@
 //! consistent, stable view (all records exactly once, equal keys in
 //! generation order).
 
+use super::run::Run;
 use super::store::RunStore;
 use super::StreamConfig;
 use crate::core::record::Record;
@@ -18,7 +19,7 @@ use crate::model::{check_with, Config};
 use std::sync::Arc;
 
 fn mem_config() -> StreamConfig {
-    StreamConfig { run_capacity: 16, fanout: 1, threads: 1, spill: None }
+    StreamConfig { run_capacity: 16, fanout: 1, threads: 1, ..StreamConfig::default() }
 }
 
 /// Equal-key records tagged `tag0..tag0+n`: with every key identical,
@@ -56,13 +57,13 @@ fn model_store_claim_exclusive() {
     assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
 }
 
-/// Compaction claim vs snapshot pin: a compactor merges the first
-/// adjacent pair while a reader snapshots at an arbitrary point. The
-/// snapshot must always be one of the two consistent states (pre- or
-/// post-commit): every record exactly once, equal-key order = seal
-/// order (ascending tags across the `gen_lo`-sorted runs), and the
-/// pinned `Arc<Run>`s stay fully readable even after the commit has
-/// swapped them out of the live list.
+/// Compaction claim vs snapshot pin: a compactor merges the
+/// policy-picked window while a reader snapshots at an arbitrary
+/// point. The snapshot must always be one of the two consistent states
+/// (pre- or post-commit): every record exactly once, equal-key order =
+/// seal order (ascending tags across the `gen_lo`-sorted runs), and
+/// the pinned `Arc<Run>`s stay fully readable even after the commit
+/// has swapped them out of the live list.
 #[test]
 fn model_store_compaction_vs_snapshot() {
     let schedules = check_with(
@@ -77,16 +78,21 @@ fn model_store_compaction_vs_snapshot() {
             let cs = Arc::clone(&store);
             let compactor = thread::spawn(move || {
                 assert!(cs.try_claim_compaction(), "claim is uncontended here");
-                let (a, b) = cs.pick_adjacent_pair().expect("three runs, one pair");
-                // Stable merge of two equal-key runs = older first.
-                let mut merged = a.data().unwrap().to_vec();
-                merged.extend(b.data().unwrap().iter().copied());
-                let stats = cs.commit_compaction(&a, &b, merged).unwrap();
+                let window = cs.pick_window().expect("three runs yield a window");
+                assert_eq!(window.len(), 2, "adjacent-pair default policy");
+                // Stable merge of equal-key runs = generation order.
+                let mut merged = Vec::new();
+                for run in &window {
+                    merged.extend(run.load().unwrap());
+                }
+                let prepared = Run::prepare(merged, None, 1024).unwrap();
+                let stats = cs.commit_compaction(&window, prepared).unwrap();
                 cs.release_compaction();
                 assert_eq!((stats.gen_lo, stats.gen_hi, stats.level), (0, 1, 1));
                 // The inputs we still hold are pinned: fully readable
                 // after the commit removed them from the live list.
-                assert_eq!(a.load().unwrap().len() + b.load().unwrap().len(), 6);
+                let pinned: usize = window.iter().map(|r| r.load().unwrap().len()).sum();
+                assert_eq!(pinned, 6);
             });
 
             let ss = Arc::clone(&store);
@@ -105,7 +111,7 @@ fn model_store_compaction_vs_snapshot() {
                 for run in &snap {
                     assert_eq!(run.gen_lo(), next_gen, "gen-sorted, gap-free");
                     next_gen = run.gen_hi() + 1;
-                    tags.extend(run.data().unwrap().iter().map(|r| r.tag));
+                    tags.extend(run.load().unwrap().iter().map(|r| r.tag));
                 }
                 assert_eq!(next_gen, 3, "snapshot covers every sealed generation");
                 // All nine records exactly once, in stable (seal) order.

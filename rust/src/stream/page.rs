@@ -1,0 +1,447 @@
+//! The paged spill-file format: fixed-size record pages plus a
+//! checksummed per-page key index, so readers can stream one page at a
+//! time instead of materializing a whole run.
+//!
+//! # Layout
+//!
+//! ```text
+//! ┌──────────────────────┐ offset 0
+//! │ header (16 B)        │ magic "TMPG0001" ·· page_records u32 ·· 0 u32
+//! ├──────────────────────┤ offset 16
+//! │ records              │ num_records × 16 B (key i64 LE, tag u64 LE);
+//! │                      │ page i = records [i·page_records, (i+1)·page_records);
+//! │                      │ the last page may be partial, no padding
+//! ├──────────────────────┤ offset 16 + num_records·16
+//! │ page index           │ num_pages × (min_key i64 LE, max_key i64 LE)
+//! ├──────────────────────┤
+//! │ footer (32 B)        │ num_records u64 ·· num_pages u32 ·· page_records u32
+//! │                      │ ·· fnv1a64(index bytes) u64 ·· magic "TMPGEND1"
+//! └──────────────────────┘
+//! ```
+//!
+//! All integers little-endian. The record area is written first and
+//! streamed (a crash mid-write leaves a file without a valid footer —
+//! [`PageFile::open`] rejects it, and the store's manifest never
+//! references it); the index + footer land in one final flush followed
+//! by `fsync`. The footer checksum covers the index, and the index
+//! bounds are revalidated against the record area on open, so a
+//! truncated or torn file is detected rather than read.
+
+use crate::core::record::Record;
+use crate::util::fnv1a64;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::run::{decode_records, RECORD_BYTES};
+
+/// Bytes in the file header.
+pub const HEADER_BYTES: usize = 16;
+/// Bytes per page-index entry (min_key + max_key).
+pub const INDEX_ENTRY_BYTES: usize = 16;
+/// Bytes in the file footer.
+pub const FOOTER_BYTES: usize = 32;
+/// Header magic.
+pub const HEADER_MAGIC: &[u8; 8] = b"TMPG0001";
+/// Footer magic.
+pub const FOOTER_MAGIC: &[u8; 8] = b"TMPGEND1";
+
+/// Per-page key span, resident while the run is live (16 B per page —
+/// the only metadata a scan needs to keep in memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageMeta {
+    /// Smallest key on the page.
+    pub min_key: i64,
+    /// Largest key on the page.
+    pub max_key: i64,
+}
+
+/// Encode the 16-byte header. Pure — unit-tested under Miri.
+pub fn encode_header(page_records: u32) -> [u8; HEADER_BYTES] {
+    let mut out = [0u8; HEADER_BYTES];
+    out[..8].copy_from_slice(HEADER_MAGIC);
+    out[8..12].copy_from_slice(&page_records.to_le_bytes());
+    out
+}
+
+/// Encode the page index. Pure.
+pub fn encode_index(index: &[PageMeta]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(index.len() * INDEX_ENTRY_BYTES);
+    for m in index {
+        out.extend_from_slice(&m.min_key.to_le_bytes());
+        out.extend_from_slice(&m.max_key.to_le_bytes());
+    }
+    out
+}
+
+/// Decode the page index. Pure.
+pub fn decode_index(bytes: &[u8]) -> Result<Vec<PageMeta>, String> {
+    if bytes.len() % INDEX_ENTRY_BYTES != 0 {
+        return Err(format!(
+            "page index corrupt: {} bytes is not a multiple of {INDEX_ENTRY_BYTES}",
+            bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / INDEX_ENTRY_BYTES);
+    for chunk in bytes.chunks_exact(INDEX_ENTRY_BYTES) {
+        let mut lo = [0u8; 8];
+        let mut hi = [0u8; 8];
+        lo.copy_from_slice(&chunk[..8]);
+        hi.copy_from_slice(&chunk[8..]);
+        out.push(PageMeta {
+            min_key: i64::from_le_bytes(lo),
+            max_key: i64::from_le_bytes(hi),
+        });
+    }
+    Ok(out)
+}
+
+/// Encode the 32-byte footer. Pure.
+pub fn encode_footer(num_records: u64, num_pages: u32, page_records: u32, index_checksum: u64) -> [u8; FOOTER_BYTES] {
+    let mut out = [0u8; FOOTER_BYTES];
+    out[..8].copy_from_slice(&num_records.to_le_bytes());
+    out[8..12].copy_from_slice(&num_pages.to_le_bytes());
+    out[12..16].copy_from_slice(&page_records.to_le_bytes());
+    out[16..24].copy_from_slice(&index_checksum.to_le_bytes());
+    out[24..].copy_from_slice(FOOTER_MAGIC);
+    out
+}
+
+/// Decode the footer: `(num_records, num_pages, page_records,
+/// index_checksum)`. Pure.
+pub fn decode_footer(bytes: &[u8]) -> Result<(u64, u32, u32, u64), String> {
+    if bytes.len() != FOOTER_BYTES {
+        return Err(format!("page footer is {} bytes, expected {FOOTER_BYTES}", bytes.len()));
+    }
+    if &bytes[24..] != FOOTER_MAGIC {
+        return Err("page footer magic mismatch (truncated or torn file)".to_string());
+    }
+    let mut b8 = [0u8; 8];
+    let mut b4 = [0u8; 4];
+    b8.copy_from_slice(&bytes[..8]);
+    let num_records = u64::from_le_bytes(b8);
+    b4.copy_from_slice(&bytes[8..12]);
+    let num_pages = u32::from_le_bytes(b4);
+    b4.copy_from_slice(&bytes[12..16]);
+    let page_records = u32::from_le_bytes(b4);
+    b8.copy_from_slice(&bytes[16..24]);
+    let checksum = u64::from_le_bytes(b8);
+    Ok((num_records, num_pages, page_records, checksum))
+}
+
+/// Streaming writer for one paged run file: records are pushed in key
+/// order and buffered through a `BufWriter`; [`PageFileWriter::finish`]
+/// appends the index + footer and fsyncs. On any error the caller
+/// drops the writer and deletes the file — a file without a valid
+/// footer is never published.
+pub struct PageFileWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+    page_records: usize,
+    index: Vec<PageMeta>,
+    len: usize,
+    /// Records on the (partial) current page.
+    in_page: usize,
+    cur_min: i64,
+    cur_max: i64,
+}
+
+impl PageFileWriter {
+    /// Create (truncate) `path` and write the header.
+    pub fn create(path: &Path, page_records: usize) -> Result<PageFileWriter, String> {
+        assert!(page_records > 0, "page_records must be positive");
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("create {}: {e}", path.display()))?;
+        let mut file = std::io::BufWriter::new(file);
+        file.write_all(&encode_header(page_records as u32))
+            .map_err(|e| format!("write header {}: {e}", path.display()))?;
+        Ok(PageFileWriter {
+            file,
+            path: path.to_path_buf(),
+            page_records,
+            index: Vec::new(),
+            len: 0,
+            in_page: 0,
+            cur_min: 0,
+            cur_max: 0,
+        })
+    }
+
+    /// Records written so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one record (must be pushed in key order).
+    pub fn push(&mut self, rec: Record) -> Result<(), String> {
+        debug_assert!(self.in_page > 0 || self.len % self.page_records == 0);
+        if self.in_page == 0 {
+            self.cur_min = rec.key;
+        }
+        debug_assert!(self.in_page == 0 || rec.key >= self.cur_max, "pages hold sorted records");
+        self.cur_max = rec.key;
+        let mut buf = [0u8; RECORD_BYTES];
+        buf[..8].copy_from_slice(&rec.key.to_le_bytes());
+        buf[8..].copy_from_slice(&rec.tag.to_le_bytes());
+        self.file
+            .write_all(&buf)
+            .map_err(|e| format!("write record {}: {e}", self.path.display()))?;
+        self.len += 1;
+        self.in_page += 1;
+        if self.in_page == self.page_records {
+            self.index.push(PageMeta { min_key: self.cur_min, max_key: self.cur_max });
+            self.in_page = 0;
+        }
+        Ok(())
+    }
+
+    /// Append a sorted slice of records.
+    pub fn extend(&mut self, recs: &[Record]) -> Result<(), String> {
+        for &r in recs {
+            self.push(r)?;
+        }
+        Ok(())
+    }
+
+    /// Seal the file: close the partial page, write index + footer,
+    /// flush, fsync. Returns the page index.
+    pub fn finish(mut self) -> Result<Vec<PageMeta>, String> {
+        if self.in_page > 0 {
+            self.index.push(PageMeta { min_key: self.cur_min, max_key: self.cur_max });
+            self.in_page = 0;
+        }
+        let index_bytes = encode_index(&self.index);
+        self.file
+            .write_all(&index_bytes)
+            .map_err(|e| format!("write index {}: {e}", self.path.display()))?;
+        let footer = encode_footer(
+            self.len as u64,
+            self.index.len() as u32,
+            self.page_records as u32,
+            fnv1a64(&index_bytes),
+        );
+        self.file
+            .write_all(&footer)
+            .map_err(|e| format!("write footer {}: {e}", self.path.display()))?;
+        self.file
+            .flush()
+            .map_err(|e| format!("flush {}: {e}", self.path.display()))?;
+        self.file
+            .get_ref()
+            .sync_all()
+            .map_err(|e| format!("fsync {}: {e}", self.path.display()))?;
+        Ok(std::mem::take(&mut self.index))
+    }
+}
+
+/// An opened, validated paged run file: the resident metadata a
+/// [`super::run::Run`] keeps (index + shape); record pages are read on
+/// demand with [`read_page`].
+pub struct PageFile {
+    /// Records per full page.
+    pub page_records: usize,
+    /// Total records in the file.
+    pub num_records: usize,
+    /// Per-page key spans.
+    pub index: Vec<PageMeta>,
+}
+
+impl PageFile {
+    /// Open and validate `path`: magics, shape arithmetic, total file
+    /// size, and the index checksum. Any mismatch (truncation, torn
+    /// write, junk) is an error — recovery treats such files as
+    /// orphans.
+    pub fn open(path: &Path) -> Result<PageFile, String> {
+        let mut file = std::fs::File::open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        let total = file
+            .metadata()
+            .map_err(|e| format!("stat {}: {e}", path.display()))?
+            .len();
+        let min = (HEADER_BYTES + FOOTER_BYTES) as u64;
+        if total < min {
+            return Err(format!(
+                "{}: {total} bytes is smaller than an empty paged run ({min})",
+                path.display()
+            ));
+        }
+        let mut header = [0u8; HEADER_BYTES];
+        file.read_exact(&mut header)
+            .map_err(|e| format!("read header {}: {e}", path.display()))?;
+        if &header[..8] != HEADER_MAGIC {
+            return Err(format!("{}: bad header magic", path.display()));
+        }
+        let mut footer = [0u8; FOOTER_BYTES];
+        file.seek(SeekFrom::End(-(FOOTER_BYTES as i64)))
+            .map_err(|e| format!("seek footer {}: {e}", path.display()))?;
+        file.read_exact(&mut footer)
+            .map_err(|e| format!("read footer {}: {e}", path.display()))?;
+        let (num_records, num_pages, page_records, checksum) =
+            decode_footer(&footer).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut hp = [0u8; 4];
+        hp.copy_from_slice(&header[8..12]);
+        let header_page_records = u32::from_le_bytes(hp);
+        if header_page_records != page_records || page_records == 0 {
+            return Err(format!(
+                "{}: header/footer page size mismatch ({header_page_records} vs {page_records})",
+                path.display()
+            ));
+        }
+        let expect_pages = crate::util::div_ceil(num_records as usize, page_records as usize);
+        if expect_pages != num_pages as usize {
+            return Err(format!(
+                "{}: {num_records} records at {page_records}/page needs {expect_pages} pages, footer says {num_pages}",
+                path.display()
+            ));
+        }
+        let expect_total = (HEADER_BYTES
+            + num_records as usize * RECORD_BYTES
+            + num_pages as usize * INDEX_ENTRY_BYTES
+            + FOOTER_BYTES) as u64;
+        if total != expect_total {
+            return Err(format!(
+                "{}: file is {total} bytes, layout implies {expect_total}",
+                path.display()
+            ));
+        }
+        let index_off = (HEADER_BYTES + num_records as usize * RECORD_BYTES) as u64;
+        file.seek(SeekFrom::Start(index_off))
+            .map_err(|e| format!("seek index {}: {e}", path.display()))?;
+        let mut index_bytes = vec![0u8; num_pages as usize * INDEX_ENTRY_BYTES];
+        file.read_exact(&mut index_bytes)
+            .map_err(|e| format!("read index {}: {e}", path.display()))?;
+        if fnv1a64(&index_bytes) != checksum {
+            return Err(format!("{}: index checksum mismatch (torn write)", path.display()));
+        }
+        let index = decode_index(&index_bytes).map_err(|e| format!("{}: {e}", path.display()))?;
+        // Index sanity: spans sorted and internally consistent.
+        for (i, m) in index.iter().enumerate() {
+            if m.min_key > m.max_key || (i > 0 && index[i - 1].max_key > m.min_key) {
+                return Err(format!("{}: page index not key-sorted at page {i}", path.display()));
+            }
+        }
+        Ok(PageFile { page_records: page_records as usize, num_records: num_records as usize, index })
+    }
+}
+
+/// Read page `page_idx` of an opened run file (records only; the
+/// caller supplies the shape from the validated [`PageFile`]).
+pub fn read_page(
+    file: &mut std::fs::File,
+    page_records: usize,
+    num_records: usize,
+    page_idx: usize,
+) -> Result<Vec<Record>, String> {
+    let start = page_idx * page_records;
+    assert!(start < num_records, "page {page_idx} out of range");
+    let n = page_records.min(num_records - start);
+    let off = (HEADER_BYTES + start * RECORD_BYTES) as u64;
+    file.seek(SeekFrom::Start(off)).map_err(|e| format!("seek page {page_idx}: {e}"))?;
+    let mut bytes = vec![0u8; n * RECORD_BYTES];
+    file.read_exact(&mut bytes).map_err(|e| format!("read page {page_idx}: {e}"))?;
+    decode_records(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn recs(keys: &[i64]) -> Vec<Record> {
+        keys.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect()
+    }
+
+    // ---- pure codec tests (run under Miri) --------------------------
+
+    #[test]
+    fn header_and_footer_roundtrip() {
+        let h = encode_header(1024);
+        assert_eq!(&h[..8], HEADER_MAGIC);
+        let f = encode_footer(5_000, 5, 1024, 0xDEAD_BEEF);
+        assert_eq!(decode_footer(&f).unwrap(), (5_000, 5, 1024, 0xDEAD_BEEF));
+        let mut torn = f;
+        torn[30] ^= 1; // corrupt the magic
+        assert!(decode_footer(&torn).is_err());
+        assert!(decode_footer(&f[..FOOTER_BYTES - 1]).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip_and_corruption() {
+        let index = vec![
+            PageMeta { min_key: -5, max_key: 3 },
+            PageMeta { min_key: 3, max_key: 99 },
+        ];
+        let bytes = encode_index(&index);
+        assert_eq!(bytes.len(), 2 * INDEX_ENTRY_BYTES);
+        assert_eq!(decode_index(&bytes).unwrap(), index);
+        assert!(decode_index(&bytes[..INDEX_ENTRY_BYTES + 3]).is_err());
+        // The checksum catches a flipped index byte.
+        let mut bad = bytes.clone();
+        bad[4] ^= 0x40;
+        assert_ne!(fnv1a64(&bad), fnv1a64(&bytes));
+    }
+
+    // ---- filesystem tests -------------------------------------------
+
+    #[test]
+    #[cfg(not(miri))]
+    fn write_open_read_pages() {
+        let dir = std::env::temp_dir().join(format!("traff-page-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run-pages.bin");
+        let records = recs(&[-9, -9, 0, 1, 1, 2, 5, 5, 5, 8, 11]); // 11 records
+        let mut w = PageFileWriter::create(&path, 4).unwrap();
+        w.extend(&records).unwrap();
+        assert_eq!(w.len(), 11);
+        let index = w.finish().unwrap();
+        assert_eq!(index.len(), 3, "ceil(11/4) pages");
+        assert_eq!(index[0], PageMeta { min_key: -9, max_key: 1 });
+        assert_eq!(index[2], PageMeta { min_key: 5, max_key: 11 - 3 });
+
+        let pf = PageFile::open(&path).unwrap();
+        assert_eq!((pf.page_records, pf.num_records), (4, 11));
+        assert_eq!(pf.index, index);
+        let mut file = std::fs::File::open(&path).unwrap();
+        let mut back = Vec::new();
+        for page in 0..pf.index.len() {
+            back.extend(read_page(&mut file, pf.page_records, pf.num_records, page).unwrap());
+        }
+        let pairs: Vec<(i64, u64)> = back.iter().map(|r| (r.key, r.tag)).collect();
+        let expect: Vec<(i64, u64)> = records.iter().map(|r| (r.key, r.tag)).collect();
+        assert_eq!(pairs, expect);
+        assert_eq!(
+            read_page(&mut file, 4, 11, 2).unwrap().len(),
+            3,
+            "last page is partial"
+        );
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn open_rejects_truncation_and_junk() {
+        let dir = std::env::temp_dir().join(format!("traff-page-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Truncated mid-records (the crash-mid-spill shape).
+        let path = dir.join("truncated.bin");
+        let mut w = PageFileWriter::create(&path, 4).unwrap();
+        w.extend(&recs(&[1, 2, 3, 4, 5, 6, 7, 8])).unwrap();
+        w.finish().unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        assert!(PageFile::open(&path).is_err());
+        // Pure junk.
+        let junk = dir.join("junk.bin");
+        std::fs::write(&junk, b"not a paged run at all, definitely not 48 bytes+").unwrap();
+        assert!(PageFile::open(&junk).is_err());
+        // Too short to even hold header + footer.
+        let tiny = dir.join("tiny.bin");
+        std::fs::write(&tiny, b"TMPG0001").unwrap();
+        assert!(PageFile::open(&tiny).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,289 @@
+//! Pluggable compaction policies: *which* generation-contiguous window
+//! of runs to merge next.
+//!
+//! Buss & Knop ("Strategies for Stable Merge Sorting") make the case
+//! that the merge *schedule* is a first-class lever on total work; for
+//! an LSM-style store the same choice governs write amplification. The
+//! store gives every policy the same contract and the same safety
+//! net:
+//!
+//! - a policy sees the run list **sorted by `gen_lo`** and returns a
+//!   window of **adjacent indices** (length ≥ 2, capped at the
+//!   configured fanout) — generation contiguity is what preserves the
+//!   exact-ingest-order stability invariant, so it is structural here,
+//!   not a policy decision;
+//! - returning `None` means "nothing worth merging"; the store's
+//!   backlog trigger ([`super::store::RunStore::needs_compaction`])
+//!   still decides *when* a policy is consulted.
+//!
+//! Three implementations ship: the PR-5 adjacent-pair rule as the
+//! baseline, a size-tiered policy (merge windows of similarly sized
+//! runs, widest first — k-way merges amortize rewrites), and a
+//! key-range-overlap-aware policy (merge the longest chain of
+//! pairwise-overlapping neighbors — disjoint runs cost a rewrite but
+//! save no scan work).
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::run::Run;
+
+/// A compaction policy picks the next window to merge. Implementations
+/// must return a window `w` with `w.len() >= 2` and
+/// `w.end <= runs.len()`; the store clamps nothing — a bad window is a
+/// bug, caught by `debug_assert` in the store.
+pub trait CompactionPolicy: Send + Sync {
+    /// Human-readable name (CLI/telemetry).
+    fn name(&self) -> &'static str;
+
+    /// Choose a generation-adjacent window of `runs` (sorted by
+    /// `gen_lo`) to merge, at most `fanout` wide.
+    fn pick(&self, runs: &[Arc<Run>], fanout: usize) -> Option<Range<usize>>;
+}
+
+/// Effective window-width cap: at least a pair, even for degenerate
+/// fanout configs.
+fn max_width(runs: &[Arc<Run>], fanout: usize) -> usize {
+    fanout.max(2).min(runs.len())
+}
+
+/// The PR-5 baseline: merge one adjacent pair, preferring key-range
+/// overlap, then the smallest combined size (cheapest useful merge).
+pub struct AdjacentPair;
+
+impl CompactionPolicy for AdjacentPair {
+    fn name(&self) -> &'static str {
+        "adjacent"
+    }
+
+    fn pick(&self, runs: &[Arc<Run>], _fanout: usize) -> Option<Range<usize>> {
+        if runs.len() < 2 {
+            return None;
+        }
+        let mut best: Option<(bool, usize, usize)> = None; // (overlaps, combined, index)
+        for i in 0..runs.len() - 1 {
+            let overlaps = runs[i].overlaps(&runs[i + 1]);
+            let combined = runs[i].len() + runs[i + 1].len();
+            let better = match best {
+                None => true,
+                Some((bo, bc, _)) => {
+                    (overlaps, std::cmp::Reverse(combined)) > (bo, std::cmp::Reverse(bc))
+                }
+            };
+            if better {
+                best = Some((overlaps, combined, i));
+            }
+        }
+        best.map(|(_, _, i)| i..i + 2)
+    }
+}
+
+/// Size-tiered: find windows (up to the fanout) whose runs are within
+/// a 4x size band of each other, and merge the widest such window —
+/// ties broken toward the smallest total bytes. A k-way merge of
+/// similar-size runs does one rewrite where a pairwise cascade does
+/// `k - 1`. Falls back to [`AdjacentPair`] so the store always makes
+/// progress once the backlog trigger fires.
+pub struct SizeTiered;
+
+/// Largest/smallest run-length ratio still considered "one tier".
+const TIER_RATIO: usize = 4;
+
+impl CompactionPolicy for SizeTiered {
+    fn name(&self) -> &'static str {
+        "tiered"
+    }
+
+    fn pick(&self, runs: &[Arc<Run>], fanout: usize) -> Option<Range<usize>> {
+        if runs.len() < 2 {
+            return None;
+        }
+        let cap = max_width(runs, fanout);
+        let mut best: Option<(usize, usize, Range<usize>)> = None; // (width, total, window)
+        for start in 0..runs.len() - 1 {
+            let mut min_len = runs[start].len();
+            let mut max_len = min_len;
+            let mut total = min_len;
+            for end in start + 1..runs.len().min(start + cap) {
+                let l = runs[end].len();
+                min_len = min_len.min(l);
+                max_len = max_len.max(l);
+                total += l;
+                if max_len > TIER_RATIO * min_len {
+                    break; // window left the tier; wider is only worse
+                }
+                let width = end - start + 1;
+                let better = match &best {
+                    None => true,
+                    Some((bw, bt, _)) => width > *bw || (width == *bw && total < *bt),
+                };
+                if better {
+                    best = Some((width, total, start..end + 1));
+                }
+            }
+        }
+        best.map(|(_, _, w)| w).or_else(|| AdjacentPair.pick(runs, fanout))
+    }
+}
+
+/// Key-range-overlap-aware: merge the longest chain of neighbors that
+/// pairwise overlap the next run in the chain (up to the fanout) —
+/// ties broken toward the smallest total size. Merging disjoint runs
+/// rewrites bytes without reducing per-key scan fan-in; this policy
+/// spends its write budget only where key ranges actually interleave.
+/// Falls back to [`AdjacentPair`] when every neighbor pair is
+/// disjoint.
+pub struct OverlapAware;
+
+impl CompactionPolicy for OverlapAware {
+    fn name(&self) -> &'static str {
+        "overlap"
+    }
+
+    fn pick(&self, runs: &[Arc<Run>], fanout: usize) -> Option<Range<usize>> {
+        if runs.len() < 2 {
+            return None;
+        }
+        let cap = max_width(runs, fanout);
+        let mut best: Option<(usize, usize, Range<usize>)> = None; // (width, total, window)
+        for start in 0..runs.len() - 1 {
+            let mut total = runs[start].len();
+            for end in start + 1..runs.len().min(start + cap) {
+                if !runs[end - 1].overlaps(&runs[end]) {
+                    break; // chain broken
+                }
+                total += runs[end].len();
+                let width = end - start + 1;
+                let better = match &best {
+                    None => true,
+                    Some((bw, bt, _)) => width > *bw || (width == *bw && total < *bt),
+                };
+                if better {
+                    best = Some((width, total, start..end + 1));
+                }
+            }
+        }
+        best.map(|(_, _, w)| w).or_else(|| AdjacentPair.pick(runs, fanout))
+    }
+}
+
+/// Config-level policy selector ([`super::StreamConfig::policy`]),
+/// parseable from the CLI's `--policy` flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// [`AdjacentPair`] — the baseline.
+    AdjacentPair,
+    /// [`SizeTiered`].
+    SizeTiered,
+    /// [`OverlapAware`].
+    OverlapAware,
+}
+
+impl PolicyKind {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "adjacent" => Some(PolicyKind::AdjacentPair),
+            "tiered" => Some(PolicyKind::SizeTiered),
+            "overlap" => Some(PolicyKind::OverlapAware),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::AdjacentPair => "adjacent",
+            PolicyKind::SizeTiered => "tiered",
+            PolicyKind::OverlapAware => "overlap",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(self) -> Box<dyn CompactionPolicy> {
+        match self {
+            PolicyKind::AdjacentPair => Box::new(AdjacentPair),
+            PolicyKind::SizeTiered => Box::new(SizeTiered),
+            PolicyKind::OverlapAware => Box::new(OverlapAware),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+
+    /// A level-0 mem run with the given key span and length.
+    fn run(gen: u64, lo: i64, hi: i64, len: usize) -> Arc<Run> {
+        assert!(len >= 2 || lo == hi);
+        let mut records = Vec::with_capacity(len);
+        records.push(Record::new(lo, 0));
+        for i in 1..len.saturating_sub(1) {
+            records.push(Record::new(lo + (hi - lo) / 2, i as u64));
+        }
+        if len > 1 {
+            records.push(Record::new(hi, len as u64 - 1));
+        }
+        Arc::new(Run::create(records, gen, gen, 0, None, 1024).unwrap())
+    }
+
+    #[test]
+    fn adjacent_pair_prefers_overlap_then_smallest() {
+        // (0) [0,5]x2  (1) [10,20]x2  (2) [15,30]x2 — only 1-2 overlap.
+        let runs = vec![run(0, 0, 5, 2), run(1, 10, 20, 2), run(2, 15, 30, 2)];
+        assert_eq!(AdjacentPair.pick(&runs, 4), Some(1..3));
+        // All disjoint: pick the smallest combined pair.
+        let runs = vec![run(0, 0, 1, 8), run(1, 10, 11, 2), run(2, 20, 21, 2)];
+        assert_eq!(AdjacentPair.pick(&runs, 4), Some(1..3));
+        assert_eq!(AdjacentPair.pick(&runs[..1], 4), None);
+    }
+
+    #[test]
+    fn size_tiered_merges_widest_similar_window() {
+        // A big old run and four small fresh ones: the tier is 1..5.
+        let runs = vec![
+            run(0, 0, 100, 1000),
+            run(1, 0, 10, 8),
+            run(2, 5, 15, 10),
+            run(3, 8, 30, 16),
+            run(4, 2, 9, 12),
+        ];
+        assert_eq!(SizeTiered.pick(&runs, 8), Some(1..5));
+        // Fanout caps the window width.
+        assert_eq!(SizeTiered.pick(&runs, 3), Some(1..4));
+        // Nothing in one tier: falls back to the adjacent-pair rule.
+        let skewed = vec![run(0, 0, 9, 1000), run(1, 0, 9, 100), run(2, 0, 9, 2)];
+        assert!(skewed[0].len() > TIER_RATIO * skewed[1].len());
+        assert_eq!(SizeTiered.pick(&skewed, 8), AdjacentPair.pick(&skewed, 8));
+    }
+
+    #[test]
+    fn overlap_aware_merges_longest_overlap_chain() {
+        // Chain 0-1-2 overlaps; 3 is disjoint from 2.
+        let runs = vec![
+            run(0, 0, 10, 4),
+            run(1, 5, 20, 4),
+            run(2, 18, 40, 4),
+            run(3, 100, 120, 4),
+        ];
+        assert_eq!(OverlapAware.pick(&runs, 8), Some(0..3));
+        // All disjoint: falls back to the adjacent-pair rule.
+        let disjoint = vec![run(0, 0, 1, 2), run(1, 10, 11, 2), run(2, 20, 21, 2)];
+        assert_eq!(OverlapAware.pick(&disjoint, 8), AdjacentPair.pick(&disjoint, 8));
+    }
+
+    #[test]
+    fn policy_kind_parses_and_builds() {
+        for (s, kind) in [
+            ("adjacent", PolicyKind::AdjacentPair),
+            ("tiered", PolicyKind::SizeTiered),
+            ("overlap", PolicyKind::OverlapAware),
+        ] {
+            assert_eq!(PolicyKind::parse(s), Some(kind));
+            assert_eq!(kind.name(), s);
+            assert_eq!(kind.build().name(), s);
+        }
+        assert_eq!(PolicyKind::parse("leveled"), None);
+    }
+}

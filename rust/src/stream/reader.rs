@@ -1,61 +1,112 @@
-//! Stable merged reads over the live runs — reads-before-compaction.
+//! Stable merged reads over the live runs — reads-before-compaction,
+//! one resident page per run.
 //!
-//! A scan takes a [`RunStore::snapshot`] (the `Arc`s pin the runs, so
-//! a compaction committing mid-scan cannot pull data out from under
-//! it), loads each run's records, and merges the runs' heads with the
-//! k-way machinery from [`crate::core::multiway`]:
+//! A scan takes a [`RunStore::snapshot`] (the `Arc`s pin the runs —
+//! and, via the page files' open handles, the *bytes* of spilled runs
+//! even after a compaction unlinks them — so a commit mid-scan cannot
+//! pull data out from under it) and merges the runs through one
+//! [`RunCursor`] each:
 //!
-//! - [`scan`] materializes the full merge via
-//!   [`loser_tree_merge`] — the one-pass tournament over run heads;
-//! - [`scan_iter`] yields the same sequence lazily ([`ScanIter`]), for
-//!   consumers that stop early or process incrementally.
+//! - [`scan_iter`] yields the merged sequence lazily ([`ScanIter`]),
+//!   holding at most one page per run resident at any time;
+//! - [`scan`] drains the same iterator into a `Vec` for consumers that
+//!   want the whole merge anyway.
 //!
 //! Both are **stable across runs**: the snapshot is ordered by
 //! `gen_lo` and ties resolve to the lower run index — i.e. the older
-//! generation — which, combined with the store's adjacency invariant
+//! generation — which, combined with the store's contiguity invariant
 //! and the stable seal sort, yields duplicate keys in exact ingest
 //! order. Buffered-but-unsealed records are not visible (see
 //! [`super::ingest`]).
+//!
+//! Peak scan memory is `O(runs × page_records)` regardless of run
+//! sizes — [`ScanIter::peak_resident`] reports the high-water mark so
+//! tests can pin the bound.
 
+use super::run::RunCursor;
 use super::store::RunStore;
-use crate::core::multiway::loser_tree_merge;
 use crate::core::record::Record;
+use std::sync::Arc;
 
-/// Materialized stable merged view of the store's live runs. Memory
-/// runs are merged in place (borrowed via [`Run::data`](super::Run::data) —
-/// no per-run clone); only spilled runs are read into temporaries.
+/// Materialized stable merged view of the store's live runs, streamed
+/// through per-run page cursors — a whole run is never resident.
 pub fn scan(store: &RunStore) -> Result<Vec<Record>, String> {
-    let snap = store.snapshot();
-    let data: Vec<std::borrow::Cow<'_, [Record]>> =
-        snap.iter().map(|r| r.data()).collect::<Result<_, _>>()?;
-    let refs: Vec<&[Record]> = data.iter().map(|d| d.as_ref()).collect();
-    Ok(loser_tree_merge(&refs))
+    let mut it = scan_iter(store)?;
+    let mut out = Vec::with_capacity(it.remaining());
+    while let Some(rec) = it.next_record()? {
+        out.push(rec);
+    }
+    Ok(out)
 }
 
-/// Lazy stable merged view of the store's live runs. The iterator
-/// must own its data (it outlives the snapshot it was built from), so
-/// this path pays the per-run copy [`scan`] avoids; prefer [`scan`]
-/// when the whole merge is consumed anyway.
+/// Lazy stable merged view of the store's live runs. The snapshot's
+/// `Arc`s (and open page-file handles) keep every run readable for the
+/// iterator's lifetime, compactions notwithstanding.
 pub fn scan_iter(store: &RunStore) -> Result<ScanIter, String> {
     let snap = store.snapshot();
-    let runs: Vec<Vec<Record>> = snap.iter().map(|r| r.load()).collect::<Result<_, _>>()?;
-    let pos = vec![0usize; runs.len()];
-    Ok(ScanIter { runs, pos })
+    let cursors = snap
+        .into_iter()
+        .map(RunCursor::new)
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(ScanIter { cursors, peak_resident: 0, error: None })
 }
 
-/// Incremental k-way merge over a loaded snapshot: each `next` takes
-/// the minimum head, ties to the lowest run index (the older
+/// Incremental k-way merge over a pinned snapshot: each `next` takes
+/// the minimum buffered head, ties to the lowest run index (the older
 /// generation). `O(k)` per element — the runs-per-scan `k` is bounded
 /// by the compaction fanout, so a heap buys nothing at this shape.
+/// Spilled runs stream page by page; see [`ScanIter::peak_resident`].
 pub struct ScanIter {
-    runs: Vec<Vec<Record>>,
-    pos: Vec<usize>,
+    /// One cursor per snapshotted run, oldest generation first.
+    cursors: Vec<RunCursor>,
+    /// High-water mark of records resident in page buffers.
+    peak_resident: usize,
+    /// First page-read error, latched by the `Iterator` impl (which
+    /// cannot return `Err`); [`ScanIter::next_record`] reports it
+    /// directly.
+    error: Option<String>,
 }
 
 impl ScanIter {
     /// Records remaining to be yielded.
     pub fn remaining(&self) -> usize {
-        self.runs.iter().zip(&self.pos).map(|(r, &p)| r.len() - p).sum()
+        self.cursors.iter().map(|c| c.remaining()).sum()
+    }
+
+    /// High-water mark of records held in page buffers so far — the
+    /// scan-path memory bound (`<= runs × page_records` plus one
+    /// refill). Memory-backed runs count 0 (they borrow the run).
+    pub fn peak_resident(&self) -> usize {
+        self.peak_resident
+    }
+
+    /// The first page-read error swallowed by the `Iterator` impl, if
+    /// any. A scan that ends with `error().is_none()` was complete.
+    pub fn error(&self) -> Option<&str> {
+        self.error.as_deref()
+    }
+
+    /// Yield the next record of the stable merge, or `Err` on a page
+    /// read/decode failure (the fallible twin of `Iterator::next`).
+    pub fn next_record(&mut self) -> Result<Option<Record>, String> {
+        let mut best: Option<usize> = None;
+        for (i, c) in self.cursors.iter().enumerate() {
+            let Some(head) = c.peek() else { continue };
+            best = match best {
+                None => Some(i),
+                // Strict `<` keeps the lowest run index (the older
+                // generation) on ties — the stability order.
+                Some(b) if head.key < self.cursors[b].peek().expect("best has a head").key => {
+                    Some(i)
+                }
+                other => other,
+            };
+        }
+        let Some(i) = best else { return Ok(None) };
+        let rec = self.cursors[i].next_record()?.expect("peeked head");
+        let resident: usize = self.cursors.iter().map(|c| c.resident_records()).sum();
+        self.peak_resident = self.peak_resident.max(resident);
+        Ok(Some(rec))
     }
 }
 
@@ -63,27 +114,22 @@ impl Iterator for ScanIter {
     type Item = Record;
 
     fn next(&mut self) -> Option<Record> {
-        let mut best: Option<usize> = None;
-        for r in 0..self.runs.len() {
-            let i = self.pos[r];
-            if i >= self.runs[r].len() {
-                continue;
-            }
-            best = match best {
-                None => Some(r),
-                // Strict `<` on keys keeps the lowest run index (the
-                // older generation) on ties — the stability order.
-                Some(br) if self.runs[r][i].key < self.runs[br][self.pos[br]].key => Some(r),
-                other => other,
-            };
+        if self.error.is_some() {
+            return None;
         }
-        let r = best?;
-        let rec = self.runs[r][self.pos[r]];
-        self.pos[r] += 1;
-        Some(rec)
+        match self.next_record() {
+            Ok(rec) => rec,
+            Err(e) => {
+                self.error = Some(e);
+                None
+            }
+        }
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
+        if self.error.is_some() {
+            return (0, Some(0));
+        }
         let n = self.remaining();
         (n, Some(n))
     }
@@ -94,7 +140,6 @@ mod tests {
     use super::*;
     use crate::stream::{Ingestor, StreamConfig};
     use crate::util::Rng;
-    use std::sync::Arc;
 
     fn store(cap: usize) -> Arc<RunStore> {
         Arc::new(
@@ -102,7 +147,7 @@ mod tests {
                 run_capacity: cap,
                 fanout: 64,
                 threads: 2,
-                spill: None,
+                ..StreamConfig::default()
             })
             .unwrap(),
         )
@@ -158,5 +203,56 @@ mod tests {
             scan(&store).unwrap().iter().map(|r| (r.key, r.tag)).collect();
         let pinned: Vec<(i64, u64)> = before.map(|r| (r.key, r.tag)).collect();
         assert_eq!(pinned, after, "pre-compaction snapshot reads the same data");
+    }
+
+    /// Satellite regression: scanning a spilled store must never
+    /// materialize whole runs — peak resident page memory stays at
+    /// O(runs × page_records), far below the total record count.
+    #[test]
+    #[cfg(not(miri))]
+    fn spilled_scan_memory_stays_paged() {
+        let dir = std::env::temp_dir().join(format!("traff-scan-mem-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let page = 32usize;
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 1000,
+                fanout: 64,
+                threads: 2,
+                spill: Some(dir.clone()),
+                page_records: page,
+                ..StreamConfig::default()
+            })
+            .unwrap(),
+        );
+        let mut ing = Ingestor::new(Arc::clone(&store));
+        let mut rng = Rng::new(31);
+        let n = 5000;
+        for _ in 0..n {
+            ing.push_key(rng.range(0, 1000)).unwrap();
+        }
+        ing.flush().unwrap();
+        let runs = store.run_count();
+        assert!(runs >= 5);
+        let mut it = scan_iter(&store).unwrap();
+        let mut count = 0usize;
+        while it.next_record().unwrap().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, n);
+        // One page per run, plus one page of slack for the eager
+        // refill at a page boundary.
+        let bound = runs * page + page;
+        assert!(
+            it.peak_resident() <= bound,
+            "peak resident {} exceeds paged bound {}",
+            it.peak_resident(),
+            bound
+        );
+        assert!(it.peak_resident() < n / 4, "must be far below whole-store materialization");
+        drop(it);
+        drop(ing);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -7,24 +7,37 @@
 //! sealed run has `gen_lo == gen_hi`; a compacted run covers the union
 //! of its inputs' ranges. The generation range is the stability
 //! anchor: readers order runs by `gen_lo`, and the compactor only ever
-//! merges runs whose ranges are adjacent in that order, so "older
+//! merges generation-contiguous windows in that order, so "older
 //! generation" remains a total order over equal keys end to end (see
-//! [`super::store`] for the adjacency invariant).
+//! [`super::store`] for the contiguity invariant).
 //!
-//! Storage is either in-memory or **spilled** to a fixed-width binary
-//! file under the store's temp dir (16 bytes per record: `key` i64 LE,
-//! `tag` u64 LE). Spilled runs keep only their metadata (length,
-//! generation range, level, key span) resident; [`Run::load`] reads
-//! the records back on demand. A disk run deletes its file on drop.
+//! Storage is either in-memory or **spilled** as a paged file
+//! (`run-{id}.bin`, format in [`super::page`]): fixed-size record
+//! pages plus a checksummed per-page min/max-key index. A spilled run
+//! keeps only its metadata and page index resident; records are read
+//! one page at a time through a [`RunCursor`], so scan and compaction
+//! memory is O(pages buffered), never O(run). [`Run::open`] reopens a
+//! spilled run from its manifest [`RunMeta`] on recovery.
+//!
+//! Spill files are deleted when the last reference drops **only** if
+//! the run was never published to the manifest (or was compacted
+//! away): the store flips [`Run::set_delete_on_drop`] off at
+//! manifest-publication time and back on when a compaction retires the
+//! run — see the lifecycle diagram in ARCHITECTURE.md.
 
 use crate::core::record::Record;
+use crate::model::sync::{AtomicBool, AtomicU64, Ordering};
 use std::path::{Path, PathBuf};
-use crate::model::sync::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::manifest::RunMeta;
+use super::page::{self, PageFileWriter, PageMeta};
 
 /// Bytes per record in the spill encoding (i64 key + u64 tag, LE).
 pub const RECORD_BYTES: usize = 16;
 
 /// Encode records into the fixed-width spill representation.
+#[cfg_attr(not(test), allow(dead_code))]
 pub(crate) fn encode_records(records: &[Record]) -> Vec<u8> {
     let mut out = Vec::with_capacity(records.len() * RECORD_BYTES);
     for r in records {
@@ -53,19 +66,50 @@ pub(crate) fn decode_records(bytes: &[u8]) -> Result<Vec<Record>, String> {
     Ok(out)
 }
 
-/// Process-wide spill-file name allocator (distinct from the store's
-/// generation clock so re-compacted ranges never collide on a name).
+/// Process-wide run-id allocator (distinct from the store's generation
+/// clock so re-compacted ranges never collide on a file name). Bumped
+/// past recovered ids by [`bump_file_seq`].
 static FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Ensure future run ids are `>= min_next` (recovery calls this with
+/// `max recovered id + 1` so new spill files never collide with live
+/// ones).
+pub(crate) fn bump_file_seq(min_next: u64) {
+    FILE_SEQ.fetch_max(min_next, Ordering::Relaxed);
+}
 
 enum Storage {
     /// Records resident in memory.
     Mem(Vec<Record>),
-    /// Records spilled to `path`; only metadata stays resident.
-    Disk(PathBuf),
+    /// Records spilled to a paged file; only the page index stays
+    /// resident.
+    Disk {
+        path: PathBuf,
+        page_records: usize,
+        index: Vec<PageMeta>,
+        /// Whether dropping the last reference deletes the file.
+        /// `true` until the run is published to the manifest; flipped
+        /// back on when a compaction retires it.
+        delete_on_drop: AtomicBool,
+    },
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if let Storage::Disk { path, delete_on_drop, .. } = self {
+            if delete_on_drop.load(Ordering::Relaxed) {
+                // Best effort: a leaked spill file is a disk-space
+                // leak (and recovery deletes it as an orphan), not a
+                // correctness problem.
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
 }
 
 /// One immutable sorted run. See the module docs.
 pub struct Run {
+    id: u64,
     gen_lo: u64,
     gen_hi: u64,
     level: u32,
@@ -75,13 +119,14 @@ pub struct Run {
     storage: Storage,
 }
 
-/// A run with its storage materialized (spill write already done) but
-/// no generation assigned yet. Lets the store do the I/O-heavy part
-/// OUTSIDE its list lock and then allocate the generation + insert
-/// atomically under it — a stalled seal can therefore never interleave
-/// an old generation into a list a compaction has since rewritten
-/// (the disjoint-generation-range invariant, see [`super::store`]).
+/// A run with its storage materialized (spill write + fsync already
+/// done) but no generation assigned yet. Lets the store do the
+/// I/O-heavy part OUTSIDE its list lock and then allocate the
+/// generation + append the manifest record + insert atomically under
+/// it. Dropping a `PreparedRun` before publication deletes its spill
+/// file (the file was never referenced by the manifest).
 pub(crate) struct PreparedRun {
+    id: u64,
     len: usize,
     min_key: i64,
     max_key: i64,
@@ -92,6 +137,7 @@ impl PreparedRun {
     /// Stamp the generation range and level, completing the run.
     pub(crate) fn into_run(self, gen_lo: u64, gen_hi: u64, level: u32) -> Run {
         Run {
+            id: self.id,
             gen_lo,
             gen_hi,
             level,
@@ -104,7 +150,128 @@ impl PreparedRun {
 
     /// Whether the prepared storage is spilled to disk.
     pub(crate) fn is_spilled(&self) -> bool {
-        matches!(self.storage, Storage::Disk(_))
+        matches!(self.storage, Storage::Disk { .. })
+    }
+}
+
+/// Incremental builder for one run's storage: records are pushed in
+/// key order and either buffered in memory or streamed straight into a
+/// paged spill file — the compactor's output path never materializes a
+/// merged run in RAM. [`RunWriter::finish`] yields a [`PreparedRun`].
+pub(crate) struct RunWriter {
+    id: u64,
+    page_records: usize,
+    first_key: i64,
+    last_key: i64,
+    inner: WriterInner,
+}
+
+enum WriterInner {
+    Mem(Vec<Record>),
+    Disk { writer: PageFileWriter, path: PathBuf },
+}
+
+impl RunWriter {
+    /// Start a run: in memory when `spill_dir` is `None`, else as the
+    /// paged file `run-{id}.bin` under `spill_dir`.
+    pub(crate) fn new(
+        spill_dir: Option<&Path>,
+        page_records: usize,
+        cap_hint: usize,
+    ) -> Result<RunWriter, String> {
+        let id = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let inner = match spill_dir {
+            None => WriterInner::Mem(Vec::with_capacity(cap_hint)),
+            Some(dir) => {
+                let path = dir.join(format!("run-{id}.bin"));
+                let writer = PageFileWriter::create(&path, page_records)?;
+                WriterInner::Disk { writer, path }
+            }
+        };
+        Ok(RunWriter { id, page_records, first_key: 0, last_key: 0, inner })
+    }
+
+    /// An in-memory writer (never fails).
+    pub(crate) fn mem(cap_hint: usize) -> RunWriter {
+        RunWriter::new(None, 1, cap_hint).expect("mem writer is infallible")
+    }
+
+    /// Records written so far.
+    pub(crate) fn len(&self) -> usize {
+        match &self.inner {
+            WriterInner::Mem(v) => v.len(),
+            WriterInner::Disk { writer, .. } => writer.len(),
+        }
+    }
+
+    /// Append one record (non-decreasing key order).
+    pub(crate) fn push(&mut self, rec: Record) -> Result<(), String> {
+        if self.len() == 0 {
+            self.first_key = rec.key;
+        }
+        debug_assert!(self.len() == 0 || rec.key >= self.last_key, "runs hold key-sorted records");
+        self.last_key = rec.key;
+        match &mut self.inner {
+            WriterInner::Mem(v) => {
+                v.push(rec);
+                Ok(())
+            }
+            WriterInner::Disk { writer, .. } => writer.push(rec),
+        }
+    }
+
+    /// Append a sorted slice.
+    pub(crate) fn extend(&mut self, recs: &[Record]) -> Result<(), String> {
+        if recs.is_empty() {
+            return Ok(());
+        }
+        debug_assert!(self.len() == 0 || recs[0].key >= self.last_key);
+        if self.len() == 0 {
+            self.first_key = recs[0].key;
+        }
+        self.last_key = recs[recs.len() - 1].key;
+        match &mut self.inner {
+            WriterInner::Mem(v) => {
+                v.extend_from_slice(recs);
+                Ok(())
+            }
+            WriterInner::Disk { writer, .. } => writer.extend(recs),
+        }
+    }
+
+    /// Seal the storage (for disk: index + footer + fsync).
+    pub(crate) fn finish(self) -> Result<PreparedRun, String> {
+        let len = self.len();
+        assert!(len > 0, "a run is never empty");
+        let storage = match self.inner {
+            WriterInner::Mem(v) => Storage::Mem(v),
+            WriterInner::Disk { writer, path } => {
+                let index = writer.finish()?;
+                Storage::Disk {
+                    path,
+                    page_records: self.page_records,
+                    index,
+                    delete_on_drop: AtomicBool::new(true),
+                }
+            }
+        };
+        Ok(PreparedRun {
+            id: self.id,
+            len,
+            min_key: self.first_key,
+            max_key: self.last_key,
+            storage,
+        })
+    }
+
+    /// Take the buffered records of an in-memory writer (the
+    /// non-mutating merge path, [`super::compact::kway_merge_to_vec`]).
+    /// Panics on a spilled writer.
+    pub(crate) fn into_records(self) -> Vec<Record> {
+        match self.inner {
+            WriterInner::Mem(v) => v,
+            WriterInner::Disk { .. } => panic!("into_records on a spilled run writer"),
+        }
     }
 }
 
@@ -116,26 +283,27 @@ impl Run {
     pub(crate) fn prepare(
         records: Vec<Record>,
         spill_dir: Option<&Path>,
+        page_records: usize,
     ) -> Result<PreparedRun, String> {
         assert!(!records.is_empty(), "a run is never empty");
         debug_assert!(
             records.windows(2).all(|w| w[0].key <= w[1].key),
             "runs hold key-sorted records"
         );
-        let len = records.len();
-        let min_key = records[0].key;
-        let max_key = records[len - 1].key;
-        let storage = match spill_dir {
-            None => Storage::Mem(records),
-            Some(dir) => {
-                let id = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
-                let path = dir.join(format!("run-{id}.bin"));
-                std::fs::write(&path, encode_records(&records))
-                    .map_err(|e| format!("spill write {}: {e}", path.display()))?;
-                Storage::Disk(path)
+        match spill_dir {
+            None => {
+                let mut w = RunWriter::mem(0);
+                w.first_key = records[0].key;
+                w.last_key = records[records.len() - 1].key;
+                w.inner = WriterInner::Mem(records);
+                w.finish()
             }
-        };
-        Ok(PreparedRun { len, min_key, max_key, storage })
+            Some(dir) => {
+                let mut w = RunWriter::new(Some(dir), page_records, records.len())?;
+                w.extend(&records)?;
+                w.finish()
+            }
+        }
     }
 
     /// [`Run::prepare`] + [`PreparedRun::into_run`] in one step, for
@@ -147,8 +315,69 @@ impl Run {
         gen_hi: u64,
         level: u32,
         spill_dir: Option<&Path>,
+        page_records: usize,
     ) -> Result<Run, String> {
-        Ok(Run::prepare(records, spill_dir)?.into_run(gen_lo, gen_hi, level))
+        Ok(Run::prepare(records, spill_dir, page_records)?.into_run(gen_lo, gen_hi, level))
+    }
+
+    /// Reopen a spilled run from its manifest record (recovery path):
+    /// validates the paged file's magics, checksum, and shape, then
+    /// cross-checks length and key span against the manifest. The
+    /// reopened run does NOT delete its file on drop — it is
+    /// manifest-published by definition.
+    pub(crate) fn open(meta: &RunMeta, dir: &Path) -> Result<Run, String> {
+        let path = dir.join(format!("run-{}.bin", meta.id));
+        let pf = page::PageFile::open(&path)?;
+        if pf.num_records as u64 != meta.len || pf.num_records == 0 {
+            return Err(format!(
+                "{}: holds {} records, manifest says {}",
+                path.display(),
+                pf.num_records,
+                meta.len
+            ));
+        }
+        let (min_key, max_key) = (pf.index[0].min_key, pf.index[pf.index.len() - 1].max_key);
+        if (min_key, max_key) != (meta.min_key, meta.max_key) {
+            return Err(format!(
+                "{}: key span {min_key}..={max_key} disagrees with manifest {}..={}",
+                path.display(),
+                meta.min_key,
+                meta.max_key
+            ));
+        }
+        Ok(Run {
+            id: meta.id,
+            gen_lo: meta.gen_lo,
+            gen_hi: meta.gen_hi,
+            level: meta.level,
+            len: pf.num_records,
+            min_key,
+            max_key,
+            storage: Storage::Disk {
+                path,
+                page_records: pf.page_records,
+                index: pf.index,
+                delete_on_drop: AtomicBool::new(false),
+            },
+        })
+    }
+
+    /// Spill-file id (also the manifest identity).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The manifest record describing this run.
+    pub fn meta(&self) -> RunMeta {
+        RunMeta {
+            id: self.id,
+            gen_lo: self.gen_lo,
+            gen_hi: self.gen_hi,
+            level: self.level,
+            len: self.len as u64,
+            min_key: self.min_key,
+            max_key: self.max_key,
+        }
     }
 
     /// Oldest seal generation this run covers (the reader's sort key).
@@ -189,60 +418,57 @@ impl Run {
 
     /// Whether this run is spilled to disk.
     pub fn is_spilled(&self) -> bool {
-        matches!(self.storage, Storage::Disk(_))
+        matches!(self.storage, Storage::Disk { .. })
     }
 
-    /// Key-range overlap test — the compactor prefers overlapping
-    /// pairs (merging disjoint runs is legal but pure copying).
+    /// Key-range overlap test — compaction policies prefer overlapping
+    /// windows (merging disjoint runs is legal but pure copying).
     pub fn overlaps(&self, other: &Run) -> bool {
         self.min_key <= other.max_key && other.min_key <= self.max_key
     }
 
-    /// The run's records without copying, borrowed for memory runs
-    /// and read + decoded for spilled ones. This is what [`scan`]
-    /// (`super::reader`) and the compactor use — an in-memory store
-    /// never pays a per-run clone on the read/compact path. Callers
-    /// that must OWN the data (e.g. [`super::reader::ScanIter`])
-    /// use [`Run::load`].
-    ///
-    /// [`scan`]: super::reader::scan
-    pub fn data(&self) -> Result<std::borrow::Cow<'_, [Record]>, String> {
+    /// Set whether dropping the last reference deletes the spill file.
+    /// No-op for memory runs. See the module docs for the lifecycle.
+    pub(crate) fn set_delete_on_drop(&self, delete: bool) {
+        if let Storage::Disk { delete_on_drop, .. } = &self.storage {
+            delete_on_drop.store(delete, Ordering::Relaxed);
+        }
+    }
+
+    /// Number of pages a cursor will read (0 for memory runs, whose
+    /// cursor borrows the resident records directly).
+    pub fn num_pages(&self) -> usize {
         match &self.storage {
-            Storage::Mem(records) => Ok(std::borrow::Cow::Borrowed(records.as_slice())),
-            Storage::Disk(_) => Ok(std::borrow::Cow::Owned(self.load()?)),
+            Storage::Mem(_) => 0,
+            Storage::Disk { index, .. } => index.len(),
         }
     }
 
     /// Materialize an owned copy of the run's records (clone for
-    /// memory runs, read + decode for spilled runs). Prefer
-    /// [`Run::data`] wherever a borrow suffices.
+    /// memory runs, sequential page reads for spilled runs). This is
+    /// the ONE whole-run materialization left, for callers that truly
+    /// need a `Vec` (tests, oracles, the model checker); scans and
+    /// compaction stream through [`RunCursor`] instead.
     pub fn load(&self) -> Result<Vec<Record>, String> {
         match &self.storage {
             Storage::Mem(records) => Ok(records.clone()),
-            Storage::Disk(path) => {
-                let bytes = std::fs::read(path)
+            Storage::Disk { path, page_records, index, .. } => {
+                let mut file = std::fs::File::open(path)
                     .map_err(|e| format!("spill read {}: {e}", path.display()))?;
-                let records = decode_records(&bytes)?;
-                if records.len() != self.len {
+                let mut out = Vec::with_capacity(self.len);
+                for p in 0..index.len() {
+                    out.extend(page::read_page(&mut file, *page_records, self.len, p)?);
+                }
+                if out.len() != self.len {
                     return Err(format!(
                         "spill file {} holds {} records, expected {}",
                         path.display(),
-                        records.len(),
+                        out.len(),
                         self.len
                     ));
                 }
-                Ok(records)
+                Ok(out)
             }
-        }
-    }
-}
-
-impl Drop for Run {
-    fn drop(&mut self) {
-        if let Storage::Disk(path) = &self.storage {
-            // Best effort: a leaked spill file is a disk-space leak,
-            // not a correctness problem.
-            let _ = std::fs::remove_file(path);
         }
     }
 }
@@ -250,12 +476,140 @@ impl Drop for Run {
 impl std::fmt::Debug for Run {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Run")
+            .field("id", &self.id)
             .field("gen", &(self.gen_lo..=self.gen_hi))
             .field("level", &self.level)
             .field("len", &self.len)
             .field("keys", &(self.min_key..=self.max_key))
             .field("spilled", &self.is_spilled())
             .finish()
+    }
+}
+
+/// A streaming reader over one run: holds the [`Run`] alive (pinning
+/// its spill file even if a concurrent compaction retires and unlinks
+/// it — POSIX keeps the bytes readable through the open fd) and
+/// buffers **one page at a time** for spilled runs. Memory runs are
+/// borrowed in place, so a cursor's resident footprint is
+/// O(page_records), never O(run).
+///
+/// Invariant: `buffered()` is empty iff the cursor is exhausted —
+/// advancing past a page boundary eagerly loads the next page, so
+/// `peek()` is always O(1) on live cursors.
+pub struct RunCursor {
+    run: Arc<Run>,
+    consumed: usize,
+    state: CursorState,
+}
+
+enum CursorState {
+    Mem { pos: usize },
+    Disk { file: std::fs::File, page: Vec<Record>, page_pos: usize, next_page: usize },
+}
+
+impl RunCursor {
+    /// Open a cursor at the start of `run` (loads page 0 of a spilled
+    /// run).
+    pub fn new(run: Arc<Run>) -> Result<RunCursor, String> {
+        let state = match &run.storage {
+            Storage::Mem(_) => CursorState::Mem { pos: 0 },
+            Storage::Disk { path, page_records, .. } => {
+                let mut file = std::fs::File::open(path)
+                    .map_err(|e| format!("cursor open {}: {e}", path.display()))?;
+                let page = page::read_page(&mut file, *page_records, run.len, 0)?;
+                CursorState::Disk { file, page, page_pos: 0, next_page: 1 }
+            }
+        };
+        Ok(RunCursor { run, consumed: 0, state })
+    }
+
+    /// The run this cursor reads.
+    pub fn run(&self) -> &Arc<Run> {
+        &self.run
+    }
+
+    /// The records currently resident, starting at the cursor head.
+    /// Empty iff the cursor is exhausted.
+    pub fn buffered(&self) -> &[Record] {
+        match &self.state {
+            CursorState::Mem { pos } => match &self.run.storage {
+                Storage::Mem(records) => &records[*pos..],
+                Storage::Disk { .. } => unreachable!("mem cursor on disk run"),
+            },
+            CursorState::Disk { page, page_pos, .. } => &page[*page_pos..],
+        }
+    }
+
+    /// The record at the cursor head, if any.
+    pub fn peek(&self) -> Option<Record> {
+        self.buffered().first().copied()
+    }
+
+    /// Whether records beyond `buffered()` exist on disk (false for
+    /// memory runs and for a spilled run's last page).
+    pub fn has_unloaded(&self) -> bool {
+        match &self.state {
+            CursorState::Mem { .. } => false,
+            CursorState::Disk { next_page, .. } => *next_page < self.run.num_pages(),
+        }
+    }
+
+    /// Consume `k <= buffered().len()` records, eagerly loading the
+    /// next page when the current one is drained.
+    pub fn advance_buffered(&mut self, k: usize) -> Result<(), String> {
+        if k == 0 {
+            return Ok(());
+        }
+        assert!(k <= self.buffered().len(), "advance past the buffered window");
+        self.consumed += k;
+        match &mut self.state {
+            CursorState::Mem { pos } => {
+                *pos += k;
+            }
+            CursorState::Disk { file, page, page_pos, next_page } => {
+                *page_pos += k;
+                if *page_pos >= page.len() {
+                    let (page_records, num_pages) = match &self.run.storage {
+                        Storage::Disk { page_records, index, .. } => (*page_records, index.len()),
+                        Storage::Mem(_) => unreachable!("disk cursor on mem run"),
+                    };
+                    if *next_page < num_pages {
+                        *page = page::read_page(file, page_records, self.run.len, *next_page)?;
+                        *page_pos = 0;
+                        *next_page += 1;
+                    } else {
+                        page.clear();
+                        *page_pos = 0;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pop the head record.
+    pub fn next_record(&mut self) -> Result<Option<Record>, String> {
+        match self.peek() {
+            None => Ok(None),
+            Some(r) => {
+                self.advance_buffered(1)?;
+                Ok(Some(r))
+            }
+        }
+    }
+
+    /// Records not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.run.len - self.consumed
+    }
+
+    /// Records this cursor holds in memory right now (0 for memory
+    /// runs — those are borrowed, not copied).
+    pub fn resident_records(&self) -> usize {
+        match &self.state {
+            CursorState::Mem { .. } => 0,
+            CursorState::Disk { page, page_pos, .. } => page.len() - *page_pos,
+        }
     }
 }
 
@@ -267,33 +621,38 @@ mod tests {
         keys.iter().enumerate().map(|(i, &k)| Record::new(k, i as u64)).collect()
     }
 
+    fn pairs(records: &[Record]) -> Vec<(i64, u64)> {
+        records.iter().map(|r| (r.key, r.tag)).collect()
+    }
+
     #[test]
     fn encode_decode_roundtrip() {
         let records = recs(&[-5, 0, 3, 3, i64::MAX]);
         let bytes = encode_records(&records);
         assert_eq!(bytes.len(), records.len() * RECORD_BYTES);
         let back = decode_records(&bytes).unwrap();
-        let pairs: Vec<(i64, u64)> = back.iter().map(|r| (r.key, r.tag)).collect();
-        let expect: Vec<(i64, u64)> = records.iter().map(|r| (r.key, r.tag)).collect();
-        assert_eq!(pairs, expect);
+        assert_eq!(pairs(&back), pairs(&records));
         assert!(decode_records(&bytes[..RECORD_BYTES + 1]).is_err());
     }
 
     #[test]
     fn mem_run_metadata_and_load() {
-        let run = Run::create(recs(&[1, 2, 2, 9]), 4, 4, 0, None).unwrap();
+        let run = Run::create(recs(&[1, 2, 2, 9]), 4, 4, 0, None, 1024).unwrap();
         assert_eq!((run.gen_lo(), run.gen_hi(), run.level(), run.len()), (4, 4, 0, 4));
         assert_eq!((run.min_key(), run.max_key()), (1, 9));
         assert!(!run.is_spilled());
+        assert_eq!(run.num_pages(), 0);
         let data = run.load().unwrap();
         assert_eq!(data.iter().map(|r| r.key).collect::<Vec<_>>(), vec![1, 2, 2, 9]);
+        let m = run.meta();
+        assert_eq!((m.gen_lo, m.gen_hi, m.level, m.len, m.min_key, m.max_key), (4, 4, 0, 4, 1, 9));
     }
 
     #[test]
     fn overlap_detection() {
-        let a = Run::create(recs(&[0, 10]), 0, 0, 0, None).unwrap();
-        let b = Run::create(recs(&[5, 20]), 1, 1, 0, None).unwrap();
-        let c = Run::create(recs(&[11, 30]), 2, 2, 0, None).unwrap();
+        let a = Run::create(recs(&[0, 10]), 0, 0, 0, None, 1024).unwrap();
+        let b = Run::create(recs(&[5, 20]), 1, 1, 0, None, 1024).unwrap();
+        let c = Run::create(recs(&[11, 30]), 2, 2, 0, None, 1024).unwrap();
         assert!(a.overlaps(&b));
         assert!(b.overlaps(&a));
         assert!(!a.overlaps(&c));
@@ -301,26 +660,96 @@ mod tests {
     }
 
     #[test]
+    fn mem_cursor_streams_in_order() {
+        let run = Arc::new(Run::create(recs(&[1, 3, 3, 7]), 0, 0, 0, None, 1024).unwrap());
+        let mut cur = RunCursor::new(run).unwrap();
+        assert_eq!(cur.remaining(), 4);
+        assert_eq!(cur.resident_records(), 0, "memory runs are borrowed, not copied");
+        assert!(!cur.has_unloaded());
+        assert_eq!(cur.peek().map(|r| r.key), Some(1));
+        assert_eq!(cur.buffered().len(), 4);
+        cur.advance_buffered(2).unwrap();
+        assert_eq!(pairs(cur.buffered()), vec![(3, 2), (7, 3)]);
+        assert_eq!(cur.next_record().unwrap().map(|r| (r.key, r.tag)), Some((3, 2)));
+        assert_eq!(cur.next_record().unwrap().map(|r| r.key), Some(7));
+        assert_eq!(cur.next_record().unwrap(), None);
+        assert_eq!((cur.remaining(), cur.peek()), (0, None));
+    }
+
+    #[test]
     #[cfg(not(miri))] // touches the real filesystem
-    fn spilled_run_loads_and_cleans_up() {
+    fn spilled_run_pages_cursor_and_lifecycle() {
         let dir = std::env::temp_dir().join(format!("traff-run-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let records = recs(&[3, 4, 4, 4, 7]);
-        let path;
-        {
-            let run = Run::create(records.clone(), 0, 2, 1, Some(&dir)).unwrap();
-            assert!(run.is_spilled());
-            path = match &run.storage {
-                Storage::Disk(p) => p.clone(),
-                Storage::Mem(_) => unreachable!(),
-            };
-            assert!(path.exists());
-            let back = run.load().unwrap();
-            assert_eq!(back.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
-                       records.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>());
+        let records = recs(&[3, 4, 4, 4, 7, 8, 9, 9, 12, 15, 20]); // 11 records
+        let run = Run::create(records.clone(), 0, 2, 1, Some(&dir), 4).unwrap();
+        assert!(run.is_spilled());
+        assert_eq!(run.num_pages(), 3, "ceil(11/4)");
+        let path = dir.join(format!("run-{}.bin", run.id()));
+        assert!(path.exists());
+        assert_eq!(pairs(&run.load().unwrap()), pairs(&records));
+
+        // Cursor reads one page at a time.
+        let run = Arc::new(run);
+        let mut cur = RunCursor::new(Arc::clone(&run)).unwrap();
+        assert!(cur.has_unloaded());
+        assert!(cur.resident_records() <= 4);
+        let mut streamed = Vec::new();
+        while let Some(r) = cur.next_record().unwrap() {
+            assert!(cur.resident_records() <= 4, "never more than one page resident");
+            streamed.push(r);
         }
-        // Drop removed the spill file.
-        assert!(!path.exists());
+        assert_eq!(pairs(&streamed), pairs(&records));
+        assert!(!cur.has_unloaded());
+
+        // Published runs survive drop; unpublished ones are deleted.
+        run.set_delete_on_drop(false);
+        let meta = run.meta();
+        drop(cur);
+        drop(run);
+        assert!(path.exists(), "manifest-published run file persists");
+
+        // Recovery reopens from the manifest record and cross-checks.
+        let reopened = Run::open(&meta, &dir).unwrap();
+        assert_eq!(reopened.meta(), meta);
+        assert_eq!(pairs(&reopened.load().unwrap()), pairs(&records));
+        let mut bad = meta;
+        bad.len += 1;
+        assert!(Run::open(&bad, &dir).is_err());
+        let mut bad = meta;
+        bad.max_key -= 1;
+        assert!(Run::open(&bad, &dir).is_err());
+
+        reopened.set_delete_on_drop(true); // retired by "compaction"
+        drop(reopened);
+        assert!(!path.exists(), "retired run file is deleted");
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn run_writer_streams_to_disk() {
+        let dir = std::env::temp_dir().join(format!("traff-runw-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = RunWriter::new(Some(&dir), 3, 0).unwrap();
+        w.push(Record::new(-2, 0)).unwrap();
+        w.extend(&recs(&[1, 1, 5, 9])).unwrap();
+        assert_eq!(w.len(), 5);
+        let run = w.finish().unwrap().into_run(7, 9, 2);
+        assert_eq!((run.len(), run.min_key(), run.max_key()), (5, -2, 9));
+        assert_eq!(run.num_pages(), 2);
+        let keys: Vec<i64> = run.load().unwrap().iter().map(|r| r.key).collect();
+        assert_eq!(keys, vec![-2, 1, 1, 5, 9]);
+        drop(run); // unpublished: deletes its file
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn run_writer_mem_into_records() {
+        let mut w = RunWriter::mem(4);
+        w.extend(&recs(&[2, 4, 4])).unwrap();
+        let out = w.into_records();
+        assert_eq!(out.iter().map(|r| r.key).collect::<Vec<_>>(), vec![2, 4, 4]);
     }
 }

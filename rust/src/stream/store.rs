@@ -1,14 +1,14 @@
-//! The leveled run store: live [`Run`]s plus the lock-free bookkeeping
-//! around them.
+//! The leveled run store: live [`Run`]s, the lock-free bookkeeping
+//! around them, and the durability spine (manifest + recovery).
 //!
 //! # Structure
 //!
 //! The store holds the live runs in one `Mutex<Vec<Arc<Run>>>` kept
 //! **sorted by `gen_lo`** — the short-held lock covers only list
-//! surgery (a seal's insert, a compaction's two-out-one-in swap) and
-//! snapshot clones; record data never moves under it. Everything a
-//! concurrent reader or telemetry probe needs is published in
-//! **lock-free state** next to the list:
+//! surgery (a seal's insert, a compaction's window swap) and snapshot
+//! clones; record data never moves under it. Everything a concurrent
+//! reader or telemetry probe needs is published in **lock-free state**
+//! next to the list:
 //!
 //! - the **generation clock** (`next_gen`, a fetch-add): every seal
 //!   takes a unique, monotone generation number — the stability order
@@ -24,27 +24,47 @@
 //!   blocking anyone (losers simply skip — the same try-flag shape as
 //!   the executor's window roll).
 //!
-//! # The adjacency invariant (stability)
+//! # The contiguity invariant (stability)
 //!
 //! Scans order runs by `gen_lo` and resolve equal keys to the earlier
 //! run. For that order to equal ingest order, the generation ranges of
 //! live runs must stay **pairwise disjoint and totally ordered** —
 //! which holds inductively: seals append fresh maximal generations,
-//! and the pair picker (`pick_adjacent_pair`) only offers runs
-//! *adjacent in the `gen_lo`-sorted list* for compaction (no third
-//! run's range can sit between the pair's), so the merged run's union range slots back
-//! into the same total order. Merging a NON-adjacent pair would break
-//! this: a key duplicated in runs `g0`, `g1`, `g2` with `g0`+`g2`
-//! merged (range `[g0, g2]`, sorted before `g1`) would put `g2`'s copy
-//! ahead of `g1`'s on scan.
+//! and every [`super::policy::CompactionPolicy`] returns a window of
+//! runs *contiguous in the `gen_lo`-sorted list* (no third run's range
+//! can sit between two window members), so the merged run's union
+//! range slots back into the same total order. Merging a
+//! NON-contiguous set would break this: a key duplicated in runs `g0`,
+//! `g1`, `g2` with `g0`+`g2` merged (range `[g0, g2]`, sorted before
+//! `g1`) would put `g2`'s copy ahead of `g1`'s on scan.
 //!
-//! Readers take [`RunStore::snapshot`] clones of the `Arc` list;
-//! a compaction commits by swapping the list under the lock, so an
-//! in-flight scan keeps its pre-compaction runs alive and sees a
-//! consistent (if slightly stale) view — reads-before-compaction
-//! semantics.
+//! Readers take [`RunStore::snapshot`] clones of the `Arc` list; a
+//! compaction commits by swapping the list under the lock, so an
+//! in-flight scan keeps its pre-compaction runs alive (their spill
+//! files pinned through open fds even after unlink) and sees a
+//! consistent (if slightly stale) view.
+//!
+//! # Durability (spilled stores only)
+//!
+//! When the store has a spill dir it also keeps an append-only,
+//! checksummed **manifest** ([`super::manifest`]) — the source of
+//! truth for which run files are live. The write protocol is
+//! fsync-before-publish, in two layers: a run file is fully written
+//! and fsynced *before* its manifest record is appended, and the
+//! manifest record is fsynced *before* the run is inserted into (or a
+//! window swapped out of) the in-memory list. A crash therefore leaves
+//! at worst (a) orphan run files never referenced by the manifest and
+//! (b) a torn final manifest record — both of which
+//! [`RunStore::recover`] discards, reconstructing exactly the last
+//! published state. Lock order is always runs-list, then manifest.
+//!
+//! Counter caveat: lifetime counters (`sealed_runs`, `compactions`)
+//! are not persisted; recovery re-seeds `sealed_runs` with the live
+//! run count and restarts the rest from zero.
 
-use super::run::Run;
+use super::manifest::{self, ManifestRecord, ManifestWriter, RunMeta};
+use super::policy::CompactionPolicy;
+use super::run::{bump_file_seq, PreparedRun, Run};
 use super::StreamConfig;
 use crate::core::record::Record;
 use crate::model::sync::{AtomicBool, AtomicU64, Mutex, Ordering};
@@ -58,7 +78,8 @@ pub struct StoreStats {
     pub runs: usize,
     /// Live records right now (invariant under compaction).
     pub records: u64,
-    /// Runs sealed over the store's lifetime.
+    /// Runs sealed over the store's lifetime (re-seeded with the live
+    /// count after a recovery).
     pub sealed_runs: u64,
     /// Compactions committed over the store's lifetime.
     pub compactions: u64,
@@ -77,6 +98,8 @@ pub struct StoreStats {
 pub struct CompactionStats {
     /// Records in the merged output run.
     pub merged_records: usize,
+    /// How many input runs the window merged.
+    pub inputs: usize,
     /// Level of the merged run (`max(inputs) + 1`).
     pub level: u32,
     /// Generation range the merged run covers.
@@ -88,8 +111,14 @@ pub struct CompactionStats {
 /// The leveled run store. See the module docs.
 pub struct RunStore {
     config: StreamConfig,
+    /// The compaction policy ([`StreamConfig::policy`]), instantiated
+    /// once.
+    policy: Box<dyn CompactionPolicy>,
     /// Live runs, sorted by `gen_lo`. Short-held lock; see module docs.
     runs: Mutex<Vec<Arc<Run>>>,
+    /// Manifest appender — `Some` iff the store has a spill dir.
+    /// Locked only AFTER the runs lock (see module docs).
+    manifest: Option<Mutex<ManifestWriter>>,
     /// Generation clock (unique, monotone seal numbers); bumped only
     /// inside [`RunStore::seal`]'s critical section, read lock-free.
     next_gen: AtomicU64,
@@ -104,16 +133,24 @@ pub struct RunStore {
 }
 
 impl RunStore {
-    /// Build a store; creates the spill directory when one is
-    /// configured.
+    /// Build a fresh store; creates the spill directory and a fresh
+    /// (truncated) manifest when a spill dir is configured. Use
+    /// [`RunStore::recover`] to reopen an existing durable store.
     pub fn new(config: StreamConfig) -> Result<RunStore, String> {
-        if let Some(dir) = &config.spill {
-            std::fs::create_dir_all(dir)
-                .map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
-        }
+        let manifest = match &config.spill {
+            None => None,
+            Some(dir) => {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
+                Some(Mutex::new(ManifestWriter::create(&dir.join(manifest::MANIFEST_NAME))?))
+            }
+        };
+        let policy = config.policy.build();
         Ok(RunStore {
             config,
+            policy,
             runs: Mutex::new(Vec::new()),
+            manifest,
             next_gen: AtomicU64::new(0),
             live_runs: AtomicU64::new(0),
             live_records: AtomicU64::new(0),
@@ -125,39 +162,130 @@ impl RunStore {
         })
     }
 
+    /// Reopen a durable store from its spill dir: replay the manifest
+    /// (tolerating a torn tail), reopen every live run (validating
+    /// page checksums and manifest metadata), delete orphan
+    /// `run-*.bin` files, and rewrite a compact manifest. With no
+    /// manifest on disk the result is a fresh empty store.
+    pub fn recover(config: StreamConfig) -> Result<RunStore, String> {
+        let dir = config
+            .spill
+            .clone()
+            .ok_or_else(|| "recover requires a spill dir".to_string())?;
+        std::fs::create_dir_all(&dir).map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
+        let manifest_path = dir.join(manifest::MANIFEST_NAME);
+        if !manifest_path.exists() {
+            return RunStore::new(config);
+        }
+        let log = manifest::read_manifest(&manifest_path)?;
+        let mut live = manifest::replay(&log);
+        live.sort_by_key(|m| m.gen_lo);
+        for w in live.windows(2) {
+            if w[0].gen_hi >= w[1].gen_lo {
+                return Err(format!(
+                    "manifest corrupt: generation ranges overlap ({:?} vs {:?})",
+                    w[0], w[1]
+                ));
+            }
+        }
+        let mut runs = Vec::with_capacity(live.len());
+        for meta in &live {
+            runs.push(Arc::new(Run::open(meta, &dir)?));
+        }
+        // Orphan sweep: every file in the spill dir that is not the
+        // manifest or a live run file is crash debris (an unpublished
+        // spill, a retired run whose unlink never landed, a stray
+        // MANIFEST.tmp).
+        for entry in
+            std::fs::read_dir(&dir).map_err(|e| format!("read spill dir {}: {e}", dir.display()))?
+        {
+            let entry = entry.map_err(|e| format!("read spill dir {}: {e}", dir.display()))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name == manifest::MANIFEST_NAME {
+                continue;
+            }
+            let live_file = name
+                .strip_prefix("run-")
+                .and_then(|s| s.strip_suffix(".bin"))
+                .and_then(|s| s.parse::<u64>().ok())
+                .map_or(false, |id| live.iter().any(|m| m.id == id));
+            if !live_file {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        // Compact the manifest (drops the torn tail + folded history)
+        // and keep appending to the rewritten file.
+        manifest::rewrite(&manifest_path, &live)?;
+        let writer = ManifestWriter::open_append(&manifest_path)?;
+        bump_file_seq(live.iter().map(|m| m.id).max().map_or(0, |id| id + 1));
+        let next_gen = live.iter().map(|m| m.gen_hi + 1).max().unwrap_or(0);
+        let live_records: u64 = live.iter().map(|m| m.len).sum();
+        let count = live.len() as u64;
+        let policy = config.policy.build();
+        Ok(RunStore {
+            config,
+            policy,
+            runs: Mutex::new(runs),
+            manifest: Some(Mutex::new(writer)),
+            next_gen: AtomicU64::new(next_gen),
+            live_runs: AtomicU64::new(count),
+            live_records: AtomicU64::new(live_records),
+            // Best effort: lifetime counters are not persisted.
+            sealed_runs: AtomicU64::new(count),
+            compactions: AtomicU64::new(0),
+            compaction_failures: AtomicU64::new(0),
+            spilled_runs: AtomicU64::new(count),
+            compacting: AtomicBool::new(false),
+        })
+    }
+
     /// The configuration the store (and its tenant ingestors /
     /// compactors) runs under.
     pub fn config(&self) -> &StreamConfig {
         &self.config
     }
 
+    /// The spill directory, when configured.
+    pub(crate) fn spill_dir(&self) -> Option<&std::path::Path> {
+        self.config.spill.as_deref()
+    }
+
     /// Seal a sorted record batch into a fresh level-0 run; returns
     /// its generation, or `None` for an empty batch. Spills when the
     /// store has a spill dir.
     ///
-    /// The spill write (the slow part) happens BEFORE the list lock;
-    /// the generation is allocated and the run inserted *under* it.
-    /// Allocating the generation first (outside the lock) would let a
-    /// stalled seal insert an old generation after a compaction
-    /// merged past it — overlapping ranges, stability broken — so
-    /// generation allocation and insertion are one critical section.
-    /// Fresh generations are therefore maximal and the list stays
-    /// `gen_lo`-sorted by construction.
+    /// The spill write + fsync (the slow part) happens BEFORE the list
+    /// lock; the generation allocation, manifest append, and insertion
+    /// are one critical section. Allocating the generation outside the
+    /// lock would let a stalled seal insert an old generation after a
+    /// compaction merged past it — overlapping ranges, stability
+    /// broken. A manifest-append failure aborts the seal: the
+    /// unpublished run deletes its spill file on drop, and the skipped
+    /// generation leaves a harmless gap in the clock.
     pub fn seal(&self, records: Vec<Record>) -> Result<Option<u64>, String> {
         if records.is_empty() {
             return Ok(None);
         }
         let len = records.len() as u64;
-        let prepared = Run::prepare(records, self.config.spill.as_deref())?;
-        if prepared.is_spilled() {
-            self.spilled_runs.fetch_add(1, Ordering::Relaxed);
-        }
+        let prepared =
+            Run::prepare(records, self.config.spill.as_deref(), self.config.page_records)?;
+        let spilled = prepared.is_spilled();
         let gen = {
             let mut runs = self.runs.lock().unwrap();
             let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
-            runs.push(Arc::new(prepared.into_run(gen, gen, 0)));
+            let run = Arc::new(prepared.into_run(gen, gen, 0));
+            if let Some(m) = &self.manifest {
+                m.lock().unwrap().append(&ManifestRecord::AddRun(run.meta()))?;
+            }
+            // Manifest-published: the file now outlives this process.
+            run.set_delete_on_drop(false);
+            runs.push(run);
             gen
         };
+        if spilled {
+            self.spilled_runs.fetch_add(1, Ordering::Relaxed);
+        }
         self.live_runs.fetch_add(1, Ordering::Relaxed);
         self.live_records.fetch_add(len, Ordering::Relaxed);
         self.sealed_runs.fetch_add(1, Ordering::Relaxed);
@@ -227,92 +355,92 @@ impl RunStore {
         self.compacting.load(Ordering::Relaxed)
     }
 
-    /// Pick the compaction pair: among the ADJACENT pairs of the
-    /// `gen_lo`-sorted live list (the only stability-safe candidates —
-    /// see the module docs), prefer the smallest-combined-length pair
-    /// whose key ranges overlap; with no overlapping pair, the
-    /// smallest pair outright (still correct, it just degenerates to
-    /// concatenation-by-merge). `None` with fewer than two runs.
+    /// Ask the configured policy for the next window to merge: a
+    /// generation-contiguous slice of the live list, at most `fanout`
+    /// wide (see [`super::policy`]). `None` when the policy finds
+    /// nothing worth merging.
     ///
     /// Caller must hold the compaction claim: the returned runs stay
-    /// adjacent because only the claim holder removes runs and seals
-    /// only append maximal generations.
-    pub(crate) fn pick_adjacent_pair(&self) -> Option<(Arc<Run>, Arc<Run>)> {
+    /// contiguous because only the claim holder removes runs and
+    /// seals only append maximal generations.
+    pub(crate) fn pick_window(&self) -> Option<Vec<Arc<Run>>> {
         let runs = self.runs.lock().unwrap();
-        if runs.len() < 2 {
-            return None;
-        }
-        let mut best: Option<(usize, usize, bool)> = None; // (index, combined, overlaps)
-        for i in 0..runs.len() - 1 {
-            let combined = runs[i].len() + runs[i + 1].len();
-            let overlaps = runs[i].overlaps(&runs[i + 1]);
-            let better = match best {
-                None => true,
-                // Overlap beats no-overlap; then smaller combined size.
-                Some((_, bc, bo)) => (overlaps, std::cmp::Reverse(combined))
-                    > (bo, std::cmp::Reverse(bc)),
-            };
-            if better {
-                best = Some((i, combined, overlaps));
-            }
-        }
-        let (i, _, _) = best?;
-        Some((Arc::clone(&runs[i]), Arc::clone(&runs[i + 1])))
+        let w = self.policy.pick(&runs, self.config.fanout)?;
+        debug_assert!(w.len() >= 2 && w.end <= runs.len(), "policy returned a bad window");
+        Some(runs[w].to_vec())
     }
 
-    /// Commit a compaction: replace the adjacent pair `(a, b)` with
-    /// the merged run (level `max + 1`, generation range
-    /// `[a.gen_lo, b.gen_hi]`). Caller must hold the compaction claim
-    /// and `merged` must be the stable merge of the pair (older run's
-    /// records first on ties).
+    /// The whole live list as one window (major compaction /
+    /// [`super::compact::compact_to_one`]); `None` with fewer than two
+    /// runs. Same claim-holder contract as [`RunStore::pick_window`].
+    pub(crate) fn pick_all(&self) -> Option<Vec<Arc<Run>>> {
+        let runs = self.runs.lock().unwrap();
+        if runs.len() < 2 {
+            None
+        } else {
+            Some(runs.clone())
+        }
+    }
+
+    /// Commit a compaction: replace the generation-contiguous window
+    /// `inputs` with the merged run `prepared` (level `max + 1`,
+    /// generation range `[inputs.first.gen_lo, inputs.last.gen_hi]`).
+    /// Caller must hold the compaction claim and `prepared` must be
+    /// the stable merge of the window (older run's records first on
+    /// ties).
+    ///
+    /// Durable stores append a `Replace` manifest record (fsynced)
+    /// before the in-memory swap; the retired inputs delete their
+    /// spill files when the last snapshot reference drops.
     pub(crate) fn commit_compaction(
         &self,
-        a: &Arc<Run>,
-        b: &Arc<Run>,
-        merged: Vec<Record>,
+        inputs: &[Arc<Run>],
+        prepared: PreparedRun,
     ) -> Result<CompactionStats, String> {
-        debug_assert_eq!(merged.len(), a.len() + b.len());
-        let level = a.level().max(b.level()) + 1;
-        let (gen_lo, gen_hi) = (a.gen_lo(), b.gen_hi());
-        let merged_records = merged.len();
-        let run =
-            Arc::new(Run::create(merged, gen_lo, gen_hi, level, self.config.spill.as_deref())?);
-        let spilled_delta: i64 = run.is_spilled() as i64
-            - a.is_spilled() as i64
-            - b.is_spilled() as i64;
+        assert!(inputs.len() >= 2, "a compaction window is at least a pair");
+        let level = inputs.iter().map(|r| r.level()).max().unwrap_or(0) + 1;
+        let (gen_lo, gen_hi) = (inputs[0].gen_lo(), inputs[inputs.len() - 1].gen_hi());
+        let spilled = prepared.is_spilled();
+        let run = Arc::new(prepared.into_run(gen_lo, gen_hi, level));
+        let merged_records = run.len();
+        debug_assert_eq!(
+            merged_records,
+            inputs.iter().map(|r| r.len()).sum::<usize>(),
+            "compaction must preserve record count"
+        );
         {
             let mut runs = self.runs.lock().unwrap();
             let pos = runs
                 .iter()
-                .position(|r| Arc::ptr_eq(r, a))
+                .position(|r| Arc::ptr_eq(r, &inputs[0]))
                 .ok_or_else(|| "compaction input vanished from the store".to_string())?;
-            if pos + 1 >= runs.len() || !Arc::ptr_eq(&runs[pos + 1], b) {
-                return Err("compaction pair no longer adjacent".to_string());
+            if pos + inputs.len() > runs.len()
+                || !inputs.iter().enumerate().all(|(j, r)| Arc::ptr_eq(r, &runs[pos + j]))
+            {
+                return Err("compaction window no longer contiguous".to_string());
             }
-            runs[pos] = run;
-            runs.remove(pos + 1);
+            if let Some(m) = &self.manifest {
+                let removed = inputs.iter().map(|r| r.id()).collect();
+                m.lock().unwrap().append(&ManifestRecord::Replace { removed, added: run.meta() })?;
+            }
+            run.set_delete_on_drop(false);
+            for r in inputs {
+                // Retired: delete the file once the last snapshot lets go.
+                r.set_delete_on_drop(true);
+            }
+            runs[pos] = Arc::clone(&run);
+            runs.drain(pos + 1..pos + inputs.len());
         }
-        self.live_runs.fetch_sub(1, Ordering::Relaxed);
+        self.live_runs.fetch_sub(inputs.len() as u64 - 1, Ordering::Relaxed);
         self.compactions.fetch_add(1, Ordering::Relaxed);
+        let spilled_delta =
+            spilled as i64 - inputs.iter().filter(|r| r.is_spilled()).count() as i64;
         if spilled_delta > 0 {
             self.spilled_runs.fetch_add(spilled_delta as u64, Ordering::Relaxed);
         } else if spilled_delta < 0 {
             self.spilled_runs.fetch_sub((-spilled_delta) as u64, Ordering::Relaxed);
         }
-        Ok(CompactionStats { merged_records, level, gen_lo, gen_hi })
-    }
-}
-
-impl Drop for RunStore {
-    fn drop(&mut self) {
-        if let Some(dir) = &self.config.spill {
-            // Drop the runs first (each deletes its spill file), then
-            // best-effort remove the now-empty dir. Outstanding
-            // snapshot Arcs may keep files alive; the remove simply
-            // fails then.
-            self.runs.lock().unwrap().clear();
-            let _ = std::fs::remove_dir(dir);
-        }
+        Ok(CompactionStats { merged_records, inputs: inputs.len(), level, gen_lo, gen_hi })
     }
 }
 
@@ -329,7 +457,7 @@ mod tests {
             run_capacity: 16,
             fanout: 2,
             threads: 1,
-            spill: None,
+            ..StreamConfig::default()
         })
         .unwrap()
     }
@@ -398,46 +526,59 @@ mod tests {
     }
 
     #[test]
-    fn pick_prefers_overlapping_adjacent_pair() {
-        let store = mem_store();
+    fn pick_window_uses_the_configured_policy() {
+        let store = mem_store(); // default policy: adjacent-pair
         // Runs 0 and 1 are disjoint; runs 1 and 2 overlap.
         store.seal(recs(&[0, 5], 0)).unwrap();
         store.seal(recs(&[10, 20], 0)).unwrap();
         store.seal(recs(&[15, 30], 0)).unwrap();
         assert!(store.try_claim_compaction());
-        let (a, b) = store.pick_adjacent_pair().expect("three runs yield a pair");
-        assert_eq!((a.gen_lo(), b.gen_lo()), (1, 2), "overlapping pair preferred");
+        let w = store.pick_window().expect("three runs yield a window");
+        assert_eq!(w.len(), 2);
+        assert_eq!((w[0].gen_lo(), w[1].gen_lo()), (1, 2), "overlapping pair preferred");
+        let all = store.pick_all().expect("pick_all takes the whole list");
+        assert_eq!(all.len(), 3);
         store.release_compaction();
     }
 
     #[test]
-    fn commit_replaces_adjacent_pair_and_keeps_records() {
+    fn commit_replaces_window_and_keeps_records() {
         let store = mem_store();
         store.seal(recs(&[1, 4], 0)).unwrap();
         store.seal(recs(&[2, 3], 10)).unwrap();
         store.seal(recs(&[9], 20)).unwrap();
         assert!(store.try_claim_compaction());
         let snap = store.snapshot();
-        let (a, b) = (std::sync::Arc::clone(&snap[0]), std::sync::Arc::clone(&snap[1]));
-        // Stable merge of the pair by hand.
-        let merged = recs(&[1, 2, 3, 4], 0)
-            .into_iter()
-            .zip([0u64, 10, 11, 1])
-            .map(|(r, tag)| Record::new(r.key, tag))
+        // Stable merge of the first two runs by hand.
+        let merged: Vec<Record> = [(1, 0u64), (2, 10), (3, 11), (4, 1)]
+            .iter()
+            .map(|&(k, tag)| Record::new(k, tag))
             .collect();
-        let st = store.commit_compaction(&a, &b, merged).unwrap();
+        let prepared = Run::prepare(merged, None, 1024).unwrap();
+        let st = store.commit_compaction(&snap[..2], prepared).unwrap();
         store.release_compaction();
-        assert_eq!((st.merged_records, st.level), (4, 1));
+        assert_eq!((st.merged_records, st.inputs, st.level), (4, 2, 1));
         assert_eq!((st.gen_lo, st.gen_hi), (0, 1));
         assert_eq!(store.run_count(), 2);
         assert_eq!(store.record_count(), 5, "compaction preserves record count");
         let snap = store.snapshot();
-        assert_eq!(snap[0].gen_lo(), 0);
-        assert_eq!(snap[0].gen_hi(), 1);
-        assert_eq!(snap[0].level(), 1);
+        assert_eq!((snap[0].gen_lo(), snap[0].gen_hi(), snap[0].level()), (0, 1, 1));
         assert_eq!(snap[1].gen_lo(), 2);
         let stats = store.stats();
         assert_eq!((stats.compactions, stats.max_level), (1, 1));
+    }
+
+    #[test]
+    fn commit_rejects_a_stale_window() {
+        let store = mem_store();
+        store.seal(recs(&[1], 0)).unwrap();
+        store.seal(recs(&[2], 10)).unwrap();
+        let stale = store.snapshot();
+        // The window swaps out from under the (hypothetical) planner.
+        let prepared = Run::prepare(recs(&[1, 2], 0), None, 1024).unwrap();
+        store.commit_compaction(&stale, prepared).unwrap();
+        let prepared = Run::prepare(recs(&[1, 2], 0), None, 1024).unwrap();
+        assert!(store.commit_compaction(&stale, prepared).is_err());
     }
 
     #[test]
@@ -448,5 +589,60 @@ mod tests {
         assert!(!store.needs_compaction());
         store.seal(recs(&[3], 0)).unwrap();
         assert!(store.needs_compaction());
+    }
+
+    #[test]
+    #[cfg(not(miri))] // touches the real filesystem
+    fn durable_store_recovers_run_list() {
+        let dir = std::env::temp_dir().join(format!("traff-store-rec-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StreamConfig {
+            run_capacity: 16,
+            fanout: 2,
+            threads: 1,
+            spill: Some(dir.clone()),
+            page_records: 4,
+            ..StreamConfig::default()
+        };
+        let expect: Vec<RunMeta>;
+        {
+            let store = RunStore::new(cfg.clone()).unwrap();
+            store.seal(recs(&[1, 3, 5], 0)).unwrap();
+            store.seal(recs(&[2, 2], 10)).unwrap();
+            expect = store.snapshot().iter().map(|r| r.meta()).collect();
+        } // drop: manifest-published files persist
+        assert!(dir.join(manifest::MANIFEST_NAME).exists());
+        let store = RunStore::recover(cfg.clone()).unwrap();
+        let got: Vec<RunMeta> = store.snapshot().iter().map(|r| r.meta()).collect();
+        assert_eq!(got, expect, "recovery restores the exact leveled run list");
+        assert_eq!((store.run_count(), store.record_count()), (2, 5));
+        assert_eq!(store.stats().spilled_runs, 2);
+        // New seals take fresh generations (and fresh run ids).
+        let g = store.seal(recs(&[9], 20)).unwrap().unwrap();
+        assert!(g > expect[1].gen_hi);
+        let ids: Vec<u64> = store.snapshot().iter().map(|r| r.id()).collect();
+        let mut unique = ids.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), ids.len(), "run ids stay unique across recovery");
+        drop(store);
+        // Recovering into a store and dropping it again keeps the data.
+        let store = RunStore::recover(cfg).unwrap();
+        assert_eq!(store.record_count(), 6);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn recover_without_manifest_is_a_fresh_store() {
+        let dir = std::env::temp_dir().join(format!("traff-store-fresh-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StreamConfig { spill: Some(dir.clone()), ..StreamConfig::default() };
+        let store = RunStore::recover(cfg).unwrap();
+        assert_eq!(store.run_count(), 0);
+        store.seal(recs(&[1], 0)).unwrap();
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

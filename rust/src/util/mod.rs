@@ -31,6 +31,22 @@ pub fn num_cpus() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// FNV-1a 64-bit hash — the checksum the stream layer's on-disk
+/// formats (page index, manifest records) use to detect torn or
+/// corrupted writes. Not cryptographic; chosen because it is tiny,
+/// dependency-free, and byte-order independent.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,6 +58,16 @@ mod tests {
         assert_eq!(div_ceil(4, 4), 1);
         assert_eq!(div_ceil(5, 4), 2);
         assert_eq!(div_ceil(18, 5), 4); // Figure 1: ceil(18/5) = 4
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Sensitivity: one flipped bit changes the hash.
+        assert_ne!(fnv1a64(b"foobar"), fnv1a64(b"foobas"));
     }
 
     #[test]

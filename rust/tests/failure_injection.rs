@@ -138,6 +138,159 @@ fn cli_rejects_malformed_input() {
     assert!(Args::parse(["x".into(), "--".into()]).is_err());
 }
 
+// ---------- durable run store: crash/recover injection ----------------
+
+mod store_recovery {
+    use std::path::PathBuf;
+    use std::sync::Arc;
+    use traff_merge::stream::{
+        compact_to_one, manifest::MANIFEST_NAME, scan, Ingestor, PolicyKind, RunMeta, RunStore,
+        StreamConfig,
+    };
+    use traff_merge::util::Rng;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("traff-fi-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg(dir: &PathBuf) -> StreamConfig {
+        StreamConfig {
+            run_capacity: 32,
+            fanout: 3,
+            threads: 2,
+            spill: Some(dir.clone()),
+            page_records: 8,
+            policy: PolicyKind::AdjacentPair,
+        }
+    }
+
+    /// Duplicate-heavy ingest so recovery must also preserve the exact
+    /// ingest order of equal keys, not just the key sort.
+    fn fill(store: &Arc<RunStore>, n: usize, seed: u64) {
+        let mut ing = Ingestor::new(Arc::clone(store));
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            ing.push_key(rng.range(0, 7)).unwrap();
+        }
+        ing.flush().unwrap();
+    }
+
+    fn metas(store: &RunStore) -> Vec<RunMeta> {
+        store.snapshot().iter().map(|r| r.meta()).collect()
+    }
+
+    fn pairs(store: &RunStore) -> Vec<(i64, u64)> {
+        scan(store).unwrap().iter().map(|r| (r.key, r.tag)).collect()
+    }
+
+    /// Process-death-and-restart (the drop stands in for SIGKILL —
+    /// every published run was already fsync'd before it became
+    /// visible): recovery restores the IDENTICAL leveled run list and
+    /// the identical stable scan.
+    #[test]
+    fn recover_restores_identical_run_list_and_scan() {
+        let dir = test_dir("clean");
+        let (before_metas, before_scan);
+        {
+            let store = Arc::new(RunStore::new(cfg(&dir)).unwrap());
+            fill(&store, 150, 3);
+            before_metas = metas(&store);
+            before_scan = pairs(&store);
+            assert!(before_metas.len() > 1, "shape needs multiple runs");
+        }
+        let store = Arc::new(RunStore::recover(cfg(&dir)).unwrap());
+        assert_eq!(metas(&store), before_metas, "leveled run list must be identical");
+        assert_eq!(pairs(&store), before_scan, "stable scan must be identical");
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Killed mid-compaction, before the Replace record was published:
+    /// the compaction's half-written output exists on disk but not in
+    /// the manifest (here planted directly, along with a leftover
+    /// manifest rewrite temp file and unrelated junk). Recovery keeps
+    /// the pre-compaction runs and sweeps every orphan.
+    #[test]
+    fn recover_sweeps_orphan_run_files() {
+        let dir = test_dir("orphan");
+        let (before_metas, before_scan);
+        {
+            let store = Arc::new(RunStore::new(cfg(&dir)).unwrap());
+            fill(&store, 100, 5);
+            before_metas = metas(&store);
+            before_scan = pairs(&store);
+        }
+        let orphan = dir.join("run-999999.bin");
+        let tmp = dir.join("MANIFEST.tmp");
+        let junk = dir.join("junk.dat");
+        std::fs::write(&orphan, b"half-written compaction output").unwrap();
+        std::fs::write(&tmp, b"interrupted manifest rewrite").unwrap();
+        std::fs::write(&junk, b"not ours but in our dir").unwrap();
+        let store = Arc::new(RunStore::recover(cfg(&dir)).unwrap());
+        assert!(!orphan.exists(), "orphan run file must be swept");
+        assert!(!tmp.exists(), "leftover manifest temp file must be swept");
+        assert!(!junk.exists(), "unknown files in the spill dir are swept");
+        assert_eq!(metas(&store), before_metas);
+        assert_eq!(pairs(&store), before_scan);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Killed mid-append: the manifest ends in a torn frame. Recovery
+    /// tolerates the tail (the runs it described were never published)
+    /// and serves everything before it.
+    #[test]
+    fn recover_tolerates_truncated_manifest_tail() {
+        let dir = test_dir("torn");
+        let (before_metas, before_scan);
+        {
+            let store = Arc::new(RunStore::new(cfg(&dir)).unwrap());
+            fill(&store, 100, 7);
+            before_metas = metas(&store);
+            before_scan = pairs(&store);
+        }
+        // A torn frame: a length prefix promising more bytes than
+        // exist, exactly what a crash mid-write leaves behind.
+        let manifest = dir.join(MANIFEST_NAME);
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&manifest).unwrap();
+        f.write_all(&200u32.to_le_bytes()).unwrap();
+        f.write_all(b"torn").unwrap();
+        drop(f);
+        let store = Arc::new(RunStore::recover(cfg(&dir)).unwrap());
+        assert_eq!(metas(&store), before_metas, "torn tail must not lose published runs");
+        assert_eq!(pairs(&store), before_scan);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Restart after a real committed compaction: the recovered list
+    /// matches the post-compaction state (Replace records replay), and
+    /// a second recovery is idempotent.
+    #[test]
+    fn recover_after_compaction_matches_committed_state() {
+        let dir = test_dir("compacted");
+        let (after_metas, after_scan);
+        {
+            let store = Arc::new(RunStore::new(cfg(&dir)).unwrap());
+            fill(&store, 120, 11);
+            assert_eq!(compact_to_one(&store, 2).unwrap(), 1);
+            after_metas = metas(&store);
+            after_scan = pairs(&store);
+            assert_eq!(after_metas.len(), 1);
+            assert_eq!(after_metas[0].level, 1, "compaction output is one level up");
+        }
+        for _ in 0..2 {
+            let store = Arc::new(RunStore::recover(cfg(&dir)).unwrap());
+            assert_eq!(metas(&store), after_metas);
+            assert_eq!(pairs(&store), after_scan);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
 // ---------- degenerate-but-legal inputs stay defined ------------------
 
 #[test]
