@@ -12,6 +12,11 @@
 //! - **E10c** k-way major compaction: the paged cursor driver merging
 //!   a whole run backlog in one pass vs the pairwise cascade it
 //!   replaces (fold of E10a's compactor, k−1 rewrites).
+//! - **E11** multi-writer ingest scaling: 8 writer threads pushing the
+//!   same record stream through one shared `Mutex<Ingestor>` (every
+//!   push serialized) vs one owned `ShardWriter` per thread sealing
+//!   through the shared generation clock — the acceptance target is
+//!   sharded throughput >= 2x the single-mutex path.
 
 use std::sync::Arc;
 use traff_merge::model::sync::{AtomicBool, Ordering};
@@ -23,7 +28,7 @@ use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, Table};
 use traff_merge::runtime::KeyedBlock;
 use traff_merge::stream::{
     kway_merge_to_vec, merge_runs_parallel, merge_runs_sequential, Ingestor, RunStore,
-    StreamConfig,
+    StreamConfig, WriterSet,
 };
 use traff_merge::util::Rng;
 
@@ -159,12 +164,14 @@ fn main() {
     let k = 8usize;
     let n_total = if quick { 400_000 } else { 2_000_000 };
     let store = Arc::new(
-        RunStore::new(StreamConfig {
-            run_capacity: n_total / k,
-            fanout: 64, // never auto-triggers: the bench drives merging
-            threads: p,
-            ..StreamConfig::default()
-        })
+        RunStore::new(
+            StreamConfig::builder()
+                .run_capacity(n_total / k)
+                .fanout(64) // never auto-triggers: the bench drives merging
+                .threads(p)
+                .build()
+                .expect("static bench config"),
+        )
         .expect("in-memory store"),
     );
     let mut ing = Ingestor::new(Arc::clone(&store));
@@ -204,4 +211,85 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---- E11: multi-writer ingest scaling ---------------------------
+    section("E11: multi-writer ingest — sharded writers vs single Mutex<Ingestor>");
+    let writers = 8usize;
+    let n_ing = if quick { 400_000 } else { 2_000_000 };
+    let keys: Vec<i64> = (0..n_ing).map(|_| rng.range(0, 1 << 16)).collect(); // dup-heavy
+    let chunk = traff_merge::util::div_ceil(n_ing, writers).max(1);
+    let ing_cfg = || {
+        StreamConfig::builder()
+            .run_capacity(n_ing / 16)
+            .fanout(64) // never auto-triggers: pure ingest under test
+            .threads(1)
+            .build()
+            .expect("static bench config")
+    };
+    // Correctness pin before timing: both paths seal every record.
+    {
+        let store = Arc::new(RunStore::new(ing_cfg()).expect("in-memory store"));
+        let set = WriterSet::new(Arc::clone(&store), writers);
+        std::thread::scope(|s| {
+            for ch in keys.chunks(chunk) {
+                let mut w = set.owned_writer();
+                s.spawn(move || {
+                    for &k in ch {
+                        w.push(k, 0).expect("ingest");
+                    }
+                    w.flush().expect("flush");
+                });
+            }
+        });
+        assert_eq!(store.record_count(), n_ing as u64);
+    }
+    let r_mutex = Bench::new(format!("single Mutex<Ingestor> ({writers} threads, one lock)"))
+        .run(|| {
+            let store = Arc::new(RunStore::new(ing_cfg()).expect("in-memory store"));
+            let ing = std::sync::Mutex::new(Ingestor::new(Arc::clone(&store)));
+            std::thread::scope(|s| {
+                for ch in keys.chunks(chunk) {
+                    let ing = &ing;
+                    s.spawn(move || {
+                        for &k in ch {
+                            ing.lock().unwrap().push_key(k).expect("ingest");
+                        }
+                    });
+                }
+            });
+            ing.into_inner().unwrap().flush().expect("flush");
+            store.record_count()
+        });
+    let r_shard = Bench::new(format!("sharded writers ({writers} owned shards, shared clock)"))
+        .run(|| {
+            let store = Arc::new(RunStore::new(ing_cfg()).expect("in-memory store"));
+            let set = WriterSet::new(Arc::clone(&store), writers);
+            std::thread::scope(|s| {
+                for ch in keys.chunks(chunk) {
+                    let mut w = set.owned_writer();
+                    s.spawn(move || {
+                        for &k in ch {
+                            w.push(k, 0).expect("ingest");
+                        }
+                        w.flush().expect("flush");
+                    });
+                }
+            });
+            store.record_count()
+        });
+    let mut t = Table::new(vec!["ingest path", "median", "Melem/s", "speedup"]);
+    for r in [&r_shard, &r_mutex] {
+        t.row(vec![
+            r.name.clone(),
+            fmt_duration(r.median()),
+            format!("{:.1}", melems_per_sec(n_ing as u64, r.median())),
+            format!("{:.2}x", r_mutex.median() / r.median()),
+        ]);
+    }
+    t.print();
+    let speedup = r_mutex.median() / r_shard.median();
+    println!(
+        "\nsharded ingest = {speedup:.2}x the single-mutex path at {writers} writers \
+         (acceptance target >= 2x)"
+    );
 }

@@ -27,14 +27,29 @@
 //!   executables (`sort_n*`, `merge_b*` artifacts: the L1 Pallas
 //!   kernels), upper merge-sort rounds on the rust parallel merge —
 //!   i.e. the full three-layer stack with Python nowhere at runtime.
+//!
+//! Streaming is **handle-based**: [`MergeService::open_stream`] returns
+//! a [`StreamHandle`], and each writer thread takes its own
+//! [`IngestWriter`] ([`StreamHandle::writer`]) — an owned ingest shard
+//! that never contends with the other writers' pushes (see
+//! [`crate::stream::writer`] for the sharding and ordering story). The
+//! older implicit single-tenant trio ([`MergeService::init_stream`] /
+//! [`MergeService::ingest`] / [`MergeService::flush_stream`]) survives
+//! as deprecated wrappers over the service's default handle.
+//!
+//! Asynchronous sort submission is consolidated behind
+//! [`MergeService::job`] — a [`JobBuilder`] with a per-job
+//! [`JobClass`] and single/batch submission; `submit_sort`,
+//! `submit_background` and `submit_sort_batch` are thin wrappers over
+//! it.
 
 pub mod pool;
 
-use crate::core::record::{F32Key, Record};
+use crate::core::record::F32Key;
 use crate::core::{parallel_merge, parallel_merge_sort};
 use crate::exec::JobClass;
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
-use crate::stream::{self, Ingestor, RunStore, StreamConfig};
+use crate::stream::{self, RunStore, SeqClock, ShardWriter, StreamConfig, StreamError};
 use anyhow::{anyhow, Result};
 use crate::model::sync::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -227,13 +242,18 @@ fn total_order_xform(mut bits: i32) -> i32 {
     bits
 }
 
-/// One tenant's stream holds at most this many records: the packed
-/// tag ([`pack_tag`]) stores the ingest sequence number in 32 bits, so
-/// sequence `2^32` would collide with sequence 0 and silently corrupt
-/// the stability order. Ingest fails typed at the boundary instead.
+/// The **legacy** per-stream record cap: a v1-format stream ([`
+/// StreamConfig::legacy_pages`](crate::stream::StreamConfig)) packs
+/// the whole ingest sequence into the tag's 32 high bits
+/// ([`pack_tag`]), so sequence `2^32` would collide with sequence 0
+/// and silently corrupt the stability order — ingest fails typed at
+/// the boundary instead ([`StreamError::CapExceeded`]). Default
+/// (v2-format) streams are **not** capped: the sequence is 64-bit,
+/// with the high half stored out of line in the page aux column (see
+/// [`crate::stream::writer`]).
 pub const STREAM_RECORD_CAP: u64 = 1 << 32;
 
-/// Typed ingest-refused error: the tenant's stream hit
+/// Typed ingest-refused error: a legacy-format stream hit
 /// [`STREAM_RECORD_CAP`] records. Carries the sequence number that
 /// would have overflowed the packed tag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -258,9 +278,11 @@ impl std::error::Error for RecordCapExceeded {}
 /// Stream tag layout for service records: ingest sequence number in
 /// the high 32 bits (strictly increasing in arrival order — the
 /// stability observation), the record's `i32` payload in the low 32.
-/// Fails with [`RecordCapExceeded`] once `seq` no longer fits —
-/// 2^32 records per tenant stream; the seal path never reads the
-/// payload bits.
+/// Fails with [`RecordCapExceeded`] once `seq` no longer fits — the
+/// legacy 2^32-records-per-stream boundary. The live write path
+/// ([`crate::stream::ShardWriter`]) packs the same low-32 layout but
+/// carries the sequence's high half out of line, so only
+/// `legacy_pages` streams ever hit this cap.
 pub fn pack_tag(seq: u64, val: i32) -> Result<u64, RecordCapExceeded> {
     if seq >= STREAM_RECORD_CAP {
         return Err(RecordCapExceeded { seq });
@@ -284,17 +306,27 @@ impl Drop for ClearOnDrop {
     }
 }
 
-/// One service's streaming state: the run store, its (mutex-guarded)
-/// ingest buffer, and a one-permit background pool that drains the
-/// compaction backlog. The service entry points
-/// ([`MergeService::ingest`] / [`MergeService::flush_stream`] /
-/// [`MergeService::scan`]) reach this through the service's admission
-/// pool; compaction never does — it rides the executor's background
-/// lane under its own single permit, so maintenance cannot consume
-/// the tenant's service permits.
+/// One service's streaming state: the run store, the shared ingest
+/// sequence clock, an implicit (mutex-guarded) writer shard for the
+/// block-at-a-time facade, and a one-permit background pool that
+/// drains the compaction backlog. The service entry points
+/// ([`StreamHandle`], and the deprecated [`MergeService::ingest`] /
+/// [`MergeService::flush_stream`] wrappers) reach this directly or
+/// through the service's admission pool; compaction never does — it
+/// rides the executor's background lane under its own single permit,
+/// so maintenance cannot consume the tenant's service permits.
 struct StreamTenant {
     store: Arc<RunStore>,
-    ingest: Mutex<Ingestor>,
+    /// The stream's 64-bit ingest sequence space, shared by the
+    /// implicit writer and every [`IngestWriter`] the handle vends —
+    /// sequence numbers stay globally unique across all of them.
+    clock: Arc<SeqClock>,
+    /// The implicit writer shard behind the block-at-a-time facade
+    /// ([`StreamHandle::ingest`] and the deprecated trio). Serialized
+    /// on purpose: a solo writer draws contiguous sequence numbers, so
+    /// block ingest order is total. Scaling writers means taking
+    /// per-thread [`IngestWriter`]s instead.
+    implicit: Mutex<ShardWriter>,
     compact_pool: WorkerPool,
     /// Dedup flag: each backlog burst schedules at most one drain job.
     /// A seal racing the drain's empty-check can go unscheduled for a
@@ -305,7 +337,7 @@ struct StreamTenant {
 }
 
 impl StreamTenant {
-    fn new(cfg: StreamConfig) -> Result<Arc<StreamTenant>, String> {
+    fn new(cfg: StreamConfig) -> Result<Arc<StreamTenant>, StreamError> {
         let threads = cfg.threads.max(1);
         let store = Arc::new(RunStore::new(cfg)?);
         Ok(StreamTenant::from_store(store, threads))
@@ -314,15 +346,17 @@ impl StreamTenant {
     /// Restart path: rebuild the tenant from a spill directory's
     /// manifest ([`RunStore::recover`]) — sealed runs reappear, only
     /// unsealed buffered records are lost.
-    fn recover(cfg: StreamConfig) -> Result<Arc<StreamTenant>, String> {
+    fn recover(cfg: StreamConfig) -> Result<Arc<StreamTenant>, StreamError> {
         let threads = cfg.threads.max(1);
         let store = Arc::new(RunStore::recover(cfg)?);
         Ok(StreamTenant::from_store(store, threads))
     }
 
     fn from_store(store: Arc<RunStore>, threads: usize) -> Arc<StreamTenant> {
+        let clock = Arc::new(SeqClock::new());
         Arc::new(StreamTenant {
-            ingest: Mutex::new(Ingestor::new(Arc::clone(&store))),
+            implicit: Mutex::new(ShardWriter::new(Arc::clone(&store), Arc::clone(&clock))),
+            clock,
             store,
             compact_pool: WorkerPool::with_class(1, JobClass::Background),
             compact_scheduled: Arc::new(AtomicBool::new(false)),
@@ -330,28 +364,39 @@ impl StreamTenant {
         })
     }
 
-    fn ingest_block(&self, block: &KeyedBlock) -> Result<usize, String> {
-        let mut ing = self.ingest.lock().unwrap();
+    fn ingest_block(&self, block: &KeyedBlock) -> Result<usize, StreamError> {
+        let mut w = self.implicit.lock().unwrap();
         let mut sealed = 0usize;
         for (k, v) in block.keys.iter().zip(&block.vals) {
-            let tag = pack_tag(ing.seq(), *v).map_err(|e| e.to_string())?;
-            if ing.push(Record::new(f32_ordered(*k), tag))?.is_some() {
+            if w.push(f32_ordered(*k), *v as u32)?.is_some() {
                 sealed += 1;
             }
         }
-        drop(ing);
+        drop(w);
         if sealed > 0 {
             self.maybe_schedule_compaction();
         }
         Ok(sealed)
     }
 
-    fn flush(&self) -> Result<Option<u64>, String> {
-        let sealed = self.ingest.lock().unwrap().flush()?;
+    fn flush(&self) -> Result<Option<u64>, StreamError> {
+        let sealed = self.implicit.lock().unwrap().flush()?;
         if sealed.is_some() {
             self.maybe_schedule_compaction();
         }
         Ok(sealed)
+    }
+
+    /// Bounded (~5s) wait for any scheduled background compaction
+    /// drain to go idle — a reporting convenience; correctness never
+    /// needs it.
+    fn quiesce(&self) {
+        for _ in 0..5_000 {
+            if !self.compact_scheduled.load(Ordering::Acquire) && !self.store.is_compacting() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
     }
 
     fn scan_block(&self) -> Result<KeyedBlock, String> {
@@ -398,6 +443,149 @@ impl StreamTenant {
                 }
             }
         });
+    }
+}
+
+/// A handle to one open stream: the service-level face of the sharded
+/// ingest path. Cheap to clone (all clones share the tenant); vends
+/// one owned [`IngestWriter`] per writer thread so concurrent ingest
+/// never serializes on a shared buffer.
+///
+/// ```
+/// use traff_merge::coordinator::{Config, MergeService};
+/// use traff_merge::stream::StreamConfig;
+///
+/// let svc = MergeService::new(Config::default()).unwrap();
+/// let cfg = StreamConfig::builder().run_capacity(4).build().unwrap();
+/// let handle = svc.open_stream(cfg).unwrap();
+/// let mut w = handle.writer();
+/// for (i, key) in [2.0f32, 1.0, 1.0, 3.0].iter().enumerate() {
+///     w.push(*key, i as i32).unwrap();
+/// }
+/// w.flush().unwrap();
+/// let out = handle.scan().unwrap();
+/// assert_eq!(out.keys, vec![1.0, 1.0, 2.0, 3.0]);
+/// assert_eq!(out.vals, vec![1, 2, 0, 3]); // equal keys keep ingest order
+/// ```
+#[derive(Clone)]
+pub struct StreamHandle {
+    tenant: Arc<StreamTenant>,
+}
+
+impl StreamHandle {
+    /// A new owned writer shard for one thread (the writer is `Send`:
+    /// make one per thread and move it in). All writers of this handle
+    /// share the stream's sequence clock and run store; none of them
+    /// share a buffer. Cross-writer duplicate-key order is decided by
+    /// seal generation; each writer's own order is preserved exactly —
+    /// see [`crate::stream::writer`].
+    pub fn writer(&self) -> IngestWriter {
+        IngestWriter {
+            inner: ShardWriter::new(
+                Arc::clone(&self.tenant.store),
+                Arc::clone(&self.tenant.clock),
+            ),
+            tenant: Arc::clone(&self.tenant),
+        }
+    }
+
+    /// Block-at-a-time ingest on the stream's implicit (serialized)
+    /// writer — the convenience path; per-thread [`IngestWriter`]s are
+    /// the scalable one. Returns the number of runs the block sealed.
+    pub fn ingest(&self, block: &KeyedBlock) -> Result<usize> {
+        Ok(self.tenant.ingest_block(block)?)
+    }
+
+    /// Seal the implicit writer's partial buffer (if any) so its
+    /// records become scan-visible. Per-thread [`IngestWriter`]s flush
+    /// themselves.
+    pub fn flush(&self) -> Result<Option<u64>> {
+        Ok(self.tenant.flush()?)
+    }
+
+    /// Stable merged scan of the stream's sealed data: globally
+    /// key-sorted (under `f32::total_cmp`), duplicate keys in exact
+    /// ingest order per writer, cross-writer by seal generation. Runs
+    /// against a snapshot; a concurrent compaction neither blocks nor
+    /// disturbs it.
+    pub fn scan(&self) -> Result<KeyedBlock> {
+        self.tenant.scan_block().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Store statistics for this stream.
+    pub fn stats(&self) -> stream::StoreStats {
+        self.tenant.store.stats()
+    }
+
+    /// Bounded wait for background compaction to go idle (reporting
+    /// convenience; correctness never needs it).
+    pub fn quiesce(&self) {
+        self.tenant.quiesce()
+    }
+}
+
+/// One writer thread's owned ingest shard at the service layer: wraps
+/// a [`crate::stream::ShardWriter`] with the service's f32 key codec
+/// and background-compaction scheduling. `Send` — take one per thread
+/// from [`StreamHandle::writer`] and move it in; pushes touch no
+/// shared buffer.
+///
+/// ```
+/// use traff_merge::coordinator::{Config, MergeService};
+/// use traff_merge::stream::StreamConfig;
+///
+/// let svc = MergeService::new(Config::default()).unwrap();
+/// let cfg = StreamConfig::builder().run_capacity(8).build().unwrap();
+/// let handle = svc.open_stream(cfg).unwrap();
+/// std::thread::scope(|s| {
+///     for w in 0..2 {
+///         let mut wr = handle.writer();
+///         s.spawn(move || {
+///             for i in 0..8 {
+///                 wr.push(i as f32, (w * 8 + i) as i32).unwrap();
+///             }
+///             wr.flush().unwrap();
+///         });
+///     }
+/// });
+/// let out = handle.scan().unwrap();
+/// assert_eq!(out.keys.len(), 16);
+/// assert!(out.keys.windows(2).all(|p| p[0] <= p[1]));
+/// ```
+pub struct IngestWriter {
+    inner: ShardWriter,
+    tenant: Arc<StreamTenant>,
+}
+
+impl IngestWriter {
+    /// Ingest one `(key, val)` record into this writer's shard.
+    /// Returns the sealed run's generation when this push filled the
+    /// shard. Non-finite keys are accepted and ordered by
+    /// `f32::total_cmp` (the stream path is always the rust
+    /// total-order path).
+    pub fn push(&mut self, key: f32, val: i32) -> Result<Option<u64>> {
+        let sealed = self.inner.push(f32_ordered(key), val as u32)?;
+        if sealed.is_some() {
+            self.tenant.maybe_schedule_compaction();
+        }
+        Ok(sealed)
+    }
+
+    /// Seal this shard's partial buffer so its records become
+    /// scan-visible. Dropping a writer with pending records loses
+    /// them — flush first.
+    pub fn flush(&mut self) -> Result<Option<u64>> {
+        let sealed = self.inner.flush()?;
+        if sealed.is_some() {
+            self.tenant.maybe_schedule_compaction();
+        }
+        Ok(sealed)
+    }
+
+    /// Records buffered in this shard (not yet sealed, not yet
+    /// scan-visible).
+    pub fn pending(&self) -> usize {
+        self.inner.pending()
     }
 }
 
@@ -687,30 +875,52 @@ impl MergeService {
         Ok(out)
     }
 
+    /// Start building an asynchronous sort submission: pick a
+    /// [`JobClass`] with [`JobBuilder::class`], then submit one block
+    /// ([`JobBuilder::submit`]) or a batch ([`JobBuilder::batch`]).
+    /// The single entry point the `submit_sort` /
+    /// `submit_background` / `submit_sort_batch` wrappers delegate to.
+    ///
+    /// ```
+    /// use traff_merge::coordinator::{Config, MergeService};
+    /// use traff_merge::exec::JobClass;
+    /// use traff_merge::runtime::KeyedBlock;
+    ///
+    /// let svc = MergeService::new(Config::default()).unwrap();
+    /// let block = KeyedBlock { keys: vec![2.0, 1.0], vals: vec![0, 1] };
+    /// let rx = svc.job().class(JobClass::Background).submit(block);
+    /// let sorted = rx.recv().unwrap().unwrap();
+    /// assert_eq!(sorted.keys, vec![1.0, 2.0]);
+    /// ```
+    pub fn job(&self) -> JobBuilder<'_> {
+        JobBuilder { svc: self, class: self.config.class }
+    }
+
     /// Asynchronous sort submission under the service's configured
-    /// class. For the rust engine the job runs through the admission-
-    /// controlled worker pool (data is moved, all-Send); the hybrid
-    /// engine executes synchronously on the caller thread because PJRT
-    /// handles are not `Send` in the `xla` crate — the pool still
-    /// decouples rust-engine traffic, which is the common concurrent
-    /// case.
+    /// class — thin wrapper over [`MergeService::job`]. For the rust
+    /// engine the job runs through the admission-controlled worker
+    /// pool (data is moved, all-Send); the hybrid engine executes
+    /// synchronously on the caller thread because PJRT handles are not
+    /// `Send` in the `xla` crate — the pool still decouples
+    /// rust-engine traffic, which is the common concurrent case.
     pub fn submit_sort(
         &self,
         data: KeyedBlock,
     ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
-        self.submit_sort_class(self.config.class, data)
+        self.job().submit(data)
     }
 
-    /// Background-lane sort submission: the job enters the executor's
-    /// background injector lane (yielding to service traffic
-    /// fleet-wide) regardless of `Config.class`, while still counting
-    /// against this service's admission permits — maintenance cannot
-    /// bypass the tenant's concurrency bound.
+    /// Background-lane sort submission — thin wrapper over
+    /// [`MergeService::job`] with [`JobClass::Background`]: the job
+    /// enters the executor's background injector lane (yielding to
+    /// service traffic fleet-wide) regardless of `Config.class`, while
+    /// still counting against this service's admission permits —
+    /// maintenance cannot bypass the tenant's concurrency bound.
     pub fn submit_background(
         &self,
         data: KeyedBlock,
     ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
-        self.submit_sort_class(JobClass::Background, data)
+        self.job().class(JobClass::Background).submit(data)
     }
 
     fn submit_sort_class(
@@ -739,15 +949,23 @@ impl MergeService {
         }
     }
 
-    /// Batched asynchronous sort submission: the whole job list is
-    /// handed to the admission-controlled pool in one pass — up to
-    /// `Config.threads` jobs are in flight at once, the rest follow in
-    /// submission order as permits free up. The receiver yields
-    /// `(job index, result)` pairs in completion order. The hybrid
-    /// engine executes inline on the caller thread (PJRT handles are
-    /// not `Send`).
+    /// Batched asynchronous sort submission — thin wrapper over
+    /// [`MergeService::job`]: the whole job list is handed to the
+    /// admission-controlled pool in one pass — up to `Config.threads`
+    /// jobs are in flight at once, the rest follow in submission order
+    /// as permits free up. The receiver yields `(job index, result)`
+    /// pairs in completion order. The hybrid engine executes inline on
+    /// the caller thread (PJRT handles are not `Send`).
     pub fn submit_sort_batch(
         &self,
+        blocks: Vec<KeyedBlock>,
+    ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
+        self.job().batch(blocks)
+    }
+
+    fn submit_sort_batch_class(
+        &self,
+        class: JobClass,
         blocks: Vec<KeyedBlock>,
     ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
         match self.config.engine {
@@ -767,7 +985,7 @@ impl MergeService {
                         }
                     })
                     .collect();
-                self.pool.submit_many(jobs)
+                self.pool.submit_many_with_class(class, jobs)
             }
             Engine::Hybrid => {
                 let (tx, rx) = std::sync::mpsc::channel();
@@ -783,25 +1001,55 @@ impl MergeService {
         self.stats.record(elems, t0);
     }
 
-    /// Create this service's streaming tenant with an explicit
-    /// [`StreamConfig`]. Optional — the first [`MergeService::ingest`]
-    /// or [`MergeService::scan`] lazily creates an in-memory tenant
-    /// with default capacity otherwise — but must come first when
-    /// used: fails if the tenant already exists.
+    /// Open an independent stream and return its [`StreamHandle`]: the
+    /// handle-based streaming API. Every call opens a fresh tenant
+    /// (own store, own sequence clock, own background compaction) —
+    /// handles don't touch the service's implicit default stream, so
+    /// a service can serve several streams at once. Clone the handle
+    /// freely; take one [`StreamHandle::writer`] per writer thread.
+    pub fn open_stream(&self, cfg: StreamConfig) -> Result<StreamHandle> {
+        Ok(StreamHandle { tenant: StreamTenant::new(cfg)? })
+    }
+
+    /// [`MergeService::open_stream`] over a recovered store: rebuild
+    /// the stream from the spill directory named in `cfg`
+    /// ([`RunStore::recover`]) — the manifest is replayed, orphaned
+    /// run files are swept, and every sealed run becomes scan-visible
+    /// again behind a fresh handle.
+    pub fn open_stream_recovered(&self, cfg: StreamConfig) -> Result<StreamHandle> {
+        Ok(StreamHandle { tenant: StreamTenant::recover(cfg)? })
+    }
+
+    /// The service's implicit default stream as a [`StreamHandle`] —
+    /// what the deprecated single-tenant wrappers delegate to.
+    fn default_handle(&self) -> StreamHandle {
+        StreamHandle { tenant: Arc::clone(self.stream_tenant()) }
+    }
+
+    /// Create this service's **default** streaming tenant with an
+    /// explicit [`StreamConfig`]. Optional — the first
+    /// [`MergeService::ingest`] or [`MergeService::scan`] lazily
+    /// creates an in-memory tenant with default capacity otherwise —
+    /// but must come first when used: fails if the tenant already
+    /// exists.
+    #[deprecated(note = "use `open_stream`, which returns a StreamHandle instead of \
+                         binding the service's single implicit stream")]
     pub fn init_stream(&self, cfg: StreamConfig) -> Result<()> {
-        let tenant = StreamTenant::new(cfg).map_err(|e| anyhow!("{e}"))?;
+        let tenant = StreamTenant::new(cfg)?;
         self.stream
             .set(tenant)
             .map_err(|_| anyhow!("stream already initialized for this service"))
     }
 
-    /// Restart this service's streaming tenant from the spill
-    /// directory named in `cfg` ([`RunStore::recover`]): the manifest
-    /// is replayed, orphaned run files are swept, and every sealed run
-    /// becomes scan-visible again. Like [`MergeService::init_stream`],
-    /// must come before any lazy tenant creation.
+    /// Restart this service's **default** streaming tenant from the
+    /// spill directory named in `cfg` ([`RunStore::recover`]): the
+    /// manifest is replayed, orphaned run files are swept, and every
+    /// sealed run becomes scan-visible again. Like `init_stream`, must
+    /// come before any lazy tenant creation.
+    #[deprecated(note = "use `open_stream_recovered`, which returns a StreamHandle \
+                         instead of binding the service's single implicit stream")]
     pub fn recover_stream(&self, cfg: StreamConfig) -> Result<()> {
-        let tenant = StreamTenant::recover(cfg).map_err(|e| anyhow!("{e}"))?;
+        let tenant = StreamTenant::recover(cfg)?;
         self.stream
             .set(tenant)
             .map_err(|_| anyhow!("stream already initialized for this service"))
@@ -817,36 +1065,42 @@ impl MergeService {
         })
     }
 
-    /// Streaming ingest: append a keyed block to this service's
-    /// stream. Records buffer into bounded runs; full runs seal (a
-    /// stable parallel sort) and, past the configured fanout, trigger
-    /// a background-lane compaction. Admission-controlled like every
+    /// Streaming ingest into this service's **default** stream: append
+    /// a keyed block through the implicit serialized writer. Records
+    /// buffer into bounded runs; full runs seal (a stable parallel
+    /// sort) and, past the configured fanout, trigger a
+    /// background-lane compaction. Admission-controlled like every
     /// submitted job — the call occupies one of the tenant's permits
     /// while it runs. Returns the number of runs this block sealed.
     ///
     /// The stream path is engine-independent (always the rust
     /// total-order path): non-finite keys are accepted and ordered by
     /// `f32::total_cmp`, exactly like [`Engine::Rust`] sorts.
+    #[deprecated(note = "use `open_stream` and the StreamHandle's per-thread writers; \
+                         this wrapper serializes all callers on one implicit shard")]
     pub fn ingest(&self, block: KeyedBlock) -> Result<usize> {
-        let tenant = Arc::clone(self.stream_tenant());
+        let handle = self.default_handle();
         let stats = Arc::clone(&self.stats);
         let rx = self.pool.submit(move || {
             let t0 = Instant::now();
-            let r = tenant.ingest_block(&block);
+            let r = handle.tenant.ingest_block(&block);
             if r.is_ok() {
                 stats.record(block.len(), t0);
             }
             r
         });
-        rx.recv().map_err(|_| anyhow!("ingest job panicked"))?.map_err(|e| anyhow!("{e}"))
+        Ok(rx.recv().map_err(|_| anyhow!("ingest job panicked"))??)
     }
 
-    /// Seal the stream's partially filled buffer (if any) so its
-    /// records become scan-visible. Returns the sealed generation.
+    /// Seal the **default** stream's partially filled buffer (if any)
+    /// so its records become scan-visible. Returns the sealed
+    /// generation.
+    #[deprecated(note = "use `open_stream` and StreamHandle::flush (or flush each \
+                         per-thread writer)")]
     pub fn flush_stream(&self) -> Result<Option<u64>> {
-        let tenant = Arc::clone(self.stream_tenant());
-        let rx = self.pool.submit(move || tenant.flush());
-        rx.recv().map_err(|_| anyhow!("flush job panicked"))?.map_err(|e| anyhow!("{e}"))
+        let handle = self.default_handle();
+        let rx = self.pool.submit(move || handle.tenant.flush());
+        Ok(rx.recv().map_err(|_| anyhow!("flush job panicked"))??)
     }
 
     /// Stable merged scan of the stream's sealed data: globally
@@ -873,17 +1127,12 @@ impl MergeService {
     }
 
     /// Wait (bounded, ~5s) for any scheduled background compaction
-    /// drain to go idle — a reporting convenience so the CLI's final
-    /// stats describe a settled store; correctness never needs it.
+    /// drain of the default stream to go idle — a reporting
+    /// convenience so the CLI's final stats describe a settled store;
+    /// correctness never needs it.
     pub fn stream_quiesce(&self) {
-        let Some(tenant) = self.stream.get() else { return };
-        for _ in 0..5_000 {
-            if !tenant.compact_scheduled.load(Ordering::Acquire)
-                && !tenant.store.is_compacting()
-            {
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
+        if let Some(tenant) = self.stream.get() {
+            tenant.quiesce();
         }
     }
 
@@ -898,6 +1147,46 @@ impl MergeService {
         &self,
     ) -> (crate::exec::telemetry::WindowRates, usize) {
         self.pool.recalibrate_now()
+    }
+}
+
+/// Builder for asynchronous sort submissions ([`MergeService::job`]):
+/// one entry point where `submit_sort`, `submit_background` and
+/// `submit_sort_batch` used to be three. Configure the
+/// [`JobClass`] with [`JobBuilder::class`] (defaults to the service's
+/// `Config.class`), then finish with [`JobBuilder::submit`] for one
+/// block or [`JobBuilder::batch`] for many. Either way the job(s) run
+/// under the service's admission permits.
+#[must_use = "a JobBuilder does nothing until `submit` or `batch` is called"]
+pub struct JobBuilder<'a> {
+    svc: &'a MergeService,
+    class: JobClass,
+}
+
+impl<'a> JobBuilder<'a> {
+    /// Override the [`JobClass`] for this submission (e.g.
+    /// [`JobClass::Background`] to yield to service traffic
+    /// fleet-wide while still holding one of this service's permits).
+    pub fn class(mut self, class: JobClass) -> JobBuilder<'a> {
+        self.class = class;
+        self
+    }
+
+    /// Submit one sort job; returns a receiver for its result.
+    pub fn submit(
+        self,
+        data: KeyedBlock,
+    ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
+        self.svc.submit_sort_class(self.class, data)
+    }
+
+    /// Submit a batch of sort jobs in one admission pass; the receiver
+    /// yields `(job index, result)` pairs in completion order.
+    pub fn batch(
+        self,
+        blocks: Vec<KeyedBlock>,
+    ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
+        self.svc.submit_sort_batch_class(self.class, blocks)
     }
 }
 
@@ -1185,7 +1474,10 @@ mod tests {
     /// Tentpole: the streaming facade end to end — ingest across many
     /// runs, background compaction, flush, scan. The scan is globally
     /// sorted and duplicate keys come back in exact ingest order.
+    /// Exercises the deprecated single-tenant wrappers on purpose:
+    /// they must keep their exact semantics over the default handle.
     #[test]
+    #[allow(deprecated)]
     fn stream_ingest_compact_scan_is_sorted_and_stable() {
         let svc = MergeService::new(Config {
             threads: 2,
@@ -1244,6 +1536,7 @@ mod tests {
     /// serves the identical stable scan.
     #[test]
     #[cfg(not(miri))]
+    #[allow(deprecated)]
     fn recover_stream_restores_the_scan() {
         let dir = std::env::temp_dir().join(format!("traff-svc-recover-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
@@ -1296,6 +1589,7 @@ mod tests {
     /// The stream path accepts non-finite keys end to end (it is the
     /// rust total-order path regardless of engine).
     #[test]
+    #[allow(deprecated)]
     fn stream_orders_non_finite_keys_like_total_cmp() {
         let svc = MergeService::new(Config {
             threads: 2,
@@ -1333,5 +1627,158 @@ mod tests {
         assert_eq!(m.keys.iter().filter(|k| k.is_nan()).count(), 2);
         // Stable: for equal keys (the two NaNs) A's record precedes B's.
         assert_eq!(m.vals, vec![0, 10, 1, 2, 11]);
+    }
+
+    /// `IngestWriter` must be `Send`: one per thread, moved in.
+    #[test]
+    fn ingest_writer_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<IngestWriter>();
+        assert_send::<StreamHandle>();
+    }
+
+    /// Tentpole: the handle-based API end to end — N writer threads
+    /// each holding an owned [`IngestWriter`], duplicate-heavy keys,
+    /// background compaction. The scan is globally sorted and each
+    /// writer's ingest order survives exactly.
+    #[test]
+    fn handle_multi_writer_ingest_is_sorted_and_stable() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let handle = svc
+            .open_stream(StreamConfig {
+                run_capacity: 32,
+                fanout: 2,
+                threads: 2,
+                ..StreamConfig::default()
+            })
+            .unwrap();
+        let (writers, per_writer) = if cfg!(miri) { (2, 12) } else { (4, 100) };
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let mut wr = handle.writer();
+                s.spawn(move || {
+                    for i in 0..per_writer {
+                        // 7 distinct keys; val encodes (writer, index).
+                        let key = ((w * 5 + i) % 7) as f32;
+                        wr.push(key, (w * per_writer + i) as i32).unwrap();
+                    }
+                    wr.flush().unwrap();
+                });
+            }
+        });
+        handle.quiesce();
+        let out = handle.scan().unwrap();
+        assert_eq!(out.len(), writers * per_writer);
+        assert!(out.is_key_sorted());
+        // Per-writer, per-key ingest order: vals of one writer within
+        // one key group must be strictly increasing.
+        let mut last = vec![vec![-1i64; 7]; writers];
+        for (k, v) in out.keys.iter().zip(&out.vals) {
+            let w = *v as usize / per_writer;
+            let key = *k as usize;
+            assert!(last[w][key] < *v as i64, "writer {w} reordered at key {key}");
+            last[w][key] = *v as i64;
+        }
+        let stats = handle.stats();
+        assert_eq!(stats.records, (writers * per_writer) as u64);
+        assert!(stats.sealed_runs >= writers as u64, "each writer sealed at least once");
+    }
+
+    /// `open_stream` handles are independent tenants: they never touch
+    /// the service's implicit default stream, so the deprecated
+    /// `init_stream` still works afterwards — and two handles don't
+    /// see each other's data.
+    #[test]
+    #[allow(deprecated)]
+    fn open_stream_is_independent_of_the_default_tenant() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let h1 = svc.open_stream(StreamConfig::default()).unwrap();
+        let h2 = svc.open_stream(StreamConfig::default()).unwrap();
+        h1.ingest(&KeyedBlock { keys: vec![1.0], vals: vec![10] }).unwrap();
+        h1.flush().unwrap();
+        assert_eq!(h1.scan().unwrap().len(), 1);
+        assert_eq!(h2.scan().unwrap().len(), 0, "handles are separate tenants");
+        // The default tenant is still unbound.
+        svc.init_stream(StreamConfig::default()).unwrap();
+        assert_eq!(svc.scan().unwrap().len(), 0);
+        // A clone shares the tenant.
+        let h1b = h1.clone();
+        assert_eq!(h1b.scan().unwrap().len(), 1);
+    }
+
+    /// The config builder feeds the handle path: an invalid shape is
+    /// refused before any store exists (typed, via anyhow).
+    #[test]
+    fn open_stream_rejects_invalid_config() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let err = svc
+            .open_stream(StreamConfig { fanout: 1, ..StreamConfig::default() })
+            .expect_err("fanout < 2 must be refused");
+        assert!(err.to_string().contains("fanout"), "names the field: {err}");
+        // The typed StreamError variant carries through the boundary:
+        // same message as the config validator's Config variant.
+        let direct = StreamConfig::builder().fanout(1).build().unwrap_err();
+        assert!(matches!(direct, StreamError::Config(_)));
+        assert_eq!(err.to_string(), direct.to_string());
+    }
+
+    /// `JobBuilder` is the single submission entry point: explicit
+    /// class + single and batch submission behave exactly like the
+    /// wrappers they replaced (results sorted/stable, jobs counted).
+    #[test]
+    fn job_builder_submits_single_and_batch() {
+        let svc = MergeService::new(Config {
+            threads: 2,
+            engine: Engine::Rust,
+            leaf_block: 1024,
+            ..Config::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(53);
+        let block = KeyedBlock {
+            keys: (0..400).map(|_| rng.range(0, 50) as f32).collect(),
+            vals: (0..400).collect(),
+        };
+        let out = svc
+            .job()
+            .class(JobClass::Background)
+            .submit(block)
+            .recv()
+            .unwrap()
+            .unwrap();
+        assert!(out.is_key_sorted());
+        let blocks: Vec<KeyedBlock> = (0..4)
+            .map(|_| KeyedBlock {
+                keys: (0..300).map(|_| rng.range(0, 40) as f32).collect(),
+                vals: (0..300).collect(),
+            })
+            .collect();
+        let rx = svc.job().batch(blocks);
+        let mut seen = 0usize;
+        for (_, r) in rx.iter() {
+            assert!(r.unwrap().is_key_sorted());
+            seen += 1;
+        }
+        assert_eq!(seen, 4);
+        let (jobs, _, _, _) = svc.stats.snapshot();
+        assert_eq!(jobs, 5, "builder path records every job");
     }
 }

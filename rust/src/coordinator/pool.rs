@@ -239,6 +239,18 @@ impl WorkerPool {
         &self,
         jobs: Vec<F>,
     ) -> Receiver<(usize, R)> {
+        self.submit_many_with_class(self.class, jobs)
+    }
+
+    /// [`WorkerPool::submit_many`] with an explicit class for the whole
+    /// batch (the `JobBuilder` path): every job of the batch — the
+    /// dispatched prefix and the queued overflow alike — enters the
+    /// executor under `class` instead of the pool default.
+    pub fn submit_many_with_class<R: Send + 'static, F: FnOnce() -> R + Send + 'static>(
+        &self,
+        class: JobClass,
+        jobs: Vec<F>,
+    ) -> Receiver<(usize, R)> {
         let (tx, rx) = std::sync::mpsc::channel();
         let mut wrapped: Vec<Job> = jobs
             .into_iter()
@@ -263,7 +275,7 @@ impl WorkerPool {
             st.available -= fits;
             let overflow = wrapped.split_off(fits);
             for job in overflow {
-                st.pending.push_back((job, self.class));
+                st.pending.push_back((job, class));
             }
             // Dispatch UNDER the lock: once the overflow is queued, a
             // release() on a worker could otherwise pop an overflow
@@ -271,7 +283,7 @@ impl WorkerPool {
             // executor, breaking the FIFO-dispatch contract. No lock
             // inversion: admit/release also take this lock first, and
             // the executor's wake lock is only ever acquired after it.
-            crate::exec::global().submit_boxed_many(wrapped, self.class);
+            crate::exec::global().submit_boxed_many(wrapped, class);
         }
         rx
     }

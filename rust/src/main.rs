@@ -70,8 +70,9 @@ fn print_help() {
          \x20 pram   --n N --m M --p P [--crew]\n\
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
          \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
-         \x20 stream --n N --runs R [--block B] [--scans S] [--dist D] [--spill]\n\
-         \x20        [--dir PATH] [--recover] [--policy adjacent|tiered|overlap] [--page K]\n\
+         \x20 stream --n N --runs R [--writers W] [--block B] [--scans S] [--dist D]\n\
+         \x20        [--spill] [--dir PATH] [--recover] [--page K]\n\
+         \x20        [--policy adjacent|tiered|overlap]\n\
          \x20 bench-json [--out F] [--pr TAG] [--n N] [--p P]  emit BENCH_<pr>.json\n\
          \x20 bench-diff --old F --new F [--tolerance-pct T]   compare two reports\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
@@ -444,18 +445,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `repro stream` — the streaming run-merge workload: ingest an
-/// unbounded-style record stream in bounded blocks through
-/// `MergeService::ingest` (runs seal at `--n / --runs` records and
-/// compact on the executor's background lane), interleave stable
-/// scans, then flush and verify the final scan is globally sorted and
-/// stable (equal keys in ingest order). Total ingested data exceeds
-/// the per-run buffer by the `--runs` factor — the first workload
-/// whose data size is decoupled from job size.
+/// `repro stream` — the streaming run-merge workload on the
+/// handle-based API: open a stream (`MergeService::open_stream`),
+/// ingest an unbounded-style record stream (runs seal at
+/// `--n / --runs` records and compact on the executor's background
+/// lane), interleave stable scans, then flush and verify the final
+/// scan is globally sorted and stable. With `--writers W > 1` the
+/// ingest fans out over W threads, each holding its own owned
+/// `IngestWriter` shard — the sharded multi-writer path; per-writer
+/// ingest order is verified to survive exactly.
 fn cmd_stream(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "n", "runs", "block", "scans", "dist", "seed", "threads", "spill", "dir", "recover",
-        "policy", "page",
+        "policy", "page", "writers",
     ])?;
     let n = args.get_usize("n", 200_000)?.max(1);
     let runs = args.get_usize("runs", 8)?.max(1);
@@ -463,6 +465,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let block = args.get_usize("block", (capacity / 4).max(1))?.max(1);
     let scans = args.get_usize("scans", 3)?;
     let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
+    let writers = args.get_usize("writers", 1)?.max(1);
     let seed = args.get_u64("seed", 42)?;
     let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
         .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
@@ -485,45 +488,38 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let spill = dir.clone().or_else(|| temp_spill.clone());
     let svc = MergeService::new(Config { threads, engine: Engine::Rust, leaf_block: 1024, ..Config::default() })
         .map_err(|e| e.to_string())?;
-    let cfg = StreamConfig {
-        run_capacity: capacity,
-        fanout: 4,
-        threads,
-        spill: spill.clone(),
-        page_records: page,
-        policy,
-    };
+    let mut builder = StreamConfig::builder()
+        .run_capacity(capacity)
+        .fanout(4)
+        .threads(threads)
+        .page_records(page)
+        .policy(policy);
+    if let Some(dir) = spill.clone() {
+        builder = builder.spill(dir);
+    }
+    let cfg = builder.build().map_err(|e| e.to_string())?;
     // Records recovered from a previous process's spill dir carry vals
     // below this base; new ingests start above it, so the stability
     // check spans the restart.
     let mut val_base = 0i32;
-    if recover {
-        svc.recover_stream(cfg).map_err(|e| e.to_string())?;
-        let recovered = svc.scan().map_err(|e| e.to_string())?;
+    let handle = if recover {
+        let handle = svc.open_stream_recovered(cfg).map_err(|e| e.to_string())?;
+        let recovered = handle.scan().map_err(|e| e.to_string())?;
         if !recovered.is_key_sorted() {
             return Err("recovered scan is not globally sorted".into());
         }
-        for i in 1..recovered.len() {
-            if recovered.keys[i - 1] == recovered.keys[i]
-                && recovered.vals[i - 1] >= recovered.vals[i]
-            {
-                return Err(format!(
-                    "recovered stability violated at scan index {i}: equal keys out of \
-                     ingest order"
-                ));
-            }
-        }
         val_base = recovered.len() as i32;
         println!(
-            "recovered {} records from {} — scan sorted and stable ✓",
+            "recovered {} records from {} — scan sorted ✓",
             recovered.len(),
             dir.as_ref().expect("--recover requires --dir").display()
         );
+        handle
     } else {
-        svc.init_stream(cfg).map_err(|e| e.to_string())?;
-    }
+        svc.open_stream(cfg).map_err(|e| e.to_string())?
+    };
     println!(
-        "stream up: {n} records ({}) in blocks of {block}, run capacity {capacity} \
+        "stream up: {n} records ({}) over {writers} writer(s), run capacity {capacity} \
          (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {} policy, {}",
         dist.name(),
         n as f64 / capacity as f64,
@@ -534,43 +530,97 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
         }
     );
     // Keys: the workload distribution folded into exact-in-f32 range;
-    // vals: the global ingest index (the stability oracle the final
-    // verification reads back).
+    // vals: the per-writer ingest index (writer w owns the val range
+    // [w*stride, w*stride + its count) — the stability oracle the
+    // final verification reads back).
     let raw = workload::raw_keys(dist, n, seed);
     let keys: Vec<f32> = raw.iter().map(|k| k.rem_euclid(1 << 20) as f32).collect();
     let t0 = std::time::Instant::now();
     let mut ingest_lat: Vec<f64> = Vec::new();
     let mut scan_lat: Vec<f64> = Vec::new();
-    let scan_every = (n / (scans + 1)).max(1);
-    let mut next_scan = scan_every;
-    let mut ingested = 0usize;
-    while ingested < n {
-        let hi = (ingested + block).min(n);
-        let kb = KeyedBlock {
-            keys: keys[ingested..hi].to_vec(),
-            vals: (val_base + ingested as i32..val_base + hi as i32).collect(),
-        };
-        let b0 = std::time::Instant::now();
-        svc.ingest(kb).map_err(|e| e.to_string())?;
-        ingest_lat.push(b0.elapsed().as_secs_f64());
-        ingested = hi;
-        if ingested >= next_scan && ingested < n {
-            let s0 = std::time::Instant::now();
-            let out = svc.scan().map_err(|e| e.to_string())?;
-            scan_lat.push(s0.elapsed().as_secs_f64());
-            if !out.is_key_sorted() {
-                return Err("interleaved scan returned unsorted data".into());
+    let stride = traff_merge::util::div_ceil(n, writers).max(1);
+    if writers == 1 {
+        // Single-writer path: block ingest on the handle's implicit
+        // writer, scans interleaved with ingest.
+        let scan_every = (n / (scans + 1)).max(1);
+        let mut next_scan = scan_every;
+        let mut ingested = 0usize;
+        while ingested < n {
+            let hi = (ingested + block).min(n);
+            let kb = KeyedBlock {
+                keys: keys[ingested..hi].to_vec(),
+                vals: (val_base + ingested as i32..val_base + hi as i32).collect(),
+            };
+            let b0 = std::time::Instant::now();
+            handle.ingest(&kb).map_err(|e| e.to_string())?;
+            ingest_lat.push(b0.elapsed().as_secs_f64());
+            ingested = hi;
+            if ingested >= next_scan && ingested < n {
+                let s0 = std::time::Instant::now();
+                let out = handle.scan().map_err(|e| e.to_string())?;
+                scan_lat.push(s0.elapsed().as_secs_f64());
+                if !out.is_key_sorted() {
+                    return Err("interleaved scan returned unsorted data".into());
+                }
+                next_scan += scan_every;
             }
-            next_scan += scan_every;
+        }
+        handle.flush().map_err(|e| e.to_string())?;
+    } else {
+        // Sharded multi-writer path: W threads, each with an owned
+        // IngestWriter over its contiguous slice of the workload;
+        // scans run concurrently from this thread.
+        let errs = std::sync::Mutex::new(Vec::<String>::new());
+        std::thread::scope(|s| {
+            for w in 0..writers {
+                let lo = (w * stride).min(n);
+                let hi = ((w + 1) * stride).min(n);
+                let keys = &keys[lo..hi];
+                let mut wr = handle.writer();
+                let errs = &errs;
+                s.spawn(move || {
+                    let run = || -> Result<(), String> {
+                        for (i, k) in keys.iter().enumerate() {
+                            wr.push(*k, val_base + (lo + i) as i32)
+                                .map_err(|e| e.to_string())?;
+                        }
+                        wr.flush().map_err(|e| e.to_string())?;
+                        Ok(())
+                    };
+                    if let Err(e) = run() {
+                        errs.lock().unwrap().push(format!("writer {w}: {e}"));
+                    }
+                });
+            }
+            for _ in 0..scans {
+                let s0 = std::time::Instant::now();
+                match handle.scan() {
+                    Ok(out) => {
+                        scan_lat.push(s0.elapsed().as_secs_f64());
+                        if !out.is_key_sorted() {
+                            errs.lock()
+                                .unwrap()
+                                .push("concurrent scan returned unsorted data".into());
+                        }
+                    }
+                    Err(e) => errs.lock().unwrap().push(format!("concurrent scan: {e}")),
+                }
+            }
+        });
+        let errs = errs.into_inner().unwrap();
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
         }
     }
-    svc.flush_stream().map_err(|e| e.to_string())?;
-    svc.stream_quiesce();
+    handle.quiesce();
     let s0 = std::time::Instant::now();
-    let fin = svc.scan().map_err(|e| e.to_string())?;
+    let fin = handle.scan().map_err(|e| e.to_string())?;
     scan_lat.push(s0.elapsed().as_secs_f64());
     let secs = t0.elapsed().as_secs_f64();
-    // Verification: complete (recovered + new), globally sorted, stable.
+    // Verification: complete (recovered + new), globally sorted, and
+    // stable per writer — each writer's equal-key records keep their
+    // push order (with one writer that is the full ingest order;
+    // cross-writer order is seal-generation order by design).
     let expect_len = n + val_base as usize;
     if fin.len() != expect_len {
         return Err(format!("final scan returned {} of {expect_len} records", fin.len()));
@@ -578,12 +628,22 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     if !fin.is_key_sorted() {
         return Err("final scan is not globally sorted".into());
     }
-    for i in 1..fin.len() {
-        if fin.keys[i - 1] == fin.keys[i] && fin.vals[i - 1] >= fin.vals[i] {
+    let mut last_val = vec![i64::MIN; writers];
+    let mut last_key = vec![f32::NAN; writers];
+    for i in 0..fin.len() {
+        let v = fin.vals[i];
+        if v < val_base {
+            continue; // recovered records: verified sorted above
+        }
+        let w = ((v - val_base) as usize / stride).min(writers - 1);
+        if last_key[w].to_bits() == fin.keys[i].to_bits() && last_val[w] >= v as i64 {
             return Err(format!(
-                "stability violated at scan index {i}: equal keys out of ingest order"
+                "stability violated at scan index {i}: writer {w}'s equal keys out of \
+                 push order"
             ));
         }
+        last_key[w] = fin.keys[i];
+        last_val[w] = v as i64;
     }
     println!(
         "ingested {n} records + {} scans in {} — {:.2} Melem/s end to end; \
@@ -594,7 +654,8 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     );
     print_latency("ingest", &mut ingest_lat);
     print_latency("scan", &mut scan_lat);
-    if let Some(stats) = svc.stream_stats() {
+    {
+        let stats = handle.stats();
         println!(
             "store: {} live runs ({} records, max level {}), {} sealed, \
              {} compactions ({} failed), {} spilled",
@@ -639,7 +700,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
 /// problem so CI can run a fast, smaller-but-same-shape suite.
 fn cmd_bench_json(args: &Args) -> Result<(), String> {
     args.expect_known(&["out", "pr", "n", "p"])?;
-    let pr = args.get("pr").unwrap_or("7").to_string();
+    let pr = args.get("pr").unwrap_or("8").to_string();
     let n = args.get_usize("n", 1_000_000)?.max(16);
     let p = args.get_usize("p", traff_merge::util::num_cpus())?.max(1);
     let default_out = format!("BENCH_{pr}.json");
@@ -693,12 +754,14 @@ fn cmd_bench_json(args: &Args) -> Result<(), String> {
     // single pair), dup-heavy keys, in-memory store.
     {
         let store = std::sync::Arc::new(
-            traff_merge::stream::RunStore::new(StreamConfig {
-                run_capacity: (n / 8).max(1),
-                fanout: 64,
-                threads: p,
-                ..StreamConfig::default()
-            })
+            traff_merge::stream::RunStore::new(
+                StreamConfig::builder()
+                    .run_capacity((n / 8).max(1))
+                    .fanout(64)
+                    .threads(p)
+                    .build()
+                    .map_err(|e| e.to_string())?,
+            )
             .map_err(|e| e.to_string())?,
         );
         let mut ing = traff_merge::stream::Ingestor::new(std::sync::Arc::clone(&store));
@@ -709,6 +772,69 @@ fn cmd_bench_json(args: &Args) -> Result<(), String> {
         let snap = store.snapshot();
         let r = Bench::new("stream_kway_compact")
             .run(|| traff_merge::stream::kway_merge_to_vec(&snap, p).expect("in-memory k-way merge"));
+        println!("  {}", r.summary());
+        report.add(n as u64, &r);
+    }
+
+    // Scenario 6/7 (Bench E11): multi-writer ingest scaling — the same
+    // record stream pushed by 8 threads through one shared
+    // `Mutex<Ingestor>` (every push serialized on one lock and one
+    // buffer) vs one owned `ShardWriter` per thread sealing through
+    // the shared generation clock. The throughput ratio is the
+    // tentpole's scaling claim; both sides seal identical run shapes.
+    {
+        let writers = 8usize;
+        let keys = workload::raw_keys(Dist::DupHeavy(16), n, 11);
+        let chunk = traff_merge::util::div_ceil(n, writers).max(1);
+        let cfg = || {
+            StreamConfig::builder()
+                .run_capacity((n / 16).max(1))
+                .fanout(64)
+                .threads(1)
+                .build()
+                .expect("static bench config")
+        };
+        let r = Bench::new("stream_ingest_mutex").run(|| {
+            let store = std::sync::Arc::new(
+                traff_merge::stream::RunStore::new(cfg()).expect("in-memory store"),
+            );
+            let ing = std::sync::Mutex::new(traff_merge::stream::Ingestor::new(
+                std::sync::Arc::clone(&store),
+            ));
+            std::thread::scope(|s| {
+                for ch in keys.chunks(chunk) {
+                    let ing = &ing;
+                    s.spawn(move || {
+                        for &k in ch {
+                            ing.lock().unwrap().push_key(k).expect("in-memory ingest");
+                        }
+                    });
+                }
+            });
+            ing.into_inner().unwrap().flush().expect("in-memory flush");
+            store.record_count()
+        });
+        println!("  {}", r.summary());
+        report.add(n as u64, &r);
+        let r = Bench::new("stream_ingest_sharded").run(|| {
+            let store = std::sync::Arc::new(
+                traff_merge::stream::RunStore::new(cfg()).expect("in-memory store"),
+            );
+            let set =
+                traff_merge::stream::WriterSet::new(std::sync::Arc::clone(&store), writers);
+            std::thread::scope(|s| {
+                for ch in keys.chunks(chunk) {
+                    let mut w = set.owned_writer();
+                    s.spawn(move || {
+                        for &k in ch {
+                            w.push(k, 0).expect("in-memory ingest");
+                        }
+                        w.flush().expect("in-memory flush");
+                    });
+                }
+            });
+            store.record_count()
+        });
         println!("  {}", r.summary());
         report.add(n as u64, &r);
     }

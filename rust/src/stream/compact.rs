@@ -38,7 +38,8 @@
 //! flag; losers skip (`Ok(None)`) instead of queueing, so any number
 //! of triggers can fire the compactor idempotently.
 
-use super::run::{Run, RunCursor, RunWriter};
+use super::page::PageFormat;
+use super::run::{Run, RunCursor, RunWriter, WideRecord};
 use super::store::{CompactionStats, RunStore};
 use crate::core::cases::Partition;
 use crate::core::merge::{carve_output, chunk_tasks};
@@ -164,6 +165,72 @@ fn merge_cursors_into(
     }
 }
 
+/// [`merge_cursors_into`] for windows where at least one input carries
+/// an aux column: the same safe-horizon / duplicate-group driver, but
+/// each merged element is a [`WideRecord`] so the aux column rides
+/// through the generic stable k-way kernel. Phase A materializes the
+/// below-horizon prefixes (records + aux zipped) instead of borrowing
+/// them — the price of the 20-byte element; narrow windows keep the
+/// zero-copy path above.
+fn merge_cursors_into_wide(
+    cursors: &mut [RunCursor],
+    p: usize,
+    out: &mut RunWriter,
+) -> Result<(), String> {
+    fn wide_prefix(c: &RunCursor, k: usize) -> Vec<WideRecord> {
+        let recs = &c.buffered()[..k];
+        let aux = c.buffered_aux();
+        recs.iter()
+            .enumerate()
+            .map(|(i, r)| WideRecord::new(*r, aux.get(i).copied().unwrap_or(0)))
+            .collect()
+    }
+    loop {
+        let mut safe: Option<i64> = None;
+        for c in cursors.iter() {
+            if c.has_unloaded() {
+                let last = c.buffered().last().expect("eager refill keeps live cursors non-empty");
+                safe = Some(match safe {
+                    None => last.key,
+                    Some(s) => s.min(last.key),
+                });
+            }
+        }
+        let Some(safe_key) = safe else {
+            let owned: Vec<Vec<WideRecord>> =
+                cursors.iter().map(|c| wide_prefix(c, c.buffered().len())).collect();
+            let slices: Vec<&[WideRecord]> = owned.iter().map(|v| v.as_slice()).collect();
+            let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+            for w in &merged {
+                out.push_wide(*w)?;
+            }
+            let counts: Vec<usize> = cursors.iter().map(|c| c.buffered().len()).collect();
+            for (c, k) in cursors.iter_mut().zip(counts) {
+                c.advance_buffered(k)?;
+            }
+            return Ok(());
+        };
+        let cuts: Vec<usize> =
+            cursors.iter().map(|c| c.buffered().partition_point(|r| r.key < safe_key)).collect();
+        let owned: Vec<Vec<WideRecord>> =
+            cursors.iter().zip(&cuts).map(|(c, &k)| wide_prefix(c, k)).collect();
+        let slices: Vec<&[WideRecord]> = owned.iter().map(|v| v.as_slice()).collect();
+        let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+        for w in &merged {
+            out.push_wide(*w)?;
+        }
+        for (c, k) in cursors.iter_mut().zip(cuts) {
+            c.advance_buffered(k)?;
+        }
+        for c in cursors.iter_mut() {
+            while c.peek().map_or(false, |r| r.key == safe_key) {
+                let w = c.next_wide()?.expect("peeked record");
+                out.push_wide(w)?;
+            }
+        }
+    }
+}
+
 /// Stable k-way merge of a window of runs (oldest generation first)
 /// into an in-memory `Vec`, streaming input pages through cursors.
 /// Non-mutating — the benches and tests use this to measure/verify the
@@ -193,8 +260,22 @@ fn compact_window(
         .iter()
         .map(|r| RunCursor::new(Arc::clone(r)))
         .collect::<Result<Vec<_>, String>>()?;
-    let mut out = RunWriter::new(store.spill_dir(), store.config().page_records, total)?;
-    merge_cursors_into(&mut cursors, p, &mut out)?;
+    // The output format is decided upfront: wide iff any input carries
+    // an aux column (a merge of narrow runs stays narrow), v1 only for
+    // a legacy-format store (which never holds wide runs — the writer
+    // refuses sequences past the v1 cap before they get here).
+    let wide = inputs.iter().any(|r| r.has_aux());
+    let format = if store.config().legacy_pages {
+        PageFormat::V1
+    } else {
+        PageFormat::V2 { has_aux: wide }
+    };
+    let mut out = RunWriter::new(store.spill_dir(), store.config().page_records, total, format)?;
+    if wide {
+        merge_cursors_into_wide(&mut cursors, p, &mut out)?;
+    } else {
+        merge_cursors_into(&mut cursors, p, &mut out)?;
+    }
     let prepared = out.finish()?;
     store.commit_compaction(&inputs, prepared)
 }
@@ -354,20 +435,63 @@ mod tests {
         let store = Arc::new(
             RunStore::new(StreamConfig {
                 run_capacity: 4,
-                fanout: 1,
+                fanout: 2,
                 threads: 1,
                 ..StreamConfig::default()
             })
             .unwrap(),
         );
         let mut ing = Ingestor::new(Arc::clone(&store));
-        for k in 0..8i64 {
+        for k in 0..12i64 {
             ing.push_key(k).unwrap();
         }
+        assert_eq!(store.run_count(), 3, "backlog over fanout");
         assert!(store.try_claim_compaction());
         assert!(compact_once(&store, 1).unwrap().is_none(), "claim held: skip");
         store.release_compaction();
         assert!(compact_once(&store, 1).unwrap().is_some());
+    }
+
+    /// Wide runs (out-of-line aux column) compact exactly like narrow
+    /// ones: the aux value stays glued to its record through the
+    /// safe-horizon k-way driver, and the merged run is wide iff any
+    /// input was.
+    #[test]
+    fn compaction_carries_the_aux_column() {
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 16,
+                fanout: 64,
+                threads: 2,
+                ..StreamConfig::default()
+            })
+            .unwrap(),
+        );
+        // Three equal-key runs sealed in generation order; (aux, tag)
+        // encodes a strictly increasing 40-bit sequence so stability
+        // is visible as full_seq order after the merge.
+        let mut seq = 0u64;
+        for _ in 0..3 {
+            let batch: Vec<WideRecord> = (0..4)
+                .map(|_| {
+                    let w = WideRecord::new(
+                        Record::new(0, (seq & 0xFF) << 32),
+                        (seq >> 8) as u32 + 1, // nonzero aux: forces wide
+                    );
+                    seq += 1;
+                    w
+                })
+                .collect();
+            store.seal_wide(batch).unwrap().unwrap();
+        }
+        assert_eq!(compact_to_one(&store, 2).unwrap(), 1);
+        let run = Arc::clone(&store.snapshot()[0]);
+        assert!(run.has_aux(), "merged run keeps the aux column");
+        let wide = run.load_wide().unwrap();
+        assert_eq!(wide.len(), 12);
+        let seqs: Vec<u64> =
+            wide.iter().map(|w| ((w.aux as u64 - 1) << 8) | (w.rec.tag >> 32)).collect();
+        assert_eq!(seqs, (0..12).collect::<Vec<u64>>(), "aux stayed paired and stable");
     }
 
     #[test]

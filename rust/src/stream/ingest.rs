@@ -15,11 +15,15 @@
 //! sealed run. Callers wanting read-your-writes flush first.
 
 use super::store::RunStore;
+use super::StreamError;
 use crate::core::record::Record;
 use crate::core::sort::parallel_merge_sort;
 use std::sync::Arc;
 
 /// Buffering front end of one ingest stream. See the module docs.
+///
+/// One `Ingestor` serializes its callers; for a write path that scales
+/// with submitter threads, see [`super::writer`].
 pub struct Ingestor {
     store: Arc<RunStore>,
     buf: Vec<Record>,
@@ -31,9 +35,10 @@ pub struct Ingestor {
 
 impl Ingestor {
     /// A fresh ingestor over `store` (capacity and sort parallelism
-    /// come from the store's [`super::StreamConfig`]).
+    /// come from the store's [`super::StreamConfig`], which the store
+    /// validated at construction — no clamping here).
     pub fn new(store: Arc<RunStore>) -> Ingestor {
-        let cap = store.config().run_capacity.max(1);
+        let cap = store.config().run_capacity;
         Ingestor { store, buf: Vec::with_capacity(cap), seq: 0 }
     }
 
@@ -49,10 +54,10 @@ impl Ingestor {
 
     /// Ingest one record with an explicit tag. Returns the sealed
     /// run's generation when this push filled the buffer.
-    pub fn push(&mut self, rec: Record) -> Result<Option<u64>, String> {
+    pub fn push(&mut self, rec: Record) -> Result<Option<u64>, StreamError> {
         self.buf.push(rec);
         self.seq += 1;
-        if self.buf.len() >= self.store.config().run_capacity.max(1) {
+        if self.buf.len() >= self.store.config().run_capacity {
             return self.seal();
         }
         Ok(None)
@@ -61,7 +66,7 @@ impl Ingestor {
     /// Ingest one key with an auto-assigned tag (the ingest sequence
     /// number — the stability observation convention). Returns the
     /// tag, plus the sealed generation if the buffer filled.
-    pub fn push_key(&mut self, key: i64) -> Result<(u64, Option<u64>), String> {
+    pub fn push_key(&mut self, key: i64) -> Result<(u64, Option<u64>), StreamError> {
         let tag = self.seq;
         let sealed = self.push(Record::new(key, tag))?;
         Ok((tag, sealed))
@@ -69,19 +74,19 @@ impl Ingestor {
 
     /// Seal whatever is buffered (possibly a partial run). `None` when
     /// the buffer was empty.
-    pub fn flush(&mut self) -> Result<Option<u64>, String> {
+    pub fn flush(&mut self) -> Result<Option<u64>, StreamError> {
         if self.buf.is_empty() {
             return Ok(None);
         }
         self.seal()
     }
 
-    fn seal(&mut self) -> Result<Option<u64>, String> {
-        let cap = self.store.config().run_capacity.max(1);
+    fn seal(&mut self) -> Result<Option<u64>, StreamError> {
+        let cap = self.store.config().run_capacity;
         let mut records = std::mem::replace(&mut self.buf, Vec::with_capacity(cap));
         // Stable sort: duplicate keys keep their arrival order inside
         // the run; the generation stamp orders them across runs.
-        parallel_merge_sort(&mut records, self.store.config().threads.max(1));
+        parallel_merge_sort(&mut records, self.store.config().threads);
         self.store.seal(records)
     }
 }

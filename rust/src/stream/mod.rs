@@ -50,12 +50,20 @@
 //! so duplicate keys emerge from any seal/compact/scan/recover
 //! schedule in exact ingest order.
 //!
-//! The service facade is
-//! [`MergeService::ingest`](crate::coordinator::MergeService::ingest) /
-//! [`flush_stream`](crate::coordinator::MergeService::flush_stream) /
-//! [`scan`](crate::coordinator::MergeService::scan), and `repro
-//! stream` drives the mixed ingest + scan + compaction workload
-//! (`--recover` restarts from a previous run's spill dir).
+//! Write paths: [`Ingestor`] is the original single-owner buffer;
+//! [`writer`] shards the ingest path per submitter thread (each writer
+//! owns a lock-free buffer shard, sealed round-robin through the
+//! store's shared generation clock), which is what lets N concurrent
+//! writers scale instead of serializing on one mutex. The service
+//! facade is
+//! [`MergeService::open_stream`](crate::coordinator::MergeService::open_stream)
+//! returning a [`StreamHandle`](crate::coordinator::StreamHandle) with
+//! per-thread [`IngestWriter`](crate::coordinator::IngestWriter)s (the
+//! old implicit `ingest`/`flush_stream` trio survives as deprecated
+//! wrappers over a default handle), and `repro stream` drives the
+//! mixed ingest + scan + compaction workload (`--writers W` for the
+//! sharded path, `--recover` to restart from a previous run's spill
+//! dir).
 
 pub mod compact;
 pub mod ingest;
@@ -67,6 +75,7 @@ pub mod policy;
 pub mod reader;
 pub mod run;
 pub mod store;
+pub mod writer;
 
 pub use compact::{
     compact_once, compact_to_one, kway_merge_to_vec, merge_runs_parallel, merge_runs_sequential,
@@ -74,13 +83,77 @@ pub use compact::{
 pub use ingest::Ingestor;
 pub use manifest::RunMeta;
 pub use policy::{CompactionPolicy, PolicyKind};
-pub use reader::{scan, scan_iter, ScanIter};
-pub use run::{Run, RunCursor};
+pub use reader::{scan, scan_iter, scan_wide, ScanIter};
+pub use run::{Run, RunCursor, WideRecord};
 pub use store::{CompactionStats, RunStore, StoreStats};
+pub use writer::{SeqClock, ShardWriter, WriterSet};
 
+use std::fmt;
 use std::path::PathBuf;
 
+/// Typed error surface of the stream layer's write path.
+///
+/// Replaces the stringly `Result<_, String>` that [`Ingestor`] and
+/// [`RunStore::seal`] used to return. The enum is `#[non_exhaustive]`
+/// so future failure classes can be added without a breaking change;
+/// it implements [`std::error::Error`], so it converts into `anyhow`
+/// at the coordinator boundary with plain `?`.
+///
+/// Read-side paths (`scan`, cursor IO) still surface `String` errors;
+/// the store wraps those into [`StreamError::Io`] / [`StreamError::Corrupt`]
+/// where they cross the write path.
+#[non_exhaustive]
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StreamError {
+    /// An IO failure (spill file or manifest write).
+    Io(String),
+    /// On-disk state failed validation (checksum, framing, layout).
+    Corrupt(String),
+    /// A stream in `legacy_pages` mode ran past the v1 format's 2^32
+    /// packed-tag record cap. The v2 page format (the default) stores
+    /// the sequence's high bits out of line and has no such cap.
+    CapExceeded {
+        /// The 64-bit ingest sequence number that did not fit.
+        seq: u64,
+    },
+    /// A [`StreamConfig`] failed construction-time validation.
+    Config(String),
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamError::Io(m) => write!(f, "stream io error: {m}"),
+            StreamError::Corrupt(m) => write!(f, "stream corruption: {m}"),
+            StreamError::CapExceeded { seq } => write!(
+                f,
+                "stream record cap exceeded: sequence {seq} does not fit the \
+                 legacy v1 page format's 2^32 packed-tag cap (disable \
+                 legacy_pages to lift it)"
+            ),
+            StreamError::Config(m) => write!(f, "invalid stream config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+impl From<StreamError> for String {
+    fn from(e: StreamError) -> String {
+        e.to_string()
+    }
+}
+
 /// Configuration of one stream (store + its ingestors/compactors).
+///
+/// Construct via [`StreamConfig::builder`], which validates the shape
+/// at construction time (`run_capacity >= 1`, `fanout >= 2`,
+/// `page_records >= 1`, `threads >= 1`) instead of scattering runtime
+/// clamps through the ingest and store paths. The struct is
+/// `#[non_exhaustive]`: downstream crates cannot build it with a bare
+/// struct literal (or a `..default()` functional update), so every
+/// externally-built config has passed validation.
+#[non_exhaustive]
 #[derive(Clone, Debug)]
 pub struct StreamConfig {
     /// Records buffered before a run seals (the bounded in-memory
@@ -106,6 +179,13 @@ pub struct StreamConfig {
     /// Which compaction policy picks the next window
     /// ([`policy::PolicyKind`]).
     pub policy: PolicyKind,
+    /// Write spilled runs in the legacy v1 page format (no out-of-line
+    /// sequence column). A legacy stream keeps the old packed-tag
+    /// limit: ingesting past 2^32 records fails with
+    /// [`StreamError::CapExceeded`]. Off by default — the v2 format
+    /// stores the high sequence bits out of line and has no cap; v1
+    /// files remain readable either way.
+    pub legacy_pages: bool,
 }
 
 impl Default for StreamConfig {
@@ -117,7 +197,138 @@ impl Default for StreamConfig {
             spill: None,
             page_records: 1024,
             policy: PolicyKind::AdjacentPair,
+            legacy_pages: false,
         }
+    }
+}
+
+impl StreamConfig {
+    /// Start building a validated config.
+    ///
+    /// ```
+    /// use traff_merge::stream::StreamConfig;
+    ///
+    /// let cfg = StreamConfig::builder()
+    ///     .run_capacity(4096)
+    ///     .fanout(6)
+    ///     .threads(2)
+    ///     .build()
+    ///     .unwrap();
+    /// assert_eq!(cfg.run_capacity, 4096);
+    ///
+    /// // Degenerate shapes are rejected at construction, not clamped
+    /// // deep inside the ingest path.
+    /// assert!(StreamConfig::builder().run_capacity(0).build().is_err());
+    /// assert!(StreamConfig::builder().fanout(1).build().is_err());
+    /// assert!(StreamConfig::builder().page_records(0).build().is_err());
+    /// ```
+    pub fn builder() -> StreamConfigBuilder {
+        StreamConfigBuilder { cfg: StreamConfig::default() }
+    }
+
+    /// Escape hatch for code migrating off bare struct-literal
+    /// construction (which `#[non_exhaustive]` now forbids outside
+    /// this crate). Performs NO validation — a degenerate shape will
+    /// be rejected later by [`RunStore::new`] instead.
+    #[deprecated(note = "use StreamConfig::builder(), which validates at construction")]
+    pub fn unvalidated(
+        run_capacity: usize,
+        fanout: usize,
+        threads: usize,
+        spill: Option<PathBuf>,
+        page_records: usize,
+        policy: PolicyKind,
+    ) -> StreamConfig {
+        StreamConfig {
+            run_capacity,
+            fanout,
+            threads,
+            spill,
+            page_records,
+            policy,
+            legacy_pages: false,
+        }
+    }
+
+    /// Shape validation shared by [`StreamConfigBuilder::build`] and
+    /// the store constructors (defense in depth for same-crate literal
+    /// construction, which bypasses the builder).
+    pub(crate) fn validate(&self) -> Result<(), StreamError> {
+        if self.run_capacity == 0 {
+            return Err(StreamError::Config("run_capacity must be >= 1".into()));
+        }
+        if self.fanout < 2 {
+            return Err(StreamError::Config("fanout must be >= 2".into()));
+        }
+        if self.page_records == 0 {
+            return Err(StreamError::Config("page_records must be >= 1".into()));
+        }
+        if self.threads == 0 {
+            return Err(StreamError::Config("threads must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Builder for [`StreamConfig`] — the only construction path outside
+/// this crate. [`build`](StreamConfigBuilder::build) validates the
+/// shape and returns [`StreamError::Config`] on a degenerate one.
+#[derive(Clone, Debug)]
+pub struct StreamConfigBuilder {
+    cfg: StreamConfig,
+}
+
+impl StreamConfigBuilder {
+    /// Records buffered before a run seals.
+    pub fn run_capacity(mut self, n: usize) -> Self {
+        self.cfg.run_capacity = n;
+        self
+    }
+
+    /// Live-run backlog tolerated before compaction triggers (also the
+    /// k-way window width cap). Must be >= 2.
+    pub fn fanout(mut self, n: usize) -> Self {
+        self.cfg.fanout = n;
+        self
+    }
+
+    /// Parallelism granularity for seal sorts and compaction merges.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    /// Spill runs to paged files under `dir` (durable via
+    /// [`RunStore::recover`]). Without this call the store stays in
+    /// memory.
+    pub fn spill(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.spill = Some(dir.into());
+        self
+    }
+
+    /// Records per page in spilled run files.
+    pub fn page_records(mut self, n: usize) -> Self {
+        self.cfg.page_records = n;
+        self
+    }
+
+    /// Which compaction policy picks the next window.
+    pub fn policy(mut self, kind: PolicyKind) -> Self {
+        self.cfg.policy = kind;
+        self
+    }
+
+    /// Write legacy v1 pages (and keep the 2^32 record cap). See
+    /// [`StreamConfig::legacy_pages`].
+    pub fn legacy_pages(mut self, on: bool) -> Self {
+        self.cfg.legacy_pages = on;
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<StreamConfig, StreamError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -136,6 +347,32 @@ mod tests {
 
     fn pairs(records: &[crate::core::record::Record]) -> Vec<(i64, u64)> {
         records.iter().map(|r| (r.key, r.tag)).collect()
+    }
+
+    /// Satellite: construction-time validation replaces the scattered
+    /// runtime clamps — degenerate shapes are a typed `Config` error.
+    #[test]
+    fn builder_validates_shape() {
+        let ok = StreamConfig::builder().run_capacity(8).fanout(2).threads(1).build().unwrap();
+        assert_eq!(ok.run_capacity, 8);
+        assert_eq!(ok.fanout, 2);
+        assert!(!ok.legacy_pages);
+        for bad in [
+            StreamConfig::builder().run_capacity(0).build(),
+            StreamConfig::builder().fanout(0).build(),
+            StreamConfig::builder().fanout(1).build(),
+            StreamConfig::builder().page_records(0).build(),
+            StreamConfig::builder().threads(0).build(),
+        ] {
+            match bad {
+                Err(StreamError::Config(_)) => {}
+                other => panic!("expected Config error, got {other:?}"),
+            }
+        }
+        // The store constructors re-validate, so same-crate literal
+        // construction cannot smuggle a degenerate shape past them.
+        let cfg = StreamConfig { fanout: 1, ..StreamConfig::default() };
+        assert!(matches!(RunStore::new(cfg), Err(StreamError::Config(_))));
     }
 
     /// Satellite: cross-run stability. Duplicate keys ingested across

@@ -19,7 +19,7 @@ use crate::model::{check_with, Config};
 use std::sync::Arc;
 
 fn mem_config() -> StreamConfig {
-    StreamConfig { run_capacity: 16, fanout: 1, threads: 1, ..StreamConfig::default() }
+    StreamConfig { run_capacity: 16, fanout: 2, threads: 1, ..StreamConfig::default() }
 }
 
 /// Equal-key records tagged `tag0..tag0+n`: with every key identical,
@@ -85,7 +85,7 @@ fn model_store_compaction_vs_snapshot() {
                 for run in &window {
                     merged.extend(run.load().unwrap());
                 }
-                let prepared = Run::prepare(merged, None, 1024).unwrap();
+                let prepared = Run::prepare(merged, Vec::new(), None, 1024, false).unwrap();
                 let stats = cs.commit_compaction(&window, prepared).unwrap();
                 cs.release_compaction();
                 assert_eq!((stats.gen_lo, stats.gen_hi, stats.level), (0, 1, 1));

@@ -2,22 +2,33 @@
 //! checksummed per-page key index, so readers can stream one page at a
 //! time instead of materializing a whole run.
 //!
-//! # Layout
+//! # Layout (v2; v1 files remain readable)
 //!
 //! ```text
 //! ┌──────────────────────┐ offset 0
-//! │ header (16 B)        │ magic "TMPG0001" ·· page_records u32 ·· 0 u32
+//! │ header (16 B)        │ magic "TMPG0002" ·· page_records u32 ·· flags u32
 //! ├──────────────────────┤ offset 16
-//! │ records              │ num_records × 16 B (key i64 LE, tag u64 LE);
-//! │                      │ page i = records [i·page_records, (i+1)·page_records);
-//! │                      │ the last page may be partial, no padding
-//! ├──────────────────────┤ offset 16 + num_records·16
+//! │ record pages         │ page i = [n_i × 16 B records (key i64 LE, tag u64 LE)]
+//! │                      │          [n_i × 4 B aux u32 LE — only if flags bit 0]
+//! │                      │ n_i = page_records except the last page (partial,
+//! │                      │ no padding); pages are laid out back to back
+//! ├──────────────────────┤
 //! │ page index           │ num_pages × (min_key i64 LE, max_key i64 LE)
 //! ├──────────────────────┤
 //! │ footer (32 B)        │ num_records u64 ·· num_pages u32 ·· page_records u32
 //! │                      │ ·· fnv1a64(index bytes) u64 ·· magic "TMPGEND1"
 //! └──────────────────────┘
 //! ```
+//!
+//! **Versioning:** the v1 format (magic `TMPG0001`, flags always 0)
+//! is the same layout with no aux column; [`PageFile::open`] accepts
+//! both magics, and a v1 file simply reads back with every aux value
+//! zero. The aux column is the out-of-line high half of the 64-bit
+//! ingest sequence — it is what lifts the packed-tag record cap from
+//! 2^32 to 2^64 without widening the hot 16-byte record. New files are
+//! written v2 (with the aux column only when the run actually carries
+//! nonzero aux values); [`super::StreamConfig::legacy_pages`] forces
+//! v1 output for downgrade compatibility and re-imposes the cap.
 //!
 //! All integers little-endian. The record area is written first and
 //! streamed (a crash mid-write leaves a file without a valid footer —
@@ -40,10 +51,36 @@ pub const HEADER_BYTES: usize = 16;
 pub const INDEX_ENTRY_BYTES: usize = 16;
 /// Bytes in the file footer.
 pub const FOOTER_BYTES: usize = 32;
-/// Header magic.
+/// Header magic of the legacy v1 format (no aux column, flags 0).
 pub const HEADER_MAGIC: &[u8; 8] = b"TMPG0001";
-/// Footer magic.
+/// Header magic of the v2 format (flags word is live).
+pub const HEADER_MAGIC_V2: &[u8; 8] = b"TMPG0002";
+/// Footer magic (shared by both versions).
 pub const FOOTER_MAGIC: &[u8; 8] = b"TMPGEND1";
+/// v2 header flag: each page carries a trailing `n × u32` aux column.
+pub const FLAG_HAS_AUX: u32 = 1;
+/// Bytes per out-of-line aux value.
+pub const AUX_BYTES: usize = 4;
+
+/// Which on-disk format a [`PageFileWriter`] emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageFormat {
+    /// Legacy format: magic `TMPG0001`, no aux column possible.
+    V1,
+    /// Current format: magic `TMPG0002`; the aux column is present
+    /// only when `has_aux` is set.
+    V2 {
+        /// Whether pages carry the out-of-line aux column.
+        has_aux: bool,
+    },
+}
+
+impl PageFormat {
+    /// Whether this format writes the per-page aux column.
+    pub fn has_aux(self) -> bool {
+        matches!(self, PageFormat::V2 { has_aux: true })
+    }
+}
 
 /// Per-page key span, resident while the run is live (16 B per page —
 /// the only metadata a scan needs to keep in memory).
@@ -56,11 +93,35 @@ pub struct PageMeta {
 }
 
 /// Encode the 16-byte header. Pure — unit-tested under Miri.
-pub fn encode_header(page_records: u32) -> [u8; HEADER_BYTES] {
+pub fn encode_header(page_records: u32, format: PageFormat) -> [u8; HEADER_BYTES] {
     let mut out = [0u8; HEADER_BYTES];
-    out[..8].copy_from_slice(HEADER_MAGIC);
+    let (magic, flags) = match format {
+        PageFormat::V1 => (HEADER_MAGIC, 0u32),
+        PageFormat::V2 { has_aux } => {
+            (HEADER_MAGIC_V2, if has_aux { FLAG_HAS_AUX } else { 0 })
+        }
+    };
+    out[..8].copy_from_slice(magic);
     out[8..12].copy_from_slice(&page_records.to_le_bytes());
+    out[12..16].copy_from_slice(&flags.to_le_bytes());
     out
+}
+
+/// Decode the aux column of one page. Pure.
+pub fn decode_aux(bytes: &[u8]) -> Result<Vec<u32>, String> {
+    if bytes.len() % AUX_BYTES != 0 {
+        return Err(format!(
+            "aux column corrupt: {} bytes is not a multiple of {AUX_BYTES}",
+            bytes.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / AUX_BYTES);
+    for chunk in bytes.chunks_exact(AUX_BYTES) {
+        let mut b = [0u8; AUX_BYTES];
+        b.copy_from_slice(chunk);
+        out.push(u32::from_le_bytes(b));
+    }
+    Ok(out)
 }
 
 /// Encode the page index. Pure.
@@ -137,30 +198,40 @@ pub struct PageFileWriter {
     file: std::io::BufWriter<std::fs::File>,
     path: PathBuf,
     page_records: usize,
+    format: PageFormat,
     index: Vec<PageMeta>,
     len: usize,
     /// Records on the (partial) current page.
     in_page: usize,
+    /// Encoded aux column of the current page (only when the format
+    /// carries one); flushed when the page closes.
+    aux_page: Vec<u8>,
     cur_min: i64,
     cur_max: i64,
 }
 
 impl PageFileWriter {
     /// Create (truncate) `path` and write the header.
-    pub fn create(path: &Path, page_records: usize) -> Result<PageFileWriter, String> {
+    pub fn create(
+        path: &Path,
+        page_records: usize,
+        format: PageFormat,
+    ) -> Result<PageFileWriter, String> {
         assert!(page_records > 0, "page_records must be positive");
         let file = std::fs::File::create(path)
             .map_err(|e| format!("create {}: {e}", path.display()))?;
         let mut file = std::io::BufWriter::new(file);
-        file.write_all(&encode_header(page_records as u32))
+        file.write_all(&encode_header(page_records as u32, format))
             .map_err(|e| format!("write header {}: {e}", path.display()))?;
         Ok(PageFileWriter {
             file,
             path: path.to_path_buf(),
             page_records,
+            format,
             index: Vec::new(),
             len: 0,
             in_page: 0,
+            aux_page: Vec::new(),
             cur_min: 0,
             cur_max: 0,
         })
@@ -178,7 +249,21 @@ impl PageFileWriter {
 
     /// Append one record (must be pushed in key order).
     pub fn push(&mut self, rec: Record) -> Result<(), String> {
+        self.push_wide(rec, 0)
+    }
+
+    /// Append one record with its out-of-line aux value (must be
+    /// pushed in key order). A nonzero aux requires a format with the
+    /// aux column — the seal path decides that before creating the
+    /// writer.
+    pub fn push_wide(&mut self, rec: Record, aux: u32) -> Result<(), String> {
         debug_assert!(self.in_page > 0 || self.len % self.page_records == 0);
+        if aux != 0 && !self.format.has_aux() {
+            return Err(format!(
+                "{}: nonzero aux value in a format without an aux column",
+                self.path.display()
+            ));
+        }
         if self.in_page == 0 {
             self.cur_min = rec.key;
         }
@@ -190,11 +275,27 @@ impl PageFileWriter {
         self.file
             .write_all(&buf)
             .map_err(|e| format!("write record {}: {e}", self.path.display()))?;
+        if self.format.has_aux() {
+            self.aux_page.extend_from_slice(&aux.to_le_bytes());
+        }
         self.len += 1;
         self.in_page += 1;
         if self.in_page == self.page_records {
-            self.index.push(PageMeta { min_key: self.cur_min, max_key: self.cur_max });
-            self.in_page = 0;
+            self.close_page()?;
+        }
+        Ok(())
+    }
+
+    /// Close the current page: record its key span and (in aux
+    /// formats) write the buffered aux column behind its records.
+    fn close_page(&mut self) -> Result<(), String> {
+        self.index.push(PageMeta { min_key: self.cur_min, max_key: self.cur_max });
+        self.in_page = 0;
+        if self.format.has_aux() {
+            self.file
+                .write_all(&self.aux_page)
+                .map_err(|e| format!("write aux column {}: {e}", self.path.display()))?;
+            self.aux_page.clear();
         }
         Ok(())
     }
@@ -211,8 +312,7 @@ impl PageFileWriter {
     /// flush, fsync. Returns the page index.
     pub fn finish(mut self) -> Result<Vec<PageMeta>, String> {
         if self.in_page > 0 {
-            self.index.push(PageMeta { min_key: self.cur_min, max_key: self.cur_max });
-            self.in_page = 0;
+            self.close_page()?;
         }
         let index_bytes = encode_index(&self.index);
         self.file
@@ -246,6 +346,9 @@ pub struct PageFile {
     pub page_records: usize,
     /// Total records in the file.
     pub num_records: usize,
+    /// Whether pages carry the out-of-line aux column (v2 only; a v1
+    /// file reads back with all aux values zero).
+    pub has_aux: bool,
     /// Per-page key spans.
     pub index: Vec<PageMeta>,
 }
@@ -272,9 +375,18 @@ impl PageFile {
         let mut header = [0u8; HEADER_BYTES];
         file.read_exact(&mut header)
             .map_err(|e| format!("read header {}: {e}", path.display()))?;
-        if &header[..8] != HEADER_MAGIC {
-            return Err(format!("{}: bad header magic", path.display()));
+        let v2 = match &header[..8] {
+            m if m == HEADER_MAGIC => false,
+            m if m == HEADER_MAGIC_V2 => true,
+            _ => return Err(format!("{}: bad header magic", path.display())),
+        };
+        let mut fl = [0u8; 4];
+        fl.copy_from_slice(&header[12..16]);
+        let flags = u32::from_le_bytes(fl);
+        if (!v2 && flags != 0) || (v2 && flags & !FLAG_HAS_AUX != 0) {
+            return Err(format!("{}: unknown header flags {flags:#x}", path.display()));
         }
+        let has_aux = v2 && flags & FLAG_HAS_AUX != 0;
         let mut footer = [0u8; FOOTER_BYTES];
         file.seek(SeekFrom::End(-(FOOTER_BYTES as i64)))
             .map_err(|e| format!("seek footer {}: {e}", path.display()))?;
@@ -298,8 +410,9 @@ impl PageFile {
                 path.display()
             ));
         }
+        let record_stride = RECORD_BYTES + if has_aux { AUX_BYTES } else { 0 };
         let expect_total = (HEADER_BYTES
-            + num_records as usize * RECORD_BYTES
+            + num_records as usize * record_stride
             + num_pages as usize * INDEX_ENTRY_BYTES
             + FOOTER_BYTES) as u64;
         if total != expect_total {
@@ -308,7 +421,7 @@ impl PageFile {
                 path.display()
             ));
         }
-        let index_off = (HEADER_BYTES + num_records as usize * RECORD_BYTES) as u64;
+        let index_off = (HEADER_BYTES + num_records as usize * record_stride) as u64;
         file.seek(SeekFrom::Start(index_off))
             .map_err(|e| format!("seek index {}: {e}", path.display()))?;
         let mut index_bytes = vec![0u8; num_pages as usize * INDEX_ENTRY_BYTES];
@@ -324,26 +437,46 @@ impl PageFile {
                 return Err(format!("{}: page index not key-sorted at page {i}", path.display()));
             }
         }
-        Ok(PageFile { page_records: page_records as usize, num_records: num_records as usize, index })
+        Ok(PageFile {
+            page_records: page_records as usize,
+            num_records: num_records as usize,
+            has_aux,
+            index,
+        })
     }
 }
 
-/// Read page `page_idx` of an opened run file (records only; the
-/// caller supplies the shape from the validated [`PageFile`]).
+/// Read page `page_idx` of an opened run file (the caller supplies
+/// the shape from the validated [`PageFile`]). Returns the page's
+/// records and its aux column — empty when the file has none, which
+/// readers must treat as all-zero.
 pub fn read_page(
     file: &mut std::fs::File,
     page_records: usize,
     num_records: usize,
+    has_aux: bool,
     page_idx: usize,
-) -> Result<Vec<Record>, String> {
+) -> Result<(Vec<Record>, Vec<u32>), String> {
     let start = page_idx * page_records;
     assert!(start < num_records, "page {page_idx} out of range");
     let n = page_records.min(num_records - start);
-    let off = (HEADER_BYTES + start * RECORD_BYTES) as u64;
+    // Every page before this one is full, so the byte offset is the
+    // per-record stride (records + aux column) over `start` records.
+    let stride = RECORD_BYTES + if has_aux { AUX_BYTES } else { 0 };
+    let off = (HEADER_BYTES + start * stride) as u64;
     file.seek(SeekFrom::Start(off)).map_err(|e| format!("seek page {page_idx}: {e}"))?;
     let mut bytes = vec![0u8; n * RECORD_BYTES];
     file.read_exact(&mut bytes).map_err(|e| format!("read page {page_idx}: {e}"))?;
-    decode_records(&bytes)
+    let records = decode_records(&bytes)?;
+    let aux = if has_aux {
+        let mut abytes = vec![0u8; n * AUX_BYTES];
+        file.read_exact(&mut abytes)
+            .map_err(|e| format!("read aux column of page {page_idx}: {e}"))?;
+        decode_aux(&abytes)?
+    } else {
+        Vec::new()
+    };
+    Ok((records, aux))
 }
 
 #[cfg(test)]
@@ -358,14 +491,31 @@ mod tests {
 
     #[test]
     fn header_and_footer_roundtrip() {
-        let h = encode_header(1024);
+        let h = encode_header(1024, PageFormat::V1);
         assert_eq!(&h[..8], HEADER_MAGIC);
+        assert_eq!(&h[12..16], &[0, 0, 0, 0], "v1 flags word is zero");
+        let h2 = encode_header(1024, PageFormat::V2 { has_aux: false });
+        assert_eq!(&h2[..8], HEADER_MAGIC_V2);
+        assert_eq!(&h2[12..16], &[0, 0, 0, 0]);
+        let hw = encode_header(1024, PageFormat::V2 { has_aux: true });
+        assert_eq!(u32::from_le_bytes(hw[12..16].try_into().unwrap()), FLAG_HAS_AUX);
         let f = encode_footer(5_000, 5, 1024, 0xDEAD_BEEF);
         assert_eq!(decode_footer(&f).unwrap(), (5_000, 5, 1024, 0xDEAD_BEEF));
         let mut torn = f;
         torn[30] ^= 1; // corrupt the magic
         assert!(decode_footer(&torn).is_err());
         assert!(decode_footer(&f[..FOOTER_BYTES - 1]).is_err());
+    }
+
+    #[test]
+    fn aux_column_codec_roundtrip() {
+        let vals = [0u32, 1, u32::MAX, 42];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(decode_aux(&bytes).unwrap(), vals);
+        assert!(decode_aux(&bytes[..5]).is_err());
     }
 
     #[test]
@@ -393,7 +543,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("run-pages.bin");
         let records = recs(&[-9, -9, 0, 1, 1, 2, 5, 5, 5, 8, 11]); // 11 records
-        let mut w = PageFileWriter::create(&path, 4).unwrap();
+        let mut w = PageFileWriter::create(&path, 4, PageFormat::V2 { has_aux: false }).unwrap();
         w.extend(&records).unwrap();
         assert_eq!(w.len(), 11);
         let index = w.finish().unwrap();
@@ -403,22 +553,73 @@ mod tests {
 
         let pf = PageFile::open(&path).unwrap();
         assert_eq!((pf.page_records, pf.num_records), (4, 11));
+        assert!(!pf.has_aux);
         assert_eq!(pf.index, index);
         let mut file = std::fs::File::open(&path).unwrap();
         let mut back = Vec::new();
         for page in 0..pf.index.len() {
-            back.extend(read_page(&mut file, pf.page_records, pf.num_records, page).unwrap());
+            let (page_recs, aux) =
+                read_page(&mut file, pf.page_records, pf.num_records, pf.has_aux, page).unwrap();
+            assert!(aux.is_empty(), "no aux column in this format");
+            back.extend(page_recs);
         }
         let pairs: Vec<(i64, u64)> = back.iter().map(|r| (r.key, r.tag)).collect();
         let expect: Vec<(i64, u64)> = records.iter().map(|r| (r.key, r.tag)).collect();
         assert_eq!(pairs, expect);
         assert_eq!(
-            read_page(&mut file, 4, 11, 2).unwrap().len(),
+            read_page(&mut file, 4, 11, false, 2).unwrap().0.len(),
             3,
             "last page is partial"
         );
         let _ = std::fs::remove_file(&path);
         let _ = std::fs::remove_dir(&dir);
+    }
+
+    /// The v2 aux column round-trips per page, and a v1 file written
+    /// byte-for-byte in the legacy layout still opens (back-compat is
+    /// a format contract, not an accident of shared code).
+    #[test]
+    #[cfg(not(miri))]
+    fn aux_column_and_v1_back_compat() {
+        let dir = std::env::temp_dir().join(format!("traff-page-v2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Wide file: aux values survive page-by-page.
+        let path = dir.join("wide.bin");
+        let records = recs(&[1, 1, 2, 3, 3, 3, 7]); // 7 records, 2 pages at 4/page
+        let mut w = PageFileWriter::create(&path, 4, PageFormat::V2 { has_aux: true }).unwrap();
+        for (i, &r) in records.iter().enumerate() {
+            w.push_wide(r, (i as u32) * 11 + 1).unwrap();
+        }
+        w.finish().unwrap();
+        let pf = PageFile::open(&path).unwrap();
+        assert!(pf.has_aux);
+        let mut file = std::fs::File::open(&path).unwrap();
+        let mut aux_back = Vec::new();
+        for page in 0..pf.index.len() {
+            let (page_recs, aux) = read_page(&mut file, 4, 7, true, page).unwrap();
+            assert_eq!(page_recs.len(), aux.len());
+            aux_back.extend(aux);
+        }
+        let expect: Vec<u32> = (0..7).map(|i| i * 11 + 1).collect();
+        assert_eq!(aux_back, expect);
+        // Nonzero aux without the column is a caller bug, reported.
+        let narrow = dir.join("narrow.bin");
+        let mut w = PageFileWriter::create(&narrow, 4, PageFormat::V1).unwrap();
+        assert!(w.push_wide(Record::new(1, 0), 9).is_err());
+        drop(w);
+        // v1 back-compat: legacy-format output opens and reads.
+        let v1 = dir.join("v1.bin");
+        let mut w = PageFileWriter::create(&v1, 4, PageFormat::V1).unwrap();
+        w.extend(&records).unwrap();
+        w.finish().unwrap();
+        let pf = PageFile::open(&v1).unwrap();
+        assert!(!pf.has_aux);
+        assert_eq!(pf.num_records, 7);
+        let mut file = std::fs::File::open(&v1).unwrap();
+        let (page0, aux0) = read_page(&mut file, 4, 7, false, 0).unwrap();
+        assert_eq!(page0.len(), 4);
+        assert!(aux0.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -428,7 +629,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         // Truncated mid-records (the crash-mid-spill shape).
         let path = dir.join("truncated.bin");
-        let mut w = PageFileWriter::create(&path, 4).unwrap();
+        let mut w = PageFileWriter::create(&path, 4, PageFormat::V2 { has_aux: false }).unwrap();
         w.extend(&recs(&[1, 2, 3, 4, 5, 6, 7, 8])).unwrap();
         w.finish().unwrap();
         let full = std::fs::read(&path).unwrap();

@@ -23,7 +23,7 @@
 //! sizes — [`ScanIter::peak_resident`] reports the high-water mark so
 //! tests can pin the bound.
 
-use super::run::RunCursor;
+use super::run::{RunCursor, WideRecord};
 use super::store::RunStore;
 use crate::core::record::Record;
 use std::sync::Arc;
@@ -35,6 +35,20 @@ pub fn scan(store: &RunStore) -> Result<Vec<Record>, String> {
     let mut out = Vec::with_capacity(it.remaining());
     while let Some(rec) = it.next_record()? {
         out.push(rec);
+    }
+    Ok(out)
+}
+
+/// [`scan`] with the out-of-line aux column kept paired with each
+/// record (aux 0 for narrow runs) — the read side of the widened
+/// (gen, seq) tag: `WideRecord::full_seq` reassembles the full 64-bit
+/// ingest sequence for [`super::writer`]-packed streams. Same snapshot
+/// pinning, ordering, and paging behaviour as [`scan`].
+pub fn scan_wide(store: &RunStore) -> Result<Vec<WideRecord>, String> {
+    let mut it = scan_iter(store)?;
+    let mut out = Vec::with_capacity(it.remaining());
+    while let Some(w) = it.next_wide()? {
+        out.push(w);
     }
     Ok(out)
 }
@@ -89,6 +103,12 @@ impl ScanIter {
     /// Yield the next record of the stable merge, or `Err` on a page
     /// read/decode failure (the fallible twin of `Iterator::next`).
     pub fn next_record(&mut self) -> Result<Option<Record>, String> {
+        Ok(self.next_wide()?.map(|w| w.rec))
+    }
+
+    /// [`ScanIter::next_record`] with the aux column attached (aux 0
+    /// for narrow runs).
+    pub fn next_wide(&mut self) -> Result<Option<WideRecord>, String> {
         let mut best: Option<usize> = None;
         for (i, c) in self.cursors.iter().enumerate() {
             let Some(head) = c.peek() else { continue };
@@ -103,10 +123,10 @@ impl ScanIter {
             };
         }
         let Some(i) = best else { return Ok(None) };
-        let rec = self.cursors[i].next_record()?.expect("peeked head");
+        let w = self.cursors[i].next_wide()?.expect("peeked head");
         let resident: usize = self.cursors.iter().map(|c| c.resident_records()).sum();
         self.peak_resident = self.peak_resident.max(resident);
-        Ok(Some(rec))
+        Ok(Some(w))
     }
 }
 

@@ -31,10 +31,65 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use super::manifest::RunMeta;
-use super::page::{self, PageFileWriter, PageMeta};
+use super::page::{self, PageFileWriter, PageFormat, PageMeta};
 
 /// Bytes per record in the spill encoding (i64 key + u64 tag, LE).
 pub const RECORD_BYTES: usize = 16;
+
+/// A [`Record`] paired with its out-of-line aux value — the high half
+/// of the 64-bit ingest sequence, stored in the page format's v2 aux
+/// column rather than widening the hot 16-byte record. Orders by the
+/// record key ONLY (exactly like [`Record`]), so the generic stable
+/// merge kernels (`parallel_merge_sort`, `parallel_kway_merge`) carry
+/// the aux column through seal sorts and compaction merges unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct WideRecord {
+    /// The 16-byte record (key + packed tag).
+    pub rec: Record,
+    /// Out-of-line sequence high bits (0 for streams under 2^32
+    /// records and for all legacy/v1 data).
+    pub aux: u32,
+}
+
+impl WideRecord {
+    /// Pair a record with its aux value.
+    pub fn new(rec: Record, aux: u32) -> WideRecord {
+        WideRecord { rec, aux }
+    }
+
+    /// Reassemble the full 64-bit ingest sequence for tags packed by
+    /// [`super::writer`] (`tag = seq_lo << 32 | payload`, `aux =
+    /// seq >> 32`). Meaningless for raw-tag ingest paths like
+    /// [`super::Ingestor::push_key`], where aux is always 0.
+    pub fn full_seq(&self) -> u64 {
+        ((self.aux as u64) << 32) | (self.rec.tag >> 32)
+    }
+}
+
+impl PartialEq for WideRecord {
+    #[inline]
+    fn eq(&self, other: &Self) -> bool {
+        self.rec.key == other.rec.key
+    }
+}
+
+impl Eq for WideRecord {}
+
+impl PartialOrd for WideRecord {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for WideRecord {
+    /// Orders by key ONLY — equal keys are `Equal` regardless of tag
+    /// or aux, which is what lets the full sequence observe stability.
+    #[inline]
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.rec.key.cmp(&other.rec.key)
+    }
+}
 
 /// Encode records into the fixed-width spill representation.
 #[cfg_attr(not(test), allow(dead_code))]
@@ -79,14 +134,18 @@ pub(crate) fn bump_file_seq(min_next: u64) {
 }
 
 enum Storage {
-    /// Records resident in memory.
-    Mem(Vec<Record>),
+    /// Records resident in memory. `aux` is either empty (all aux
+    /// values are 0 — the common narrow case) or exactly
+    /// `recs.len()` long, one aux value per record.
+    Mem { recs: Vec<Record>, aux: Vec<u32> },
     /// Records spilled to a paged file; only the page index stays
     /// resident.
     Disk {
         path: PathBuf,
         page_records: usize,
         index: Vec<PageMeta>,
+        /// Whether the file carries the v2 out-of-line aux column.
+        has_aux: bool,
         /// Whether dropping the last reference deletes the file.
         /// `true` until the run is published to the manifest; flipped
         /// back on when a compaction retires it.
@@ -161,66 +220,99 @@ impl PreparedRun {
 pub(crate) struct RunWriter {
     id: u64,
     page_records: usize,
+    format: PageFormat,
     first_key: i64,
     last_key: i64,
     inner: WriterInner,
 }
 
 enum WriterInner {
-    Mem(Vec<Record>),
+    /// `aux` mirrors the storage convention: empty means all zero.
+    Mem { recs: Vec<Record>, aux: Vec<u32> },
     Disk { writer: PageFileWriter, path: PathBuf },
 }
 
 impl RunWriter {
     /// Start a run: in memory when `spill_dir` is `None`, else as the
-    /// paged file `run-{id}.bin` under `spill_dir`.
+    /// paged file `run-{id}.bin` under `spill_dir` using `format`.
+    /// Memory writers ignore `format` (they always accept aux values);
+    /// spilled writers reject nonzero aux unless the format carries
+    /// the aux column.
     pub(crate) fn new(
         spill_dir: Option<&Path>,
         page_records: usize,
         cap_hint: usize,
+        format: PageFormat,
     ) -> Result<RunWriter, String> {
         let id = FILE_SEQ.fetch_add(1, Ordering::Relaxed);
         let inner = match spill_dir {
-            None => WriterInner::Mem(Vec::with_capacity(cap_hint)),
+            None => WriterInner::Mem { recs: Vec::with_capacity(cap_hint), aux: Vec::new() },
             Some(dir) => {
                 let path = dir.join(format!("run-{id}.bin"));
-                let writer = PageFileWriter::create(&path, page_records)?;
+                let writer = PageFileWriter::create(&path, page_records, format)?;
                 WriterInner::Disk { writer, path }
             }
         };
-        Ok(RunWriter { id, page_records, first_key: 0, last_key: 0, inner })
+        Ok(RunWriter { id, page_records, format, first_key: 0, last_key: 0, inner })
     }
 
     /// An in-memory writer (never fails).
     pub(crate) fn mem(cap_hint: usize) -> RunWriter {
-        RunWriter::new(None, 1, cap_hint).expect("mem writer is infallible")
+        RunWriter::new(None, 1, cap_hint, PageFormat::V2 { has_aux: false })
+            .expect("mem writer is infallible")
     }
 
     /// Records written so far.
     pub(crate) fn len(&self) -> usize {
         match &self.inner {
-            WriterInner::Mem(v) => v.len(),
+            WriterInner::Mem { recs, .. } => recs.len(),
             WriterInner::Disk { writer, .. } => writer.len(),
         }
     }
 
     /// Append one record (non-decreasing key order).
     pub(crate) fn push(&mut self, rec: Record) -> Result<(), String> {
+        self.push_wide(WideRecord::new(rec, 0))
+    }
+
+    /// Append one record with its aux value (non-decreasing key
+    /// order).
+    pub(crate) fn push_wide(&mut self, wrec: WideRecord) -> Result<(), String> {
+        let rec = wrec.rec;
         if self.len() == 0 {
             self.first_key = rec.key;
         }
         debug_assert!(self.len() == 0 || rec.key >= self.last_key, "runs hold key-sorted records");
         self.last_key = rec.key;
         match &mut self.inner {
-            WriterInner::Mem(v) => {
-                v.push(rec);
+            WriterInner::Mem { recs, aux } => {
+                if wrec.aux != 0 && aux.is_empty() {
+                    // First nonzero aux: backfill the implicit zeros.
+                    aux.resize(recs.len(), 0);
+                }
+                recs.push(rec);
+                if !aux.is_empty() {
+                    aux.push(wrec.aux);
+                }
                 Ok(())
             }
-            WriterInner::Disk { writer, .. } => writer.push(rec),
+            WriterInner::Disk { writer, .. } => {
+                if self.format.has_aux() {
+                    writer.push_wide(rec, wrec.aux)
+                } else {
+                    if wrec.aux != 0 {
+                        return Err(format!(
+                            "run {} format {:?} cannot store nonzero aux {}",
+                            self.id, self.format, wrec.aux
+                        ));
+                    }
+                    writer.push(rec)
+                }
+            }
         }
     }
 
-    /// Append a sorted slice.
+    /// Append a sorted slice (all aux values 0).
     pub(crate) fn extend(&mut self, recs: &[Record]) -> Result<(), String> {
         if recs.is_empty() {
             return Ok(());
@@ -231,8 +323,11 @@ impl RunWriter {
         }
         self.last_key = recs[recs.len() - 1].key;
         match &mut self.inner {
-            WriterInner::Mem(v) => {
+            WriterInner::Mem { recs: v, aux } => {
                 v.extend_from_slice(recs);
+                if !aux.is_empty() {
+                    aux.resize(v.len(), 0);
+                }
                 Ok(())
             }
             WriterInner::Disk { writer, .. } => writer.extend(recs),
@@ -244,13 +339,17 @@ impl RunWriter {
         let len = self.len();
         assert!(len > 0, "a run is never empty");
         let storage = match self.inner {
-            WriterInner::Mem(v) => Storage::Mem(v),
+            WriterInner::Mem { recs, aux } => {
+                debug_assert!(aux.is_empty() || aux.len() == recs.len());
+                Storage::Mem { recs, aux }
+            }
             WriterInner::Disk { writer, path } => {
                 let index = writer.finish()?;
                 Storage::Disk {
                     path,
                     page_records: self.page_records,
                     index,
+                    has_aux: self.format.has_aux(),
                     delete_on_drop: AtomicBool::new(true),
                 }
             }
@@ -266,10 +365,10 @@ impl RunWriter {
 
     /// Take the buffered records of an in-memory writer (the
     /// non-mutating merge path, [`super::compact::kway_merge_to_vec`]).
-    /// Panics on a spilled writer.
+    /// Drops the aux column. Panics on a spilled writer.
     pub(crate) fn into_records(self) -> Vec<Record> {
         match self.inner {
-            WriterInner::Mem(v) => v,
+            WriterInner::Mem { recs, .. } => recs,
             WriterInner::Disk { .. } => panic!("into_records on a spilled run writer"),
         }
     }
@@ -279,28 +378,50 @@ impl Run {
     /// Materialize storage for sorted records, spilling to `spill_dir`
     /// when one is configured. `records` must be non-empty and
     /// key-sorted (the seal path sorts; compaction merges sorted
-    /// inputs).
+    /// inputs). `aux` is either empty (all zero) or exactly one value
+    /// per record; `legacy` forces the v1 page format on spill (only
+    /// valid with an empty/all-zero aux column).
     pub(crate) fn prepare(
         records: Vec<Record>,
+        aux: Vec<u32>,
         spill_dir: Option<&Path>,
         page_records: usize,
+        legacy: bool,
     ) -> Result<PreparedRun, String> {
         assert!(!records.is_empty(), "a run is never empty");
         debug_assert!(
             records.windows(2).all(|w| w[0].key <= w[1].key),
             "runs hold key-sorted records"
         );
+        debug_assert!(aux.is_empty() || aux.len() == records.len());
+        // Drop an all-zero aux column — it carries no information and
+        // would force every downstream run into the wide format.
+        let aux = if aux.iter().all(|&a| a == 0) { Vec::new() } else { aux };
+        if legacy && !aux.is_empty() {
+            return Err("legacy v1 page format cannot store an aux column".to_string());
+        }
         match spill_dir {
             None => {
                 let mut w = RunWriter::mem(0);
                 w.first_key = records[0].key;
                 w.last_key = records[records.len() - 1].key;
-                w.inner = WriterInner::Mem(records);
+                w.inner = WriterInner::Mem { recs: records, aux };
                 w.finish()
             }
             Some(dir) => {
-                let mut w = RunWriter::new(Some(dir), page_records, records.len())?;
-                w.extend(&records)?;
+                let format = if legacy {
+                    PageFormat::V1
+                } else {
+                    PageFormat::V2 { has_aux: !aux.is_empty() }
+                };
+                let mut w = RunWriter::new(Some(dir), page_records, records.len(), format)?;
+                if aux.is_empty() {
+                    w.extend(&records)?;
+                } else {
+                    for (r, a) in records.iter().zip(aux.iter()) {
+                        w.push_wide(WideRecord::new(*r, *a))?;
+                    }
+                }
                 w.finish()
             }
         }
@@ -308,7 +429,7 @@ impl Run {
 
     /// [`Run::prepare`] + [`PreparedRun::into_run`] in one step, for
     /// callers whose generation range is already fixed (compaction
-    /// commits, tests).
+    /// commits, tests). Aux-free, current format.
     pub(crate) fn create(
         records: Vec<Record>,
         gen_lo: u64,
@@ -317,7 +438,8 @@ impl Run {
         spill_dir: Option<&Path>,
         page_records: usize,
     ) -> Result<Run, String> {
-        Ok(Run::prepare(records, spill_dir, page_records)?.into_run(gen_lo, gen_hi, level))
+        Ok(Run::prepare(records, Vec::new(), spill_dir, page_records, false)?
+            .into_run(gen_lo, gen_hi, level))
     }
 
     /// Reopen a spilled run from its manifest record (recovery path):
@@ -357,6 +479,7 @@ impl Run {
                 path,
                 page_records: pf.page_records,
                 index: pf.index,
+                has_aux: pf.has_aux,
                 delete_on_drop: AtomicBool::new(false),
             },
         })
@@ -439,8 +562,18 @@ impl Run {
     /// cursor borrows the resident records directly).
     pub fn num_pages(&self) -> usize {
         match &self.storage {
-            Storage::Mem(_) => 0,
+            Storage::Mem { .. } => 0,
             Storage::Disk { index, .. } => index.len(),
+        }
+    }
+
+    /// Whether this run carries a (non-trivial) out-of-line aux
+    /// column. Compaction uses this to decide its output format: a
+    /// merge of aux-free inputs stays aux-free.
+    pub fn has_aux(&self) -> bool {
+        match &self.storage {
+            Storage::Mem { aux, .. } => !aux.is_empty(),
+            Storage::Disk { has_aux, .. } => *has_aux,
         }
     }
 
@@ -451,13 +584,48 @@ impl Run {
     /// compaction stream through [`RunCursor`] instead.
     pub fn load(&self) -> Result<Vec<Record>, String> {
         match &self.storage {
-            Storage::Mem(records) => Ok(records.clone()),
-            Storage::Disk { path, page_records, index, .. } => {
+            Storage::Mem { recs, .. } => Ok(recs.clone()),
+            Storage::Disk { path, page_records, index, has_aux, .. } => {
                 let mut file = std::fs::File::open(path)
                     .map_err(|e| format!("spill read {}: {e}", path.display()))?;
                 let mut out = Vec::with_capacity(self.len);
                 for p in 0..index.len() {
-                    out.extend(page::read_page(&mut file, *page_records, self.len, p)?);
+                    let (recs, _aux) =
+                        page::read_page(&mut file, *page_records, self.len, *has_aux, p)?;
+                    out.extend(recs);
+                }
+                if out.len() != self.len {
+                    return Err(format!(
+                        "spill file {} holds {} records, expected {}",
+                        path.display(),
+                        out.len(),
+                        self.len
+                    ));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Like [`Run::load`], but keeps the aux column paired with each
+    /// record (aux 0 for narrow runs). Same tests-and-oracles caveat.
+    pub fn load_wide(&self) -> Result<Vec<WideRecord>, String> {
+        match &self.storage {
+            Storage::Mem { recs, aux } => Ok(recs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| WideRecord::new(*r, aux.get(i).copied().unwrap_or(0)))
+                .collect()),
+            Storage::Disk { path, page_records, index, has_aux, .. } => {
+                let mut file = std::fs::File::open(path)
+                    .map_err(|e| format!("spill read {}: {e}", path.display()))?;
+                let mut out = Vec::with_capacity(self.len);
+                for p in 0..index.len() {
+                    let (recs, aux) =
+                        page::read_page(&mut file, *page_records, self.len, *has_aux, p)?;
+                    for (i, r) in recs.iter().enumerate() {
+                        out.push(WideRecord::new(*r, aux.get(i).copied().unwrap_or(0)));
+                    }
                 }
                 if out.len() != self.len {
                     return Err(format!(
@@ -504,7 +672,15 @@ pub struct RunCursor {
 
 enum CursorState {
     Mem { pos: usize },
-    Disk { file: std::fs::File, page: Vec<Record>, page_pos: usize, next_page: usize },
+    Disk {
+        file: std::fs::File,
+        page: Vec<Record>,
+        /// Aux values parallel to `page` (empty = all zero / narrow
+        /// file).
+        aux: Vec<u32>,
+        page_pos: usize,
+        next_page: usize,
+    },
 }
 
 impl RunCursor {
@@ -512,12 +688,12 @@ impl RunCursor {
     /// run).
     pub fn new(run: Arc<Run>) -> Result<RunCursor, String> {
         let state = match &run.storage {
-            Storage::Mem(_) => CursorState::Mem { pos: 0 },
-            Storage::Disk { path, page_records, .. } => {
+            Storage::Mem { .. } => CursorState::Mem { pos: 0 },
+            Storage::Disk { path, page_records, has_aux, .. } => {
                 let mut file = std::fs::File::open(path)
                     .map_err(|e| format!("cursor open {}: {e}", path.display()))?;
-                let page = page::read_page(&mut file, *page_records, run.len, 0)?;
-                CursorState::Disk { file, page, page_pos: 0, next_page: 1 }
+                let (page, aux) = page::read_page(&mut file, *page_records, run.len, *has_aux, 0)?;
+                CursorState::Disk { file, page, aux, page_pos: 0, next_page: 1 }
             }
         };
         Ok(RunCursor { run, consumed: 0, state })
@@ -533,10 +709,36 @@ impl RunCursor {
     pub fn buffered(&self) -> &[Record] {
         match &self.state {
             CursorState::Mem { pos } => match &self.run.storage {
-                Storage::Mem(records) => &records[*pos..],
+                Storage::Mem { recs, .. } => &recs[*pos..],
                 Storage::Disk { .. } => unreachable!("mem cursor on disk run"),
             },
             CursorState::Disk { page, page_pos, .. } => &page[*page_pos..],
+        }
+    }
+
+    /// Aux values parallel to [`RunCursor::buffered`]. May be SHORTER
+    /// than `buffered()` (in particular empty) when the run carries no
+    /// aux column — missing entries read as 0. Callers should index
+    /// with `aux.get(i).copied().unwrap_or(0)`.
+    pub fn buffered_aux(&self) -> &[u32] {
+        match &self.state {
+            CursorState::Mem { pos } => match &self.run.storage {
+                Storage::Mem { aux, .. } => {
+                    if aux.is_empty() {
+                        &[]
+                    } else {
+                        &aux[*pos..]
+                    }
+                }
+                Storage::Disk { .. } => unreachable!("mem cursor on disk run"),
+            },
+            CursorState::Disk { aux, page_pos, .. } => {
+                if aux.is_empty() {
+                    &[]
+                } else {
+                    &aux[*page_pos..]
+                }
+            }
         }
     }
 
@@ -566,19 +768,25 @@ impl RunCursor {
             CursorState::Mem { pos } => {
                 *pos += k;
             }
-            CursorState::Disk { file, page, page_pos, next_page } => {
+            CursorState::Disk { file, page, aux, page_pos, next_page } => {
                 *page_pos += k;
                 if *page_pos >= page.len() {
-                    let (page_records, num_pages) = match &self.run.storage {
-                        Storage::Disk { page_records, index, .. } => (*page_records, index.len()),
-                        Storage::Mem(_) => unreachable!("disk cursor on mem run"),
+                    let (page_records, num_pages, has_aux) = match &self.run.storage {
+                        Storage::Disk { page_records, index, has_aux, .. } => {
+                            (*page_records, index.len(), *has_aux)
+                        }
+                        Storage::Mem { .. } => unreachable!("disk cursor on mem run"),
                     };
                     if *next_page < num_pages {
-                        *page = page::read_page(file, page_records, self.run.len, *next_page)?;
+                        let (p, a) =
+                            page::read_page(file, page_records, self.run.len, has_aux, *next_page)?;
+                        *page = p;
+                        *aux = a;
                         *page_pos = 0;
                         *next_page += 1;
                     } else {
                         page.clear();
+                        aux.clear();
                         *page_pos = 0;
                     }
                 }
@@ -594,6 +802,18 @@ impl RunCursor {
             Some(r) => {
                 self.advance_buffered(1)?;
                 Ok(Some(r))
+            }
+        }
+    }
+
+    /// Pop the head record with its aux value (0 for narrow runs).
+    pub fn next_wide(&mut self) -> Result<Option<WideRecord>, String> {
+        match self.peek() {
+            None => Ok(None),
+            Some(r) => {
+                let aux = self.buffered_aux().first().copied().unwrap_or(0);
+                self.advance_buffered(1)?;
+                Ok(Some(WideRecord::new(r, aux)))
             }
         }
     }
@@ -731,7 +951,7 @@ mod tests {
     fn run_writer_streams_to_disk() {
         let dir = std::env::temp_dir().join(format!("traff-runw-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let mut w = RunWriter::new(Some(&dir), 3, 0).unwrap();
+        let mut w = RunWriter::new(Some(&dir), 3, 0, PageFormat::V2 { has_aux: false }).unwrap();
         w.push(Record::new(-2, 0)).unwrap();
         w.extend(&recs(&[1, 1, 5, 9])).unwrap();
         assert_eq!(w.len(), 5);
@@ -751,5 +971,88 @@ mod tests {
         w.extend(&recs(&[2, 4, 4])).unwrap();
         let out = w.into_records();
         assert_eq!(out.iter().map(|r| r.key).collect::<Vec<_>>(), vec![2, 4, 4]);
+    }
+
+    #[test]
+    fn wide_record_orders_by_key_only() {
+        let a = WideRecord::new(Record::new(5, 100), 7);
+        let b = WideRecord::new(Record::new(5, 200), 0);
+        let c = WideRecord::new(Record::new(6, 0), 0);
+        assert_eq!(a, b, "equal keys compare Equal regardless of tag/aux");
+        assert!(a < c);
+        assert_eq!(a.cmp(&b), std::cmp::Ordering::Equal);
+        let w = WideRecord::new(Record::new(0, (3u64 << 32) | 42), 2);
+        assert_eq!(w.full_seq(), (2u64 << 32) | 3, "aux carries the seq high half");
+    }
+
+    #[test]
+    fn wide_mem_run_roundtrips_aux() {
+        // A mem run with a mixed aux column: prepare keeps the pairing
+        // and cursors hand it back next to each record.
+        let records = recs(&[1, 2, 2, 9]);
+        let aux = vec![0, 3, 0, 7];
+        let run = Arc::new(
+            Run::prepare(records, aux.clone(), None, 1024, false)
+                .unwrap()
+                .into_run(0, 0, 0),
+        );
+        assert!(run.has_aux());
+        let wide = run.load_wide().unwrap();
+        assert_eq!(wide.iter().map(|w| w.aux).collect::<Vec<_>>(), aux);
+        let mut cur = RunCursor::new(Arc::clone(&run)).unwrap();
+        let mut seen = Vec::new();
+        while let Some(w) = cur.next_wide().unwrap() {
+            seen.push((w.rec.key, w.aux));
+        }
+        assert_eq!(seen, vec![(1, 0), (2, 3), (2, 0), (9, 7)]);
+
+        // An all-zero aux column collapses back to a narrow run.
+        let run = Run::prepare(recs(&[1, 2]), vec![0, 0], None, 1024, false)
+            .unwrap()
+            .into_run(1, 1, 0);
+        assert!(!run.has_aux());
+        // Legacy format refuses a real aux column.
+        assert!(Run::prepare(recs(&[1, 2]), vec![0, 5], None, 1024, true).is_err());
+    }
+
+    #[test]
+    #[cfg(not(miri))] // touches the real filesystem
+    fn wide_spilled_run_roundtrips_aux() {
+        let dir = std::env::temp_dir().join(format!("traff-widerun-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let records = recs(&[3, 4, 4, 7, 8, 9, 12]); // 7 records, 3 pages of 3
+        let aux: Vec<u32> = (0..7).map(|i| if i % 2 == 0 { i as u32 + 1 } else { 0 }).collect();
+        let run = Arc::new(
+            Run::prepare(records.clone(), aux.clone(), Some(&dir), 3, false)
+                .unwrap()
+                .into_run(0, 0, 0),
+        );
+        assert!(run.is_spilled() && run.has_aux());
+        let wide = run.load_wide().unwrap();
+        assert_eq!(wide.iter().map(|w| w.aux).collect::<Vec<_>>(), aux);
+        assert_eq!(pairs(&run.load().unwrap()), pairs(&records));
+
+        // Cursor pages the aux column alongside the records.
+        let mut cur = RunCursor::new(Arc::clone(&run)).unwrap();
+        let mut seen = Vec::new();
+        while let Some(w) = cur.next_wide().unwrap() {
+            seen.push(w.aux);
+        }
+        assert_eq!(seen, aux);
+
+        // Reopen via the manifest record: has_aux survives recovery.
+        run.set_delete_on_drop(false);
+        let meta = run.meta();
+        drop(cur);
+        drop(run);
+        let reopened = Run::open(&meta, &dir).unwrap();
+        assert!(reopened.has_aux());
+        assert_eq!(
+            reopened.load_wide().unwrap().iter().map(|w| w.aux).collect::<Vec<_>>(),
+            aux
+        );
+        reopened.set_delete_on_drop(true);
+        drop(reopened);
+        let _ = std::fs::remove_dir(&dir);
     }
 }

@@ -64,8 +64,8 @@
 
 use super::manifest::{self, ManifestRecord, ManifestWriter, RunMeta};
 use super::policy::CompactionPolicy;
-use super::run::{bump_file_seq, PreparedRun, Run};
-use super::StreamConfig;
+use super::run::{bump_file_seq, PreparedRun, Run, WideRecord};
+use super::{StreamConfig, StreamError};
 use crate::core::record::Record;
 use crate::model::sync::{AtomicBool, AtomicU64, Mutex, Ordering};
 use std::sync::Arc;
@@ -134,15 +134,21 @@ pub struct RunStore {
 
 impl RunStore {
     /// Build a fresh store; creates the spill directory and a fresh
-    /// (truncated) manifest when a spill dir is configured. Use
-    /// [`RunStore::recover`] to reopen an existing durable store.
-    pub fn new(config: StreamConfig) -> Result<RunStore, String> {
+    /// (truncated) manifest when a spill dir is configured. Validates
+    /// the configuration ([`StreamConfig::builder`] shapes always
+    /// pass; hand-rolled configs may not). Use [`RunStore::recover`]
+    /// to reopen an existing durable store.
+    pub fn new(config: StreamConfig) -> Result<RunStore, StreamError> {
+        config.validate()?;
         let manifest = match &config.spill {
             None => None,
             Some(dir) => {
                 std::fs::create_dir_all(dir)
-                    .map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
-                Some(Mutex::new(ManifestWriter::create(&dir.join(manifest::MANIFEST_NAME))?))
+                    .map_err(|e| StreamError::Io(format!("spill dir {}: {e}", dir.display())))?;
+                Some(Mutex::new(
+                    ManifestWriter::create(&dir.join(manifest::MANIFEST_NAME))
+                        .map_err(StreamError::Io)?,
+                ))
             }
         };
         let policy = config.policy.build();
@@ -167,39 +173,42 @@ impl RunStore {
     /// page checksums and manifest metadata), delete orphan
     /// `run-*.bin` files, and rewrite a compact manifest. With no
     /// manifest on disk the result is a fresh empty store.
-    pub fn recover(config: StreamConfig) -> Result<RunStore, String> {
+    pub fn recover(config: StreamConfig) -> Result<RunStore, StreamError> {
+        config.validate()?;
         let dir = config
             .spill
             .clone()
-            .ok_or_else(|| "recover requires a spill dir".to_string())?;
-        std::fs::create_dir_all(&dir).map_err(|e| format!("spill dir {}: {e}", dir.display()))?;
+            .ok_or_else(|| StreamError::Config("recover requires a spill dir".to_string()))?;
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| StreamError::Io(format!("spill dir {}: {e}", dir.display())))?;
         let manifest_path = dir.join(manifest::MANIFEST_NAME);
         if !manifest_path.exists() {
             return RunStore::new(config);
         }
-        let log = manifest::read_manifest(&manifest_path)?;
+        let log = manifest::read_manifest(&manifest_path).map_err(StreamError::Corrupt)?;
         let mut live = manifest::replay(&log);
         live.sort_by_key(|m| m.gen_lo);
         for w in live.windows(2) {
             if w[0].gen_hi >= w[1].gen_lo {
-                return Err(format!(
+                return Err(StreamError::Corrupt(format!(
                     "manifest corrupt: generation ranges overlap ({:?} vs {:?})",
                     w[0], w[1]
-                ));
+                )));
             }
         }
         let mut runs = Vec::with_capacity(live.len());
         for meta in &live {
-            runs.push(Arc::new(Run::open(meta, &dir)?));
+            runs.push(Arc::new(Run::open(meta, &dir).map_err(StreamError::Corrupt)?));
         }
         // Orphan sweep: every file in the spill dir that is not the
         // manifest or a live run file is crash debris (an unpublished
         // spill, a retired run whose unlink never landed, a stray
         // MANIFEST.tmp).
-        for entry in
-            std::fs::read_dir(&dir).map_err(|e| format!("read spill dir {}: {e}", dir.display()))?
+        for entry in std::fs::read_dir(&dir)
+            .map_err(|e| StreamError::Io(format!("read spill dir {}: {e}", dir.display())))?
         {
-            let entry = entry.map_err(|e| format!("read spill dir {}: {e}", dir.display()))?;
+            let entry = entry
+                .map_err(|e| StreamError::Io(format!("read spill dir {}: {e}", dir.display())))?;
             let name = entry.file_name();
             let name = name.to_string_lossy();
             if name == manifest::MANIFEST_NAME {
@@ -216,8 +225,8 @@ impl RunStore {
         }
         // Compact the manifest (drops the torn tail + folded history)
         // and keep appending to the rewritten file.
-        manifest::rewrite(&manifest_path, &live)?;
-        let writer = ManifestWriter::open_append(&manifest_path)?;
+        manifest::rewrite(&manifest_path, &live).map_err(StreamError::Io)?;
+        let writer = ManifestWriter::open_append(&manifest_path).map_err(StreamError::Io)?;
         bump_file_seq(live.iter().map(|m| m.id).max().map_or(0, |id| id + 1));
         let next_gen = live.iter().map(|m| m.gen_hi + 1).max().unwrap_or(0);
         let live_records: u64 = live.iter().map(|m| m.len).sum();
@@ -263,20 +272,51 @@ impl RunStore {
     /// broken. A manifest-append failure aborts the seal: the
     /// unpublished run deletes its spill file on drop, and the skipped
     /// generation leaves a harmless gap in the clock.
-    pub fn seal(&self, records: Vec<Record>) -> Result<Option<u64>, String> {
+    pub fn seal(&self, records: Vec<Record>) -> Result<Option<u64>, StreamError> {
+        self.seal_columns(records, Vec::new())
+    }
+
+    /// [`RunStore::seal`] for wide records: splits the aux column out
+    /// and stores it in the v2 page format (an all-zero column
+    /// collapses back to the narrow layout). This is the
+    /// [`super::writer`] shard seal path.
+    pub fn seal_wide(&self, records: Vec<WideRecord>) -> Result<Option<u64>, StreamError> {
+        let mut recs = Vec::with_capacity(records.len());
+        let mut aux = Vec::with_capacity(records.len());
+        for w in &records {
+            recs.push(w.rec);
+            aux.push(w.aux);
+        }
+        self.seal_columns(recs, aux)
+    }
+
+    fn seal_columns(
+        &self,
+        records: Vec<Record>,
+        aux: Vec<u32>,
+    ) -> Result<Option<u64>, StreamError> {
         if records.is_empty() {
             return Ok(None);
         }
         let len = records.len() as u64;
-        let prepared =
-            Run::prepare(records, self.config.spill.as_deref(), self.config.page_records)?;
+        let prepared = Run::prepare(
+            records,
+            aux,
+            self.config.spill.as_deref(),
+            self.config.page_records,
+            self.config.legacy_pages,
+        )
+        .map_err(StreamError::Io)?;
         let spilled = prepared.is_spilled();
         let gen = {
             let mut runs = self.runs.lock().unwrap();
             let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
             let run = Arc::new(prepared.into_run(gen, gen, 0));
             if let Some(m) = &self.manifest {
-                m.lock().unwrap().append(&ManifestRecord::AddRun(run.meta()))?;
+                m.lock()
+                    .unwrap()
+                    .append(&ManifestRecord::AddRun(run.meta()))
+                    .map_err(StreamError::Io)?;
             }
             // Manifest-published: the file now outlives this process.
             run.set_delete_on_drop(false);
@@ -311,7 +351,7 @@ impl RunStore {
     /// Whether the backlog exceeds the configured fanout — the
     /// compaction trigger, readable without the list lock.
     pub fn needs_compaction(&self) -> bool {
-        self.run_count() > self.config.fanout.max(1)
+        self.run_count() > self.config.fanout
     }
 
     /// Fold the published counters (plus one short lock for the level
@@ -554,7 +594,7 @@ mod tests {
             .iter()
             .map(|&(k, tag)| Record::new(k, tag))
             .collect();
-        let prepared = Run::prepare(merged, None, 1024).unwrap();
+        let prepared = Run::prepare(merged, Vec::new(), None, 1024, false).unwrap();
         let st = store.commit_compaction(&snap[..2], prepared).unwrap();
         store.release_compaction();
         assert_eq!((st.merged_records, st.inputs, st.level), (4, 2, 1));
@@ -575,10 +615,35 @@ mod tests {
         store.seal(recs(&[2], 10)).unwrap();
         let stale = store.snapshot();
         // The window swaps out from under the (hypothetical) planner.
-        let prepared = Run::prepare(recs(&[1, 2], 0), None, 1024).unwrap();
+        let prepared = Run::prepare(recs(&[1, 2], 0), Vec::new(), None, 1024, false).unwrap();
         store.commit_compaction(&stale, prepared).unwrap();
-        let prepared = Run::prepare(recs(&[1, 2], 0), None, 1024).unwrap();
+        let prepared = Run::prepare(recs(&[1, 2], 0), Vec::new(), None, 1024, false).unwrap();
         assert!(store.commit_compaction(&stale, prepared).is_err());
+    }
+
+    #[test]
+    fn seal_wide_keeps_the_aux_column() {
+        let store = mem_store();
+        let wide: Vec<WideRecord> = [(1i64, 10u64, 0u32), (2, 11, 5), (2, 12, 0)]
+            .iter()
+            .map(|&(k, t, a)| WideRecord::new(Record::new(k, t), a))
+            .collect();
+        store.seal_wide(wide).unwrap().unwrap();
+        let snap = store.snapshot();
+        assert!(snap[0].has_aux());
+        let back = snap[0].load_wide().unwrap();
+        assert_eq!(
+            back.iter().map(|w| (w.rec.key, w.rec.tag, w.aux)).collect::<Vec<_>>(),
+            vec![(1, 10, 0), (2, 11, 5), (2, 12, 0)]
+        );
+        // All-zero aux collapses to a narrow run.
+        let wide: Vec<WideRecord> =
+            (0..3).map(|i| WideRecord::new(Record::new(i, i as u64), 0)).collect();
+        store.seal_wide(wide).unwrap().unwrap();
+        assert!(!store.snapshot()[1].has_aux());
+        // A validated config is a construction-time contract now.
+        let bad = StreamConfig { fanout: 1, ..StreamConfig::default() };
+        assert!(matches!(RunStore::new(bad), Err(StreamError::Config(_))));
     }
 
     #[test]

@@ -1,0 +1,471 @@
+//! Sharded multi-writer ingest: per-submitter buffer shards sealing
+//! through the shared generation clock — the write path that scales
+//! with writer threads instead of serializing on one
+//! `Mutex<Ingestor>`.
+//!
+//! ```text
+//!  writer thread 1 ──► [ShardWriter 1]──┐  seal (sorted batch)
+//!  writer thread 2 ──► [ShardWriter 2]──┼──► [RunStore] generation
+//!  writer thread N ──► [ShardWriter N]──┘    clock: each seal takes
+//!        │                   │               the next gen atomically
+//!        │ thread-id route   │ 64-bit seq blocks
+//!        ▼                   ▼
+//!    [WriterSet]         [SeqClock] (shared fetch-add)
+//! ```
+//!
+//! Each [`ShardWriter`] owns its buffer outright — pushes are plain
+//! `Vec` appends, no lock, no sharing — and seals full runs through
+//! [`RunStore::seal_wide`], where the store's generation clock hands
+//! out the seal number *inside* its list-lock critical section. That
+//! single serialization point (a fetch-add plus a list insert) is the
+//! only thing concurrent writers contend on, which is why ingest
+//! throughput scales with submitters (bench E11) while the ordering
+//! contract stays exact:
+//!
+//! - **per-writer order is preserved exactly** — one writer's records
+//!   with equal keys emerge in its push order (the buffer holds push
+//!   order, the seal sort is stable, and a single writer's successive
+//!   seals take monotone generations);
+//! - **cross-writer duplicate order is seal-generation order** — two
+//!   writers' equal-key records order by which *run* sealed first, the
+//!   same arrival semantics the store gives any interleaving of seals.
+//!
+//! Sequence numbers come from the shared [`SeqClock`] in coarse blocks
+//! ([`SEQ_BLOCK`] at a time, one fetch-add per block), so they are
+//! globally unique and per-writer monotone; a solo writer's sequence
+//! is exactly contiguous from 0, which keeps the single-tenant
+//! facade's tag oracle intact. The 64-bit sequence is stored as a
+//! **(aux, tag) pair**: the low 32 bits pack into the record tag next
+//! to the 32-bit payload (`tag = seq_lo << 32 | payload`), the high 32
+//! bits ride out of line in the page format's v2 aux column
+//! ([`WideRecord`]), reassembled by [`WideRecord::full_seq`]. Streams
+//! no longer cap at 2^32 records — only a store in
+//! [`legacy_pages`](super::StreamConfig::legacy_pages) mode (v1 files,
+//! no aux column) still refuses sequence numbers past the packed-tag
+//! limit, with [`StreamError::CapExceeded`].
+//!
+//! The thread-id shard routing in [`WriterSet`] mirrors
+//! `exec::injector`'s shard-by-submitter trick: a process-wide
+//! sequence hands each OS thread a stable small integer on first use,
+//! and the thread hashes to `id & (shards - 1)`. Threads that want to
+//! skip even that routing hold an owned [`ShardWriter`]
+//! ([`WriterSet::owned_writer`], or
+//! [`StreamHandle::writer`](crate::coordinator::StreamHandle::writer)
+//! at the service layer).
+
+use super::run::WideRecord;
+use super::store::RunStore;
+use super::StreamError;
+use crate::core::record::Record;
+use crate::core::sort::parallel_merge_sort;
+use crate::model::sync::{AtomicU64, AtomicUsize, Mutex, Ordering};
+use std::cell::Cell;
+use std::sync::Arc;
+
+/// Sequence numbers a writer takes per clock allocation: coarse enough
+/// that the shared fetch-add is off the per-record hot path, fine
+/// enough that abandoned tails don't matter (sequence gaps are
+/// harmless — ordering only ever reads relative magnitude).
+pub const SEQ_BLOCK: u64 = 1 << 16;
+
+/// The shared 64-bit ingest-sequence allocator: one atomic counter,
+/// handed out in [`SEQ_BLOCK`]-sized chunks. Every record across every
+/// writer of one stream gets a globally unique sequence number;
+/// numbers within one writer are strictly increasing.
+pub struct SeqClock {
+    next: AtomicU64,
+}
+
+impl SeqClock {
+    /// A clock starting at sequence 0.
+    pub fn new() -> SeqClock {
+        SeqClock::with_first(0)
+    }
+
+    /// A clock starting at `first` — lets tests (and the 2^32 boundary
+    /// check) fast-forward a stream without pushing billions of
+    /// records.
+    pub fn with_first(first: u64) -> SeqClock {
+        SeqClock { next: AtomicU64::new(first) }
+    }
+
+    /// Claim `n` consecutive sequence numbers; returns the first.
+    pub fn alloc_block(&self, n: u64) -> u64 {
+        self.next.fetch_add(n, Ordering::Relaxed)
+    }
+
+    /// Sequence numbers handed out so far (block granularity).
+    pub fn allocated(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for SeqClock {
+    fn default() -> Self {
+        SeqClock::new()
+    }
+}
+
+/// One writer thread's private ingest shard: an owned, unshared buffer
+/// that seals full runs into the shared [`RunStore`]. `Send` (move it
+/// into the thread that uses it), deliberately not `Sync` in spirit —
+/// each thread holds its own.
+///
+/// Push cost is a `Vec` append plus, every [`SEQ_BLOCK`] records, one
+/// shared fetch-add; every `run_capacity` records the buffer is
+/// stably sorted and sealed (the seal is where the store's generation
+/// clock serializes writers for the cross-writer ordering contract —
+/// see the module docs).
+pub struct ShardWriter {
+    store: Arc<RunStore>,
+    clock: Arc<SeqClock>,
+    buf: Vec<WideRecord>,
+    /// Next sequence number in the writer's current block.
+    next_seq: u64,
+    /// One past the last sequence number of the current block.
+    seq_end: u64,
+}
+
+impl ShardWriter {
+    /// A writer over `store` drawing sequence numbers from `clock`.
+    /// All writers of one logical stream must share one clock.
+    pub fn new(store: Arc<RunStore>, clock: Arc<SeqClock>) -> ShardWriter {
+        let cap = store.config().run_capacity;
+        ShardWriter { store, clock, buf: Vec::with_capacity(cap), next_seq: 0, seq_end: 0 }
+    }
+
+    fn alloc_seq(&mut self) -> u64 {
+        if self.next_seq == self.seq_end {
+            let start = self.clock.alloc_block(SEQ_BLOCK);
+            self.next_seq = start;
+            self.seq_end = start + SEQ_BLOCK;
+        }
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Ingest one `(key, payload)` record. Returns the sealed run's
+    /// generation when this push filled the shard's buffer.
+    ///
+    /// The 64-bit sequence is split `(aux = seq >> 32,
+    /// tag = seq_lo << 32 | payload)`; a `legacy_pages` store refuses
+    /// sequences past the v1 packed-tag cap with
+    /// [`StreamError::CapExceeded`].
+    pub fn push(&mut self, key: i64, payload: u32) -> Result<Option<u64>, StreamError> {
+        let seq = self.alloc_seq();
+        if self.store.config().legacy_pages && seq >= (1u64 << 32) {
+            return Err(StreamError::CapExceeded { seq });
+        }
+        let tag = ((seq & 0xFFFF_FFFF) << 32) | payload as u64;
+        let aux = (seq >> 32) as u32;
+        self.buf.push(WideRecord::new(Record::new(key, tag), aux));
+        if self.buf.len() >= self.store.config().run_capacity {
+            return self.seal();
+        }
+        Ok(None)
+    }
+
+    /// Records buffered in this shard (not yet sealed, not yet visible
+    /// to scans).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Seal whatever is buffered (possibly a partial run). `None` when
+    /// the buffer was empty. Dropping a writer with pending records
+    /// loses them — flush first (the coordinator's handle does this on
+    /// its flush paths).
+    pub fn flush(&mut self) -> Result<Option<u64>, StreamError> {
+        if self.buf.is_empty() {
+            return Ok(None);
+        }
+        self.seal()
+    }
+
+    /// The store this writer seals into.
+    pub fn store(&self) -> &Arc<RunStore> {
+        &self.store
+    }
+
+    fn seal(&mut self) -> Result<Option<u64>, StreamError> {
+        let cap = self.store.config().run_capacity;
+        let mut batch = std::mem::replace(&mut self.buf, Vec::with_capacity(cap));
+        // Stable sort keeps push order within equal keys; the
+        // generation the store stamps orders this run against every
+        // other writer's seals.
+        parallel_merge_sort(&mut batch, self.store.config().threads);
+        self.store.seal_wide(batch)
+    }
+}
+
+/// Process-wide writer-thread numbering (same shard-by-submitter trick
+/// as `exec::injector`): each OS thread lazily takes a stable small
+/// integer, so shard routing is one TLS read after the first push.
+static WRITER_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static WRITER_ID: Cell<usize> = Cell::new(usize::MAX);
+}
+
+fn writer_thread_id() -> usize {
+    WRITER_ID.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = WRITER_SEQ.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+/// A fixed set of [`ShardWriter`]s behind thread-id routing: any
+/// thread may call [`WriterSet::push`] and lands on "its" shard
+/// (`thread id & (shards - 1)`), so disjoint threads never contend on
+/// a buffer. With at least as many shards as writer threads each mutex
+/// is effectively uncontended; it exists to keep the routing safe when
+/// threads outnumber shards.
+///
+/// All shards share one [`SeqClock`], so sequence numbers stay
+/// globally unique across the set (and across any
+/// [`WriterSet::owned_writer`] handed out).
+pub struct WriterSet {
+    store: Arc<RunStore>,
+    clock: Arc<SeqClock>,
+    shards: Vec<Mutex<ShardWriter>>,
+    mask: usize,
+}
+
+impl WriterSet {
+    /// A set of (at least) `shards` writer shards over `store`,
+    /// rounded up to a power of two for mask routing.
+    pub fn new(store: Arc<RunStore>, shards: usize) -> WriterSet {
+        WriterSet::with_clock(store, shards, Arc::new(SeqClock::new()))
+    }
+
+    /// [`WriterSet::new`] with an explicit shared clock (tests, and
+    /// tenants that also vend owned writers off the same sequence
+    /// space).
+    pub fn with_clock(store: Arc<RunStore>, shards: usize, clock: Arc<SeqClock>) -> WriterSet {
+        let n = shards.max(1).next_power_of_two();
+        let shards = (0..n)
+            .map(|_| Mutex::new(ShardWriter::new(Arc::clone(&store), Arc::clone(&clock))))
+            .collect();
+        WriterSet { store, clock, shards, mask: n - 1 }
+    }
+
+    /// Number of shards (a power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shared sequence clock.
+    pub fn clock(&self) -> &Arc<SeqClock> {
+        &self.clock
+    }
+
+    /// Ingest one record on the calling thread's shard. Same contract
+    /// as [`ShardWriter::push`].
+    pub fn push(&self, key: i64, payload: u32) -> Result<Option<u64>, StreamError> {
+        let idx = writer_thread_id() & self.mask;
+        self.shards[idx].lock().unwrap().push(key, payload)
+    }
+
+    /// Records buffered across all shards.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().pending()).sum()
+    }
+
+    /// Flush every shard's partial buffer; returns how many runs were
+    /// sealed.
+    pub fn flush_all(&self) -> Result<usize, StreamError> {
+        let mut sealed = 0usize;
+        for s in &self.shards {
+            if s.lock().unwrap().flush()?.is_some() {
+                sealed += 1;
+            }
+        }
+        Ok(sealed)
+    }
+
+    /// A new owned [`ShardWriter`] sharing this set's store and clock —
+    /// for threads that want zero routing overhead and exclusive
+    /// buffer ownership.
+    pub fn owned_writer(&self) -> ShardWriter {
+        ShardWriter::new(Arc::clone(&self.store), Arc::clone(&self.clock))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{compact_once, compact_to_one, scan_wide, StreamConfig};
+
+    fn mem_store(cap: usize) -> Arc<RunStore> {
+        Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: cap,
+                fanout: 3,
+                threads: 1,
+                ..StreamConfig::default()
+            })
+            .unwrap(),
+        )
+    }
+
+    /// Payload encoding for the oracle: writer in the high bits, the
+    /// writer's push index in the low bits.
+    fn payload(w: usize, i: usize) -> u32 {
+        ((w as u32) << 24) | i as u32
+    }
+
+    /// The tentpole property test: N writer threads x M records with
+    /// duplicate-heavy keys, checked at three compaction depths. The
+    /// oracle: (1) scans are key-sorted and complete; (2) per-writer
+    /// ingest order survives exactly — for every (writer, key) group
+    /// the writer's push indices appear in push order; (3) sequence
+    /// numbers are globally unique.
+    #[test]
+    fn multi_writer_oracle_across_compaction_depths() {
+        let (writers, per_writer, cap) = if cfg!(miri) { (3, 8, 4) } else { (4, 200, 16) };
+        // Depth 0: no compaction. Depth 1: policy-driven. Depth 2: full.
+        for depth in 0..3 {
+            let store = mem_store(cap);
+            let set = Arc::new(WriterSet::new(Arc::clone(&store), writers));
+            std::thread::scope(|s| {
+                for w in 0..writers {
+                    let set = Arc::clone(&set);
+                    s.spawn(move || {
+                        let mut sw = set.owned_writer();
+                        for i in 0..per_writer {
+                            // Duplicate-heavy: 5 distinct keys.
+                            let key = ((w * 7 + i * 3) % 5) as i64;
+                            sw.push(key, payload(w, i)).unwrap();
+                        }
+                        sw.flush().unwrap();
+                    });
+                }
+            });
+            match depth {
+                0 => {}
+                1 => {
+                    while compact_once(&store, 1).unwrap().is_some() {}
+                }
+                _ => {
+                    compact_to_one(&store, 1).unwrap();
+                }
+            }
+            let scanned = scan_wide(&store).unwrap();
+            assert_eq!(scanned.len(), writers * per_writer, "depth {depth}: complete");
+            assert!(
+                scanned.windows(2).all(|p| p[0].rec.key <= p[1].rec.key),
+                "depth {depth}: key-sorted"
+            );
+            // Per-writer, per-key push order survives.
+            let mut last_idx = vec![vec![-1i64; 5]; writers];
+            for rec in &scanned {
+                let p = (rec.rec.tag & 0xFFFF_FFFF) as u32;
+                let (w, i) = ((p >> 24) as usize, (p & 0x00FF_FFFF) as i64);
+                let k = rec.rec.key as usize;
+                assert!(
+                    last_idx[w][k] < i,
+                    "depth {depth}: writer {w} key {k} pushed #{i} after #{}",
+                    last_idx[w][k]
+                );
+                last_idx[w][k] = i;
+            }
+            // Sequence numbers are globally unique.
+            let mut seqs: Vec<u64> = scanned.iter().map(|r| r.full_seq()).collect();
+            seqs.sort_unstable();
+            let n = seqs.len();
+            seqs.dedup();
+            assert_eq!(seqs.len(), n, "depth {depth}: duplicate sequence numbers");
+        }
+    }
+
+    /// A solo writer's sequence is contiguous from 0 (the deprecated
+    /// single-tenant facade's tag oracle depends on this), and the
+    /// thread-id routing gives distinct threads distinct shards when
+    /// shards >= threads.
+    #[test]
+    fn solo_writer_sequence_is_contiguous() {
+        let store = mem_store(4);
+        let clock = Arc::new(SeqClock::new());
+        let mut w = ShardWriter::new(Arc::clone(&store), clock);
+        for i in 0..10 {
+            w.push(i % 3, i as u32).unwrap();
+        }
+        w.flush().unwrap();
+        let mut seqs: Vec<u64> = scan_wide(&store).unwrap().iter().map(|r| r.full_seq()).collect();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
+    }
+
+    /// The 2^32 boundary: sequences crossing the old packed-tag cap
+    /// keep working under the v2 format — the high bits land in the
+    /// aux column, the reassembled sequence is exact, and the run
+    /// reports itself wide.
+    #[test]
+    fn sequences_cross_the_u32_boundary() {
+        let store = mem_store(32);
+        let start = (1u64 << 32) - 8;
+        let clock = Arc::new(SeqClock::with_first(start));
+        let mut w = ShardWriter::new(Arc::clone(&store), clock);
+        for i in 0..16 {
+            w.push(0, i as u32).unwrap();
+        }
+        w.flush().unwrap();
+        let snap = store.snapshot();
+        assert!(snap[0].has_aux(), "post-boundary sequences need the aux column");
+        let scanned = scan_wide(&store).unwrap();
+        let seqs: Vec<u64> = scanned.iter().map(|r| r.full_seq()).collect();
+        assert_eq!(
+            seqs,
+            (start..start + 16).collect::<Vec<u64>>(),
+            "equal keys: scan order is push order, across the boundary"
+        );
+    }
+
+    /// `legacy_pages` keeps the old contract: the cap is a typed error
+    /// at the exact sequence that no longer fits.
+    #[test]
+    fn legacy_mode_caps_at_u32() {
+        let store = Arc::new(
+            RunStore::new(StreamConfig {
+                run_capacity: 32,
+                fanout: 3,
+                threads: 1,
+                legacy_pages: true,
+                ..StreamConfig::default()
+            })
+            .unwrap(),
+        );
+        let clock = Arc::new(SeqClock::with_first((1u64 << 32) - 2));
+        let mut w = ShardWriter::new(Arc::clone(&store), clock);
+        w.push(1, 0).unwrap();
+        w.push(2, 1).unwrap();
+        match w.push(3, 2) {
+            Err(StreamError::CapExceeded { seq }) => assert_eq!(seq, 1u64 << 32),
+            other => panic!("expected CapExceeded, got {other:?}"),
+        }
+    }
+
+    /// WriterSet routing: pushes from one thread land on one shard;
+    /// flush_all drains every shard; pending sums across shards.
+    #[test]
+    fn writer_set_routes_and_flushes() {
+        let store = mem_store(100);
+        let set = WriterSet::new(Arc::clone(&store), 3);
+        assert_eq!(set.shard_count(), 4, "rounded to a power of two");
+        for i in 0..5 {
+            set.push(i, i as u32).unwrap();
+        }
+        assert_eq!(set.pending(), 5, "all buffered on this thread's shard");
+        assert_eq!(set.flush_all().unwrap(), 1, "one shard had records");
+        assert_eq!(set.pending(), 0);
+        assert_eq!(store.record_count(), 5);
+        let scanned = scan_wide(&store).unwrap();
+        assert!(scanned.windows(2).all(|p| p[0].rec.key <= p[1].rec.key));
+    }
+}
