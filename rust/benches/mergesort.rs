@@ -3,10 +3,12 @@
 //! std stable sort and our sequential merge sort.
 
 use traff_merge::core::merge::{carve_output, chunk_tasks};
-use traff_merge::core::parallel_merge_sort;
 use traff_merge::core::seqmerge::{merge_into, merge_sort};
 use traff_merge::core::sort::expected_rounds;
-use traff_merge::core::{Blocks, Case, MergeTask, Partition, Side};
+use traff_merge::core::{
+    parallel_merge_sort, parallel_merge_sort_with, Blocks, Case, MergeStrategy, MergeTask,
+    Partition, Side,
+};
 use traff_merge::harness::{quick_mode, section, Bench};
 use traff_merge::metrics::{melems_per_sec, Table};
 use traff_merge::workload::{raw_keys, Dist};
@@ -295,6 +297,45 @@ fn main() {
             "(fine mode partitions each merge round below the greedy per-pair\n\
              lane share; cheap Chase–Lev steals absorb the extra groups and\n\
              recover skew dynamically)"
+        );
+    }
+
+    section("E12: sort merge rounds — adaptive sequential-until-stolen vs fixed partition");
+    {
+        // Above the largest possible merge cutoff so every round's pair
+        // merges run the parallel phase in both strategies.
+        let n = if quick_mode() { 1 << 19 } else { 2_000_000 };
+        let p = traff_merge::util::num_cpus();
+        let mut t = Table::new(vec!["dist", "fixed", "adaptive", "fixed/adaptive"]);
+        for dist in [Dist::Uniform, Dist::DupHeavy(16), Dist::Presorted] {
+            let base = raw_keys(dist, n, 77);
+            // Correctness cross-check before timing.
+            let mut check = base.clone();
+            parallel_merge_sort_with(&mut check, p, MergeStrategy::Adaptive);
+            let mut expect = base.clone();
+            expect.sort();
+            assert_eq!(check, expect, "adaptive rounds mis-sorted {dist:?}");
+            let r_fixed = Bench::new("fixed").run(|| {
+                let mut v = base.clone();
+                parallel_merge_sort_with(&mut v, p, MergeStrategy::Fixed);
+                v
+            });
+            let r_adaptive = Bench::new("adaptive").run(|| {
+                let mut v = base.clone();
+                parallel_merge_sort_with(&mut v, p, MergeStrategy::Adaptive);
+                v
+            });
+            t.row(vec![
+                dist.name(),
+                format!("{:.1} ms", r_fixed.median() * 1e3),
+                format!("{:.1} ms", r_adaptive.median() * 1e3),
+                format!("{:.2}x", r_fixed.median() / r_adaptive.median()),
+            ]);
+        }
+        t.print();
+        println!(
+            "(adaptive rounds skip the per-pair partition entirely: each run pair\n\
+             is one task that splits via co-rank only on observed steal requests)"
         );
     }
 }

@@ -46,7 +46,7 @@
 pub mod pool;
 
 use crate::core::record::F32Key;
-use crate::core::{parallel_merge, parallel_merge_sort};
+use crate::core::{merge_with_strategy, parallel_merge_sort_with, MergeStrategy};
 use crate::exec::JobClass;
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
 use crate::stream::{self, RunStore, SeqClock, ShardWriter, StreamConfig, StreamError};
@@ -102,11 +102,16 @@ pub fn to_block(recs: &[KRec]) -> KeyedBlock {
 /// Stable merge of two keyed blocks on the rust engine with an
 /// explicit thread budget (free function so executor tasks can call it
 /// without capturing the service).
-fn merge_blocks(a: &KeyedBlock, b: &KeyedBlock, threads: usize) -> KeyedBlock {
+fn merge_blocks(
+    a: &KeyedBlock,
+    b: &KeyedBlock,
+    threads: usize,
+    strategy: MergeStrategy,
+) -> KeyedBlock {
     let ra = to_recs(a);
     let rb = to_recs(b);
     let mut out = vec![KRec { key: F32Key(0.0), val: 0 }; ra.len() + rb.len()];
-    parallel_merge(&ra, &rb, &mut out, threads);
+    merge_with_strategy(&ra, &rb, &mut out, threads, strategy);
     to_block(&out)
 }
 
@@ -141,6 +146,13 @@ pub struct Config {
     /// [`MergeService::submit_background`] forces the background lane
     /// per job regardless of this default.
     pub class: JobClass,
+    /// Merge kernel for the rust engine's merges and sort rounds:
+    /// [`MergeStrategy::Fixed`] is the paper's up-front partition;
+    /// [`MergeStrategy::Adaptive`] merges sequentially in bounded
+    /// quanta and splits only on observed steal requests (see
+    /// [`crate::core::adaptive`]). Overridable per job via
+    /// [`JobBuilder::strategy`]; the default stream tenant inherits it.
+    pub strategy: MergeStrategy,
 }
 
 impl Default for Config {
@@ -150,6 +162,7 @@ impl Default for Config {
             engine: Engine::Rust,
             leaf_block: 1024,
             class: JobClass::Service,
+            strategy: MergeStrategy::Fixed,
         }
     }
 }
@@ -632,7 +645,7 @@ impl MergeService {
                 let ra = to_recs(a);
                 let rb = to_recs(b);
                 let mut out = vec![KRec { key: F32Key(0.0), val: 0 }; ra.len() + rb.len()];
-                parallel_merge(&ra, &rb, &mut out, self.config.threads);
+                merge_with_strategy(&ra, &rb, &mut out, self.config.threads, self.config.strategy);
                 to_block(&out)
             }
             Engine::Hybrid => {
@@ -655,7 +668,7 @@ impl MergeService {
         let out = match self.config.engine {
             Engine::Rust => {
                 let mut recs = to_recs(data);
-                parallel_merge_sort(&mut recs, self.config.threads);
+                parallel_merge_sort_with(&mut recs, self.config.threads, self.config.strategy);
                 to_block(&recs)
             }
             Engine::Hybrid => {
@@ -803,7 +816,7 @@ impl MergeService {
     }
 
     fn rust_merge_blocks(&self, a: &KeyedBlock, b: &KeyedBlock) -> KeyedBlock {
-        merge_blocks(a, b, self.config.threads)
+        merge_blocks(a, b, self.config.threads, self.config.strategy)
     }
 
     /// Batched stable merge of many small job pairs. The hybrid engine
@@ -822,12 +835,13 @@ impl MergeService {
                 // scope; each job's internal merge phases nest on the
                 // same workers.
                 let threads = self.config.threads;
+                let strategy = self.config.strategy;
                 let mut results: Vec<Option<KeyedBlock>> = Vec::with_capacity(jobs.len());
                 results.resize_with(jobs.len(), || None);
                 crate::exec::global().scope(|s| {
                     for ((a, b), slot) in jobs.iter().zip(results.iter_mut()) {
                         s.spawn(move || {
-                            *slot = Some(merge_blocks(a, b, threads));
+                            *slot = Some(merge_blocks(a, b, threads, strategy));
                         });
                     }
                 });
@@ -893,7 +907,7 @@ impl MergeService {
     /// assert_eq!(sorted.keys, vec![1.0, 2.0]);
     /// ```
     pub fn job(&self) -> JobBuilder<'_> {
-        JobBuilder { svc: self, class: self.config.class }
+        JobBuilder { svc: self, class: self.config.class, strategy: self.config.strategy }
     }
 
     /// Asynchronous sort submission under the service's configured
@@ -926,6 +940,7 @@ impl MergeService {
     fn submit_sort_class(
         &self,
         class: JobClass,
+        strategy: MergeStrategy,
         data: KeyedBlock,
     ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
         match self.config.engine {
@@ -935,7 +950,7 @@ impl MergeService {
                 self.pool.submit_with_class(class, move || {
                     let t0 = Instant::now();
                     let mut recs = to_recs(&data);
-                    parallel_merge_sort(&mut recs, threads);
+                    parallel_merge_sort_with(&mut recs, threads, strategy);
                     let out = to_block(&recs);
                     stats.record(out.len(), t0);
                     Ok(out)
@@ -966,6 +981,7 @@ impl MergeService {
     fn submit_sort_batch_class(
         &self,
         class: JobClass,
+        strategy: MergeStrategy,
         blocks: Vec<KeyedBlock>,
     ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
         match self.config.engine {
@@ -978,7 +994,7 @@ impl MergeService {
                         move || {
                             let t0 = Instant::now();
                             let mut recs = to_recs(&data);
-                            parallel_merge_sort(&mut recs, threads);
+                            parallel_merge_sort_with(&mut recs, threads, strategy);
                             let out = to_block(&recs);
                             stats.record(out.len(), t0);
                             Ok::<KeyedBlock, String>(out)
@@ -1059,6 +1075,7 @@ impl MergeService {
         self.stream.get_or_init(|| {
             StreamTenant::new(StreamConfig {
                 threads: self.config.threads.max(1),
+                strategy: self.config.strategy,
                 ..StreamConfig::default()
             })
             .expect("in-memory stream tenant construction cannot fail")
@@ -1161,6 +1178,7 @@ impl MergeService {
 pub struct JobBuilder<'a> {
     svc: &'a MergeService,
     class: JobClass,
+    strategy: MergeStrategy,
 }
 
 impl<'a> JobBuilder<'a> {
@@ -1172,12 +1190,19 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Override the [`MergeStrategy`] for this submission's sort
+    /// rounds (defaults to the service's `Config.strategy`).
+    pub fn strategy(mut self, strategy: MergeStrategy) -> JobBuilder<'a> {
+        self.strategy = strategy;
+        self
+    }
+
     /// Submit one sort job; returns a receiver for its result.
     pub fn submit(
         self,
         data: KeyedBlock,
     ) -> std::sync::mpsc::Receiver<Result<KeyedBlock, String>> {
-        self.svc.submit_sort_class(self.class, data)
+        self.svc.submit_sort_class(self.class, self.strategy, data)
     }
 
     /// Submit a batch of sort jobs in one admission pass; the receiver
@@ -1186,7 +1211,7 @@ impl<'a> JobBuilder<'a> {
         self,
         blocks: Vec<KeyedBlock>,
     ) -> std::sync::mpsc::Receiver<(usize, Result<KeyedBlock, String>)> {
-        self.svc.submit_sort_batch_class(self.class, blocks)
+        self.svc.submit_sort_batch_class(self.class, self.strategy, blocks)
     }
 }
 
@@ -1232,6 +1257,43 @@ mod tests {
         let (jobs, elems, _, _) = svc.stats.snapshot();
         assert_eq!(jobs, 2);
         assert_eq!(elems, 3200);
+    }
+
+    #[test]
+    fn adaptive_strategy_end_to_end() {
+        let svc = MergeService::new(Config {
+            threads: 4,
+            strategy: MergeStrategy::Adaptive,
+            ..Config::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(23);
+        let a = sorted_block(&mut rng, 800, 0);
+        let b = sorted_block(&mut rng, 600, 10_000);
+        let m = svc.merge(&a, &b).unwrap();
+        assert!(m.is_key_sorted());
+        assert_eq!(m.len(), 1400);
+        let expect = merge_blocks(&a, &b, 1, MergeStrategy::Fixed);
+        assert_eq!(m.keys, expect.keys);
+        assert_eq!(m.vals, expect.vals);
+
+        let raw = KeyedBlock {
+            keys: (0..3000).map(|_| rng.range(0, 50) as f32).collect(),
+            vals: (0..3000).collect(),
+        };
+        let s = svc.sort(&raw).unwrap();
+        assert!(s.is_key_sorted());
+        for w in s.keys.windows(2).zip(s.vals.windows(2)) {
+            if w.0[0] == w.0[1] {
+                assert!(w.1[0] < w.1[1], "adaptive sort instability");
+            }
+        }
+        // Per-job override on a Fixed-configured service.
+        let fixed_svc = MergeService::new(Config { threads: 4, ..Config::default() }).unwrap();
+        let rx = fixed_svc.job().strategy(MergeStrategy::Adaptive).submit(raw);
+        let sorted = rx.recv().unwrap().unwrap();
+        assert_eq!(sorted.keys, s.keys);
+        assert_eq!(sorted.vals, s.vals);
     }
 
     #[test]
@@ -1293,7 +1355,7 @@ mod tests {
             .collect();
         let outs = svc.merge_many(&jobs).unwrap();
         for ((a, b), out) in jobs.iter().zip(&outs) {
-            let expect = merge_blocks(a, b, 1);
+            let expect = merge_blocks(a, b, 1, MergeStrategy::Fixed);
             assert_eq!(out.keys, expect.keys);
             assert_eq!(out.vals, expect.vals);
         }

@@ -1,0 +1,463 @@
+//! Adaptive sequential-until-stolen merge kernel.
+//!
+//! [`parallel_merge`](super::merge::parallel_merge) *always* pays the
+//! §2 partition up front: `2(p+1)` binary searches, task
+//! classification, and a scatter of `p` (or telemetry-inflated) tasks
+//! across the fleet — even when every worker is busy and the partition
+//! buys nothing, and even on nearly-disjoint or duplicate-heavy inputs
+//! where one `memcpy`-class pass wins outright.
+//!
+//! This module inverts the decision: [`adaptive_merge`] runs the
+//! *sequential* stable merge in bounded quanta
+//! ([`crate::exec::adaptive_quantum_for`] elements at a time,
+//! overridable via `EXEC_ADAPTIVE_QUANTUM`) and polls a
+//! [`StealToken`] between quanta. Only when an idle worker has
+//! actually raised a steal request does the kernel split the
+//! *remaining* input — one §2 single-rank co-partition
+//! ([`super::ranks`]) halving the larger side into exactly two stable
+//! halves. The right half is published as a stealable scope task; the
+//! left half continues sequentially on the current worker. Work
+//! migrates only when somebody is there to take it.
+//!
+//! ```text
+//!   a ─┬────────────┬─────────────────────┐
+//!      │ quantum k  │      remainder      │
+//!   b ─┴────────────┴─────────────────────┘
+//!        │               │
+//!        ▼               ▼ token.should_split()?
+//!   co_rank(k) →     no: next quantum
+//!   merge_into       yes: i = |a|/2, j = rank_low(a[i], b)
+//!   (block-copy           left  = (a[..i], b[..j])   — continue
+//!    fast paths)          right = (a[i..], b[j..])   — s.spawn(...)
+//! ```
+//!
+//! **Stability argument for splitting mid-merge.** The quantum
+//! boundary is the §2 co-rank `(i, j)` with `i + j = k`: `a[i-1] <=
+//! b[j]` (an `a`-element may tie its successor in `b` — `a` wins ties)
+//! and `b[j-1] < a[i]` (strictly — a `b`-element must NOT tie an
+//! `a`-element that is still unmerged, because the `a`-element would
+//! have to precede it). So `merge(a[..i], b[..j])` is exactly the
+//! first `k` elements of the stable merge, and the remainder merges
+//! independently. The steal split uses the same two rank primitives
+//! ([`super::ranks::rank_low`] / [`super::ranks::rank_high`]) with the
+//! same tie asymmetry, so every element of the left half precedes —
+//! in stable order — every element of the right half. Concatenating
+//! per-half stable merges is therefore THE stable merge.
+//!
+//! Triviality fast paths run at *quantum* granularity: each quantum is
+//! merged through [`merge_into`], whose non-interleaving and
+//! constant-block checks (see [`super::seqmerge`]) turn nearly-disjoint
+//! and duplicate-heavy quanta into whole-block copies — the dominant
+//! win on those distributions (cf. Merge Path, arXiv:1406.2628, and
+//! the block-granular analysis in arXiv:2005.12648).
+
+use super::seqmerge::merge_into;
+use crate::exec::{Scope, StealToken};
+
+/// Which merge kernel the coordinator / sort rounds / stream
+/// compaction use. Selected through `Config`/`JobBuilder`,
+/// `StreamConfig`, and `repro --strategy`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum MergeStrategy {
+    /// The paper's fixed pre-partition: split into `p` (or
+    /// telemetry-inflated) lanes up front, one synchronization point.
+    #[default]
+    Fixed,
+    /// Sequential-until-stolen: merge in bounded quanta, split on
+    /// demand via the §2 co-rank partition when an idle worker raises
+    /// a steal request.
+    Adaptive,
+}
+
+impl MergeStrategy {
+    /// CLI-facing name (`repro --strategy <name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeStrategy::Fixed => "fixed",
+            MergeStrategy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Inverse of [`MergeStrategy::name`]; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<MergeStrategy> {
+        match s {
+            "fixed" => Some(MergeStrategy::Fixed),
+            "adaptive" => Some(MergeStrategy::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for MergeStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Strategy-dispatched stable merge: the one entry point the
+/// coordinator and stream layers route through.
+pub fn merge_with_strategy<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    p: usize,
+    strategy: MergeStrategy,
+) {
+    match strategy {
+        MergeStrategy::Fixed => super::merge::parallel_merge(a, b, out, p),
+        MergeStrategy::Adaptive => adaptive_merge(a, b, out, p),
+    }
+}
+
+/// Stable adaptive merge of sorted `a` and `b` into `out`.
+///
+/// Merges sequentially in bounded quanta and splits only on observed
+/// steal requests (see the module docs). `p` gates only the
+/// sequential crossover — the kernel itself discovers parallelism
+/// dynamically, so there is no per-`p` partition cost.
+///
+/// # Panics
+/// If `out.len() != a.len() + b.len()` or `p == 0`.
+pub fn adaptive_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [T], p: usize) {
+    assert_eq!(out.len(), a.len() + b.len(), "output length mismatch");
+    assert!(p > 0, "p must be positive");
+    if p == 1 || out.len() < crate::exec::tunables_for::<T>().parallel_merge_cutoff {
+        merge_into(a, b, out);
+        return;
+    }
+    let quantum = crate::exec::adaptive_quantum_for::<T>();
+    crate::exec::global().scope(|s| merge_adaptive_scoped(s, a, b, out, quantum, None));
+}
+
+/// [`adaptive_merge`] with an explicit quantum and [`StealToken`] —
+/// the deterministic entry for tests and benches
+/// ([`StealToken::never`] forces the pure sequential-quanta path,
+/// [`StealToken::always`] splits at every poll). Skips the sequential
+/// crossover: the scoped kernel always runs.
+pub fn adaptive_merge_with_token<T: Copy + Ord + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    quantum: usize,
+    token: &StealToken,
+) {
+    assert_eq!(out.len(), a.len() + b.len(), "output length mismatch");
+    let quantum = quantum.max(1);
+    crate::exec::global().scope(|s| merge_adaptive_scoped(s, a, b, out, quantum, Some(token)));
+}
+
+/// The kernel proper, running inside an executor scope so split-off
+/// right halves can be spawned as stealable tasks (and can split
+/// again, recursively). Callers outside this module
+/// ([`super::sort::merge_round_with`]) enter here with one task per
+/// run pair.
+///
+/// `token`: `None` derives the executing worker's own token
+/// per task ([`crate::exec::steal_token`]) — the right choice for
+/// production, where each spawned half must poll its *own* flag.
+/// `Some` pins a caller-provided token (deterministic tests/benches).
+pub(crate) fn merge_adaptive_scoped<'scope, T: Copy + Ord + Send + Sync>(
+    s: &'scope Scope<'scope, '_>,
+    mut a: &'scope [T],
+    mut b: &'scope [T],
+    mut out: &'scope mut [T],
+    quantum: usize,
+    token: Option<&'scope StealToken>,
+) {
+    let derived;
+    let token: &StealToken = match token {
+        Some(t) => t,
+        None => {
+            derived = crate::exec::steal_token();
+            &derived
+        }
+    };
+    loop {
+        debug_assert_eq!(out.len(), a.len() + b.len());
+        // Small or one-sided remainder: finish inline. The 2·quantum
+        // floor guarantees a split (below) always has a quantum's
+        // worth of work for BOTH halves.
+        if a.is_empty() || b.is_empty() || out.len() <= quantum.saturating_mul(2) {
+            merge_into(a, b, out);
+            return;
+        }
+        // Poll FIRST: a pending steal request means an idle worker is
+        // parked right now — splitting before the next quantum (or
+        // before a big trivial block copy) hands it work a poll
+        // earlier, and consecutive polls keep splitting while more
+        // workers are waiting.
+        if token.should_split() {
+            // §2 single-rank co-partition of the remainder, halving
+            // the larger input side. Tie asymmetry (ties-to-A):
+            // `rank_low` sends b-elements equal to a[i] RIGHT (they
+            // follow a[i]); `rank_high` sends a-elements equal to
+            // b[j] LEFT (they precede b[j]). Both sides of each half
+            // are non-empty checks are not needed — only the halves'
+            // *output* ranges matter, and both are non-empty because
+            // the larger side has >= 2 elements here.
+            let (i, j) = if a.len() >= b.len() {
+                let i = a.len() / 2;
+                (i, super::ranks::rank_low(&a[i], b))
+            } else {
+                let j = b.len() / 2;
+                (super::ranks::rank_high(&b[j], a), j)
+            };
+            let (al, ar) = a.split_at(i);
+            let (bl, br) = b.split_at(j);
+            let cur = out;
+            let (ol, or_) = cur.split_at_mut(i + j);
+            // The spawned half derives its own token (None): it runs
+            // on whatever worker steals it, and must poll THAT
+            // worker's flag, not ours.
+            s.spawn(move || merge_adaptive_scoped(s, ar, br, or_, quantum, None));
+            a = al;
+            b = bl;
+            out = ol;
+            continue;
+        }
+        // Whole-remainder triviality: the inputs no longer interleave,
+        // so the rest is two block copies (merge_into's fast path).
+        let (n, m) = (a.len(), b.len());
+        if a[n - 1] <= b[0] || b[m - 1] < a[0] {
+            merge_into(a, b, out);
+            return;
+        }
+        // One bounded quantum of stable sequential merging: cut the
+        // next `quantum` output elements at the co-rank boundary and
+        // run the (fast-pathed) sequential kernel on them.
+        let (i, j) = co_rank(quantum, a, b);
+        let cur = out;
+        let (head, tail) = cur.split_at_mut(quantum);
+        merge_into(&a[..i], &b[..j], head);
+        a = &a[i..];
+        b = &b[j..];
+        out = tail;
+    }
+}
+
+/// The §2 co-rank at output position `k`: the unique `(i, j)` with
+/// `i + j = k` such that the stable merge of `a[..i]` and `b[..j]` is
+/// exactly the first `k` elements of the stable merge of `a` and `b`:
+///
+/// - `i == 0 || j == m || a[i-1] <= b[j]` — the last taken a-element
+///   does not exceed b's next (ties allowed: a wins them), and
+/// - `j == 0 || i == n || b[j-1] < a[i]` — the last taken b-element is
+///   *strictly* below a's next (a tie would belong to `a` first).
+///
+/// Binary search over `i` in `[max(0, k-m), min(k, n)]`; each probe
+/// violating a condition strictly shrinks the interval toward the
+/// (existing, unique) fixed point, so the loop terminates in
+/// `O(log min(k, n, m))` probes.
+fn co_rank<T: Ord>(k: usize, a: &[T], b: &[T]) -> (usize, usize) {
+    let (n, m) = (a.len(), b.len());
+    debug_assert!(k <= n + m);
+    let mut lo = k.saturating_sub(m);
+    let mut hi = k.min(n);
+    loop {
+        let i = lo + (hi - lo) / 2;
+        let j = k - i;
+        if i > 0 && j < m && a[i - 1] > b[j] {
+            // Took too many from a: a[i-1] belongs after b[j].
+            hi = i - 1;
+        } else if j > 0 && i < n && b[j - 1] >= a[i] {
+            // Took too many from b: b[j-1] ties or exceeds a[i], and a
+            // wins ties, so a[i] belongs inside the prefix.
+            lo = i + 1;
+        } else {
+            return (i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::record::Record;
+    use crate::util::Rng;
+    use crate::workload::{tag_a, tag_b};
+    #[cfg(not(miri))]
+    use crate::workload::{check_stable_merge, sorted_keys, Dist, B_TAG_BASE};
+
+    fn keyed(out: &[Record]) -> Vec<(i64, u64)> {
+        out.iter().map(|r| (r.key, r.tag)).collect()
+    }
+
+    #[test]
+    fn co_rank_prefix_is_exact_and_stable() {
+        // Duplicate-rich small inputs, every output position k, both
+        // orientations. Records make tie misplacement visible.
+        let shapes: Vec<(Vec<i64>, Vec<i64>)> = vec![
+            (vec![0, 0, 1, 2, 2, 2, 5], vec![0, 2, 2, 3, 5, 5]),
+            (vec![1, 1, 1, 1], vec![1, 1, 1]),
+            (vec![0, 1, 2, 3], vec![10, 11]),
+            (vec![10, 11], vec![0, 1, 2, 3]),
+            (vec![5], vec![5, 5, 5, 5, 5]),
+            (vec![], vec![1, 2, 3]),
+            (vec![1, 2, 3], vec![]),
+        ];
+        for (ka, kb) in shapes {
+            let a = tag_a(&ka);
+            let b = tag_b(&kb);
+            let mut full = vec![Record::new(0, 0); a.len() + b.len()];
+            merge_into(&a, &b, &mut full);
+            for k in 0..=a.len() + b.len() {
+                let (i, j) = co_rank(k, &a, &b);
+                assert_eq!(i + j, k, "ka={ka:?} kb={kb:?} k={k}");
+                let mut head = vec![Record::new(0, 0); k];
+                merge_into(&a[..i], &b[..j], &mut head);
+                assert_eq!(keyed(&head), keyed(&full[..k]), "ka={ka:?} kb={kb:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn co_rank_random_sweep() {
+        let mut rng = Rng::new(41);
+        // Miri runs the same sweep at interpreter-friendly volume.
+        let iters = if cfg!(miri) { 25 } else { 200 };
+        for _ in 0..iters {
+            let n = rng.index(120);
+            let m = rng.index(120);
+            let mut ka: Vec<i64> = (0..n).map(|_| rng.range(0, 12)).collect();
+            let mut kb: Vec<i64> = (0..m).map(|_| rng.range(0, 12)).collect();
+            ka.sort();
+            kb.sort();
+            let a = tag_a(&ka);
+            let b = tag_b(&kb);
+            let mut full = vec![Record::new(0, 0); n + m];
+            merge_into(&a, &b, &mut full);
+            let k = rng.index(n + m + 1);
+            let (i, j) = co_rank(k, &a, &b);
+            assert_eq!(i + j, k);
+            let mut head = vec![Record::new(0, 0); k];
+            merge_into(&a[..i], &b[..j], &mut head);
+            assert_eq!(keyed(&head), keyed(&full[..k]), "n={n} m={m} k={k}");
+        }
+    }
+
+    #[cfg(not(miri))]
+    fn check_adaptive(ka: &[i64], kb: &[i64], quantum: usize, token: &StealToken) {
+        let a = tag_a(ka);
+        let b = tag_b(kb);
+        let mut out = vec![Record::new(0, 0); a.len() + b.len()];
+        adaptive_merge_with_token(&a, &b, &mut out, quantum, token);
+        let mut expect = [a, b].concat();
+        expect.sort_by_key(|r| (r.key, r.tag)); // == stable merge here
+        assert_eq!(keyed(&out), keyed(&expect), "quantum={quantum}");
+        check_stable_merge(&out, B_TAG_BASE).expect("adaptive merge not stable");
+    }
+
+    // The token-driven kernel tests run inside an executor scope, so
+    // they are native-only: under Miri the persistent global worker
+    // fleet would outlive the test harness (Miri rejects an exit with
+    // live threads). Miri covers the pure co-rank math above and the
+    // steal-flag protocol itself via `exec::deque`.
+    #[test]
+    #[cfg(not(miri))]
+    fn never_token_is_pure_sequential_quanta() {
+        let mut rng = Rng::new(42);
+        for &q in &[1usize, 2, 7, 64, 1 << 20] {
+            let n = 500 + rng.index(500);
+            let m = 500 + rng.index(500);
+            let mut ka: Vec<i64> = (0..n).map(|_| rng.range(0, 40)).collect();
+            let mut kb: Vec<i64> = (0..m).map(|_| rng.range(0, 40)).collect();
+            ka.sort();
+            kb.sort();
+            check_adaptive(&ka, &kb, q, &StealToken::never());
+        }
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn always_token_splits_and_stays_stable() {
+        let mut rng = Rng::new(43);
+        for &q in &[3usize, 32, 200] {
+            let n = 800 + rng.index(400);
+            let m = 800 + rng.index(400);
+            let mut ka: Vec<i64> = (0..n).map(|_| rng.range(0, 25)).collect();
+            let mut kb: Vec<i64> = (0..m).map(|_| rng.range(0, 25)).collect();
+            ka.sort();
+            kb.sort();
+            check_adaptive(&ka, &kb, q, &StealToken::always());
+        }
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn all_distributions_stay_stable_under_both_tokens() {
+        for dist in Dist::all() {
+            let ka = sorted_keys(dist, 700, 7);
+            let kb = sorted_keys(dist, 650, 8);
+            check_adaptive(&ka, &kb, 48, &StealToken::never());
+            check_adaptive(&ka, &kb, 48, &StealToken::always());
+        }
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn nearly_disjoint_and_dup_heavy_shapes() {
+        // Nearly disjoint: a in [0, 1000), b in [990, 1990) — one
+        // quantum of interleaving, then pure block copies.
+        let ka: Vec<i64> = (0..1000).collect();
+        let kb: Vec<i64> = (990..1990).collect();
+        check_adaptive(&ka, &kb, 64, &StealToken::never());
+        check_adaptive(&ka, &kb, 64, &StealToken::always());
+        check_adaptive(&kb, &ka, 64, &StealToken::always());
+        // Dup-heavy: long constant runs on both sides.
+        let ka: Vec<i64> = (0..1200).map(|i| i / 400).collect();
+        let kb: Vec<i64> = (0..900).map(|i| i / 300).collect();
+        check_adaptive(&ka, &kb, 32, &StealToken::never());
+        check_adaptive(&ka, &kb, 32, &StealToken::always());
+    }
+
+    #[test]
+    #[cfg(not(miri))]
+    fn public_entry_matches_fixed_partition() {
+        // Big enough to clear any calibrated crossover (cutoff clamps
+        // at 2^18 total elements).
+        let mut rng = Rng::new(44);
+        let mut ka: Vec<i64> = (0..160_000).map(|_| rng.range(0, 5_000)).collect();
+        let mut kb: Vec<i64> = (0..140_000).map(|_| rng.range(0, 5_000)).collect();
+        ka.sort();
+        kb.sort();
+        let a = tag_a(&ka);
+        let b = tag_b(&kb);
+        let mut got = vec![Record::new(0, 0); a.len() + b.len()];
+        adaptive_merge(&a, &b, &mut got, 8);
+        let mut want = vec![Record::new(0, 0); a.len() + b.len()];
+        super::super::merge::parallel_merge(&a, &b, &mut want, 8);
+        assert_eq!(keyed(&got), keyed(&want));
+        check_stable_merge(&got, B_TAG_BASE).expect("adaptive merge not stable");
+    }
+
+    #[test]
+    fn strategy_names_round_trip() {
+        for s in [MergeStrategy::Fixed, MergeStrategy::Adaptive] {
+            assert_eq!(MergeStrategy::parse(s.name()), Some(s));
+            assert_eq!(format!("{s}"), s.name());
+        }
+        assert_eq!(MergeStrategy::parse("bogus"), None);
+        assert_eq!(MergeStrategy::default(), MergeStrategy::Fixed);
+    }
+
+    #[test]
+    fn merge_with_strategy_dispatches_both_ways() {
+        // Under Miri the sizes stay below the smallest possible
+        // parallel cutoff (4096), so both strategies resolve
+        // sequentially without starting the executor fleet.
+        let (n, m) = if cfg!(miri) { (300, 250) } else { (3000, 2500) };
+        let mut ka: Vec<i64> = (0..n).map(|i| (i * 7) % 500).collect();
+        ka.sort();
+        let mut kb: Vec<i64> = (0..m).map(|i| (i * 11) % 500).collect();
+        kb.sort();
+        let a = tag_a(&ka);
+        let b = tag_b(&kb);
+        let mut expect = [a.clone(), b.clone()].concat();
+        expect.sort_by_key(|r| (r.key, r.tag));
+        for strategy in [MergeStrategy::Fixed, MergeStrategy::Adaptive] {
+            let mut out = vec![Record::new(0, 0); a.len() + b.len()];
+            merge_with_strategy(&a, &b, &mut out, 4, strategy);
+            assert_eq!(keyed(&out), keyed(&expect), "strategy={strategy}");
+        }
+    }
+}

@@ -301,6 +301,17 @@ pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [
         merge_into(a, b, out);
         return;
     }
+    // The sequential crossover is decided FIRST: below it, the whole
+    // partition apparatus (binary searches, task classification, the
+    // `chunk_groups_for` telemetry sweep) is pure overhead for a merge
+    // that runs inline anyway, so we go straight to the sequential
+    // kernel. Previously this path still partitioned into `p` lanes
+    // and swept the task list sequentially — same output, wasted
+    // `O(p log n)` searches per call.
+    if out.len() < crate::exec::tunables_for::<T>().parallel_merge_cutoff {
+        merge_into(a, b, out);
+        return;
+    }
     // Fine-granularity mode happens HERE, at the partition: grouping
     // (`chunk_tasks`) can only combine tasks, never split one, so a
     // skewed task list must be born finer. When the executor's steal
@@ -308,16 +319,12 @@ pub fn parallel_merge<T: Copy + Ord + Send + Sync>(a: &[T], b: &[T], out: &mut [
     // [`crate::exec::chunk_groups_for`]), partition into more lanes than
     // `p`; otherwise `lanes == p` and this is the paper's partition
     // exactly. Correctness is granularity-independent (the partition
-    // is exact for every lane count). Below the sequential crossover
-    // the lane budget stays `p` — a finer partition would be pure
-    // wasted search work for a task sweep that runs inline anyway.
-    let below_cutoff = out.len() < crate::exec::tunables_for::<T>().parallel_merge_cutoff;
-    let lanes =
-        if below_cutoff { p } else { crate::exec::chunk_groups_for::<T>(out.len(), p) };
+    // is exact for every lane count).
+    let lanes = crate::exec::chunk_groups_for::<T>(out.len(), p);
     let part = partition_parallel(a, b, lanes, p);
     let tasks = part.tasks();
     debug_assert!(part.validate_tasks(&tasks).is_ok());
-    if below_cutoff || tasks.len() <= 1 {
+    if tasks.len() <= 1 {
         run_tasks_seq(a, b, out, &tasks).expect("classifier produced non-tiling tasks");
     } else {
         // Same lane budget for partition and grouping — decided once.

@@ -5,10 +5,12 @@
 //! - [`cases`]    — the five-case O(1) subproblem classifier (Fig. 2)
 //! - [`seqmerge`] — stable sequential merge/copy kernels (per task)
 //! - [`merge`]    — **Theorem 1**: the simplified stable parallel merge
+//! - [`adaptive`] — sequential-until-stolen merge kernel (on-demand §2 splits)
 //! - [`sort`]     — §3: stable parallel merge sort
 //! - [`multiway`] — §3 extension: k-way merging
 //! - [`record`]   — keyed records for stability observation
 
+pub mod adaptive;
 pub mod blocks;
 pub mod cases;
 pub mod merge;
@@ -18,8 +20,9 @@ pub mod record;
 pub mod seqmerge;
 pub mod sort;
 
+pub use adaptive::{adaptive_merge, merge_with_strategy, MergeStrategy};
 pub use blocks::Blocks;
 pub use cases::{Case, MergeTask, Partition, Side};
 pub use merge::{parallel_merge, parallel_merge_instrumented};
 pub use record::{F32Key, Record};
-pub use sort::parallel_merge_sort;
+pub use sort::{parallel_merge_sort, parallel_merge_sort_with};

@@ -12,7 +12,8 @@
 //!
 //! Both are stable across runs: ties favour the earlier run.
 
-use super::sort::merge_round_with_class;
+use super::adaptive::MergeStrategy;
+use super::sort::merge_round_with;
 use crate::exec::JobClass;
 
 /// Stable k-way merge of `runs` (each individually sorted) using the
@@ -30,6 +31,18 @@ pub fn parallel_kway_merge_with_class<T: Copy + Ord + Send + Sync>(
     p: usize,
     class: JobClass,
 ) -> Vec<T> {
+    parallel_kway_merge_with(runs, p, class, MergeStrategy::default())
+}
+
+/// [`parallel_kway_merge_with_class`] with an explicit
+/// [`MergeStrategy`] for every tree level — the stream compactor
+/// routes its configured strategy through here.
+pub fn parallel_kway_merge_with<T: Copy + Ord + Send + Sync>(
+    runs: &[&[T]],
+    p: usize,
+    class: JobClass,
+    strategy: MergeStrategy,
+) -> Vec<T> {
     let total: usize = runs.iter().map(|r| r.len()).sum();
     let mut src: Vec<T> = Vec::with_capacity(total);
     let mut bounds = vec![0usize];
@@ -43,7 +56,7 @@ pub fn parallel_kway_merge_with_class<T: Copy + Ord + Send + Sync>(
     let mut dst = src.clone();
     let mut runs_b = bounds;
     while runs_b.len() > 2 {
-        runs_b = merge_round_with_class(&src, &mut dst, &runs_b, p, class);
+        runs_b = merge_round_with(&src, &mut dst, &runs_b, p, class, strategy);
         std::mem::swap(&mut src, &mut dst);
     }
     src
@@ -222,6 +235,28 @@ mod tests {
         let mut expect: Vec<i64> = runs.concat();
         expect.sort();
         assert_eq!(loser_tree_merge(&refs), expect);
+    }
+
+    #[test]
+    fn kway_adaptive_matches_flat_sort() {
+        let mut rng = Rng::new(11);
+        for &k in &[2usize, 3, 5, 9] {
+            let runs = runs_of(&mut rng, k, 300);
+            let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+            let mut expect: Vec<i64> = runs.concat();
+            expect.sort();
+            let got =
+                parallel_kway_merge_with(&refs, 4, JobClass::Service, MergeStrategy::Adaptive);
+            assert_eq!(got, expect, "adaptive k={k}");
+        }
+    }
+
+    #[test]
+    fn kway_adaptive_with_empty_runs() {
+        let runs: Vec<Vec<i64>> = vec![vec![], vec![1, 3], vec![], vec![2], vec![]];
+        let refs: Vec<&[i64]> = runs.iter().map(|r| r.as_slice()).collect();
+        let got = parallel_kway_merge_with(&refs, 3, JobClass::Service, MergeStrategy::Adaptive);
+        assert_eq!(got, vec![1, 2, 3]);
     }
 
     #[test]

@@ -10,6 +10,17 @@
 //! The hot path is the galloping-free two-pointer loop; `merge_into`
 //! falls back to `copy_nonoverlapping`-speed tails via the slice copy
 //! intrinsics (`copy_from_slice`) once either side is exhausted.
+//!
+//! Before entering that loop, [`merge_into`] probes two triviality
+//! shapes (ROADMAP item 2, after kvik's `manual_merge`) that turn the
+//! whole call into `memcpy`-class block copies: non-interleaving
+//! ranges (two O(1) endpoint compares) and a constant-valued block
+//! (one endpoint compare + one rank search). Nearly-disjoint and
+//! duplicate-heavy workloads hit these constantly; both the fixed
+//! pre-partitioned path and the adaptive kernel
+//! ([`crate::core::adaptive`]) route their per-task merges through
+//! here, so both benefit. The tie rules mirror the two-pointer loop
+//! exactly (A first), so the fast paths are stability-invisible.
 
 use std::cmp::Ordering;
 
@@ -26,6 +37,39 @@ pub fn merge_into<T: Copy + Ord>(a: &[T], b: &[T], out: &mut [T]) {
     }
     if a.is_empty() {
         out.copy_from_slice(b);
+        return;
+    }
+    let (n, m) = (a.len(), b.len());
+    // Triviality fast path 1: the ranges do not interleave — the merge
+    // is two block copies. `<=` on the A-before-B side and strict `<`
+    // on the B-before-A side reproduce the loop's tie rule: an A
+    // element equal to a B element must land first.
+    if a[n - 1] <= b[0] {
+        out[..n].copy_from_slice(a);
+        out[n..].copy_from_slice(b);
+        return;
+    }
+    if b[m - 1] < a[0] {
+        out[..m].copy_from_slice(b);
+        out[m..].copy_from_slice(a);
+        return;
+    }
+    // Triviality fast path 2: a constant-valued block placed whole by
+    // one rank search. `rank_low` puts the A block before B's equal
+    // keys; `rank_high` puts A's equal keys before the B block — the
+    // same asymmetry as `core::ranks` (stability for free).
+    if a[0] == a[n - 1] {
+        let j = super::ranks::rank_low(&a[0], b);
+        out[..j].copy_from_slice(&b[..j]);
+        out[j..j + n].copy_from_slice(a);
+        out[j + n..].copy_from_slice(&b[j..]);
+        return;
+    }
+    if b[0] == b[m - 1] {
+        let i = super::ranks::rank_high(&b[0], a);
+        out[..i].copy_from_slice(&a[..i]);
+        out[i..i + m].copy_from_slice(b);
+        out[i + m..].copy_from_slice(&a[i..]);
         return;
     }
     let mut ai = 0;
@@ -244,5 +288,66 @@ mod tests {
         let mut out = [0i64; 5];
         merge_by_into(&[5, 3, 1], &[4, 2], &mut out, |x, y| y.cmp(x));
         assert_eq!(out, [5, 4, 3, 2, 1]);
+    }
+
+    /// ISSUE 9 satellite: the triviality fast paths are
+    /// stability-invisible across EVERY workload distribution — the
+    /// merged records match std's stable sort of the concatenation,
+    /// record for record, and the A-before-B tie oracle holds.
+    #[test]
+    fn fast_paths_stable_across_all_distributions() {
+        use crate::workload::{check_stable_merge, sorted_keys, tag_a, tag_b, Dist, B_TAG_BASE};
+        let sizes: [(usize, usize, u64); 3] = [(300, 300, 11), (257, 64, 12), (3, 500, 13)];
+        for dist in Dist::all() {
+            for (n, m, seed) in sizes {
+                let a = tag_a(&sorted_keys(dist, n, seed));
+                let b = tag_b(&sorted_keys(dist, m, seed.wrapping_add(100)));
+                let mut out = vec![Record::new(0, 0); n + m];
+                merge_into(&a, &b, &mut out);
+                let mut expect = [a, b].concat();
+                expect.sort_by_key(|r| r.key); // std sort is stable
+                assert_eq!(
+                    out.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                    expect.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                    "{} n={n} m={m}: fast path broke stability",
+                    dist.name()
+                );
+                check_stable_merge(&out, B_TAG_BASE)
+                    .unwrap_or_else(|e| panic!("{} n={n} m={m}: {e}", dist.name()));
+            }
+        }
+    }
+
+    /// Each triviality shape individually: disjoint-below,
+    /// disjoint-above, boundary ties, constant-A, constant-B, both
+    /// constant and equal — the shapes the fast paths claim.
+    #[test]
+    fn fast_path_shapes_exact() {
+        use crate::workload::{check_stable_merge, tag_a, tag_b, B_TAG_BASE};
+        let shapes: Vec<(Vec<i64>, Vec<i64>)> = vec![
+            ((0..100).collect(), (100..180).collect()), // a entirely below b
+            ((0..100).collect(), (99..180).collect()),  // tie at the boundary: A copy first
+            ((50..150).collect(), (0..50).collect()),   // b strictly below a
+            ((50..150).collect(), (0..51).collect()),   // equal at the boundary: not trivial
+            (vec![7; 64], (0..40).collect()),           // constant A straddling b
+            ((0..40).collect(), vec![7; 64]),           // constant B straddling a
+            (vec![7; 64], vec![7; 16]),                 // both constant, same key
+            (vec![7; 64], vec![9; 16]),                 // both constant, disjoint
+        ];
+        for (ka, kb) in shapes {
+            let (n, m) = (ka.len(), kb.len());
+            let a = tag_a(&ka);
+            let b = tag_b(&kb);
+            let mut out = vec![Record::new(0, 0); n + m];
+            merge_into(&a, &b, &mut out);
+            let mut expect = [a, b].concat();
+            expect.sort_by_key(|r| r.key);
+            assert_eq!(
+                out.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                expect.iter().map(|r| (r.key, r.tag)).collect::<Vec<_>>(),
+                "shape a={ka:?}.. b={kb:?}.."
+            );
+            check_stable_merge(&out, B_TAG_BASE).expect("tie oracle");
+        }
     }
 }

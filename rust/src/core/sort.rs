@@ -15,13 +15,27 @@
 //! persistent [`crate::exec`] executor — one fixed worker fleet for the
 //! whole sort instead of `1 + ceil(log p)` spawn/join generations.
 
+use super::adaptive::{merge_adaptive_scoped, MergeStrategy};
 use super::blocks::Blocks;
 use super::cases::{MergeTask, Partition};
 use super::merge::{carve_output, chunk_tasks};
 use super::seqmerge::{merge_into, merge_sort};
 
-/// Stable parallel merge sort of `data` using `p` processing elements.
+/// Stable parallel merge sort of `data` using `p` processing elements
+/// and the default (fixed pre-partition) merge rounds.
 pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize) {
+    parallel_merge_sort_with(data, p, MergeStrategy::default());
+}
+
+/// [`parallel_merge_sort`] with an explicit [`MergeStrategy`] for the
+/// §3 merge rounds: `Fixed` pre-partitions every round's pairs;
+/// `Adaptive` runs each pair sequentially-until-stolen (one task per
+/// pair, splitting on observed steal requests).
+pub fn parallel_merge_sort_with<T: Copy + Ord + Send + Sync>(
+    data: &mut [T],
+    p: usize,
+    strategy: MergeStrategy,
+) {
     assert!(p > 0);
     let n = data.len();
     if n <= 1 {
@@ -70,9 +84,9 @@ pub fn parallel_merge_sort<T: Copy + Ord + Send + Sync>(data: &mut [T], p: usize
     let mut in_data = true;
     while runs.len() > 2 {
         runs = if in_data {
-            merge_round(&*data, &mut aux, &runs, p)
+            merge_round_with(&*data, &mut aux, &runs, p, crate::exec::JobClass::Service, strategy)
         } else {
-            merge_round(&aux, data, &runs, p)
+            merge_round_with(&aux, data, &runs, p, crate::exec::JobClass::Service, strategy)
         };
         in_data = !in_data;
         rounds += 1;
@@ -195,6 +209,90 @@ pub fn merge_round_with_class<T: Copy + Ord + Send + Sync>(
     new_runs
 }
 
+/// Strategy dispatch for one §3 merge round: `Fixed` is the paper's
+/// pre-partitioned round ([`merge_round_with_class`]); `Adaptive`
+/// spawns ONE sequential-until-stolen task per run pair and lets the
+/// kernel split on observed steal requests — no up-front searches at
+/// all when the fleet is saturated (which, during a sort's merge
+/// rounds, it usually is: every pair is already a task).
+pub fn merge_round_with<T: Copy + Ord + Send + Sync>(
+    src: &[T],
+    dst: &mut [T],
+    runs: &[usize],
+    p: usize,
+    class: crate::exec::JobClass,
+    strategy: MergeStrategy,
+) -> Vec<usize> {
+    match strategy {
+        MergeStrategy::Fixed => merge_round_with_class(src, dst, runs, p, class),
+        MergeStrategy::Adaptive => merge_round_adaptive(src, dst, runs, p, class),
+    }
+}
+
+/// The adaptive round: carve `dst` at the merged-pair boundaries (the
+/// same tiling the fixed round's tasks produce, so the returned run
+/// vector is identical) and run one adaptive kernel per pair. An odd
+/// trailing run is copied. Below the sequential crossover the pairs
+/// merge inline with no scope at all.
+fn merge_round_adaptive<T: Copy + Ord + Send + Sync>(
+    src: &[T],
+    dst: &mut [T],
+    runs: &[usize],
+    p: usize,
+    class: crate::exec::JobClass,
+) -> Vec<usize> {
+    let nruns = runs.len() - 1;
+    debug_assert!(nruns >= 2);
+    debug_assert_eq!(runs[0], 0);
+    debug_assert_eq!(*runs.last().unwrap(), dst.len());
+    let npairs = nruns / 2;
+    let parallel =
+        p > 1 && dst.len() >= crate::exec::tunables_for::<T>().parallel_merge_cutoff;
+    let quantum = crate::exec::adaptive_quantum_for::<T>();
+
+    let mut new_runs = Vec::with_capacity(npairs + 2);
+    new_runs.push(0usize);
+    // Carve dst into per-pair output slices up front (disjointness for
+    // the borrow checker), exactly like the fixed round's carve.
+    let mut pairs: Vec<(&[T], &[T], &mut [T])> = Vec::with_capacity(npairs);
+    let mut rest: &mut [T] = dst;
+    for pair in 0..npairs {
+        let lo = runs[2 * pair];
+        let mid = runs[2 * pair + 1];
+        let hi = runs[2 * pair + 2];
+        let (head, tail) = rest.split_at_mut(hi - lo);
+        rest = tail;
+        pairs.push((&src[lo..mid], &src[mid..hi], head));
+        new_runs.push(hi);
+    }
+    // Odd trailing run: a pure copy (done inline — it is sequential
+    // bandwidth either way).
+    if nruns % 2 == 1 {
+        let lo = runs[nruns - 1];
+        let hi = runs[nruns];
+        if hi > lo {
+            let (head, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            head.copy_from_slice(&src[lo..hi]);
+            new_runs.push(hi);
+        }
+    }
+    debug_assert!(rest.is_empty());
+
+    if !parallel {
+        for (a, b, out) in pairs {
+            merge_into(a, b, out);
+        }
+        return new_runs;
+    }
+    crate::exec::global().scope_with_class(class, |s| {
+        for (a, b, out) in pairs {
+            s.spawn(move || merge_adaptive_scoped(s, a, b, out, quantum, None));
+        }
+    });
+    new_runs
+}
+
 /// Sequential stable merge sort into a fresh Vec (convenience used by
 /// baselines and tests).
 pub fn seq_sorted<T: Copy + Ord>(input: &[T]) -> Vec<T> {
@@ -309,6 +407,35 @@ mod tests {
                 expected_rounds(p)
             );
         }
+    }
+
+    #[test]
+    fn adaptive_rounds_sort_and_stay_stable() {
+        let mut rng = Rng::new(21);
+        for &p in &[2usize, 5, 8, 13] {
+            let n = 4000;
+            let mut v: Vec<Record> =
+                (0..n).map(|i| Record::new(rng.range(0, 60), i as u64)).collect();
+            let mut expect = v.clone();
+            expect.sort_by_key(|r| r.key); // std stable sort as oracle
+            parallel_merge_sort_with(&mut v, p, MergeStrategy::Adaptive);
+            let got: Vec<(i64, u64)> = v.iter().map(|r| (r.key, r.tag)).collect();
+            let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
+            assert_eq!(got, want, "adaptive instability at p={p}");
+        }
+    }
+
+    #[test]
+    fn large_adaptive_sort_exercises_executor_rounds() {
+        // Above the cutoff clamp (2^18) so every adaptive round runs
+        // scoped kernels, with real steal-request traffic.
+        let mut rng = Rng::new(13);
+        let n = 1 << 19;
+        let mut v: Vec<i64> = (0..n).map(|_| rng.range(0, 1 << 20)).collect();
+        let mut expect = v.clone();
+        expect.sort();
+        parallel_merge_sort_with(&mut v, 8, MergeStrategy::Adaptive);
+        assert_eq!(v, expect);
     }
 
     #[test]

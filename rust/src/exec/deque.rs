@@ -55,7 +55,7 @@
 //! materialized back into a `Box` only by the unique claimant.
 
 use std::ptr;
-use crate::model::sync::{fence, AtomicIsize, AtomicPtr, Mutex, Ordering};
+use crate::model::sync::{fence, AtomicBool, AtomicIsize, AtomicPtr, Mutex, Ordering};
 
 /// The job type stored in the deque (same shape as `exec::Job`).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -272,6 +272,81 @@ impl Default for Deque {
     }
 }
 
+/// Per-worker steal-request flags — the demand signal behind the
+/// adaptive "sequential-until-stolen" merge kernel
+/// ([`crate::core::adaptive`]).
+///
+/// An idle worker *raises* the flag of a victim it found empty before
+/// parking; a running task *takes* (consumes) a raised flag between
+/// work quanta and reacts by splitting off a stealable half. The flag
+/// is intentionally a saturating one-bit signal per worker: concurrent
+/// raises coalesce (one split feeds the whole idle set, which then
+/// steals or re-raises), and `take` consumes with a single
+/// read-modify-write so one raise can never trigger two splits.
+///
+/// # Ordering protocol (model-tested, Miri-covered)
+///
+/// - `raise` is a `Release` store of `true`: everything the idle
+///   worker did before asking (notably its own deque going empty) is
+///   visible to the poller that `Acquire`-consumes the flag.
+/// - `take` is a `Relaxed` fast-path load (the between-quanta poll
+///   must cost one uncontended cache hit) followed, only when the
+///   flag was seen raised, by a `swap(false, AcqRel)` — the swap is
+///   the single consumption point, so a raise is taken at most once
+///   (*no phantom split*).
+/// - A raise can never be lost: the flag stays `true` until some
+///   poller's swap observes it, and the split that poller publishes
+///   goes through `Executor::push_job` → `notify_one`, which wakes
+///   parked workers under the sleep lock (*no lost wake*). If no task
+///   is running, the idle worker parks with a bounded timeout and
+///   re-checks, so a stale raise costs one timeout tick at worst.
+pub struct StealSignal {
+    flags: Box<[AtomicBool]>,
+}
+
+impl StealSignal {
+    pub fn new(workers: usize) -> StealSignal {
+        StealSignal { flags: (0..workers.max(1)).map(|_| AtomicBool::new(false)).collect() }
+    }
+
+    /// Number of per-worker flags (== executor worker count).
+    pub fn workers(&self) -> usize {
+        self.flags.len()
+    }
+
+    /// Idle side: ask worker `victim` to split its current work.
+    /// Saturating — raising an already-raised flag is a no-op.
+    pub fn raise(&self, victim: usize) {
+        self.flags[victim % self.flags.len()].store(true, Ordering::Release);
+    }
+
+    /// Running side: consume a steal request aimed at `worker`.
+    /// Returns `true` at most once per raise (swap is the single
+    /// consumption point). The fast path is one `Relaxed` load.
+    pub fn take(&self, worker: usize) -> bool {
+        let flag = &self.flags[worker % self.flags.len()];
+        flag.load(Ordering::Relaxed) && flag.swap(false, Ordering::AcqRel)
+    }
+
+    /// Running side, for threads that are not workers (e.g. the scope
+    /// waiter executing the root task on the caller's thread): sweep
+    /// all flags starting at `start` and consume the first raised one.
+    pub fn take_any(&self, start: usize) -> bool {
+        let n = self.flags.len();
+        for k in 0..n {
+            if self.take(start.wrapping_add(k) % n) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Monitoring only: is a request currently pending for `worker`?
+    pub fn is_raised(&self, worker: usize) -> bool {
+        self.flags[worker % self.flags.len()].load(Ordering::Relaxed)
+    }
+}
+
 impl Drop for Deque {
     fn drop(&mut self) {
         // `&mut self`: no concurrent owner or thieves remain. Drop the
@@ -431,6 +506,102 @@ mod tests {
         for (i, count) in seen.iter().enumerate() {
             assert_eq!(count.load(Ordering::Relaxed), 1, "job {i} misdelivered");
         }
+    }
+
+    #[test]
+    fn steal_signal_take_consumes_exactly_once() {
+        let s = StealSignal::new(4);
+        assert!(!s.take(2), "no raise yet");
+        s.raise(2);
+        assert!(s.is_raised(2));
+        assert!(s.take(2), "first take consumes the raise");
+        assert!(!s.take(2), "a raise is consumed at most once");
+        // Raises coalesce: two raises, one take.
+        s.raise(1);
+        s.raise(1);
+        assert!(s.take(1));
+        assert!(!s.take(1));
+    }
+
+    #[test]
+    fn steal_signal_take_any_sweeps_from_start() {
+        let s = StealSignal::new(4);
+        s.raise(1);
+        s.raise(3);
+        // Sweep starting at 2 finds 3 first, then wraps to 1.
+        assert!(s.take_any(2));
+        assert!(!s.is_raised(3));
+        assert!(s.is_raised(1));
+        assert!(s.take_any(2));
+        assert!(!s.take_any(0), "all consumed");
+    }
+
+    #[test]
+    fn steal_signal_zero_workers_is_inert() {
+        // Degenerate executor shapes must not panic on modulo-0.
+        let s = StealSignal::new(0);
+        assert_eq!(s.workers(), 1);
+        s.raise(0);
+        assert!(s.take(0));
+    }
+
+    /// Concurrent raisers against one polling consumer: every raise
+    /// is eventually observed (no lost wake) and the number of
+    /// successful takes never exceeds the number of raises (no
+    /// phantom split).
+    #[test]
+    fn steal_signal_raise_vs_poll_race() {
+        const RAISERS: usize = if cfg!(miri) { 2 } else { 4 };
+        const ROUNDS: usize = if cfg!(miri) { 50 } else { 5_000 };
+        let s = Arc::new(StealSignal::new(1));
+        let raised = Arc::new(AtomicUsize::new(0));
+        let taken = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for _ in 0..RAISERS {
+                let s = Arc::clone(&s);
+                let raised = Arc::clone(&raised);
+                scope.spawn(move || {
+                    for _ in 0..ROUNDS {
+                        s.raise(0);
+                        // Release so the main thread's Acquire count
+                        // read orders this raise before `stop`.
+                        raised.fetch_add(1, Ordering::Release);
+                    }
+                });
+            }
+            let poller = {
+                let s = Arc::clone(&s);
+                let taken = Arc::clone(&taken);
+                let stop = Arc::clone(&stop);
+                scope.spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        if s.take(0) {
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    // Final drain: a raise left pending when the
+                    // raisers finished must still be observable.
+                    if s.take(0) {
+                        taken.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+            };
+            // Wait for the raisers (scope joins them on drop order is
+            // not guaranteed, so join explicitly via counting).
+            while raised.load(Ordering::Acquire) < RAISERS * ROUNDS {
+                std::hint::spin_loop();
+            }
+            stop.store(true, Ordering::Release);
+            let _ = poller;
+        });
+        let t = taken.load(Ordering::Relaxed);
+        let r = raised.load(Ordering::Relaxed);
+        assert!(t >= 1, "at least one raise must be observed");
+        assert!(t <= r, "takes ({t}) exceeded raises ({r}) — phantom split");
+        assert!(!s.is_raised(0), "final drain left a pending raise");
     }
 
     /// Owner pops race thief steals for the same jobs: nothing is lost

@@ -79,6 +79,24 @@
 //! injector's background lane, so a service job can never end up
 //! queued behind sibling background spawns.
 //!
+//! # Steal requests ([`StealToken`])
+//!
+//! Work stealing moves *queued* tasks; it cannot subdivide a task that
+//! is already running. The adaptive merge kernel
+//! ([`crate::core::adaptive`]) closes that gap with a demand signal:
+//! a worker that finds the whole fleet idle **raises** a per-worker
+//! steal-request flag ([`deque::StealSignal`]) just before parking; a
+//! running adaptive kernel **polls** the flags between bounded work
+//! quanta through a [`StealToken`] (own flag first, then a sweep — one
+//! relaxed load per flag) and reacts to a consumed request by
+//! splitting off the right half of its remaining input as a stealable
+//! task. The flag is a coalescing one-bit signal: `raise` is a
+//! `Release` store, consumption is a single `swap`, so one raise never
+//! yields two splits, and a raise is never lost — the split publishes
+//! through [`Executor::push_job`], whose wake-up runs under the same
+//! sleep lock the raiser parks on. Obtain a token with
+//! [`steal_token`] (global fleet) or [`Executor::steal_token`].
+//!
 //! Every worker keeps cache-padded counters — executed jobs, steals,
 //! steal misses (lost CAS races), injector batches, parks — exposed
 //! through [`Executor::telemetry`] (see [`telemetry`] for exact field
@@ -129,7 +147,7 @@ mod model_tests;
 pub mod telemetry;
 pub mod tunables;
 
-use deque::{Deque, Steal};
+use deque::{Deque, Steal, StealSignal};
 use injector::{Drained, Injector};
 use std::cell::Cell;
 use std::collections::VecDeque;
@@ -145,8 +163,9 @@ use tunables::env_usize;
 
 pub use injector::{JobClass, DEFAULT_BG_STARVATION_LIMIT};
 pub use tunables::{
-    lane_bias_factor, lane_view, recalibrate_from, recalibration_stats, tunables,
-    tunables_class, tunables_for, KeyClass, LaneView, RecalibrationEvent, Tunables,
+    adaptive_quantum_class, adaptive_quantum_for, lane_bias_factor, lane_view,
+    recalibrate_from, recalibration_stats, tunables, tunables_class, tunables_for, KeyClass,
+    LaneView, RecalibrationEvent, Tunables,
 };
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -183,6 +202,11 @@ struct Shared {
     sleep: Mutex<()>,
     wake: Condvar,
     shutdown: AtomicBool,
+    /// Per-worker steal-request flags: an idle worker raises a
+    /// victim's flag before parking; running adaptive kernels consume
+    /// them between quanta via [`StealToken`]. See [`deque::StealSignal`]
+    /// for the ordering protocol.
+    steal_req: StealSignal,
 }
 
 impl Shared {
@@ -307,6 +331,13 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
     // on every empty sweep, so rolls still land within ~one interval.
     const ROLL_CHECK_EVERY: u32 = 64;
     let mut until_roll_check = 1u32;
+    // Rotating victim cursor for pre-park steal requests: each park
+    // asks a different sibling, so repeated parks (50ms timeout) cover
+    // the whole fleet even though the raiser cannot know which worker
+    // is busy. Tokens sweep ALL flags anyway (see `StealToken`), so a
+    // raise aimed at an idle sibling is still consumed by whichever
+    // task polls next.
+    let mut park_rot = 0usize;
     loop {
         until_roll_check -= 1;
         if until_roll_check == 0 {
@@ -333,6 +364,16 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
         until_roll_check = 1;
         let guard = shared.sleep.lock().unwrap();
         if shared.is_idle() && !shared.shutdown.load(Ordering::Acquire) {
+            // Nothing is queued anywhere, but tasks may still be
+            // RUNNING (their deques drained): raise a steal request so
+            // an adaptive kernel splits off half its remaining work at
+            // its next quantum boundary. Raising after the idle check
+            // cannot lose a wake-up: the split's `push_job` notifies
+            // under this same sleep lock, and the park below has a
+            // bounded timeout for the task-polls-just-before-raise
+            // window.
+            park_rot = park_rot.wrapping_add(1);
+            shared.steal_req.raise(id.wrapping_add(park_rot));
             // Timeout is a missed-wakeup backstop only; pushes notify
             // under the same lock, so the common path is event-driven.
             shared.counters[id].parks.fetch_add(1, Ordering::Relaxed);
@@ -364,6 +405,7 @@ impl Executor {
             sleep: Mutex::new(()),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            steal_req: StealSignal::new(threads),
         });
         let handles = (0..threads)
             .map(|i| {
@@ -701,6 +743,81 @@ impl<'scope, 'env> Scope<'scope, 'env> {
     }
 }
 
+#[derive(Clone)]
+enum TokenMode {
+    /// Calling thread is worker `id` of `shared`'s fleet: poll the own
+    /// flag first (one relaxed load — the raiser's fast path), then
+    /// sweep the siblings.
+    Worker { shared: Arc<Shared>, id: usize },
+    /// Non-worker thread (e.g. the scope waiter running a root task on
+    /// the caller's thread): sweep every flag.
+    Sweep { shared: Arc<Shared> },
+    /// Never requests a split — the deterministic sequential baseline.
+    Never,
+    /// Requests a split on every poll — the deterministic always-split
+    /// stress mode (tests and benches).
+    Always,
+}
+
+/// A between-quanta demand poll for adaptive kernels: "does an idle
+/// worker want half of my remaining work?"
+///
+/// Obtained via [`steal_token`] (global fleet) or
+/// [`Executor::steal_token`]; each running task derives its own token
+/// from its own thread identity, so tokens are cheap and never shared
+/// across threads. [`StealToken::should_split`] *consumes* a pending
+/// request (at most one split per raise); see [`deque::StealSignal`]
+/// for the flag protocol and orderings.
+#[derive(Clone)]
+pub struct StealToken {
+    mode: TokenMode,
+}
+
+impl StealToken {
+    /// A token that never requests a split: deterministic sequential
+    /// behavior for tests, benches and single-threaded fleets.
+    pub fn never() -> StealToken {
+        StealToken { mode: TokenMode::Never }
+    }
+
+    /// A token that requests a split on every poll: deterministically
+    /// exercises the co-rank split path down to the sequential floor.
+    pub fn always() -> StealToken {
+        StealToken { mode: TokenMode::Always }
+    }
+
+    /// Consume one pending steal request, if any. One uncontended
+    /// relaxed load per worker flag on the no-request path — cheap
+    /// enough to call every few thousand merged elements.
+    pub fn should_split(&self) -> bool {
+        match &self.mode {
+            TokenMode::Worker { shared, id } => shared.steal_req.take_any(*id),
+            TokenMode::Sweep { shared } => shared.steal_req.take_any(0),
+            TokenMode::Never => false,
+            TokenMode::Always => true,
+        }
+    }
+}
+
+impl Executor {
+    /// A [`StealToken`] over THIS fleet's steal-request flags, bound to
+    /// the calling thread's identity (worker-id TLS): workers poll
+    /// their own flag first, foreign threads sweep.
+    pub fn steal_token(&self) -> StealToken {
+        let mode = match self.worker_id() {
+            Some(id) => TokenMode::Worker { shared: Arc::clone(&self.shared), id },
+            None => TokenMode::Sweep { shared: Arc::clone(&self.shared) },
+        };
+        StealToken { mode }
+    }
+}
+
+/// [`Executor::steal_token`] on the [`global`] fleet — what the
+/// adaptive merge kernel uses.
+pub fn steal_token() -> StealToken {
+    global().steal_token()
+}
+
 /// The process-wide executor every parallel phase shares. Sized from
 /// the hardware (floor 4 so small containers still overlap service
 /// jobs), overridable with `EXEC_THREADS`. Only this executor's
@@ -1022,6 +1139,36 @@ mod tests {
         assert!(wide >= k && wide <= k * FINE_FACTOR_CAP);
         // Degenerate request.
         assert_eq!(chunk_groups(0, 0), 1);
+    }
+
+    #[test]
+    fn steal_token_modes_are_deterministic() {
+        assert!(!StealToken::never().should_split());
+        assert!(!StealToken::never().clone().should_split());
+        assert!(StealToken::always().should_split());
+        assert!(StealToken::always().should_split(), "always-mode never exhausts");
+    }
+
+    #[test]
+    fn idle_workers_raise_steal_requests() {
+        // A private 2-worker fleet with no traffic: both workers park
+        // repeatedly, and every park raises a steal-request flag. A
+        // sweeping token (this thread is not a worker) must observe a
+        // request within a couple of park timeouts.
+        let exec = Executor::new(2);
+        let token = exec.steal_token();
+        let t0 = Instant::now();
+        while !token.should_split() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "no steal request raised by an idle fleet"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Consumption is exactly-once per raise: draining the flags
+        // leaves the token quiet until the next park re-raises.
+        while token.should_split() {}
+        assert!(!exec.shared.steal_req.is_raised(0) || !exec.shared.steal_req.is_raised(1));
     }
 
     #[test]

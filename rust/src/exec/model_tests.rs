@@ -9,13 +9,14 @@
 //! State must be built INSIDE the closure — it is reconstructed fresh
 //! for every schedule.
 //!
-//! The suite covers the three core exec protocols named in the
+//! The suite covers the core exec protocols named in the
 //! ARCHITECTURE SAFETY catalog — Chase–Lev steal-vs-pop, the injector
-//! shard drain claim + background promotion arm/reset, and the
-//! telemetry window-epoch roll — plus the mutation gate that proves
-//! the checker actually detects a weakened ordering.
+//! shard drain claim + background promotion arm/reset, the telemetry
+//! window-epoch roll, and the steal-request flag the adaptive merge
+//! kernel polls — plus the mutation gate that proves the checker
+//! actually detects a weakened ordering.
 
-use super::deque::{Deque, Steal};
+use super::deque::{Deque, Steal, StealSignal};
 use super::injector::{Injector, JobClass};
 use super::telemetry::{Counters, WindowRing};
 use crate::model::sync::{AtomicBool, AtomicUsize, Ordering};
@@ -291,6 +292,69 @@ fn model_telemetry_single_roll_winner() {
             assert_eq!(rates.epochs, 1);
             // The single slot holds the whole delta exactly once.
             assert!((rates.executed_per_sec * rates.span_secs - 7.0).abs() < 1e-9);
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// Steal-request flag, the adaptive kernel's split trigger: an idle
+/// worker's `raise` races the merging worker's `take` poll. Two
+/// invariants, in every schedule: no phantom split (`take` returns
+/// `true` only against a real raise, and the swap consumes it exactly
+/// once) and no lost wake (a completed raise is visible to the next
+/// poll).
+#[test]
+fn model_steal_signal_raise_vs_take() {
+    let schedules = check_with(
+        Config { name: "steal-signal", ..Config::default() },
+        || {
+            let sig = Arc::new(StealSignal::new(2));
+            let s1 = Arc::clone(&sig);
+            let raiser = thread::spawn(move || s1.raise(0));
+            // The merging worker polls its own flag once mid-quantum.
+            let early = sig.take(0);
+            raiser.join().unwrap();
+            if early {
+                // The consumption point is the single swap: the raise
+                // cannot be observed a second time.
+                assert!(!sig.take(0), "one raise consumed twice");
+            } else {
+                // The raise completed (join) without being consumed:
+                // the next poll MUST see it — a lost wake here is a
+                // sequential merge that never splits despite an idle
+                // worker asking.
+                assert!(sig.take(0), "raise lost in the raise-vs-take race");
+            }
+            assert!(!sig.is_raised(0), "flag must end clear");
+            assert!(!sig.is_raised(1), "victim 1 was never asked");
+        },
+    );
+    assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");
+}
+
+/// `take_any` (the scope waiter's sweep) racing a concurrent `raise`
+/// on a different flag: distinct flags never coalesce, so the sweep
+/// plus a post-join drain must account for BOTH raises exactly once.
+#[test]
+fn model_steal_signal_sweep_vs_concurrent_raise() {
+    let schedules = check_with(
+        Config { name: "steal-signal-sweep", ..Config::default() },
+        || {
+            let sig = Arc::new(StealSignal::new(3));
+            sig.raise(2); // pre-armed before the race
+            let s1 = Arc::clone(&sig);
+            let raiser = thread::spawn(move || s1.raise(1));
+            let mut taken = usize::from(sig.take_any(0));
+            raiser.join().unwrap();
+            // Both raises happened-before this drain; each distinct
+            // flag is consumed exactly once, none lost, none invented.
+            while sig.take_any(0) {
+                taken += 1;
+            }
+            assert_eq!(taken, 2, "two distinct raises, two consumptions");
+            for w in 0..3 {
+                assert!(!sig.is_raised(w), "flag {w} must end clear");
+            }
         },
     );
     assert!(schedules > 1, "the race must branch (got {schedules} schedule(s))");

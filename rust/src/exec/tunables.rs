@@ -390,6 +390,33 @@ pub(super) fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse().ok())
 }
 
+/// The adaptive merge kernel's work quantum (elements merged between
+/// steal-request polls) for an explicit key class.
+///
+/// `EXEC_ADAPTIVE_QUANTUM` pins the value verbatim (floored at 1), and
+/// is deliberately re-read per call like `EXEC_FINE_CHUNK` — benches
+/// toggle it mid-process, and one env lookup per *merge call* (not per
+/// quantum) is noise. Unpinned, the quantum derives from the class'
+/// `fine_chunk_min`: the same amortization logic applies — a split
+/// must hand the thief at least one steal's worth of work, and the
+/// poll cadence is what bounds how stale the fleet's demand signal can
+/// get — clamped into `[2^10, 2^17]` so a recalibration excursion can
+/// never make the kernel poll per-element or turn it into a
+/// never-polling sequential merge.
+pub fn adaptive_quantum_class(class: KeyClass) -> usize {
+    if let Some(q) = env_usize("EXEC_ADAPTIVE_QUANTUM") {
+        return q.max(1);
+    }
+    tunables_class(class).fine_chunk_min.clamp(1 << 10, 1 << 17)
+}
+
+/// [`adaptive_quantum_class`] for element type `T`, picked by key
+/// class — wide elements poll more often per byte moved, matching
+/// their lower fine-chunk floor.
+pub fn adaptive_quantum_for<T>() -> usize {
+    adaptive_quantum_class(KeyClass::of::<T>())
+}
+
 /// Startup seeding: measure both classes, apply env pins, populate
 /// the slots.
 fn seed() {
@@ -603,6 +630,32 @@ mod tests {
     fn empty_window_is_a_no_op() {
         let _ = tunables();
         assert_eq!(recalibrate_from(&WindowRates::default()), 0);
+    }
+
+    #[test]
+    fn adaptive_quantum_is_bounded() {
+        if std::env::var("EXEC_ADAPTIVE_QUANTUM").is_ok() {
+            // Pinned verbatim: only the >= 1 floor is guaranteed.
+            assert!(adaptive_quantum_class(KeyClass::Narrow) >= 1);
+            return;
+        }
+        for class in [KeyClass::Narrow, KeyClass::Wide] {
+            let q = adaptive_quantum_class(class);
+            assert!(
+                ((1 << 10)..=(1 << 17)).contains(&q),
+                "{} quantum {q} outside clamp band",
+                class.name()
+            );
+        }
+        // The generic entry point routes by key class.
+        assert_eq!(
+            adaptive_quantum_for::<i64>(),
+            adaptive_quantum_class(KeyClass::Narrow)
+        );
+        assert_eq!(
+            adaptive_quantum_for::<crate::core::record::Record>(),
+            adaptive_quantum_class(KeyClass::Wide)
+        );
     }
 
     /// Satellite: the lane-bias math. Service-heavy windows lower the

@@ -46,4 +46,7 @@ pub mod testing;
 pub mod util;
 pub mod workload;
 
-pub use crate::core::{parallel_merge, parallel_merge_sort, Partition, Record};
+pub use crate::core::{
+    adaptive_merge, merge_with_strategy, parallel_merge, parallel_merge_sort, MergeStrategy,
+    Partition, Record,
+};

@@ -15,7 +15,10 @@
 
 use traff_merge::cli::Args;
 use traff_merge::coordinator::{Config, Engine, MergeService};
-use traff_merge::core::{parallel_merge, parallel_merge_instrumented, parallel_merge_sort, Partition, Record};
+use traff_merge::core::{
+    merge_with_strategy, parallel_merge, parallel_merge_instrumented, parallel_merge_sort,
+    parallel_merge_sort_with, MergeStrategy, Partition, Record,
+};
 use traff_merge::harness::{Bench, BenchReport};
 use traff_merge::exec::JobClass;
 use traff_merge::metrics::{fmt_duration, melems_per_sec, percentile, time, Table};
@@ -65,20 +68,31 @@ fn print_help() {
          usage: repro <cmd> [--flags]\n\n\
          commands:\n\
          \x20 demo                         Figure 1 worked example\n\
-         \x20 merge  --n N --m M --p P --dist D --seed S [--verify]\n\
-         \x20 sort   --n N --p P --dist D --seed S [--verify]\n\
+         \x20 merge  --n N --m M --p P --dist D --seed S [--verify] [--strategy S]\n\
+         \x20 sort   --n N --p P --dist D --seed S [--verify] [--strategy S]\n\
          \x20 pram   --n N --m M --p P [--crew]\n\
          \x20 bsp    --n N --p P [--g G] [--l L]\n\
          \x20 serve  --jobs J --n N [--background B] [--engine rust|hybrid]\n\
+         \x20        [--strategy S]\n\
          \x20 stream --n N --runs R [--writers W] [--block B] [--scans S] [--dist D]\n\
          \x20        [--spill] [--dir PATH] [--recover] [--page K]\n\
-         \x20        [--policy adjacent|tiered|overlap]\n\
+         \x20        [--policy adjacent|tiered|overlap] [--strategy S]\n\
          \x20 bench-json [--out F] [--pr TAG] [--n N] [--p P]  emit BENCH_<pr>.json\n\
          \x20 bench-diff --old F --new F [--tolerance-pct T]   compare two reports\n\
          \x20 artifacts                    list loaded XLA artifacts\n\n\
          distributions: uniform dupK zipf allequal organpipe presorted\n\
-         \x20                reversed runsR advskew"
+         \x20                reversed runsR advskew\n\
+         strategies:    fixed (upfront co-rank partition, default)\n\
+         \x20                adaptive (sequential-until-stolen; the poll quantum\n\
+         \x20                comes from the tunables — pin it with the\n\
+         \x20                EXEC_ADAPTIVE_QUANTUM env var, elements per quantum)"
     );
+}
+
+/// `--strategy fixed|adaptive` (shared by merge/sort/serve/stream).
+fn strategy_arg(args: &Args) -> Result<MergeStrategy, String> {
+    Ok(MergeStrategy::parse(args.get_choice("strategy", &["fixed", "adaptive"], "fixed")?)
+        .expect("choice already validated"))
 }
 
 fn cmd_demo() -> Result<(), String> {
@@ -118,16 +132,34 @@ fn cmd_demo() -> Result<(), String> {
 }
 
 fn cmd_merge(args: &Args) -> Result<(), String> {
-    args.expect_known(&["n", "m", "p", "dist", "seed", "verify"])?;
+    args.expect_known(&["n", "m", "p", "dist", "seed", "verify", "strategy"])?;
     let n = args.get_usize("n", 1_000_000)?;
     let m = args.get_usize("m", n)?;
     let p = args.get_usize("p", traff_merge::util::num_cpus())?;
     let seed = args.get_u64("seed", 42)?;
+    let strategy = strategy_arg(args)?;
     let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
         .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
     let a = workload::sorted_keys(dist, n, seed);
     let b = workload::sorted_keys(dist, m, seed.wrapping_add(1));
     let mut c = vec![0i64; n + m];
+    if strategy == MergeStrategy::Adaptive {
+        // The adaptive kernel has no upfront partition to instrument:
+        // splits happen on demand, so there is no task census to print.
+        let (secs, ()) = time(|| merge_with_strategy(&a, &b, &mut c, p, strategy));
+        println!(
+            "merged {n} + {m} ({}) with p={p} strategy={strategy} in {} — {:.1} Melem/s",
+            dist.name(),
+            fmt_duration(secs),
+            melems_per_sec((n + m) as u64, secs)
+        );
+        if args.get_flag("verify") {
+            let (vsecs, ok) = time(|| c.windows(2).all(|w| w[0] <= w[1]));
+            assert!(ok, "output not sorted!");
+            println!("verified sorted in {}", fmt_duration(vsecs));
+        }
+        return Ok(());
+    }
     let (secs, (part, tasks)) = time(|| parallel_merge_instrumented(&a, &b, &mut c, p));
     println!(
         "merged {n} + {m} ({}) with p={p} in {} — {:.1} Melem/s",
@@ -151,17 +183,18 @@ fn cmd_merge(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_sort(args: &Args) -> Result<(), String> {
-    args.expect_known(&["n", "p", "dist", "seed", "verify"])?;
+    args.expect_known(&["n", "p", "dist", "seed", "verify", "strategy"])?;
     let n = args.get_usize("n", 1_000_000)?;
     let p = args.get_usize("p", traff_merge::util::num_cpus())?;
     let seed = args.get_u64("seed", 42)?;
+    let strategy = strategy_arg(args)?;
     let dist = Dist::parse(args.get("dist").unwrap_or("uniform"))
         .ok_or_else(|| format!("unknown distribution {:?}", args.get("dist")))?;
     let mut v = workload::raw_keys(dist, n, seed);
     let mut baseline = v.clone();
-    let (secs, ()) = time(|| parallel_merge_sort(&mut v, p));
+    let (secs, ()) = time(|| parallel_merge_sort_with(&mut v, p, strategy));
     println!(
-        "sorted {n} ({}) with p={p} in {} — {:.1} Melem/s",
+        "sorted {n} ({}) with p={p} strategy={strategy} in {} — {:.1} Melem/s",
         dist.name(),
         fmt_duration(secs),
         melems_per_sec(n as u64, secs)
@@ -308,12 +341,13 @@ fn print_latency(label: &str, latencies: &mut [f64]) {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
-    args.expect_known(&["jobs", "n", "engine", "threads", "seed", "background"])?;
+    args.expect_known(&["jobs", "n", "engine", "threads", "seed", "background", "strategy"])?;
     let jobs = args.get_usize("jobs", 16)?;
     let background = args.get_usize("background", 0)?;
     let n = args.get_usize("n", 100_000)?;
     let threads = args.get_usize("threads", traff_merge::util::num_cpus())?;
     let seed = args.get_u64("seed", 42)?;
+    let strategy = strategy_arg(args)?;
     let engine = match args.get_choice("engine", &["rust", "hybrid"], "rust")? {
         "hybrid" => Engine::Hybrid,
         _ => Engine::Rust,
@@ -323,8 +357,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // its own admission pool of `threads` permits. Mixed-class traffic
     // end to end: the background tenant's jobs enter the injector's
     // background lane and yield to the service tenant's.
-    let svc = MergeService::new(Config { threads, engine, leaf_block: 1024, ..Config::default() })
-        .map_err(|e| e.to_string())?;
+    let svc = MergeService::new(Config {
+        threads,
+        engine,
+        leaf_block: 1024,
+        strategy,
+        ..Config::default()
+    })
+    .map_err(|e| e.to_string())?;
     let bg_svc = if background > 0 {
         Some(
             MergeService::new(Config {
@@ -332,6 +372,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 engine,
                 leaf_block: 1024,
                 class: JobClass::Background,
+                strategy,
             })
             .map_err(|e| e.to_string())?,
         )
@@ -339,7 +380,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         None
     };
     println!(
-        "service up: engine={engine:?} admission={threads} permits/tenant \
+        "service up: engine={engine:?} strategy={strategy} admission={threads} permits/tenant \
          ({jobs} service + {background} background jobs)"
     );
     let mut rng = traff_merge::util::Rng::new(seed);
@@ -457,7 +498,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 fn cmd_stream(args: &Args) -> Result<(), String> {
     args.expect_known(&[
         "n", "runs", "block", "scans", "dist", "seed", "threads", "spill", "dir", "recover",
-        "policy", "page", "writers",
+        "policy", "page", "writers", "strategy",
     ])?;
     let n = args.get_usize("n", 200_000)?.max(1);
     let runs = args.get_usize("runs", 8)?.max(1);
@@ -476,6 +517,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     )?)
     .expect("choice already validated");
     let page = args.get_usize("page", 1024)?.max(1);
+    let strategy = strategy_arg(args)?;
     let recover = args.get_flag("recover");
     // --dir names a persistent spill directory (survives this process:
     // the durable/restartable mode); --spill uses a throwaway temp dir.
@@ -486,14 +528,21 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     let temp_spill = (dir.is_none() && args.get_flag("spill"))
         .then(|| std::env::temp_dir().join(format!("repro-stream-{}", std::process::id())));
     let spill = dir.clone().or_else(|| temp_spill.clone());
-    let svc = MergeService::new(Config { threads, engine: Engine::Rust, leaf_block: 1024, ..Config::default() })
-        .map_err(|e| e.to_string())?;
+    let svc = MergeService::new(Config {
+        threads,
+        engine: Engine::Rust,
+        leaf_block: 1024,
+        strategy,
+        ..Config::default()
+    })
+    .map_err(|e| e.to_string())?;
     let mut builder = StreamConfig::builder()
         .run_capacity(capacity)
         .fanout(4)
         .threads(threads)
         .page_records(page)
-        .policy(policy);
+        .policy(policy)
+        .strategy(strategy);
     if let Some(dir) = spill.clone() {
         builder = builder.spill(dir);
     }
@@ -520,7 +569,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
     };
     println!(
         "stream up: {n} records ({}) over {writers} writer(s), run capacity {capacity} \
-         (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {} policy, {}",
+         (~{runs} runs, {:.1}x the per-run buffer), fanout 4, {} policy, {strategy} merges, {}",
         dist.name(),
         n as f64 / capacity as f64,
         policy.name(),
@@ -700,7 +749,7 @@ fn cmd_stream(args: &Args) -> Result<(), String> {
 /// problem so CI can run a fast, smaller-but-same-shape suite.
 fn cmd_bench_json(args: &Args) -> Result<(), String> {
     args.expect_known(&["out", "pr", "n", "p"])?;
-    let pr = args.get("pr").unwrap_or("8").to_string();
+    let pr = args.get("pr").unwrap_or("9").to_string();
     let n = args.get_usize("n", 1_000_000)?.max(16);
     let p = args.get_usize("p", traff_merge::util::num_cpus())?.max(1);
     let default_out = format!("BENCH_{pr}.json");
@@ -718,6 +767,33 @@ fn cmd_bench_json(args: &Args) -> Result<(), String> {
         let r = Bench::new(name).run(|| parallel_merge(&a, &b, &mut out, p));
         println!("  {}", r.summary());
         report.add(n as u64, &r);
+    }
+
+    // Scenarios (Bench E12): the adaptive sequential-until-stolen
+    // kernel on the shapes where its behavior diverges from the fixed
+    // partition — uniform (should match), nearly-disjoint key ranges
+    // and dup-heavy keys (quantum-granular triviality fast paths).
+    {
+        let adaptive = |a: &[i64], b: &[i64], name: &str, report: &mut BenchReport| {
+            let mut out = vec![0i64; a.len() + b.len()];
+            let r = Bench::new(name)
+                .run(|| merge_with_strategy(a, b, &mut out, p, MergeStrategy::Adaptive));
+            println!("  {}", r.summary());
+            report.add(out.len() as u64, &r);
+        };
+        let a = workload::sorted_keys(Dist::Uniform, n / 2, 42);
+        let b = workload::sorted_keys(Dist::Uniform, n - n / 2, 43);
+        adaptive(&a, &b, "merge_adaptive_uniform", &mut report);
+        // Nearly-disjoint: consecutive key bands with a thin overlap
+        // seam, so almost every quantum (and any stolen half) is a
+        // whole-slice block copy.
+        let band = n as i64;
+        let a: Vec<i64> = (0..n as i64 / 2).collect();
+        let b: Vec<i64> = (0..(n as i64 - n as i64 / 2)).map(|k| band / 2 - 16 + k).collect();
+        adaptive(&a, &b, "merge_adaptive_disjoint", &mut report);
+        let a = workload::sorted_keys(Dist::DupHeavy(16), n / 2, 42);
+        let b = workload::sorted_keys(Dist::DupHeavy(16), n - n / 2, 43);
+        adaptive(&a, &b, "merge_adaptive_dupheavy", &mut report);
     }
 
     // Scenario 3: the §3 merge sort (includes the per-op clone; the

@@ -12,7 +12,7 @@
 //!   Every record with key strictly below the horizon is provably
 //!   resident (its cursor's buffered max is ≥ the horizon), so those
 //!   prefixes are merged in one shot with
-//!   [`parallel_kway_merge_with_class`] — `ceil(log2 k)` levels of §3
+//!   [`parallel_kway_merge_with`] — `ceil(log2 k)` levels of §3
 //!   merge rounds, each level one parallel phase of co-rank tasks
 //!   under [`JobClass::Background`] — and streamed to the output
 //!   [`RunWriter`] (which pages straight to disk for spilled stores).
@@ -41,9 +41,10 @@
 use super::page::PageFormat;
 use super::run::{Run, RunCursor, RunWriter, WideRecord};
 use super::store::{CompactionStats, RunStore};
+use crate::core::adaptive::{merge_adaptive_scoped, MergeStrategy};
 use crate::core::cases::Partition;
 use crate::core::merge::{carve_output, chunk_tasks};
-use crate::core::multiway::{loser_tree_merge, parallel_kway_merge_with_class};
+use crate::core::multiway::{loser_tree_merge, parallel_kway_merge_with};
 use crate::core::record::Record;
 use crate::core::seqmerge::merge_into;
 use crate::exec::JobClass;
@@ -64,6 +65,22 @@ impl Drop for ClaimGuard<'_> {
 /// for the E10 bench (the pairwise baseline the k-way driver is
 /// measured against); the store paths go through [`compact_once`].
 pub fn merge_runs_parallel(a: &[Record], b: &[Record], p: usize) -> Vec<Record> {
+    merge_runs_parallel_with(a, b, p, MergeStrategy::Fixed)
+}
+
+/// [`merge_runs_parallel`] with an explicit [`MergeStrategy`]:
+/// `Fixed` takes the upfront co-rank partition, `Adaptive` runs the
+/// sequential-until-stolen kernel — both on the background lane. The
+/// store paths pick the strategy up from [`StreamConfig`]
+/// (`store.config().strategy`).
+///
+/// [`StreamConfig`]: crate::stream::StreamConfig
+pub fn merge_runs_parallel_with(
+    a: &[Record],
+    b: &[Record],
+    p: usize,
+    strategy: MergeStrategy,
+) -> Vec<Record> {
     let n = a.len() + b.len();
     let mut out = vec![Record::new(0, 0); n];
     if a.is_empty() {
@@ -77,6 +94,14 @@ pub fn merge_runs_parallel(a: &[Record], b: &[Record], p: usize) -> Vec<Record> 
     let p = p.max(1);
     if p == 1 || n < crate::exec::tunables_for::<Record>().parallel_merge_cutoff {
         merge_into(a, b, &mut out);
+        return out;
+    }
+    if strategy == MergeStrategy::Adaptive {
+        let quantum = crate::exec::adaptive_quantum_for::<Record>();
+        let slice = &mut out[..];
+        crate::exec::global().scope_with_class(JobClass::Background, |s| {
+            merge_adaptive_scoped(s, a, b, slice, quantum, None);
+        });
         return out;
     }
     // Same fine-chunking policy as the service merge path: partition
@@ -113,6 +138,7 @@ pub fn merge_runs_sequential(a: &[Record], b: &[Record]) -> Vec<Record> {
 fn merge_cursors_into(
     cursors: &mut [RunCursor],
     p: usize,
+    strategy: MergeStrategy,
     out: &mut RunWriter,
 ) -> Result<(), String> {
     loop {
@@ -131,7 +157,7 @@ fn merge_cursors_into(
         let Some(safe_key) = safe else {
             // Everything left is resident: one final k-way merge.
             let slices: Vec<&[Record]> = cursors.iter().map(|c| c.buffered()).collect();
-            let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+            let merged = parallel_kway_merge_with(&slices, p, JobClass::Background, strategy);
             out.extend(&merged)?;
             let counts: Vec<usize> = cursors.iter().map(|c| c.buffered().len()).collect();
             for (c, k) in cursors.iter_mut().zip(counts) {
@@ -147,7 +173,7 @@ fn merge_cursors_into(
             cursors.iter().map(|c| c.buffered().partition_point(|r| r.key < safe_key)).collect();
         let slices: Vec<&[Record]> =
             cursors.iter().zip(&cuts).map(|(c, &k)| &c.buffered()[..k]).collect();
-        let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+        let merged = parallel_kway_merge_with(&slices, p, JobClass::Background, strategy);
         out.extend(&merged)?;
         for (c, k) in cursors.iter_mut().zip(cuts) {
             c.advance_buffered(k)?;
@@ -175,6 +201,7 @@ fn merge_cursors_into(
 fn merge_cursors_into_wide(
     cursors: &mut [RunCursor],
     p: usize,
+    strategy: MergeStrategy,
     out: &mut RunWriter,
 ) -> Result<(), String> {
     fn wide_prefix(c: &RunCursor, k: usize) -> Vec<WideRecord> {
@@ -200,7 +227,7 @@ fn merge_cursors_into_wide(
             let owned: Vec<Vec<WideRecord>> =
                 cursors.iter().map(|c| wide_prefix(c, c.buffered().len())).collect();
             let slices: Vec<&[WideRecord]> = owned.iter().map(|v| v.as_slice()).collect();
-            let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+            let merged = parallel_kway_merge_with(&slices, p, JobClass::Background, strategy);
             for w in &merged {
                 out.push_wide(*w)?;
             }
@@ -215,7 +242,7 @@ fn merge_cursors_into_wide(
         let owned: Vec<Vec<WideRecord>> =
             cursors.iter().zip(&cuts).map(|(c, &k)| wide_prefix(c, k)).collect();
         let slices: Vec<&[WideRecord]> = owned.iter().map(|v| v.as_slice()).collect();
-        let merged = parallel_kway_merge_with_class(&slices, p, JobClass::Background);
+        let merged = parallel_kway_merge_with(&slices, p, JobClass::Background, strategy);
         for w in &merged {
             out.push_wide(*w)?;
         }
@@ -242,7 +269,7 @@ pub fn kway_merge_to_vec(inputs: &[Arc<Run>], p: usize) -> Result<Vec<Record>, S
         .collect::<Result<Vec<_>, String>>()?;
     let total = inputs.iter().map(|r| r.len()).sum();
     let mut out = RunWriter::mem(total);
-    merge_cursors_into(&mut cursors, p, &mut out)?;
+    merge_cursors_into(&mut cursors, p, MergeStrategy::Fixed, &mut out)?;
     Ok(out.into_records())
 }
 
@@ -270,11 +297,12 @@ fn compact_window(
     } else {
         PageFormat::V2 { has_aux: wide }
     };
+    let strategy = store.config().strategy;
     let mut out = RunWriter::new(store.spill_dir(), store.config().page_records, total, format)?;
     if wide {
-        merge_cursors_into_wide(&mut cursors, p, &mut out)?;
+        merge_cursors_into_wide(&mut cursors, p, strategy, &mut out)?;
     } else {
-        merge_cursors_into(&mut cursors, p, &mut out)?;
+        merge_cursors_into(&mut cursors, p, strategy, &mut out)?;
     }
     let prepared = out.finish()?;
     store.commit_compaction(&inputs, prepared)
@@ -522,6 +550,54 @@ mod tests {
         assert!(data
             .windows(2)
             .all(|w| w[0].key < w[1].key || w[0].tag < w[1].tag));
+    }
+
+    /// An adaptive-configured store compacts to the exact same stable
+    /// result as the fixed-partition default: the strategy changes how
+    /// segment merges parallelize, never what they produce.
+    #[test]
+    fn adaptive_store_compaction_matches_fixed() {
+        let mut results = Vec::new();
+        for strategy in [MergeStrategy::Fixed, MergeStrategy::Adaptive] {
+            let store = Arc::new(
+                RunStore::new(StreamConfig {
+                    run_capacity: 10,
+                    fanout: 64,
+                    threads: 2,
+                    strategy,
+                    ..StreamConfig::default()
+                })
+                .unwrap(),
+            );
+            let mut ing = Ingestor::new(Arc::clone(&store));
+            let mut rng = Rng::new(17);
+            for _ in 0..55 {
+                ing.push_key(rng.range(0, 9)).unwrap();
+            }
+            ing.flush().unwrap();
+            assert_eq!(compact_to_one(&store, 2).unwrap(), 1);
+            let data = store.snapshot()[0].load().unwrap();
+            assert!(data
+                .windows(2)
+                .all(|w| w[0].key < w[1].key || (w[0].key == w[1].key && w[0].tag < w[1].tag)));
+            results.push(as_pairs(&data));
+        }
+        assert_eq!(results[0], results[1], "strategies agree record-for-record");
+    }
+
+    /// The strategy-aware pairwise compactor crosses the parallel
+    /// cutoff with the adaptive kernel and still matches the oracle.
+    #[test]
+    #[cfg(not(miri))]
+    fn adaptive_pairwise_compactor_matches_oracle_at_scale() {
+        let mut rng = Rng::new(44);
+        let a = sorted_records(&mut rng, 150_000, 5_000, 0);
+        let b = sorted_records(&mut rng, 130_000, 5_000, 1_000_000);
+        let mut oracle = vec![Record::new(0, 0); a.len() + b.len()];
+        merge_into(&a, &b, &mut oracle);
+        let got =
+            merge_runs_parallel_with(&a, &b, crate::util::num_cpus(), MergeStrategy::Adaptive);
+        assert_eq!(as_pairs(&got), as_pairs(&oracle));
     }
 
     /// Spilled k-way major compaction: pages stream through cursors

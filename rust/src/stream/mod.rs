@@ -78,7 +78,8 @@ pub mod store;
 pub mod writer;
 
 pub use compact::{
-    compact_once, compact_to_one, kway_merge_to_vec, merge_runs_parallel, merge_runs_sequential,
+    compact_once, compact_to_one, kway_merge_to_vec, merge_runs_parallel,
+    merge_runs_parallel_with, merge_runs_sequential,
 };
 pub use ingest::Ingestor;
 pub use manifest::RunMeta;
@@ -186,6 +187,12 @@ pub struct StreamConfig {
     /// stores the high sequence bits out of line and has no cap; v1
     /// files remain readable either way.
     pub legacy_pages: bool,
+    /// Merge kernel for compaction and scan merges:
+    /// [`MergeStrategy::Fixed`] pre-partitions each merge round,
+    /// [`MergeStrategy::Adaptive`] merges sequentially in bounded
+    /// quanta and splits on observed steal requests
+    /// ([`crate::core::adaptive`]).
+    pub strategy: crate::core::MergeStrategy,
 }
 
 impl Default for StreamConfig {
@@ -198,6 +205,7 @@ impl Default for StreamConfig {
             page_records: 1024,
             policy: PolicyKind::AdjacentPair,
             legacy_pages: false,
+            strategy: crate::core::MergeStrategy::Fixed,
         }
     }
 }
@@ -247,6 +255,7 @@ impl StreamConfig {
             page_records,
             policy,
             legacy_pages: false,
+            strategy: crate::core::MergeStrategy::Fixed,
         }
     }
 
@@ -322,6 +331,13 @@ impl StreamConfigBuilder {
     /// [`StreamConfig::legacy_pages`].
     pub fn legacy_pages(mut self, on: bool) -> Self {
         self.cfg.legacy_pages = on;
+        self
+    }
+
+    /// Merge kernel for compaction and scan merges. See
+    /// [`StreamConfig::strategy`].
+    pub fn strategy(mut self, strategy: crate::core::MergeStrategy) -> Self {
+        self.cfg.strategy = strategy;
         self
     }
 

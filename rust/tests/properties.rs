@@ -1,7 +1,9 @@
 //! E2 / E4 / E9 — property tests over the core invariants, via the
 //! in-crate `qcheck` framework (proptest substitute).
 
-use traff_merge::core::{parallel_merge, Blocks, Partition, Record};
+use traff_merge::core::{
+    merge_with_strategy, parallel_merge, Blocks, MergeStrategy, Partition, Record,
+};
 use traff_merge::testing::{assert_stable_permutation, qcheck};
 use traff_merge::workload::{check_stable_merge, tag_a, tag_b, B_TAG_BASE};
 use traff_merge::{prop_assert, prop_assert_eq};
@@ -67,6 +69,45 @@ fn merge_stability_property() {
         // The exact-permutation form of the same claim: out must be
         // THE stable merge of (a, b), record for record.
         assert_stable_permutation(&[&a, &b], &out).map_err(|e| format!("p={p}: {e}"))
+    });
+}
+
+/// E4/E12: the adaptive sequential-until-stolen kernel keeps the
+/// exact stability contract of the fixed partition for arbitrary
+/// dup-heavy inputs and p — same oracle as
+/// [`merge_stability_property`], dispatched through
+/// [`MergeStrategy::Adaptive`].
+#[test]
+fn adaptive_merge_stability_property() {
+    qcheck("stable adaptive merge", 300, |g| {
+        let ka = g.sorted_vec_i64(1..300, 0..6);
+        let kb = g.sorted_vec_i64(1..300, 0..6);
+        let p = g.usize_in(1..17);
+        let a = tag_a(&ka);
+        let b = tag_b(&kb);
+        let mut out = vec![Record::new(0, 0); a.len() + b.len()];
+        merge_with_strategy(&a, &b, &mut out, p, MergeStrategy::Adaptive);
+        check_stable_merge(&out, B_TAG_BASE).map_err(|e| format!("p={p}: {e}"))?;
+        assert_stable_permutation(&[&a, &b], &out).map_err(|e| format!("p={p}: {e}"))
+    });
+}
+
+/// E12: adaptive merge sort is a stable sort, arbitrary inputs and p.
+#[test]
+fn adaptive_sort_stability_property() {
+    qcheck("stable adaptive sort", 150, |g| {
+        let n = g.usize_in(0..1500);
+        let p = g.usize_in(1..17);
+        let mut v: Vec<Record> =
+            (0..n).map(|i| Record::new(g.i64_in(0..20), i as u64)).collect();
+        let mut expect = v.clone();
+        expect.sort_by_key(|r| r.key);
+        let orig = v.clone();
+        traff_merge::core::parallel_merge_sort_with(&mut v, p, MergeStrategy::Adaptive);
+        let got: Vec<(i64, u64)> = v.iter().map(|r| (r.key, r.tag)).collect();
+        let want: Vec<(i64, u64)> = expect.iter().map(|r| (r.key, r.tag)).collect();
+        prop_assert_eq!(got, want);
+        assert_stable_permutation(&[&orig], &v).map_err(|e| format!("p={p}: {e}"))
     });
 }
 
