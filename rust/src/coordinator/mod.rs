@@ -48,6 +48,7 @@ pub mod pool;
 use crate::core::record::F32Key;
 use crate::core::{merge_with_strategy, parallel_merge_sort_with, MergeStrategy};
 use crate::exec::JobClass;
+use crate::obs::{trace, Hist, HistSnapshot, Registry};
 use crate::runtime::{KeyedBlock, XlaMerger, XlaRuntime, XlaSorter};
 use crate::stream::{self, RunStore, SeqClock, ShardWriter, StreamConfig, StreamError};
 use anyhow::{anyhow, Result};
@@ -153,6 +154,16 @@ pub struct Config {
     /// [`crate::core::adaptive`]). Overridable per job via
     /// [`JobBuilder::strategy`]; the default stream tenant inherits it.
     pub strategy: MergeStrategy,
+    /// Tenant label for this service's observability instruments: its
+    /// job-latency histogram registers as `svc.<tenant>.job_latency`
+    /// and its streams as `stream.<tenant>.{ingest,scan}_latency` in
+    /// the process [`Registry`]. Tenants sharing a label share the
+    /// instruments (the registry is get-or-create by name).
+    pub tenant: String,
+    /// Enable span tracing ([`crate::obs::trace`]) when this service
+    /// is built. Sticky process-wide (tracing has one global switch);
+    /// `EXEC_TRACE=1` enables it regardless of this flag.
+    pub trace: bool,
 }
 
 impl Default for Config {
@@ -163,6 +174,8 @@ impl Default for Config {
             leaf_block: 1024,
             class: JobClass::Service,
             strategy: MergeStrategy::Fixed,
+            tenant: String::from("default"),
+            trace: false,
         }
     }
 }
@@ -207,16 +220,27 @@ pub struct ServiceStats {
     pub elements: AtomicU64,
     pub xla_calls: AtomicU64,
     pub busy_nanos: AtomicU64,
+    /// Per-job latency histogram (`svc.<tenant>.job_latency`), wired
+    /// by [`MergeService::new`] from the process [`Registry`]. Unset
+    /// on bare `ServiceStats::default()` instances, where `record`
+    /// keeps only the scalar counters — exact-bucket percentiles are
+    /// then available via [`MergeService::latency_snapshot`] instead
+    /// of sampling job vectors.
+    pub latency: OnceLock<Arc<Hist>>,
 }
 
 impl ServiceStats {
     /// Record one completed job: the single bookkeeping path every
     /// sync and async entry point shares.
     pub fn record(&self, elems: usize, t0: Instant) {
+        let elapsed = t0.elapsed();
         self.jobs.fetch_add(1, Ordering::Relaxed);
         self.elements.fetch_add(elems as u64, Ordering::Relaxed);
         self.busy_nanos
-            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        if let Some(h) = self.latency.get() {
+            h.record_duration(elapsed);
+        }
     }
 
     /// `(jobs, elements, xla_calls, busy_seconds)`.
@@ -347,26 +371,32 @@ struct StreamTenant {
     /// drain loops until the backlog is below fanout anyway.
     compact_scheduled: Arc<AtomicBool>,
     threads: usize,
+    /// Block-ingest latency (`stream.<tenant>.ingest_latency`): one
+    /// sample per ingested block / writer flush, not per record.
+    ingest_hist: Arc<Hist>,
+    /// Merged-scan latency (`stream.<tenant>.scan_latency`).
+    scan_hist: Arc<Hist>,
 }
 
 impl StreamTenant {
-    fn new(cfg: StreamConfig) -> Result<Arc<StreamTenant>, StreamError> {
+    fn new(cfg: StreamConfig, tenant: &str) -> Result<Arc<StreamTenant>, StreamError> {
         let threads = cfg.threads.max(1);
         let store = Arc::new(RunStore::new(cfg)?);
-        Ok(StreamTenant::from_store(store, threads))
+        Ok(StreamTenant::from_store(store, threads, tenant))
     }
 
     /// Restart path: rebuild the tenant from a spill directory's
     /// manifest ([`RunStore::recover`]) — sealed runs reappear, only
     /// unsealed buffered records are lost.
-    fn recover(cfg: StreamConfig) -> Result<Arc<StreamTenant>, StreamError> {
+    fn recover(cfg: StreamConfig, tenant: &str) -> Result<Arc<StreamTenant>, StreamError> {
         let threads = cfg.threads.max(1);
         let store = Arc::new(RunStore::recover(cfg)?);
-        Ok(StreamTenant::from_store(store, threads))
+        Ok(StreamTenant::from_store(store, threads, tenant))
     }
 
-    fn from_store(store: Arc<RunStore>, threads: usize) -> Arc<StreamTenant> {
+    fn from_store(store: Arc<RunStore>, threads: usize, tenant: &str) -> Arc<StreamTenant> {
         let clock = Arc::new(SeqClock::new());
+        let registry = Registry::global();
         Arc::new(StreamTenant {
             implicit: Mutex::new(ShardWriter::new(Arc::clone(&store), Arc::clone(&clock))),
             clock,
@@ -374,10 +404,13 @@ impl StreamTenant {
             compact_pool: WorkerPool::with_class(1, JobClass::Background),
             compact_scheduled: Arc::new(AtomicBool::new(false)),
             threads,
+            ingest_hist: registry.hist(&format!("stream.{tenant}.ingest_latency")),
+            scan_hist: registry.hist(&format!("stream.{tenant}.scan_latency")),
         })
     }
 
     fn ingest_block(&self, block: &KeyedBlock) -> Result<usize, StreamError> {
+        let t0 = Instant::now();
         let mut w = self.implicit.lock().unwrap();
         let mut sealed = 0usize;
         for (k, v) in block.keys.iter().zip(&block.vals) {
@@ -386,6 +419,7 @@ impl StreamTenant {
             }
         }
         drop(w);
+        self.ingest_hist.record_duration(t0.elapsed());
         if sealed > 0 {
             self.maybe_schedule_compaction();
         }
@@ -413,11 +447,14 @@ impl StreamTenant {
     }
 
     fn scan_block(&self) -> Result<KeyedBlock, String> {
+        let t0 = Instant::now();
         let records = stream::scan(&self.store)?;
-        Ok(KeyedBlock {
+        let out = KeyedBlock {
             keys: records.iter().map(|r| f32_unordered(r.key)).collect(),
             vals: records.iter().map(|r| unpack_val(r.tag)).collect(),
-        })
+        };
+        self.scan_hist.record_duration(t0.elapsed());
+        Ok(out)
     }
 
     /// Schedule one background compaction drain if the backlog asks
@@ -588,7 +625,9 @@ impl IngestWriter {
     /// scan-visible. Dropping a writer with pending records loses
     /// them — flush first.
     pub fn flush(&mut self) -> Result<Option<u64>> {
+        let t0 = Instant::now();
         let sealed = self.inner.flush()?;
+        self.tenant.ingest_hist.record_duration(t0.elapsed());
         if sealed.is_some() {
             self.tenant.maybe_schedule_compaction();
         }
@@ -621,13 +660,33 @@ impl MergeService {
             Engine::Rust => None,
             Engine::Hybrid => Some(Arc::new(XlaRuntime::load_dir(&XlaRuntime::default_dir())?)),
         };
+        if config.trace {
+            trace::set_enabled(true);
+        }
+        trace::enable_from_env();
+        let stats = Arc::new(ServiceStats::default());
+        let _ = stats
+            .latency
+            .set(Registry::global().hist(&format!("svc.{}.job_latency", config.tenant)));
         Ok(MergeService {
             pool: WorkerPool::with_class(config.threads.max(1), config.class),
             config,
-            stats: Arc::new(ServiceStats::default()),
+            stats,
             runtime,
             stream: OnceLock::new(),
         })
+    }
+
+    /// Exact-bucket snapshot of this service's per-job latency
+    /// histogram (`svc.<tenant>.job_latency`) — the sensor ROADMAP
+    /// item 1's PID controller reads: `p99()` over the tenant's own
+    /// jobs, not a sampled vector.
+    pub fn latency_snapshot(&self) -> HistSnapshot {
+        self.stats
+            .latency
+            .get()
+            .map(|h| h.snapshot())
+            .unwrap_or_default()
     }
 
     pub fn runtime(&self) -> Option<&XlaRuntime> {
@@ -1024,7 +1083,7 @@ impl MergeService {
     /// a service can serve several streams at once. Clone the handle
     /// freely; take one [`StreamHandle::writer`] per writer thread.
     pub fn open_stream(&self, cfg: StreamConfig) -> Result<StreamHandle> {
-        Ok(StreamHandle { tenant: StreamTenant::new(cfg)? })
+        Ok(StreamHandle { tenant: StreamTenant::new(cfg, &self.config.tenant)? })
     }
 
     /// [`MergeService::open_stream`] over a recovered store: rebuild
@@ -1033,7 +1092,7 @@ impl MergeService {
     /// run files are swept, and every sealed run becomes scan-visible
     /// again behind a fresh handle.
     pub fn open_stream_recovered(&self, cfg: StreamConfig) -> Result<StreamHandle> {
-        Ok(StreamHandle { tenant: StreamTenant::recover(cfg)? })
+        Ok(StreamHandle { tenant: StreamTenant::recover(cfg, &self.config.tenant)? })
     }
 
     /// The service's implicit default stream as a [`StreamHandle`] —
@@ -1051,7 +1110,7 @@ impl MergeService {
     #[deprecated(note = "use `open_stream`, which returns a StreamHandle instead of \
                          binding the service's single implicit stream")]
     pub fn init_stream(&self, cfg: StreamConfig) -> Result<()> {
-        let tenant = StreamTenant::new(cfg)?;
+        let tenant = StreamTenant::new(cfg, &self.config.tenant)?;
         self.stream
             .set(tenant)
             .map_err(|_| anyhow!("stream already initialized for this service"))
@@ -1065,7 +1124,7 @@ impl MergeService {
     #[deprecated(note = "use `open_stream_recovered`, which returns a StreamHandle \
                          instead of binding the service's single implicit stream")]
     pub fn recover_stream(&self, cfg: StreamConfig) -> Result<()> {
-        let tenant = StreamTenant::recover(cfg)?;
+        let tenant = StreamTenant::recover(cfg, &self.config.tenant)?;
         self.stream
             .set(tenant)
             .map_err(|_| anyhow!("stream already initialized for this service"))
@@ -1073,11 +1132,14 @@ impl MergeService {
 
     fn stream_tenant(&self) -> &Arc<StreamTenant> {
         self.stream.get_or_init(|| {
-            StreamTenant::new(StreamConfig {
-                threads: self.config.threads.max(1),
-                strategy: self.config.strategy,
-                ..StreamConfig::default()
-            })
+            StreamTenant::new(
+                StreamConfig {
+                    threads: self.config.threads.max(1),
+                    strategy: self.config.strategy,
+                    ..StreamConfig::default()
+                },
+                &self.config.tenant,
+            )
             .expect("in-memory stream tenant construction cannot fail")
         })
     }

@@ -53,9 +53,11 @@
 //! the caller.
 
 use crate::exec::JobClass;
+use crate::obs::{trace, Hist, Registry, SpanKind};
 use std::collections::VecDeque;
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// The boxed-job shape handed to the executor.
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -66,37 +68,53 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// the executor's lock-free hot paths.
 struct AdmissionState {
     available: usize,
-    pending: VecDeque<(Job, JobClass)>,
+    /// `(job, class, queued_at)` — the timestamp feeds the per-class
+    /// admission-wait histograms when the job is finally dispatched.
+    pending: VecDeque<(Job, JobClass, Instant)>,
 }
 
 struct Admission {
     state: Mutex<AdmissionState>,
+    /// Admission-wait latency per class (`pool.admission_wait.*`),
+    /// indexed by [`JobClass::lane`]: submit → permit granted.
+    /// Immediately admitted jobs record 0, so the histogram's count is
+    /// the pool's total admissions and its upper buckets isolate the
+    /// queued tail.
+    wait: [Arc<Hist>; 2],
 }
 
 impl Admission {
     fn new(permits: usize) -> Admission {
+        let registry = Registry::global();
         Admission {
             state: Mutex::new(AdmissionState {
                 available: permits,
                 pending: VecDeque::new(),
             }),
+            wait: [
+                registry.hist("pool.admission_wait.service"),
+                registry.hist("pool.admission_wait.background"),
+            ],
         }
     }
 
     /// Admit `job` now if a permit is free, else queue it. Dispatch
     /// happens outside the lock.
     fn admit(&self, job: Job, class: JobClass) {
-        let admitted = {
+        let (admitted, depth) = {
             let mut st = self.state.lock().unwrap();
             if st.available > 0 {
                 st.available -= 1;
-                Some((job, class))
+                (Some((job, class)), st.pending.len())
             } else {
-                st.pending.push_back((job, class));
-                None
+                st.pending.push_back((job, class, Instant::now()));
+                (None, st.pending.len())
             }
         };
+        trace::instant(SpanKind::Submit, depth as u64);
         if let Some((job, class)) = admitted {
+            self.wait[class.lane()].record(0);
+            trace::instant(SpanKind::Admit, 0);
             crate::exec::global().submit_boxed(job, class);
         }
     }
@@ -115,7 +133,10 @@ impl Admission {
                 }
             }
         };
-        if let Some((job, class)) = next {
+        if let Some((job, class, queued_at)) = next {
+            let waited = queued_at.elapsed();
+            self.wait[class.lane()].record_duration(waited);
+            trace::instant(SpanKind::Admit, waited.as_nanos() as u64);
             crate::exec::global().submit_boxed(job, class);
         }
     }
@@ -273,9 +294,13 @@ impl WorkerPool {
             // so dispatching this prefix ahead of the queue is FIFO.
             let fits = st.available.min(wrapped.len());
             st.available -= fits;
+            for _ in 0..fits {
+                self.admission.wait[class.lane()].record(0);
+            }
             let overflow = wrapped.split_off(fits);
+            let queued_at = Instant::now();
             for job in overflow {
-                st.pending.push_back((job, class));
+                st.pending.push_back((job, class, queued_at));
             }
             // Dispatch UNDER the lock: once the overflow is queued, a
             // release() on a worker could otherwise pop an overflow

@@ -209,6 +209,10 @@ pub(crate) fn merge_adaptive_scoped<'scope, T: Copy + Ord + Send + Sync>(
             // The spawned half derives its own token (None): it runs
             // on whatever worker steals it, and must poll THAT
             // worker's flag, not ours.
+            crate::obs::trace::instant(
+                crate::obs::SpanKind::AdaptiveSplit,
+                (ar.len() + br.len()) as u64,
+            );
             s.spawn(move || merge_adaptive_scoped(s, ar, br, or_, quantum, None));
             a = al;
             b = bl;

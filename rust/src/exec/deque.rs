@@ -55,7 +55,7 @@
 //! materialized back into a `Box` only by the unique claimant.
 
 use std::ptr;
-use crate::model::sync::{fence, AtomicBool, AtomicIsize, AtomicPtr, Mutex, Ordering};
+use crate::model::sync::{fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU64, Mutex, Ordering};
 
 /// The job type stored in the deque (same shape as `exec::Job`).
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -302,11 +302,33 @@ impl Default for Deque {
 ///   re-checks, so a stale raise costs one timeout tick at worst.
 pub struct StealSignal {
     flags: Box<[AtomicBool]>,
+    /// Raise timestamps (obs clock, nanos), index-aligned with
+    /// `flags`. Best-effort observability only: a re-raise before the
+    /// take overwrites the stamp (latest raise wins), and `Relaxed`
+    /// suffices because the value rides the flag's Release/Acquire
+    /// edge in the common case and a torn window merely mis-sizes one
+    /// histogram sample.
+    raised_at: Box<[AtomicU64]>,
+    /// Take-side latency sink (`exec.steal_take_latency`), injected by
+    /// the executor after construction. `None` (model tests, bare
+    /// signals) keeps raise/take free of histogram traffic.
+    hist: std::sync::OnceLock<std::sync::Arc<crate::obs::Hist>>,
 }
 
 impl StealSignal {
     pub fn new(workers: usize) -> StealSignal {
-        StealSignal { flags: (0..workers.max(1)).map(|_| AtomicBool::new(false)).collect() }
+        StealSignal {
+            flags: (0..workers.max(1)).map(|_| AtomicBool::new(false)).collect(),
+            raised_at: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            hist: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Route raise→take latencies into `h` (at most once; later calls
+    /// are ignored). Called by `Executor::new` with the process
+    /// registry's `exec.steal_take_latency` histogram.
+    pub fn set_latency_hist(&self, h: std::sync::Arc<crate::obs::Hist>) {
+        let _ = self.hist.set(h);
     }
 
     /// Number of per-worker flags (== executor worker count).
@@ -317,15 +339,27 @@ impl StealSignal {
     /// Idle side: ask worker `victim` to split its current work.
     /// Saturating — raising an already-raised flag is a no-op.
     pub fn raise(&self, victim: usize) {
-        self.flags[victim % self.flags.len()].store(true, Ordering::Release);
+        let i = victim % self.flags.len();
+        if self.hist.get().is_some() {
+            self.raised_at[i].store(crate::obs::trace::now_nanos(), Ordering::Relaxed);
+        }
+        self.flags[i].store(true, Ordering::Release);
     }
 
     /// Running side: consume a steal request aimed at `worker`.
     /// Returns `true` at most once per raise (swap is the single
     /// consumption point). The fast path is one `Relaxed` load.
     pub fn take(&self, worker: usize) -> bool {
-        let flag = &self.flags[worker % self.flags.len()];
-        flag.load(Ordering::Relaxed) && flag.swap(false, Ordering::AcqRel)
+        let i = worker % self.flags.len();
+        let flag = &self.flags[i];
+        if flag.load(Ordering::Relaxed) && flag.swap(false, Ordering::AcqRel) {
+            if let Some(h) = self.hist.get() {
+                let raised = self.raised_at[i].load(Ordering::Relaxed);
+                h.record(crate::obs::trace::now_nanos().saturating_sub(raised));
+            }
+            return true;
+        }
+        false
     }
 
     /// Running side, for threads that are not workers (e.g. the scope

@@ -165,6 +165,11 @@ pub struct Drained {
     pub jobs: Vec<Job>,
     pub class: JobClass,
     pub promoted: bool,
+    /// Queueing delay of the batch head (oldest job drained), in
+    /// nanoseconds on the injector's monotone clock — the per-lane
+    /// wait-time sample the observability layer records. 0 when the
+    /// head's enqueue stamp predates the injector (never in practice).
+    pub head_wait_nanos: u64,
 }
 
 /// Process-wide submitter-id allocator; each submitting thread gets a
@@ -194,13 +199,19 @@ fn submitter_id() -> usize {
 struct Node {
     next: AtomicPtr<Node>,
     job: UnsafeCell<Option<Job>>,
+    /// Enqueue time (injector clock, nanos), written before the node
+    /// is published through the `tail` swap / `next` Release store and
+    /// read only by the exclusive drain-claim holder — a plain field
+    /// riding the existing publication ordering.
+    enq_ns: u64,
 }
 
 impl Node {
-    fn alloc(job: Option<Job>) -> *mut Node {
+    fn alloc(job: Option<Job>, enq_ns: u64) -> *mut Node {
         Box::into_raw(Box::new(Node {
             next: AtomicPtr::new(ptr::null_mut()),
             job: UnsafeCell::new(job),
+            enq_ns,
         }))
     }
 }
@@ -228,7 +239,7 @@ unsafe impl Sync for Lane {}
 
 impl Lane {
     fn new() -> Lane {
-        let stub = Node::alloc(None);
+        let stub = Node::alloc(None, 0);
         Lane {
             tail: AtomicPtr::new(stub),
             head: AtomicPtr::new(stub),
@@ -236,9 +247,11 @@ impl Lane {
         }
     }
 
-    /// Lock-free FIFO push from any thread.
-    fn push(&self, job: Job) {
-        let node = Node::alloc(Some(job));
+    /// Lock-free FIFO push from any thread. `enq_ns` is the enqueue
+    /// stamp (injector clock) the drain side reads back as the job's
+    /// queueing delay.
+    fn push(&self, job: Job, enq_ns: u64) {
+        let node = Node::alloc(Some(job), enq_ns);
         // AcqRel: Release publishes our node's initialization to the
         // producer that will link behind it; Acquire makes the previous
         // producer's node allocation visible before we store into it.
@@ -250,12 +263,12 @@ impl Lane {
         self.len.fetch_add(1, Ordering::Release);
     }
 
-    /// Pop the oldest job.
+    /// Pop the oldest job and its enqueue stamp.
     ///
     /// # Safety
     /// Caller must hold the owning shard's `draining` claim (exclusive
     /// consumer); the `Injector::drain` sweep is the only caller.
-    unsafe fn pop(&self) -> Option<Job> {
+    unsafe fn pop(&self) -> Option<(Job, u64)> {
         let head = self.head.load(Ordering::Relaxed);
         // SAFETY: the claim holder is the only thread that frees
         // nodes, so the current head is a live allocation.
@@ -270,12 +283,16 @@ impl Lane {
         // UnsafeCell cannot alias another access.
         let job = unsafe { (*(*next).job.get()).take() };
         debug_assert!(job.is_some(), "non-stub node without a job");
+        // SAFETY: same Acquire as above — `enq_ns` is plain data
+        // written before the node was published, read by the exclusive
+        // claim holder.
+        let enq_ns = unsafe { (*next).enq_ns };
         self.head.store(next, Ordering::Relaxed);
         // SAFETY: the old stub's `next` was observed non-null: its one
         // writer is done and no other thread holds it — safe to free.
         drop(unsafe { Box::from_raw(head) });
         self.len.fetch_sub(1, Ordering::Release);
-        job
+        job.map(|j| (j, enq_ns))
     }
 }
 
@@ -487,7 +504,7 @@ impl Injector {
 
     /// Push one job from any thread (lock-free) into its class' lane.
     pub fn push(&self, job: Job, class: JobClass) {
-        self.home_shard().lanes[class.lane()].push(job);
+        self.home_shard().lanes[class.lane()].push(job, self.now_ns());
         // Arm AFTER the push: if a concurrent drain emptied the lanes
         // and reset the clock between our push and this arm, the job
         // is already visible to its `lane_len` re-arm; arming first
@@ -506,8 +523,11 @@ impl Injector {
     pub fn push_batch(&self, jobs: Vec<Job>, class: JobClass) {
         let pushed = !jobs.is_empty();
         let lane = &self.home_shard().lanes[class.lane()];
+        // One clock read stamps the whole batch — per-job precision is
+        // not worth a vDSO call per element on the bulk path.
+        let enq_ns = self.now_ns();
         for job in jobs {
-            lane.push(job);
+            lane.push(job, enq_ns);
         }
         // Arm after the batch is visible — see `push` for the race
         // direction argument.
@@ -533,7 +553,7 @@ impl Injector {
             [JobClass::Service, JobClass::Background]
         };
         for class in order {
-            let jobs = self.drain_class(start, max, class);
+            let (jobs, head_enq_ns) = self.drain_class(start, max, class);
             if jobs.is_empty() {
                 continue;
             }
@@ -559,7 +579,9 @@ impl Injector {
                 }
             }
             let promoted = promote && class == JobClass::Background;
-            return Some(Drained { jobs, class, promoted });
+            let head_wait_nanos =
+                head_enq_ns.map_or(0, |enq| self.now_ns().saturating_sub(enq));
+            return Some(Drained { jobs, class, promoted, head_wait_nanos });
         }
         None
     }
@@ -570,10 +592,19 @@ impl Injector {
     /// SAME lane into the batch — one wake-up serves the fleet's
     /// dribble at low load. Per-shard FIFO runs concatenate in sweep
     /// order, so order within each shard is preserved.
-    fn drain_class(&self, start: usize, max: usize, class: JobClass) -> Vec<Job> {
+    fn drain_class(
+        &self,
+        start: usize,
+        max: usize,
+        class: JobClass,
+    ) -> (Vec<Job>, Option<u64>) {
         let n = self.shards.len();
         let shallow = (max / 4).max(1);
         let mut out = Vec::new();
+        // Oldest enqueue stamp across the batch — the head-of-batch
+        // wait sample. Stamps from different shards are on the same
+        // injector clock, so min() is meaningful.
+        let mut head_enq_ns: Option<u64> = None;
         for k in 0..n {
             if out.len() >= shallow {
                 break;
@@ -593,13 +624,17 @@ impl Injector {
             while out.len() < max {
                 // SAFETY: we hold the drain claim.
                 match unsafe { shard.lanes[class.lane()].pop() } {
-                    Some(job) => out.push(job),
+                    Some((job, enq_ns)) => {
+                        out.push(job);
+                        head_enq_ns =
+                            Some(head_enq_ns.map_or(enq_ns, |h: u64| h.min(enq_ns)));
+                    }
                     None => break,
                 }
             }
             shard.draining.store(false, Ordering::Release);
         }
-        out
+        (out, head_enq_ns)
     }
 
     /// Published backlog of one class across all shards — lock-free;

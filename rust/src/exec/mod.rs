@@ -147,6 +147,7 @@ mod model_tests;
 pub mod telemetry;
 pub mod tunables;
 
+use crate::obs::{trace, Hist, Registry, SpanKind};
 use deque::{Deque, Steal, StealSignal};
 use injector::{Drained, Injector};
 use std::cell::Cell;
@@ -207,6 +208,15 @@ struct Shared {
     /// them between quanta via [`StealToken`]. See [`deque::StealSignal`]
     /// for the ordering protocol.
     steal_req: StealSignal,
+    /// Raiser-side steal latency (`exec.steal_latency`): raise of a
+    /// steal request → next job obtained by the raising worker. This
+    /// is the service-visible cost of running dry — ROADMAP item 2's
+    /// histogram — and complements the take-side latency recorded by
+    /// [`StealSignal`] itself (`exec.steal_take_latency`).
+    obs_steal_latency: Arc<Hist>,
+    /// Injector queueing delay per lane (`exec.injector_wait.*`),
+    /// indexed by [`JobClass::lane`]: batch-head enqueue → drain.
+    obs_injector_wait: [Arc<Hist>; 2],
 }
 
 impl Shared {
@@ -235,8 +245,10 @@ impl Shared {
         const BATCH: usize = 32;
         let drained = self.injector.drain(id.wrapping_add(*rot), BATCH);
         *rot = rot.wrapping_add(1);
-        let Drained { mut jobs, class, promoted } = drained?;
+        let Drained { mut jobs, class, promoted, head_wait_nanos } = drained?;
         debug_assert!(!jobs.is_empty(), "drain returned an empty batch");
+        self.obs_injector_wait[class.lane()].record(head_wait_nanos);
+        trace::instant(SpanKind::Dequeue, jobs.len() as u64);
         let c = &self.counters[id];
         c.injector_pops.fetch_add(1, Ordering::Relaxed);
         match class {
@@ -338,6 +350,11 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
     // raise aimed at an idle sibling is still consumed by whichever
     // task polls next.
     let mut park_rot = 0usize;
+    // Raiser-side steal-latency clock: armed when this worker raises a
+    // steal request on an idle sweep, settled when the next job
+    // arrives. `Option` keeps the hot path to one branch when no
+    // request is outstanding.
+    let mut raised_at: Option<Instant> = None;
     loop {
         until_roll_check -= 1;
         if until_roll_check == 0 {
@@ -345,6 +362,9 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
             shared.maybe_roll_window();
         }
         if let Some(job) = shared.next_job(id, &mut rot) {
+            if let Some(t) = raised_at.take() {
+                shared.obs_steal_latency.record_duration(t.elapsed());
+            }
             // Count before running so the bump happens-before anything
             // the job publishes (e.g. its result send): a reader that
             // synchronized with the job's output observes its count.
@@ -352,7 +372,9 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
             // Keep the worker alive across panicking jobs; scoped tasks
             // capture their own panics, plain jobs surface them as a
             // dropped result channel.
+            let t0 = trace::span_start();
             let _ = catch_unwind(AssertUnwindSafe(job));
+            trace::span_end(SpanKind::Run, t0, id as u64);
             continue;
         }
         if shared.shutdown.load(Ordering::Acquire) {
@@ -374,6 +396,10 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
             // window.
             park_rot = park_rot.wrapping_add(1);
             shared.steal_req.raise(id.wrapping_add(park_rot));
+            if raised_at.is_none() {
+                raised_at = Some(Instant::now());
+            }
+            trace::instant(SpanKind::StealRaise, id as u64);
             // Timeout is a missed-wakeup backstop only; pushes notify
             // under the same lock, so the common path is event-driven.
             shared.counters[id].parks.fetch_add(1, Ordering::Relaxed);
@@ -395,17 +421,26 @@ impl Executor {
     pub fn new(threads: usize) -> Executor {
         assert!(threads > 0, "executor needs at least one worker");
         let window_ms = env_usize("EXEC_WINDOW_MS").unwrap_or(25).max(1) as u64;
+        trace::enable_from_env();
+        let registry = Registry::global();
+        let steal_req = StealSignal::new(threads);
+        steal_req.set_latency_hist(registry.hist("exec.steal_take_latency"));
         let shared = Arc::new(Shared {
             deques: (0..threads).map(|_| Deque::new()).collect(),
             injector: Injector::new(threads.min(16)),
             counters: (0..threads).map(|_| Counters::default()).collect(),
-            window: WindowRing::new(window_ms * 1_000_000),
+            window: WindowRing::new(window_ms * 1_000_000, threads),
             t0: Instant::now(),
             recalibrates: AtomicBool::new(false),
             sleep: Mutex::new(()),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            steal_req: StealSignal::new(threads),
+            steal_req,
+            obs_steal_latency: registry.hist("exec.steal_latency"),
+            obs_injector_wait: [
+                registry.hist("exec.injector_wait.service"),
+                registry.hist("exec.injector_wait.background"),
+            ],
         });
         let handles = (0..threads)
             .map(|i| {
@@ -908,6 +943,16 @@ fn chunk_groups_class(total: usize, k: usize, class: KeyClass) -> usize {
         misses > 4 * steals + 64
     };
     if contended {
+        // One hot victim can account for fleet-wide misses while the
+        // rest of the fleet starves: when the per-worker windows show
+        // one worker executing far above the mean, a *moderately*
+        // finer carve (factor 2, not the full cap) spreads its load
+        // without amplifying the CAS contention that tripped the gate.
+        const HOT_VICTIM_SKEW: f64 = 2.0;
+        if w.has_signal() && w.load_skew() > HOT_VICTIM_SKEW {
+            let max_fine = total / t.fine_chunk_min;
+            return k.max(max_fine.min(k.saturating_mul(2)));
+        }
         return k;
     }
     let max_fine = total / t.fine_chunk_min;

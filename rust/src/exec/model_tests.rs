@@ -275,7 +275,7 @@ fn model_telemetry_single_roll_winner() {
     let schedules = check_with(
         Config { name: "telemetry-roll", ..Config::default() },
         || {
-            let shared = Arc::new((WindowRing::new(1), vec![Counters::default()]));
+            let shared = Arc::new((WindowRing::new(1, 1), vec![Counters::default()]));
             shared.1[0].executed.store(7, Ordering::Relaxed);
 
             let s1 = Arc::clone(&shared);

@@ -173,12 +173,25 @@ pub const WINDOW_EPOCHS: usize = 8;
 /// service_jobs, bg_jobs, bg_promotions.
 const NFIELDS: usize = 8;
 
-/// One epoch's fleet-wide counter deltas. All-atomic so the roll
-/// winner can write and readers can fold without locks.
-#[derive(Default)]
+/// One epoch's fleet-wide counter deltas, plus per-worker `executed`
+/// deltas (so readers can spot one hot deque the fleet average
+/// hides). All-atomic so the roll winner can write and readers can
+/// fold without locks.
 struct EpochSlot {
     fields: [AtomicU64; NFIELDS],
+    /// Per-worker `executed` delta for this epoch.
+    per_worker: Box<[AtomicU64]>,
     span_nanos: AtomicU64,
+}
+
+impl EpochSlot {
+    fn new(workers: usize) -> EpochSlot {
+        EpochSlot {
+            fields: Default::default(),
+            per_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            span_nanos: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Fixed-size ring of per-epoch snapshots. See the module docs for
@@ -195,19 +208,23 @@ pub(super) struct WindowRing {
     rolling: AtomicBool,
     /// Fleet totals at the last roll (written by roll winners only).
     last: [AtomicU64; NFIELDS],
+    /// Per-worker `executed` totals at the last roll.
+    last_worker: Box<[AtomicU64]>,
     slots: Vec<EpochSlot>,
     cursor: AtomicUsize,
     rolls: AtomicU64,
 }
 
 impl WindowRing {
-    pub(super) fn new(interval_nanos: u64) -> WindowRing {
+    pub(super) fn new(interval_nanos: u64, workers: usize) -> WindowRing {
+        let workers = workers.max(1);
         WindowRing {
             interval: interval_nanos.max(1),
             epoch_start: AtomicU64::new(0),
             rolling: AtomicBool::new(false),
             last: Default::default(),
-            slots: (0..WINDOW_EPOCHS).map(|_| EpochSlot::default()).collect(),
+            last_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            slots: (0..WINDOW_EPOCHS).map(|_| EpochSlot::new(workers)).collect(),
             cursor: AtomicUsize::new(0),
             rolls: AtomicU64::new(0),
         }
@@ -258,6 +275,17 @@ impl WindowRing {
             let prev = self.last[i].swap(total, Ordering::Relaxed);
             slot.fields[i].store(total.saturating_sub(prev), Ordering::Relaxed);
         }
+        // Per-worker `executed` deltas (hot-victim signal). The ring
+        // is sized to the fleet; a shorter `counters` slice (tests)
+        // just leaves the tail at 0.
+        for (w, lw) in self.last_worker.iter().enumerate() {
+            let total = match counters.get(w) {
+                Some(c) => c.executed.load(Ordering::Relaxed),
+                None => continue,
+            };
+            let prev = lw.swap(total, Ordering::Relaxed);
+            slot.per_worker[w].store(total.saturating_sub(prev), Ordering::Relaxed);
+        }
         slot.span_nanos.store(now - start, Ordering::Relaxed);
         self.cursor.store(idx + 1, Ordering::Relaxed);
         self.rolls.fetch_add(1, Ordering::Relaxed);
@@ -268,6 +296,7 @@ impl WindowRing {
     /// Fold the live slots into per-second rates.
     pub(super) fn rates(&self) -> WindowRates {
         let mut sums = [0u64; NFIELDS];
+        let mut worker_sums = vec![0u64; self.last_worker.len()];
         let mut span = 0u64;
         let mut epochs = 0usize;
         for slot in &self.slots {
@@ -278,6 +307,9 @@ impl WindowRing {
             span += s;
             epochs += 1;
             for (acc, field) in sums.iter_mut().zip(&slot.fields) {
+                *acc += field.load(Ordering::Relaxed);
+            }
+            for (acc, field) in worker_sums.iter_mut().zip(slot.per_worker.iter()) {
                 *acc += field.load(Ordering::Relaxed);
             }
         }
@@ -294,6 +326,7 @@ impl WindowRing {
             service_per_sec: per_sec(sums[5]),
             background_per_sec: per_sec(sums[6]),
             bg_promotions_per_sec: per_sec(sums[7]),
+            per_worker_per_sec: worker_sums.into_iter().map(per_sec).collect(),
         }
     }
 
@@ -306,7 +339,7 @@ impl WindowRing {
 /// [`WINDOW_EPOCHS`] epochs actually recorded). `epochs == 0` means
 /// the window has never rolled — callers should fall back to the
 /// lifetime counters.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct WindowRates {
     /// Real time covered by the recorded epochs, in seconds.
     pub span_secs: f64,
@@ -325,6 +358,10 @@ pub struct WindowRates {
     pub background_per_sec: f64,
     /// Anti-starvation background promotions per second.
     pub bg_promotions_per_sec: f64,
+    /// Per-worker `executed` jobs per second over the same window —
+    /// the view that exposes one hot victim deque the fleet-average
+    /// `executed_per_sec` hides.
+    pub per_worker_per_sec: Vec<f64>,
 }
 
 impl WindowRates {
@@ -351,6 +388,40 @@ impl WindowRates {
             0.0
         }
     }
+
+    /// Per-worker windowed `executed` rates (index = worker id).
+    pub fn per_worker(&self) -> &[f64] {
+        &self.per_worker_per_sec
+    }
+
+    /// The busiest worker in the window: `(worker id, jobs/sec)`.
+    /// `None` when the window has no signal or every worker was idle.
+    pub fn most_loaded(&self) -> Option<(usize, f64)> {
+        let (mut best, mut rate) = (None, 0.0f64);
+        for (w, &r) in self.per_worker_per_sec.iter().enumerate() {
+            if r > rate {
+                best = Some(w);
+                rate = r;
+            }
+        }
+        best.map(|w| (w, rate))
+    }
+
+    /// How skewed the fleet is: busiest worker's rate over the fleet
+    /// mean (`1.0` = perfectly balanced, `0.0` = no signal). The
+    /// chunking heuristics treat a high ratio like steal pressure —
+    /// one overloaded deque needs finer chunks to shed work.
+    pub fn load_skew(&self) -> f64 {
+        let n = self.per_worker_per_sec.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = self.per_worker_per_sec.iter().sum::<f64>() / n as f64;
+        match self.most_loaded() {
+            Some((_, hot)) if mean > 0.0 => hot / mean,
+            _ => 0.0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -367,7 +438,7 @@ mod tests {
 
     #[test]
     fn roll_records_deltas_not_totals() {
-        let ring = WindowRing::new(1_000);
+        let ring = WindowRing::new(1_000, 1);
         let counters = one_counter(100, 10, 2);
         assert!(ring.maybe_roll(2_000, &counters, false));
         counters[0].executed.store(180, Ordering::Relaxed);
@@ -385,7 +456,7 @@ mod tests {
 
     #[test]
     fn roll_respects_interval_unless_forced() {
-        let ring = WindowRing::new(1_000_000);
+        let ring = WindowRing::new(1_000_000, 1);
         let counters = one_counter(5, 0, 0);
         assert!(!ring.maybe_roll(10, &counters, false), "interval not elapsed");
         assert!(ring.maybe_roll(10, &counters, true), "force ignores interval");
@@ -397,7 +468,7 @@ mod tests {
 
     #[test]
     fn window_evicts_oldest_epochs() {
-        let ring = WindowRing::new(1);
+        let ring = WindowRing::new(1, 1);
         let counters = one_counter(0, 0, 0);
         // 3 x WINDOW_EPOCHS rolls: the ring must only ever report
         // WINDOW_EPOCHS epochs.
@@ -417,7 +488,7 @@ mod tests {
     /// deltas, and `service_share` folds them into the [0,1] mix.
     #[test]
     fn roll_records_lane_deltas_and_share() {
-        let ring = WindowRing::new(1_000);
+        let ring = WindowRing::new(1_000, 1);
         let counters = one_counter(10, 0, 0);
         counters[0].service_jobs.store(30, Ordering::Relaxed);
         counters[0].bg_jobs.store(10, Ordering::Relaxed);

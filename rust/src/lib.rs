@@ -9,8 +9,9 @@
 //!   drivers on a persistent work-stealing executor ([`exec`]), PRAM
 //!   and BSP model simulators ([`pram`], [`bsp`]), classical baselines
 //!   ([`baseline`]), a coordinator service ([`coordinator`]), a
-//!   streaming run-merge store with background compaction ([`stream`])
-//!   and the PJRT runtime bridge ([`runtime`]).
+//!   streaming run-merge store with background compaction ([`stream`]),
+//!   an observability layer — histograms, span tracing, metrics
+//!   registry ([`obs`]) — and the PJRT runtime bridge ([`runtime`]).
 //! - **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels
 //!   AOT-lowered to `artifacts/*.hlo.txt`, loaded and executed from
 //!   rust via the `xla` crate. Python never runs on the request path.
@@ -39,6 +40,7 @@ pub mod exec;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pram;
 pub mod runtime;
 pub mod stream;

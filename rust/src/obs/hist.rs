@@ -1,0 +1,421 @@
+//! Log2-bucketed latency histograms with lock-free recording.
+//!
+//! A [`Hist`] is a small fixed table: 64 buckets where bucket `i`
+//! counts samples whose nanosecond value needs `i` bits (bucket 0 is
+//! exactly `{0}`, bucket `i` covers `[2^(i-1), 2^i - 1]`, bucket 63
+//! absorbs everything `>= 2^62`). That gives ~2x value resolution over
+//! the full `u64` range in 64 words — enough to separate a 10µs
+//! dequeue from a 10ms fsync, which is all the control plane needs.
+//!
+//! Recording is sharded by thread (the shared [`super::thread_slot`]
+//! allocator) so concurrent recorders touch disjoint cache lines, and
+//! every update is a `Relaxed` atomic RMW: two `fetch_add`s and a
+//! `fetch_max`, no locks, no allocation — safe from the hottest paths.
+//!
+//! Snapshots fold all shards into a plain [`HistSnapshot`]. The sample
+//! count is *derived* from the bucket sums rather than stored, so a
+//! snapshot is always self-consistent: `count()` equals the number of
+//! bucket increments it actually observed, even when taken mid-record.
+//! `sum`/`max` are updated by separate RMWs and may lag the buckets by
+//! an in-flight sample — fine for telemetry, and the model test below
+//! pins down exactly this contract.
+//!
+//! Percentiles are *exact-bucket*: `percentile(q)` returns the upper
+//! bound of the bucket holding the q-th sample, clamped to the
+//! observed maximum. No interpolation, no sampling error from bounded
+//! reservoir vectors — long runs cannot truncate the tail.
+
+use crate::model::sync::{AtomicU64, Ordering};
+use std::fmt;
+use std::time::Duration;
+
+/// Number of log2 buckets (one per bit of a nanosecond `u64`).
+pub const BUCKETS: usize = 64;
+
+/// Default shard count (rounded up to a power of two).
+const DEFAULT_SHARDS: usize = 16;
+
+/// Bucket index for a nanosecond sample: 0 for 0, otherwise the
+/// sample's bit length, saturating into the last bucket.
+#[inline]
+pub fn bucket_index(nanos: u64) -> usize {
+    if nanos == 0 {
+        0
+    } else {
+        (64 - nanos.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (0, 1, 2, 4, 8, ...).
+#[inline]
+pub fn bucket_lower(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1 => 1,
+        _ => 1u64 << (i - 1),
+    }
+}
+
+/// Inclusive upper bound of bucket `i`; the last bucket is open-ended.
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// One recorder shard, padded to its own cache line pair so two
+/// recording threads never contend on the same counters.
+#[repr(align(128))]
+struct Shard {
+    buckets: [AtomicU64; BUCKETS],
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A sharded, lock-free log2 histogram of nanosecond samples.
+pub struct Hist {
+    /// Power-of-two shard table; a recorder picks `thread_slot() & mask`.
+    shards: Box<[Shard]>,
+    mask: usize,
+}
+
+impl Hist {
+    /// Histogram with the default shard count.
+    pub fn new() -> Self {
+        Self::with_shards(DEFAULT_SHARDS)
+    }
+
+    /// Histogram with `shards` recorder shards (rounded up to a power
+    /// of two, minimum 1). Tests use 1 shard for determinism.
+    pub fn with_shards(shards: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Hist {
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            mask: n - 1,
+        }
+    }
+
+    /// Number of recorder shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Record one nanosecond sample on the calling thread's shard.
+    /// Lock-free: two `Relaxed` `fetch_add`s and a `Relaxed`
+    /// `fetch_max`.
+    #[inline]
+    pub fn record(&self, nanos: u64) {
+        self.record_in(super::thread_slot(), nanos);
+    }
+
+    /// Record into an explicit shard (wrapped into range). Used by
+    /// tests that need deterministic shard placement; `record` routes
+    /// here with the thread slot.
+    #[inline]
+    pub fn record_in(&self, shard: usize, nanos: u64) {
+        let s = &self.shards[shard & self.mask];
+        s.buckets[bucket_index(nanos)].fetch_add(1, Ordering::Relaxed);
+        s.sum.fetch_add(nanos, Ordering::Relaxed);
+        s.max.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    /// Record an elapsed [`Duration`] (saturating to `u64` nanos).
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Fold every shard into one plain snapshot. `Relaxed` loads: the
+    /// result is a consistent-by-construction view (see module docs),
+    /// not a linearizable cut.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut snap = HistSnapshot::default();
+        for s in self.shards.iter() {
+            for (i, b) in s.buckets.iter().enumerate() {
+                snap.buckets[i] = snap.buckets[i].saturating_add(b.load(Ordering::Relaxed));
+            }
+            snap.sum_nanos = snap.sum_nanos.saturating_add(s.sum.load(Ordering::Relaxed));
+            snap.max_nanos = snap.max_nanos.max(s.max.load(Ordering::Relaxed));
+        }
+        snap
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Hist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let snap = self.snapshot();
+        f.debug_struct("Hist")
+            .field("shards", &self.shards.len())
+            .field("count", &snap.count())
+            .field("max_nanos", &snap.max_nanos)
+            .finish()
+    }
+}
+
+/// A folded, plain-data view of a [`Hist`] at one point in time.
+/// Mergeable (shard snapshots from different histograms or windows
+/// combine with [`merge`](HistSnapshot::merge)) and subtractable
+/// ([`since`](HistSnapshot::since) yields the window between two
+/// snapshots of the same histogram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum_nanos: u64,
+    pub max_nanos: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], sum_nanos: 0, max_nanos: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Total samples — derived from the buckets, never stored.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Fold another snapshot into this one (bucket-wise add).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for i in 0..BUCKETS {
+            self.buckets[i] = self.buckets[i].saturating_add(other.buckets[i]);
+        }
+        self.sum_nanos = self.sum_nanos.saturating_add(other.sum_nanos);
+        self.max_nanos = self.max_nanos.max(other.max_nanos);
+    }
+
+    /// The window between `prev` (an earlier snapshot of the same
+    /// histogram) and `self`: bucket-wise difference. `max_nanos`
+    /// stays the all-time maximum — the histogram does not keep
+    /// per-window maxima, and percentiles clamp against it, which for
+    /// a window can only round a percentile *up* to the global max.
+    pub fn since(&self, prev: &HistSnapshot) -> HistSnapshot {
+        let mut out = HistSnapshot::default();
+        for i in 0..BUCKETS {
+            out.buckets[i] = self.buckets[i].saturating_sub(prev.buckets[i]);
+        }
+        out.sum_nanos = self.sum_nanos.saturating_sub(prev.sum_nanos);
+        out.max_nanos = self.max_nanos;
+        out
+    }
+
+    /// Exact-bucket percentile in nanoseconds: the upper bound of the
+    /// bucket containing the `q`-th percentile sample, clamped to the
+    /// observed maximum. `q` in `[0, 100]`; 0 samples → 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let target = ((q / 100.0) * count as f64).ceil().max(1.0) as u64;
+        let target = target.min(count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(b);
+            if seen >= target {
+                return bucket_upper(i).min(self.max_nanos);
+            }
+        }
+        self.max_nanos
+    }
+
+    /// Median (exact-bucket, see [`percentile`](Self::percentile)).
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th percentile (exact-bucket).
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Arithmetic mean in nanoseconds (0 when empty).
+    pub fn mean_nanos(&self) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            0
+        } else {
+            self.sum_nanos / count
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Every bucket's bounds round-trip through the index.
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i, "lower bound of bucket {i}");
+        }
+        for i in 0..BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper(i)), i, "upper bound of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn record_snapshot_roundtrip() {
+        let h = Hist::with_shards(4);
+        for &v in &[0u64, 1, 100, 1_000, 1_000_000, 1_000_000_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.sum_nanos, 1 + 100 + 1_000 + 1_000_000 + 1_000_000_000);
+        assert_eq!(s.max_nanos, 1_000_000_000);
+        assert!(!s.is_empty());
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[bucket_index(100)], 1);
+    }
+
+    #[test]
+    fn percentiles_are_exact_bucket_and_max_clamped() {
+        let h = Hist::with_shards(1);
+        // 99 fast samples in bucket_index(100)=7 ([64,127]), one slow.
+        for _ in 0..99 {
+            h.record_in(0, 100);
+        }
+        h.record_in(0, 5_000);
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.p50(), 127); // upper bound of the [64,127] bucket
+        assert_eq!(s.p99(), 127); // 99th sample still in the fast bucket
+        assert_eq!(s.percentile(100.0), 5_000); // clamped to observed max
+        assert_eq!(s.max_nanos, 5_000);
+        // Single-sample histogram: every percentile is the max.
+        let h1 = Hist::with_shards(1);
+        h1.record_in(0, 42);
+        let s1 = h1.snapshot();
+        assert_eq!(s1.p50(), 42);
+        assert_eq!(s1.p99(), 42);
+        assert_eq!(s1.mean_nanos(), 42);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Hist::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.mean_nanos(), 0);
+    }
+
+    #[test]
+    fn merge_folds_buckets() {
+        let a = Hist::with_shards(1);
+        let b = Hist::with_shards(1);
+        a.record_in(0, 10);
+        b.record_in(0, 10);
+        b.record_in(0, 1 << 20);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.sum_nanos, 20 + (1 << 20));
+        assert_eq!(m.max_nanos, 1 << 20);
+        assert_eq!(m.buckets[bucket_index(10)], 2);
+    }
+
+    #[test]
+    fn since_yields_the_window() {
+        let h = Hist::with_shards(1);
+        h.record_in(0, 100);
+        let before = h.snapshot();
+        h.record_in(0, 1_000);
+        h.record_in(0, 1_000);
+        let after = h.snapshot();
+        let win = after.since(&before);
+        assert_eq!(win.count(), 2);
+        assert_eq!(win.sum_nanos, 2_000);
+        assert_eq!(win.buckets[bucket_index(1_000)], 2);
+        assert_eq!(win.buckets[bucket_index(100)], 0);
+        // p99 of the window reflects only the window's samples.
+        assert_eq!(win.p99(), 1_023.min(win.max_nanos));
+    }
+
+    #[test]
+    fn record_duration_saturates() {
+        let h = Hist::with_shards(1);
+        h.record_duration(Duration::from_micros(3));
+        let s = h.snapshot();
+        assert_eq!(s.sum_nanos, 3_000);
+        assert_eq!(s.count(), 1);
+    }
+}
+
+#[cfg(all(test, feature = "model"))]
+mod model_tests {
+    use super::*;
+    use crate::model::thread;
+    use crate::model::{check_with, Config};
+    use std::sync::Arc;
+
+    /// Record racing snapshot: a mid-race snapshot must be
+    /// self-consistent (derived count never exceeds the records that
+    /// actually started), and the post-join snapshot must be exact —
+    /// no lost updates under any interleaving.
+    #[test]
+    fn model_hist_record_vs_snapshot() {
+        let schedules = check_with(
+            Config { name: "hist_record_vs_snapshot", ..Config::default() },
+            || {
+                let h = Arc::new(Hist::with_shards(2));
+                let w = {
+                    let h = Arc::clone(&h);
+                    thread::spawn(move || {
+                        h.record_in(0, 100);
+                        h.record_in(1, 200);
+                    })
+                };
+                let mid = h.snapshot();
+                assert!(mid.count() <= 2, "phantom samples in mid-race snapshot");
+                assert!(mid.max_nanos <= 200);
+                assert!(mid.sum_nanos <= 300);
+                w.join().unwrap();
+                let fin = h.snapshot();
+                assert_eq!(fin.count(), 2);
+                assert_eq!(fin.sum_nanos, 300);
+                assert_eq!(fin.max_nanos, 200);
+                assert_eq!(fin.p99(), 200);
+            },
+        );
+        assert!(schedules > 1, "expected multiple interleavings, got {schedules}");
+    }
+}

@@ -1,0 +1,54 @@
+//! Observability: latency histograms, span tracing, and the metrics
+//! registry.
+//!
+//! Three cooperating pieces, all built on the [`crate::model::sync`]
+//! atomics shim so the model checker can exercise their protocols:
+//!
+//! - [`hist`] — fixed-size log2-bucketed latency histograms. Recording
+//!   is a couple of `Relaxed` `fetch_add`s on a per-thread shard (no
+//!   locks, no allocation); snapshots fold the shards and derive exact
+//!   bucket-resolution percentiles.
+//! - [`trace`] — per-thread bounded event rings holding span
+//!   begin/end pairs and instants, exportable as chrome://tracing
+//!   JSON. Compiled down to a single branch on a process-wide flag
+//!   when disabled (`Config.trace` / `EXEC_TRACE=1`).
+//! - [`registry`] — the process-wide name → histogram/counter map
+//!   serialized as one machine-readable JSON snapshot (`repro
+//!   metrics`, `--metrics-json`).
+//!
+//! Layering: `obs` sits below `exec`/`coordinator`/`stream` (it
+//! depends only on `model::sync` and `util`), so every layer may
+//! record into it without cycles.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot};
+pub use registry::Registry;
+pub use trace::SpanKind;
+
+use crate::model::sync::{AtomicUsize, Ordering};
+use std::cell::Cell;
+
+/// Process-wide recorder-slot allocator; each recording thread gets a
+/// stable small integer on first use, which picks its histogram /
+/// trace-ring shard (same trick as the injector's submitter id).
+static OBS_SLOT_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static OBS_SLOT: Cell<usize> = Cell::new(usize::MAX);
+}
+
+/// Stable per-thread observability slot (assigned on first record).
+pub(crate) fn thread_slot() -> usize {
+    OBS_SLOT.with(|c| {
+        let v = c.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = OBS_SLOT_SEQ.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}

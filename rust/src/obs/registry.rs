@@ -1,0 +1,224 @@
+//! The process-wide metrics registry: names → histograms/counters,
+//! serialized as one machine-readable JSON snapshot.
+//!
+//! Registration is get-or-create under a `Mutex` (cold path — a
+//! handle is fetched once at wiring time and then recorded into
+//! lock-free); snapshotting locks only the name maps, never the
+//! recording paths.
+//!
+//! ## Naming scheme
+//!
+//! Dotted lowercase paths, layer first:
+//!
+//! - `exec.steal_latency` — idle worker's raise → next job obtained
+//! - `exec.steal_take_latency` — steal-signal raise → victim take
+//! - `exec.injector_wait.{service,background}` — head-of-batch queue
+//!   wait per injector lane
+//! - `pool.admission_wait.{service,background}` — submit → dispatch
+//!   wait in the admission controller
+//! - `svc.<tenant>.job_latency` — per-tenant job submit-to-complete
+//! - `stream.<tenant>.{ingest,scan}_latency` — per-tenant stream ops
+//!
+//! ## Snapshot schema (version 1)
+//!
+//! ```json
+//! {"version": 1,
+//!  "histograms": {"<name>": {"count": N, "sum_nanos": N, "max_nanos": N,
+//!                            "p50_nanos": N, "p99_nanos": N, "mean_nanos": N,
+//!                            "buckets": [[lower_bound_nanos, count], ...]}},
+//!  "counters": {"<name>": N}}
+//! ```
+//!
+//! `buckets` lists only non-empty buckets as `[inclusive lower bound,
+//! count]` pairs, so `count == sum of bucket counts` is a jq-level
+//! invariant CI checks.
+
+use super::hist::{bucket_lower, Hist, HistSnapshot};
+use crate::model::sync::{AtomicU64, Mutex, Ordering};
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+/// Name → instrument maps. See module docs for the naming scheme.
+pub struct Registry {
+    hists: Mutex<BTreeMap<String, Arc<Hist>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl Registry {
+    /// An empty registry (tests; production code uses [`global`](Self::global)).
+    pub fn new() -> Self {
+        Registry {
+            hists: Mutex::new(BTreeMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The process-wide registry every runtime component registers in.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// Get or create the named histogram. The returned handle is the
+    /// thing to keep: recording through it never touches the registry
+    /// lock again.
+    pub fn hist(&self, name: &str) -> Arc<Hist> {
+        let mut map = self.hists.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(Hist::new())))
+    }
+
+    /// Get or create the named monotone counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_insert_with(|| Arc::new(AtomicU64::new(0))))
+    }
+
+    /// Registered histogram names, sorted.
+    pub fn hist_names(&self) -> Vec<String> {
+        self.hists.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot one histogram by name, if registered.
+    pub fn hist_snapshot(&self, name: &str) -> Option<HistSnapshot> {
+        self.hists.lock().unwrap().get(name).map(|h| h.snapshot())
+    }
+
+    /// Serialize every registered instrument as one JSON object (the
+    /// version-1 schema in the module docs). Each histogram is
+    /// snapshotted once, so its own fields are mutually consistent.
+    pub fn snapshot_json(&self) -> String {
+        let hists: Vec<(String, HistSnapshot)> = {
+            let map = self.hists.lock().unwrap();
+            map.iter().map(|(k, v)| (k.clone(), v.snapshot())).collect()
+        };
+        let counters: Vec<(String, u64)> = {
+            let map = self.counters.lock().unwrap();
+            map.iter().map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed))).collect()
+        };
+        let mut out = String::with_capacity(256 + hists.len() * 256);
+        out.push_str("{\"version\":1,\"histograms\":{");
+        for (i, (name, snap)) in hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{}\":{{\"count\":{},\"sum_nanos\":{},\"max_nanos\":{},\
+                 \"p50_nanos\":{},\"p99_nanos\":{},\"mean_nanos\":{},\"buckets\":[",
+                escape(name),
+                snap.count(),
+                snap.sum_nanos,
+                snap.max_nanos,
+                snap.p50(),
+                snap.p99(),
+                snap.mean_nanos()
+            ));
+            let mut first = true;
+            for (b, &c) in snap.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str(&format!("[{},{}]", bucket_lower(b), c));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("},\"counters\":{");
+        for (i, (name, v)) in counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", escape(name), v));
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Minimal JSON string escape. Metric names are dotted lowercase by
+/// convention, but tenants are user input — escape defensively.
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn get_or_create_returns_same_instrument() {
+        let r = Registry::new();
+        let a = r.hist("svc.t.job_latency");
+        let b = r.hist("svc.t.job_latency");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.record(1_000);
+        assert_eq!(r.hist_snapshot("svc.t.job_latency").unwrap().count(), 1);
+        assert!(r.hist_snapshot("missing").is_none());
+        let c = r.counter("exec.dropped");
+        c.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(r.counter("exec.dropped").load(Ordering::Relaxed), 3);
+        assert_eq!(r.hist_names(), vec!["svc.t.job_latency".to_string()]);
+    }
+
+    #[test]
+    fn snapshot_json_matches_schema() {
+        let r = Registry::new();
+        let h = r.hist("exec.steal_latency");
+        h.record(100);
+        h.record(100);
+        h.record(5_000);
+        r.counter("trace.dropped").fetch_add(2, Ordering::Relaxed);
+        let doc = Json::parse(&r.snapshot_json()).expect("registry emits valid JSON");
+        assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(1));
+        let hist = doc
+            .get("histograms")
+            .and_then(|h| h.get("exec.steal_latency"))
+            .expect("registered histogram present");
+        assert_eq!(hist.get("count").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(hist.get("sum_nanos").and_then(|v| v.as_usize()), Some(5_200));
+        assert_eq!(hist.get("max_nanos").and_then(|v| v.as_usize()), Some(5_000));
+        // count == sum of bucket counts (the jq-level CI invariant).
+        let buckets = hist.get("buckets").and_then(|b| b.as_arr()).unwrap();
+        let total: usize = buckets
+            .iter()
+            .map(|pair| pair.as_arr().unwrap()[1].as_usize().unwrap())
+            .sum();
+        assert_eq!(total, 3);
+        // p50 lives in the [64,127] bucket; p99 clamps to the max.
+        assert_eq!(hist.get("p50_nanos").and_then(|v| v.as_usize()), Some(127));
+        assert_eq!(hist.get("p99_nanos").and_then(|v| v.as_usize()), Some(5_000));
+        assert_eq!(
+            doc.get("counters").and_then(|c| c.get("trace.dropped")).and_then(|v| v.as_usize()),
+            Some(2)
+        );
+    }
+
+    #[test]
+    fn names_are_escaped() {
+        let r = Registry::new();
+        r.hist("svc.a\"b\\c.job_latency").record(1);
+        let doc = Json::parse(&r.snapshot_json()).expect("escaped names parse");
+        assert!(doc
+            .get("histograms")
+            .and_then(|h| h.get("svc.a\"b\\c.job_latency"))
+            .is_some());
+    }
+}

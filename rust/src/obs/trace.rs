@@ -1,0 +1,516 @@
+//! Span tracing: per-thread bounded event rings with a
+//! chrome://tracing exporter.
+//!
+//! ## Hot-path contract
+//!
+//! Tracing is **off by default** and the entire recording surface is
+//! gated on one process-wide flag: [`enabled`] is a single `Relaxed`
+//! load, and [`span_start`] / [`span_end`] / [`instant`] return
+//! immediately when it is false. Enable with [`set_enabled`] (wired to
+//! `Config.trace`) or the `EXEC_TRACE=1` environment variable.
+//!
+//! ## Ring protocol (unsafe-free seqlock)
+//!
+//! Each shard is a bounded ring of slots whose fields are all shim
+//! atomics — there is no `unsafe` anywhere in this module; the seqlock
+//! exists to keep *events* coherent (no mixing of two generations'
+//! fields), not to make racy non-atomic access sound.
+//!
+//! Writer (one at a time per shard, enforced by a `busy` CAS claim —
+//! a loser drops its event and bumps `dropped` rather than spin):
+//!
+//! 1. `seq.store(2c+1, Relaxed)` — mark the slot in-progress,
+//! 2. `fence(Release)` — order the mark before the field stores,
+//! 3. field stores (`Relaxed`),
+//! 4. `seq.store(2c+2, Release)` — publish generation `c`.
+//!
+//! Reader ([`Tracer::drain`]): `s1 = seq.load(Acquire)`; skip odd or
+//! never-written slots; field loads (`Relaxed`); `fence(Acquire)`
+//! (orders the field loads before the re-check); `s2 = seq.load
+//! (Relaxed)`; keep the event iff `s1 == s2`. A slot overwritten
+//! mid-read fails the re-check and is skipped — drain never blocks
+//! writers. The wrap-vs-drain race is model-checked below.
+
+use super::thread_slot;
+use crate::model::sync::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Every span/instant kind the runtime records, spanning the whole
+/// stack: pool admission, executor scheduling, the adaptive merge
+/// kernel, and the stream store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Job handed to `WorkerPool::admit` (instant; arg = queue depth).
+    Submit = 0,
+    /// Job dispatched to the executor after waiting for a permit
+    /// (instant; arg = wait in nanos).
+    Admit = 1,
+    /// Injector batch drained onto a worker (instant; arg = batch size).
+    Dequeue = 2,
+    /// One job body on a worker (span; arg = worker id).
+    Run = 3,
+    /// Steal-request flag raised by an idle worker (instant; arg =
+    /// raiser id).
+    StealRaise = 4,
+    /// Steal-request flag consumed by a victim (span over raise→take;
+    /// arg = victim id).
+    StealTake = 5,
+    /// Adaptive merge co-rank split of the remainder (instant; arg =
+    /// elements handed to the thief).
+    AdaptiveSplit = 6,
+    /// Shard buffer sealed into a sorted run (span; arg = records).
+    StreamSeal = 7,
+    /// One compaction window merged (span; arg = input records).
+    Compact = 8,
+    /// Compaction result committed/published (span; arg = output runs).
+    Publish = 9,
+    /// Manifest record appended + fsynced (span; arg = frame bytes).
+    ManifestFsync = 10,
+}
+
+impl SpanKind {
+    /// Every kind, for exporters and round-trip tests.
+    pub const ALL: [SpanKind; 11] = [
+        SpanKind::Submit,
+        SpanKind::Admit,
+        SpanKind::Dequeue,
+        SpanKind::Run,
+        SpanKind::StealRaise,
+        SpanKind::StealTake,
+        SpanKind::AdaptiveSplit,
+        SpanKind::StreamSeal,
+        SpanKind::Compact,
+        SpanKind::Publish,
+        SpanKind::ManifestFsync,
+    ];
+
+    /// Stable machine-readable name (chrome trace `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Submit => "submit",
+            SpanKind::Admit => "admit",
+            SpanKind::Dequeue => "dequeue",
+            SpanKind::Run => "run",
+            SpanKind::StealRaise => "steal_raise",
+            SpanKind::StealTake => "steal_take",
+            SpanKind::AdaptiveSplit => "adaptive_split",
+            SpanKind::StreamSeal => "stream_seal",
+            SpanKind::Compact => "compact",
+            SpanKind::Publish => "publish",
+            SpanKind::ManifestFsync => "manifest_fsync",
+        }
+    }
+
+    /// Layer the span belongs to (chrome trace `cat` field).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Submit | SpanKind::Admit => "pool",
+            SpanKind::Dequeue | SpanKind::Run | SpanKind::StealRaise | SpanKind::StealTake => {
+                "exec"
+            }
+            SpanKind::AdaptiveSplit => "core",
+            SpanKind::StreamSeal | SpanKind::Compact | SpanKind::Publish
+            | SpanKind::ManifestFsync => "stream",
+        }
+    }
+
+    /// Inverse of `as u8`; `None` for out-of-range (e.g. a torn slot).
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        SpanKind::ALL.get(v as usize).copied()
+    }
+}
+
+/// One decoded trace event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: SpanKind,
+    /// Start time, nanos since the process trace origin.
+    pub ts_nanos: u64,
+    /// Span duration in nanos (0 for instants).
+    pub dur_nanos: u64,
+    /// Kind-specific argument (see [`SpanKind`] docs).
+    pub arg: u64,
+    /// Ring shard (≈ thread) the event was recorded on.
+    pub shard: usize,
+}
+
+/// One ring slot. All fields are atomics; `seq` carries the seqlock
+/// generation (odd = write in progress, `2c+2` = generation `c`
+/// published, 0 = never written).
+struct Slot {
+    seq: AtomicU64,
+    kind: AtomicU64,
+    ts: AtomicU64,
+    dur: AtomicU64,
+    arg: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            seq: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            ts: AtomicU64::new(0),
+            dur: AtomicU64::new(0),
+            arg: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One per-thread ring, padded so two recording threads never share a
+/// cache line for their cursors.
+#[repr(align(128))]
+struct Shard {
+    /// Power-of-two slot ring.
+    slots: Box<[Slot]>,
+    /// Monotone event count; `cursor & (len-1)` is the next slot.
+    cursor: AtomicU64,
+    /// Single-writer claim; contenders drop their event.
+    busy: AtomicBool,
+    /// Events dropped on claim contention.
+    dropped: AtomicU64,
+}
+
+impl Shard {
+    fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1).next_power_of_two();
+        Shard {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            cursor: AtomicU64::new(0),
+            busy: AtomicBool::new(false),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn record(&self, kind: SpanKind, ts: u64, dur: u64, arg: u64) {
+        if self
+            .busy
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            // Another thread hashed onto this shard mid-write: drop
+            // rather than spin — tracing must never add a wait.
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let c = self.cursor.load(Ordering::Relaxed);
+        let slot = &self.slots[c as usize & (self.slots.len() - 1)];
+        slot.seq.store(2 * c + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.kind.store(kind as u8 as u64, Ordering::Relaxed);
+        slot.ts.store(ts, Ordering::Relaxed);
+        slot.dur.store(dur, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        slot.seq.store(2 * c + 2, Ordering::Release);
+        self.cursor.store(c + 1, Ordering::Relaxed);
+        self.busy.store(false, Ordering::Release);
+    }
+}
+
+/// A set of per-thread event rings. Recording picks the calling
+/// thread's shard; draining sweeps every shard and keeps only slots
+/// that pass the seqlock re-check.
+pub struct Tracer {
+    shards: Box<[Shard]>,
+    mask: usize,
+}
+
+impl Tracer {
+    /// `shards` rings of `capacity` slots each (both rounded up to
+    /// powers of two).
+    pub fn with_geometry(shards: usize, capacity: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Tracer {
+            shards: (0..n).map(|_| Shard::new(capacity)).collect(),
+            mask: n - 1,
+        }
+    }
+
+    /// The process-wide tracer every helper records into: 16 rings of
+    /// 4096 slots (≈2.5 MiB), allocated on first use.
+    pub fn global() -> &'static Tracer {
+        static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+        GLOBAL.get_or_init(|| Tracer::with_geometry(16, 4096))
+    }
+
+    /// Record on the calling thread's shard.
+    #[inline]
+    pub fn record(&self, kind: SpanKind, ts: u64, dur: u64, arg: u64) {
+        self.record_at(thread_slot(), kind, ts, dur, arg);
+    }
+
+    /// Record on an explicit shard (tests; `record` routes here).
+    pub fn record_at(&self, shard: usize, kind: SpanKind, ts: u64, dur: u64, arg: u64) {
+        self.shards[shard & self.mask].record(kind, ts, dur, arg);
+    }
+
+    /// Decode every coherent slot, oldest-first by timestamp. Slots
+    /// being overwritten during the sweep fail the seqlock re-check
+    /// and are skipped; events stay in place (drain is idempotent
+    /// until the ring wraps over them).
+    pub fn drain(&self) -> Vec<Event> {
+        let mut out = Vec::new();
+        for (tid, shard) in self.shards.iter().enumerate() {
+            for slot in shard.slots.iter() {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 == 0 || s1 % 2 == 1 {
+                    continue;
+                }
+                let kind = slot.kind.load(Ordering::Relaxed);
+                let ts = slot.ts.load(Ordering::Relaxed);
+                let dur = slot.dur.load(Ordering::Relaxed);
+                let arg = slot.arg.load(Ordering::Relaxed);
+                fence(Ordering::Acquire);
+                let s2 = slot.seq.load(Ordering::Relaxed);
+                if s1 != s2 {
+                    continue;
+                }
+                let Some(kind) = SpanKind::from_u8(kind as u8) else {
+                    continue;
+                };
+                out.push(Event { kind, ts_nanos: ts, dur_nanos: dur, arg, shard: tid });
+            }
+        }
+        out.sort_by_key(|e| (e.ts_nanos, e.shard));
+        out
+    }
+
+    /// Total events ever recorded (monotone; the rings keep the most
+    /// recent `shards × capacity` of them).
+    pub fn recorded(&self) -> u64 {
+        self.shards.iter().map(|s| s.cursor.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Events dropped on shard-claim contention.
+    pub fn dropped(&self) -> u64 {
+        self.shards.iter().map(|s| s.dropped.load(Ordering::Relaxed)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-wide gate, clock, and recording helpers.
+// ---------------------------------------------------------------------------
+
+/// The one flag the hot path pays for: every helper is a `Relaxed`
+/// load of this plus an early return while tracing is off.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing currently enabled? One `Relaxed` load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off process-wide (wired to `Config.trace`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable tracing if `EXEC_TRACE=1` (or `true`) is set. Idempotent;
+/// never *disables* (so `Config.trace` and the env compose as OR).
+pub fn enable_from_env() {
+    if matches!(
+        std::env::var("EXEC_TRACE").ok().as_deref(),
+        Some("1") | Some("true")
+    ) {
+        set_enabled(true);
+    }
+}
+
+/// Nanoseconds since the process trace origin (first call wins).
+pub fn now_nanos() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    let origin = *ORIGIN.get_or_init(Instant::now);
+    u64::try_from(origin.elapsed().as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Start a span: the current trace timestamp, or 0 when tracing is
+/// off (a 0 start makes the matching [`span_end`] a no-op, so a span
+/// straddling an enable flip is dropped rather than garbled).
+#[inline]
+pub fn span_start() -> u64 {
+    if enabled() {
+        now_nanos().max(1)
+    } else {
+        0
+    }
+}
+
+/// Close a span opened by [`span_start`] and record it.
+#[inline]
+pub fn span_end(kind: SpanKind, start: u64, arg: u64) {
+    if start == 0 || !enabled() {
+        return;
+    }
+    let now = now_nanos();
+    Tracer::global().record(kind, start, now.saturating_sub(start), arg);
+}
+
+/// Record a zero-duration instant event.
+#[inline]
+pub fn instant(kind: SpanKind, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    Tracer::global().record(kind, now_nanos(), 0, arg);
+}
+
+/// Record a span with an explicit start timestamp (used when the
+/// start was stamped by another thread, e.g. steal raise→take).
+#[inline]
+pub fn span_between(kind: SpanKind, start_nanos: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = now_nanos();
+    Tracer::global().record(kind, start_nanos, now.saturating_sub(start_nanos), arg);
+}
+
+/// Serialize events as a chrome://tracing (about:tracing, Perfetto)
+/// JSON object: `{"traceEvents": [...]}`. Durations and timestamps
+/// are microseconds (fractional), `tid` is the ring shard, spans use
+/// phase `"X"`, instants phase `"i"` with global scope.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str("{\"traceEvents\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let ts_us = e.ts_nanos as f64 / 1_000.0;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"pid\":1,\"tid\":{},\"ts\":{:.3}",
+            e.kind.name(),
+            e.kind.category(),
+            e.shard,
+            ts_us
+        ));
+        if e.dur_nanos == 0 {
+            out.push_str(",\"ph\":\"i\",\"s\":\"g\"");
+        } else {
+            out.push_str(&format!(",\"ph\":\"X\",\"dur\":{:.3}", e.dur_nanos as f64 / 1_000.0));
+        }
+        out.push_str(&format!(",\"args\":{{\"arg\":{}}}}}", e.arg));
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_from_u8_roundtrips() {
+        for k in SpanKind::ALL {
+            assert_eq!(SpanKind::from_u8(k as u8), Some(k));
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+        assert_eq!(SpanKind::from_u8(255), None);
+    }
+
+    #[test]
+    fn disabled_span_start_is_zero() {
+        // Tracing defaults off; span_start must be the no-op sentinel
+        // and span_end on it must not touch the global tracer.
+        assert!(!enabled());
+        assert_eq!(span_start(), 0);
+        span_end(SpanKind::Run, 0, 7); // must be a no-op
+    }
+
+    #[test]
+    fn record_drain_roundtrip() {
+        let t = Tracer::with_geometry(2, 8);
+        t.record_at(0, SpanKind::Run, 100, 50, 3);
+        t.record_at(1, SpanKind::StealRaise, 40, 0, 1);
+        let evs = t.drain();
+        assert_eq!(evs.len(), 2);
+        // Sorted by timestamp, oldest first.
+        assert_eq!(evs[0].kind, SpanKind::StealRaise);
+        assert_eq!(evs[0].ts_nanos, 40);
+        assert_eq!(evs[0].shard, 1);
+        assert_eq!(evs[1].kind, SpanKind::Run);
+        assert_eq!(evs[1].dur_nanos, 50);
+        assert_eq!(evs[1].arg, 3);
+        assert_eq!(t.recorded(), 2);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wrap_keeps_most_recent() {
+        let t = Tracer::with_geometry(1, 4);
+        for i in 0..10u64 {
+            t.record_at(0, SpanKind::Dequeue, i + 1, 0, i);
+        }
+        let evs = t.drain();
+        assert_eq!(evs.len(), 4);
+        let args: Vec<u64> = evs.iter().map(|e| e.arg).collect();
+        assert_eq!(args, vec![6, 7, 8, 9]);
+        assert_eq!(t.recorded(), 10);
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let t = Tracer::with_geometry(1, 4);
+        t.record_at(0, SpanKind::Compact, 2_000, 1_500, 12);
+        t.record_at(0, SpanKind::StealRaise, 3_000, 0, 2);
+        let json = chrome_trace_json(&t.drain());
+        let doc = crate::util::json::Json::parse(&json).expect("exporter emits valid JSON");
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents array");
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("name").and_then(|v| v.as_str()), Some("compact"));
+        assert_eq!(evs[0].get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(evs[0].get("ts").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(evs[0].get("dur").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(evs[1].get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(evs[1].get("s").and_then(|v| v.as_str()), Some("g"));
+    }
+}
+
+#[cfg(all(test, feature = "model"))]
+mod model_tests {
+    use super::*;
+    use crate::model::thread;
+    use crate::model::{check_with, Config};
+    use std::sync::Arc;
+
+    /// Ring wrap racing drain: a writer wraps a capacity-2 ring while
+    /// the main thread drains. Every event the seqlock lets through
+    /// must be coherent — `arg` was written as a function of `ts`, so
+    /// a mixed-generation slot would fail the equation.
+    #[test]
+    fn model_trace_ring_wrap_vs_drain() {
+        fn tag(ts: u64) -> u64 {
+            ts.wrapping_mul(31) ^ 0x5a
+        }
+        let schedules = check_with(
+            Config { name: "trace_ring_wrap_vs_drain", ..Config::default() },
+            || {
+                let t = Arc::new(Tracer::with_geometry(1, 2));
+                let w = {
+                    let t = Arc::clone(&t);
+                    thread::spawn(move || {
+                        for ts in 1..=3u64 {
+                            t.record_at(0, SpanKind::Run, ts, 0, tag(ts));
+                        }
+                    })
+                };
+                for e in t.drain() {
+                    assert_eq!(e.arg, tag(e.ts_nanos), "torn slot escaped the seqlock");
+                }
+                w.join().unwrap();
+                let evs = t.drain();
+                assert_eq!(evs.len(), 2, "capacity-2 ring keeps the last two events");
+                assert_eq!(evs[0].ts_nanos, 2);
+                assert_eq!(evs[1].ts_nanos, 3);
+                for e in &evs {
+                    assert_eq!(e.arg, tag(e.ts_nanos));
+                }
+                assert_eq!(t.recorded() + t.dropped(), 3);
+            },
+        );
+        assert!(schedules > 1, "expected multiple interleavings, got {schedules}");
+    }
+}

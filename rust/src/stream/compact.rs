@@ -305,7 +305,10 @@ fn compact_window(
         merge_cursors_into(&mut cursors, p, strategy, &mut out)?;
     }
     let prepared = out.finish()?;
-    store.commit_compaction(&inputs, prepared)
+    let t0 = crate::obs::trace::span_start();
+    let committed = store.commit_compaction(&inputs, prepared);
+    crate::obs::trace::span_end(crate::obs::SpanKind::Publish, t0, total as u64);
+    committed
 }
 
 /// Run one policy-driven compaction if the store's backlog asks for
@@ -324,7 +327,11 @@ pub fn compact_once(store: &RunStore, p: usize) -> Result<Option<CompactionStats
     let Some(window) = store.pick_window() else {
         return Ok(None);
     };
-    compact_window(store, window, p).map(Some)
+    let t0 = crate::obs::trace::span_start();
+    let fanin = window.len() as u64;
+    let stats = compact_window(store, window, p);
+    crate::obs::trace::span_end(crate::obs::SpanKind::Compact, t0, fanin);
+    stats.map(Some)
 }
 
 /// Major compaction: merge the WHOLE store down to one run in a single

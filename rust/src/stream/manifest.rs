@@ -267,10 +267,12 @@ impl ManifestWriter {
 
     /// Append one record and fsync it.
     pub fn append(&mut self, rec: &ManifestRecord) -> Result<(), String> {
+        let t0 = crate::obs::trace::span_start();
         self.file
             .write_all(&encode_frame(rec))
             .map_err(|e| format!("manifest append: {e}"))?;
         self.file.sync_data().map_err(|e| format!("manifest fsync: {e}"))?;
+        crate::obs::trace::span_end(crate::obs::SpanKind::ManifestFsync, t0, 0);
         Ok(())
     }
 }

@@ -191,11 +191,15 @@ impl ShardWriter {
     fn seal(&mut self) -> Result<Option<u64>, StreamError> {
         let cap = self.store.config().run_capacity;
         let mut batch = std::mem::replace(&mut self.buf, Vec::with_capacity(cap));
+        let t0 = crate::obs::trace::span_start();
+        let n = batch.len();
         // Stable sort keeps push order within equal keys; the
         // generation the store stamps orders this run against every
         // other writer's seals.
         parallel_merge_sort(&mut batch, self.store.config().threads);
-        self.store.seal_wide(batch)
+        let sealed = self.store.seal_wide(batch);
+        crate::obs::trace::span_end(crate::obs::SpanKind::StreamSeal, t0, n as u64);
+        sealed
     }
 }
 

@@ -213,6 +213,38 @@ fn baselines_agree_on_content() {
     });
 }
 
+/// E13 (observability): sharding is invisible in the aggregate. The
+/// same value sequence recorded into an N-shard histogram (values
+/// scattered round-robin across shards, the way per-worker recording
+/// scatters by thread slot) and into a single-shard oracle must
+/// produce identical snapshots — bucket for bucket, sum and max
+/// included ([`HistSnapshot`] equality covers all of it), and
+/// therefore identical percentiles.
+#[test]
+fn hist_sharded_merge_matches_single_shard_oracle() {
+    use traff_merge::obs::Hist;
+    qcheck("hist shard oracle", 300, |g| {
+        let shards = g.usize_in(1..9);
+        let n = g.usize_in(0..400);
+        let sharded = Hist::with_shards(shards);
+        let oracle = Hist::with_shards(1);
+        for i in 0..n {
+            // Mostly small latencies with occasional huge outliers so
+            // both the dense low buckets and the top of the log2
+            // ladder get exercised.
+            let v = if g.usize_in(0..8) == 0 { g.u64() } else { g.u64() % 1_000_000 };
+            sharded.record_in(i % shards, v);
+            oracle.record_in(0, v);
+        }
+        let got = sharded.snapshot();
+        let want = oracle.snapshot();
+        prop_assert_eq!(got, want);
+        prop_assert_eq!(got.p50(), want.p50());
+        prop_assert_eq!(got.p99(), want.p99());
+        Ok(())
+    });
+}
+
 /// Parallel merge sort is a stable sort for arbitrary inputs.
 #[test]
 fn sort_stability_property() {
